@@ -1,0 +1,122 @@
+//! End-to-end driver (the EXPERIMENTS.md validation run): full AlexNet
+//! CONV+POOL stack (Table 1 workload) on the simulated accelerator.
+//!
+//! Proves all layers compose: JAX/Pallas L1+L2 kernels were AOT-lowered
+//! into `artifacts/alexnet_fwd.hlo.txt` with the same deterministic
+//! weights the Rust zoo regenerates; this driver
+//!   1. compiles AlexNet through the decomposition compiler to the ISA,
+//!   2. runs the cycle simulator frame-by-frame,
+//!   3. executes the PJRT artifact and asserts **bit-exact** agreement,
+//!   4. reports per-layer Table-1 costs and whole-net GOPS / energy at
+//!      the paper's two DVFS corners.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example alexnet_inference
+//! ```
+
+use kn_stream::compiler::NetRunner;
+use kn_stream::energy::{dvfs, EnergyModel};
+use kn_stream::model::{zoo, Tensor};
+use kn_stream::runtime::Golden;
+use kn_stream::util::bench::Table;
+use kn_stream::util::stats::eng;
+
+fn main() -> anyhow::Result<()> {
+    let net = zoo::alexnet();
+    let runner = NetRunner::new(&net)?;
+
+    // ---- Table-1 style static summary -------------------------------------
+    let mut t = Table::new(
+        "AlexNet operations and storage (paper Table 1)",
+        &["layer", "input", "output", "ops", "in mem", "out mem", "total"],
+    );
+    let mut total_ops = 0u64;
+    for c in net.costs() {
+        if c.ops == 0 {
+            continue; // paper's table lists CONV layers only
+        }
+        total_ops += c.ops;
+        t.row(&[
+            c.name.clone(),
+            format!("{}x{}x{}", c.in_shape.0, c.in_shape.1, c.in_shape.2),
+            format!("{}x{}x{}", c.out_shape.0, c.out_shape.1, c.out_shape.2),
+            format!("{}", eng(c.ops as f64)),
+            format!("{:.0}KB", c.in_bytes as f64 / 1000.0),
+            format!("{:.0}KB", c.out_bytes as f64 / 1000.0),
+            format!("{:.0}KB", (c.in_bytes + c.out_bytes) as f64 / 1000.0),
+        ]);
+    }
+    t.row(&[
+        "Total".into(),
+        "".into(),
+        "".into(),
+        eng(total_ops as f64),
+        "".into(),
+        "".into(),
+        "".into(),
+    ]);
+    t.print();
+
+    // ---- run frames through the simulator ---------------------------------
+    let frames = 3;
+    println!("\nsimulating {frames} frames…");
+    let mut golden = Golden::load_default().ok();
+    let energy = EnergyModel::default();
+    for i in 0..frames {
+        let frame = Tensor::random_image(100 + i, 227, 227, 3);
+        let t0 = std::time::Instant::now();
+        let (out, stats) = runner.run_frame(&frame)?;
+        let wall = t0.elapsed();
+
+        // golden: PJRT-executed JAX/Pallas artifact must agree bit-for-bit
+        let verdict = match golden.as_mut() {
+            Some(g) => {
+                let want = g.run("alexnet_fwd", &frame)?;
+                assert_eq!(out, want, "frame {i}: simulator != PJRT artifact");
+                "bit-exact vs JAX artifact"
+            }
+            None => "artifact check skipped",
+        };
+
+        let peak = dvfs::PEAK;
+        let dev_ms = stats.cycles as f64 * peak.cycle_s() * 1e3;
+        let eff_gops = stats.ops() as f64 / (stats.cycles as f64 * peak.cycle_s()) / 1e9;
+        let e = energy.energy(&stats, peak);
+        println!(
+            "frame {i}: {} cycles | {:.1} ms @500MHz ({:.1} fps) | {:.1} GOPS eff (util {:.2}) \
+             | {:.1} mJ | wall {:.0} ms | {}",
+            stats.cycles,
+            dev_ms,
+            1e3 / dev_ms,
+            eff_gops,
+            stats.utilization(),
+            e.total_j() * 1e3,
+            wall.as_secs_f64() * 1e3,
+            verdict
+        );
+    }
+
+    // ---- the paper's two DVFS corners on this workload ---------------------
+    let frame = Tensor::random_image(100, 227, 227, 3);
+    let (_, stats) = runner.run_frame(&frame)?;
+    let mut t = Table::new(
+        "AlexNet at the Table-2 corners",
+        &["corner", "latency", "fps", "eff GOPS", "E/frame", "TOPS/W (eff)"],
+    );
+    for op in [dvfs::PEAK, dvfs::EFFICIENT] {
+        let secs = stats.cycles as f64 * op.cycle_s();
+        let e = energy.energy(&stats, op).total_j();
+        t.row(&[
+            format!("{:.0}MHz/{:.1}V", op.freq_mhz, op.vdd),
+            format!("{:.1} ms", secs * 1e3),
+            format!("{:.1}", 1.0 / secs),
+            format!("{:.1}", stats.ops() as f64 / secs / 1e9),
+            format!("{:.2} mJ", e * 1e3),
+            format!("{:.2}", stats.ops() as f64 / e / 1e12),
+        ]);
+    }
+    t.print();
+    println!("\nDRAM traffic/frame: {:.1} MB read, {:.1} MB written (decomposition cost)",
+             stats.dram_read_bytes as f64 / 1e6, stats.dram_write_bytes as f64 / 1e6);
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! Quickstart: compile a tiny net to the accelerator ISA, simulate it,
+//! and check the result against both the scalar oracle and the
+//! PJRT-executed AOT artifact (when `make artifacts` has run).
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use kn_stream::compiler::NetRunner;
+use kn_stream::energy::{dvfs, EnergyModel};
+use kn_stream::model::reference::run_net_ref;
+use kn_stream::model::{zoo, Tensor};
+use kn_stream::runtime::Golden;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a network from the zoo (one 3x3 conv + one 2x2 max pool)
+    let net = zoo::quicknet();
+    println!("net: {} {:?} -> {:?}", net.name, net.in_shape(), net.out_shape());
+
+    // 2. compile: decomposition plan -> ISA command stream + DRAM image
+    let runner = NetRunner::new(&net)?;
+    println!(
+        "compiled: {} commands, {:.1} KB DRAM image",
+        runner.compiled.program.len(),
+        runner.compiled.dram_px as f64 * 2.0 / 1e3
+    );
+
+    // 3. run a synthetic camera frame through the cycle simulator
+    let frame = Tensor::random_image(2024, net.in_h, net.in_w, net.in_c);
+    let (out, stats) = runner.run_frame(&frame)?;
+    println!(
+        "simulated: {} cycles, {} MACs, utilization {:.2}",
+        stats.cycles,
+        stats.macs,
+        stats.utilization()
+    );
+
+    // 4. verify against the scalar fixed-point oracle (bit-exact)
+    let want = run_net_ref(&net, &frame);
+    assert_eq!(out, want, "simulator != oracle");
+    println!("oracle check: bit-exact");
+
+    // 5. verify against the AOT Pallas/JAX artifact via PJRT (bit-exact)
+    match Golden::load_default() {
+        Ok(mut golden) => {
+            let pjrt_out = golden.run("quicknet_fwd", &frame)?;
+            assert_eq!(out, pjrt_out, "simulator != PJRT artifact");
+            println!("golden check: simulator == JAX/Pallas artifact, bit-exact");
+        }
+        Err(e) => println!("golden check skipped ({e})"),
+    }
+
+    // 6. what would the silicon do?
+    let energy = EnergyModel::default();
+    for op in [dvfs::PEAK, dvfs::EFFICIENT] {
+        let t = stats.cycles as f64 * op.cycle_s();
+        let e = energy.energy(&stats, op);
+        println!(
+            "@ {:>3.0} MHz / {:.1} V: {:.3} ms/frame, {:.3} mJ/frame",
+            op.freq_mhz,
+            op.vdd,
+            t * 1e3,
+            e.total_j() * 1e3
+        );
+    }
+    Ok(())
+}

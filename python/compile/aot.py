@@ -1,0 +1,168 @@
+"""AOT compile path: lower L2 graphs to HLO *text* artifacts for Rust.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate binds) rejects;
+the text parser reassigns ids and round-trips cleanly.
+
+Run once via ``make artifacts``; the Rust binary is self-contained
+afterwards. Also writes ``artifacts/manifest.json`` — the contract the
+Rust runtime reads (shapes, dtypes, seeds, layer params).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import prng
+from .kernels import ref
+from .model import conv_any, make_net_fn, layer_params
+from .kernels import maxpool_int
+from .nets import ZOO, net_shapes
+
+# Standalone-tile weight seeds (recorded in the manifest; Rust regenerates).
+TILE_SEEDS = {"conv_s1": (3000, 3001), "conv_s2": (3002, 3003),
+              "alexnet_c1": (9000, 9001)}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the baked weight tensors ARE the model —
+    # the default elides them to "constant({...})" which the rust-side text
+    # parser would reject (or worse, zero-fill).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_and_write(fn, example, out_dir: str, name: str) -> dict:
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(example)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    out_aval = jax.eval_shape(fn, example)[0]
+    print(f"  {name}: {example.shape}{example.dtype} -> "
+          f"{out_aval.shape}{out_aval.dtype}  "
+          f"({len(text)//1024} KiB, {time.time()-t0:.1f}s)")
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "input": {"shape": list(example.shape), "dtype": str(example.dtype)},
+        "output": {"shape": list(out_aval.shape), "dtype": str(out_aval.dtype)},
+    }
+
+
+def tile_conv_fn(k: int, stride: int, cin: int, cout: int, shift: int,
+                 relu: bool, wseed: int, bseed: int):
+    from .nets import B_HI, B_LO, W_HI, W_LO
+    w = jnp.asarray(prng.weight_tensor(wseed, (k, k, cin, cout), W_LO, W_HI))
+    b = jnp.asarray(prng.bias_tensor(bseed, cout, B_LO, B_HI))
+
+    def fn(x):
+        return (conv_any(x, w, b, stride=stride, shift=shift, relu=relu),)
+
+    return fn
+
+
+def build_all(out_dir: str, nets: list[str], selfcheck: bool) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"version": 1, "artifacts": []}
+
+    # --- standalone CU-tile kernels (runtime microbench + golden refs) ----
+    print("tiles:")
+    ws, bs = TILE_SEEDS["conv_s1"]
+    ent = lower_and_write(
+        tile_conv_fn(3, 1, 8, 16, 10, True, ws, bs),
+        jnp.zeros((66, 66, 8), jnp.int16), out_dir, "conv3x3_s1_tile")
+    ent.update(kind="conv", k=3, stride=1, pad=0, cin=8, cout=16, shift=10,
+               relu=True, wseed=ws, bseed=bs)
+    manifest["artifacts"].append(ent)
+
+    ws, bs = TILE_SEEDS["conv_s2"]
+    ent = lower_and_write(
+        tile_conv_fn(3, 2, 8, 16, 10, True, ws, bs),
+        jnp.zeros((67, 67, 8), jnp.int16), out_dir, "conv3x3_s2_tile")
+    ent.update(kind="conv", k=3, stride=2, pad=0, cin=8, cout=16, shift=10,
+               relu=True, wseed=ws, bseed=bs)
+    manifest["artifacts"].append(ent)
+
+    # AlexNet conv1 on one image-decomposition tile: 11x11/s4 via kernel
+    # decomposition (Fig. 6's 1/9 tile: 83x83x3 -> 19x19x96).
+    ws, bs = TILE_SEEDS["alexnet_c1"]
+    ent = lower_and_write(
+        tile_conv_fn(11, 4, 3, 96, 12, True, ws, bs),
+        jnp.zeros((83, 83, 3), jnp.int16), out_dir, "alexnet_conv1_tile")
+    ent.update(kind="conv", k=11, stride=4, pad=0, cin=3, cout=96, shift=12,
+               relu=True, wseed=ws, bseed=bs)
+    manifest["artifacts"].append(ent)
+
+    def pool_fn(k, stride):
+        return lambda x: (maxpool_int(x, k=k, stride=stride),)
+
+    ent = lower_and_write(pool_fn(3, 2), jnp.zeros((55, 55, 16), jnp.int16),
+                          out_dir, "pool3x3_s2_tile")
+    ent.update(kind="pool", k=3, stride=2)
+    manifest["artifacts"].append(ent)
+
+    ent = lower_and_write(pool_fn(2, 2), jnp.zeros((54, 54, 16), jnp.int16),
+                          out_dir, "pool2x2_s2_tile")
+    ent.update(kind="pool", k=2, stride=2)
+    manifest["artifacts"].append(ent)
+
+    # --- whole-net forwards (weights baked as HLO constants) --------------
+    print("nets:")
+    for net_name in nets:
+        net = ZOO[net_name]()
+        fn = make_net_fn(net)
+        example = jnp.zeros((net.in_h, net.in_w, net.in_c), jnp.int16)
+        ent = lower_and_write(fn, example, out_dir, f"{net_name}_fwd")
+        ent.update(kind="net", net=net_name,
+                   shapes=[list(s) for s in net_shapes(net)])
+        manifest["artifacts"].append(ent)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['artifacts'])} artifacts")
+
+    if selfcheck:
+        run_selfcheck()
+
+
+def run_selfcheck() -> None:
+    """Cheap end-of-build check: tile kernel vs the pure-numpy oracle."""
+    from .nets import B_HI, B_LO, W_HI, W_LO
+    ws, bs = TILE_SEEDS["conv_s1"]
+    x = prng.image_tensor(42, (66, 66, 8))
+    w = prng.weight_tensor(ws, (3, 3, 8, 16), W_LO, W_HI)
+    b = prng.bias_tensor(bs, 16, B_LO, B_HI)
+    got = np.asarray(tile_conv_fn(3, 1, 8, 16, 10, True, ws, bs)(jnp.asarray(x))[0])
+    want = ref.conv_ref(x, w, b, stride=1, shift=10, relu=True)
+    assert np.array_equal(got, want), "selfcheck FAILED: kernel != oracle"
+    print("selfcheck: conv3x3_s1_tile == numpy oracle (bit-exact)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--nets", default="quicknet,facenet,alexnet",
+                    help="comma-separated net names to AOT (vgg16 is large)")
+    ap.add_argument("--no-selfcheck", action="store_true")
+    args = ap.parse_args()
+    build_all(args.out_dir, [n for n in args.nets.split(",") if n],
+              not args.no_selfcheck)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""L1 Pallas kernels — the accelerator's compute hot-spot.
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls; see DESIGN.md §Deviations). The BlockSpec / grid structure
+mirrors the chip's dataflow: 8-row streaming stripes (column buffer),
+16-wide output-feature tiles (the 16-CU engine array), channel-serial
+int32 accumulation (the accumulation buffer), and a fused 16-bit
+requantization output stage.
+"""
+
+from .conv3x3 import conv3x3_int, conv3x3_acc, STRIPE_ROWS, CU_FEATURES
+from .pool import maxpool_int
+from .quant import requantize, requant_scalar
+
+__all__ = [
+    "conv3x3_int",
+    "conv3x3_acc",
+    "maxpool_int",
+    "requantize",
+    "requant_scalar",
+    "STRIPE_ROWS",
+    "CU_FEATURES",
+]

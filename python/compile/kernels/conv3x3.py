@@ -1,0 +1,153 @@
+"""Streaming 3x3 convolution Pallas kernel — the CU engine array (L1).
+
+Hardware mapping (DESIGN.md §Hardware-Adaptation):
+
+- The chip streams the input feature map through a **column buffer** that
+  presents 3x3 windows to the CU array without re-reading SRAM. Here the
+  nine window taps are nine shifted strided views of an 8-output-row
+  *stripe* held in VMEM — same reuse, no im2col blow-up.
+- The **16 CUs** share one input window and produce 16 output features
+  per cycle; the grid's feature axis tiles the output features by
+  ``CU_FEATURES = 16`` and each grid step multiplies the stripe against
+  a ``(3,3,C,16)`` filter block (input-stationary reuse).
+- The **accumulation buffer** sums channel partials in int32 and applies
+  the fused bias + requantize + ReLU output stage; ``conv3x3_acc``
+  exposes the raw int32 partial path used by feature/kernel
+  decomposition (the compiler replays it per sub-kernel / channel group).
+
+Numerics contract (mirrored bit-exactly by ``rust/src/fixed``):
+int16 activations x int16 weights -> wrapping int32 accumulate
+(+ int32 bias) -> round-half-up arithmetic shift by ``shift`` ->
+saturate to int16 -> optional ReLU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+STRIPE_ROWS = 8  # the chip streams 8 pixels/cycle from a 16 B SRAM word
+CU_FEATURES = 16  # 16 convolution units in the engine array
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _conv_kernel(x_ref, w_ref, b_ref, o_ref, *, stride: int, w_out: int,
+                 shift: int | None, relu: bool):
+    """One grid step: one 8-row output stripe x one 16-feature CU tile."""
+    r = pl.program_id(0)
+    rows_needed = (STRIPE_ROWS - 1) * stride + 3
+    row0 = r * STRIPE_ROWS * stride
+    # Column-buffer fill: the stripe of input rows feeding this output stripe.
+    xs = x_ref[pl.dslice(row0, rows_needed), :, :]
+    w = w_ref[...].astype(jnp.int32)  # (3, 3, C, 16)
+    acc = jnp.zeros((STRIPE_ROWS, w_out, CU_FEATURES), jnp.int32)
+    # Nine taps of the column buffer == nine shifted strided views.
+    for i in range(3):
+        for j in range(3):
+            win = jax.lax.slice(
+                xs,
+                (i, j, 0),
+                (i + (STRIPE_ROWS - 1) * stride + 1,
+                 j + (w_out - 1) * stride + 1,
+                 xs.shape[2]),
+                (stride, stride, 1),
+            ).astype(jnp.int32)  # (8, w_out, C)
+            acc = acc + jnp.matmul(win, w[i, j])  # (8, w_out, 16)
+    if b_ref is not None:
+        acc = acc + b_ref[...].astype(jnp.int32)
+    if shift is None:
+        o_ref[...] = acc
+        return
+    # Fused ACC BUF output stage: round-half-up shift, saturate, ReLU.
+    if shift > 0:
+        acc = acc + jnp.int32(1 << (shift - 1))
+        acc = jnp.right_shift(acc, shift)
+    acc = jnp.clip(acc, -32768, 32767)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    o_ref[...] = acc.astype(jnp.int16)
+
+
+def _run(x: jax.Array, w: jax.Array, b: jax.Array | None, *, stride: int,
+         shift: int | None, relu: bool) -> jax.Array:
+    """Pad to stripe/CU granularity, launch the grid, crop the result."""
+    h, wid, c = x.shape
+    kh, kw, wc, m = w.shape
+    assert (kh, kw) == (3, 3), "the CU primitive is 3x3; larger K uses kernel decomposition"
+    assert wc == c, f"channel mismatch {wc} != {c}"
+    assert x.dtype == jnp.int16 and w.dtype == jnp.int16
+    h_out = (h - 3) // stride + 1
+    w_out = (wid - 3) // stride + 1
+    assert h_out >= 1 and w_out >= 1, f"input {h}x{wid} too small for 3x3/s{stride}"
+
+    # Stripe-pad output rows to a multiple of 8 (zero rows below the image
+    # feed the final partial stripe, cropped after the launch).
+    h_out_p = _ceil_to(h_out, STRIPE_ROWS)
+    rows_in_needed = (h_out_p - 1) * stride + 3
+    m_p = _ceil_to(m, CU_FEATURES)
+    if rows_in_needed >= h:
+        x_p = jnp.pad(x, ((0, rows_in_needed - h), (0, 0), (0, 0)))
+    else:
+        # Stride leaves trailing rows no output depends on — drop them.
+        x_p = x[:rows_in_needed]
+    w_p = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, m_p - m)))
+    if b is not None:
+        assert b.dtype == jnp.int32 and b.shape == (m,)
+        b_p = jnp.pad(b, ((0, m_p - m),))
+
+    grid = (h_out_p // STRIPE_ROWS, m_p // CU_FEATURES)
+    out_dtype = jnp.int32 if shift is None else jnp.int16
+    in_specs = [
+        # Full input each step: the kernel slices its own stripe (the chip's
+        # column buffer addresses SRAM rows the same way).
+        pl.BlockSpec(x_p.shape, lambda r, f: (0, 0, 0)),
+        pl.BlockSpec((3, 3, c, CU_FEATURES), lambda r, f: (0, 0, 0, f)),
+    ]
+    args = [x_p, w_p]
+    if b is not None:
+        in_specs.append(pl.BlockSpec((CU_FEATURES,), lambda r, f: (f,)))
+        args.append(b_p)
+        kern = functools.partial(_conv_kernel, stride=stride, w_out=w_out,
+                                 shift=shift, relu=relu)
+    else:
+        def kern(x_ref, w_ref, o_ref):
+            _conv_kernel(x_ref, w_ref, None, o_ref, stride=stride,
+                         w_out=w_out, shift=shift, relu=relu)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((STRIPE_ROWS, w_out, CU_FEATURES),
+                               lambda r, f: (r, 0, f)),
+        out_shape=jax.ShapeDtypeStruct((h_out_p, w_out, m_p), out_dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(*args)
+    return out[:h_out, :, :m]
+
+
+def conv3x3_int(x: jax.Array, w: jax.Array, b: jax.Array, *, stride: int = 1,
+                shift: int = 8, relu: bool = True) -> jax.Array:
+    """Fused 3x3 conv: int16 in -> int16 out with bias+requant+ReLU.
+
+    ``x``: (H, W, C) int16, already padded by the caller (valid conv).
+    ``w``: (3, 3, C, M) int16. ``b``: (M,) int32.
+    """
+    return _run(x, w, b, stride=stride, shift=shift, relu=relu)
+
+
+def conv3x3_acc(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
+    """Raw int32 partial-sum path (no bias/requant) for decomposition.
+
+    The compiler accumulates several of these (kernel decomposition taps,
+    feature-decomposition channel groups) in the accumulation buffer and
+    requantizes once at the end — wrapping int32 addition makes the
+    result independent of accumulation order.
+    """
+    return _run(x, w, None, stride=stride, shift=None, relu=False)

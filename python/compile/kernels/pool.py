@@ -1,0 +1,67 @@
+"""Reconfigurable streaming max-pooling Pallas kernel (paper §4.3).
+
+The chip's pooling module reads rows of one output feature from a
+scratchpad, muxes the valid rows for the configured conv stride, and
+reduces a 2x2 or 3x3 window with a four-input comparator plus a feedback
+register. Functionally that is a running max over the window taps; here
+each tap is a shifted strided view of the feature-tile block and the
+feedback register is the running ``jnp.maximum`` accumulator.
+
+Grid: one step per 16-feature tile (the scratchpad holds one output
+feature group at a time).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv3x3 import CU_FEATURES, _ceil_to
+
+_I16_MIN = -32768
+
+
+def _pool_kernel(x_ref, o_ref, *, k: int, stride: int, h_out: int, w_out: int):
+    x = x_ref[...]  # (H, W, 16) int16
+    acc = jnp.full((h_out, w_out, CU_FEATURES), _I16_MIN, jnp.int16)
+    for i in range(k):
+        for j in range(k):
+            tap = jax.lax.slice(
+                x,
+                (i, j, 0),
+                (i + (h_out - 1) * stride + 1, j + (w_out - 1) * stride + 1,
+                 CU_FEATURES),
+                (stride, stride, 1),
+            )
+            acc = jnp.maximum(acc, tap)  # comparator + feedback register
+    o_ref[...] = acc
+
+
+def maxpool_int(x: jax.Array, *, k: int = 2, stride: int = 2) -> jax.Array:
+    """Max-pool (H, W, C) int16 with window ``k`` in {2, 3} and ``stride``."""
+    assert k in (2, 3), "the pooling module supports 2x2 and 3x3 windows"
+    assert x.dtype == jnp.int16
+    h, w, c = x.shape
+    h_out = (h - k) // stride + 1
+    w_out = (w - k) // stride + 1
+    assert h_out >= 1 and w_out >= 1
+    c_p = _ceil_to(c, CU_FEATURES)
+    rows_needed = (h_out - 1) * stride + k
+    cols_needed = (w_out - 1) * stride + k
+    x_p = jnp.pad(x, ((0, 0), (0, 0), (0, c_p - c)),
+                  constant_values=_I16_MIN)[:rows_needed, :cols_needed, :]
+    out = pl.pallas_call(
+        functools.partial(_pool_kernel, k=k, stride=stride, h_out=h_out,
+                          w_out=w_out),
+        grid=(c_p // CU_FEATURES,),
+        in_specs=[pl.BlockSpec((rows_needed, cols_needed, CU_FEATURES),
+                               lambda f: (0, 0, f))],
+        out_specs=pl.BlockSpec((h_out, w_out, CU_FEATURES),
+                               lambda f: (0, 0, f)),
+        out_shape=jax.ShapeDtypeStruct((h_out, w_out, c_p), jnp.int16),
+        interpret=True,
+    )(x_p)
+    return out[:, :, :c]

@@ -1,0 +1,51 @@
+"""16-bit fixed-point requantization — the ACC BUF output stage (L1).
+
+``q = sat16(round_half_up(acc * 2^-shift))`` with round-half-up
+implemented as an int32 wrapping add of ``2^(shift-1)`` followed by an
+arithmetic right shift — exactly what the accelerator's output stage
+does in silicon and what ``rust/src/fixed`` mirrors bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _requant_kernel(a_ref, o_ref, *, shift: int, relu: bool):
+    acc = a_ref[...]
+    if shift > 0:
+        acc = acc + jnp.int32(1 << (shift - 1))
+        acc = jnp.right_shift(acc, shift)
+    acc = jnp.clip(acc, -32768, 32767)
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    o_ref[...] = acc.astype(jnp.int16)
+
+
+def requantize(acc: jax.Array, *, shift: int, relu: bool = False) -> jax.Array:
+    """Requantize an int32 accumulator tensor of any shape to int16."""
+    assert acc.dtype == jnp.int32
+    assert 0 <= shift < 31
+    flat = acc.reshape(-1)
+    out = pl.pallas_call(
+        functools.partial(_requant_kernel, shift=shift, relu=relu),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.int16),
+        interpret=True,
+    )(flat)
+    return out.reshape(acc.shape)
+
+
+def requant_scalar(acc: int, shift: int, relu: bool = False) -> int:
+    """Pure-python mirror (for tests / documentation of the contract)."""
+    acc = ((acc + 0x8000_0000) & 0xFFFF_FFFF) - 0x8000_0000  # wrap to int32
+    if shift > 0:
+        acc = ((acc + (1 << (shift - 1)) + 0x8000_0000) & 0xFFFF_FFFF) - 0x8000_0000
+        acc >>= shift  # python's >> on negatives floors == arithmetic shift
+    acc = max(-32768, min(32767, acc))
+    if relu:
+        acc = max(0, acc)
+    return acc

@@ -1,0 +1,78 @@
+"""Pure-numpy oracle for the L1 kernels (independent implementation).
+
+Deliberately written a *different* way from the Pallas kernels — im2col
+patch extraction + int64 math with explicit wrap-to-int32 — so that an
+agreement between kernel and oracle is meaningful. Used by the pytest /
+hypothesis suites and by ``aot.py --selfcheck``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def wrap32(a: np.ndarray) -> np.ndarray:
+    """Wrap int64 values to int32 two's-complement (the ACC BUF register)."""
+    return ((a.astype(np.int64) + 0x8000_0000) % 0x1_0000_0000) - 0x8000_0000
+
+
+def requant_ref(acc: np.ndarray, shift: int, relu: bool = False) -> np.ndarray:
+    """round-half-up shift + saturate + optional ReLU, via floor division."""
+    acc = wrap32(acc)
+    if shift > 0:
+        acc = wrap32(acc + (1 << (shift - 1)))
+        acc = np.floor_divide(acc, 1 << shift)  # == arithmetic right shift
+    acc = np.clip(acc, -32768, 32767)
+    if relu:
+        acc = np.maximum(acc, 0)
+    return acc.astype(np.int16)
+
+
+def conv_acc_ref(x: np.ndarray, w: np.ndarray, stride: int = 1) -> np.ndarray:
+    """Valid KxK conv, int64 accumulate wrapped to int32 at the end.
+
+    x: (H, W, C) int, w: (K, K, C, M) int. Returns (Ho, Wo, M) int64 whose
+    values equal the wrapping-int32 accumulator of the hardware (wrap32
+    of the true sum equals the sum of wrapped partials — two's complement
+    addition is associative modulo 2^32).
+    """
+    kh, kw, c, m = w.shape
+    h, wid, xc = x.shape
+    assert xc == c
+    ho = (h - kh) // stride + 1
+    wo = (wid - kw) // stride + 1
+    # im2col: gather patches, one big integer matmul.
+    patches = np.empty((ho, wo, kh * kw * c), dtype=np.int64)
+    for i in range(kh):
+        for j in range(kw):
+            tap = x[i:i + (ho - 1) * stride + 1:stride,
+                    j:j + (wo - 1) * stride + 1:stride, :]
+            patches[:, :, (i * kw + j) * c:(i * kw + j + 1) * c] = tap
+    wmat = w.astype(np.int64).transpose(0, 1, 2, 3).reshape(kh * kw * c, m)
+    return wrap32(patches.reshape(ho * wo, -1) @ wmat).reshape(ho, wo, m)
+
+
+def conv_ref(x: np.ndarray, w: np.ndarray, b: np.ndarray, *, stride: int = 1,
+             shift: int = 8, relu: bool = True) -> np.ndarray:
+    """Full fused conv oracle matching ``conv3x3_int`` (any K)."""
+    acc = conv_acc_ref(x, w, stride) + b.astype(np.int64)
+    return requant_ref(acc, shift, relu)
+
+
+def maxpool_ref(x: np.ndarray, k: int = 2, stride: int = 2) -> np.ndarray:
+    h, w, c = x.shape
+    ho = (h - k) // stride + 1
+    wo = (w - k) // stride + 1
+    out = np.full((ho, wo, c), -32768, dtype=np.int16)
+    for i in range(ho):
+        for j in range(wo):
+            win = x[i * stride:i * stride + k, j * stride:j * stride + k, :]
+            out[i, j, :] = win.reshape(-1, c).max(axis=0)
+    return out
+
+
+def pad_hw(x: np.ndarray, pad: int) -> np.ndarray:
+    """Zero-pad H and W (the DMA writes a zero apron around each tile)."""
+    if pad == 0:
+        return x
+    return np.pad(x, ((pad, pad), (pad, pad), (0, 0)))

@@ -1,0 +1,126 @@
+"""L2 — quantized CNN compute graphs composed from the L1 Pallas kernels.
+
+This is the *build-time* model definition: ``aot.py`` jit-lowers these
+functions once to HLO text and the Rust runtime executes the artifacts;
+Python never runs on the request path.
+
+Kernel decomposition (paper §1/§5): the CU array is a fixed 3x3
+primitive, so K>3 convolutions are decomposed into ceil(K/3)^2 shifted
+3x3 sub-kernels whose int32 partial sums accumulate in the accumulation
+buffer — ``conv_any`` implements exactly the schedule the compiler
+(``rust/src/compiler/kernel_decomp.rs``) emits for the chip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import prng
+from .kernels import conv3x3_acc, conv3x3_int, maxpool_int, requantize
+from .nets import ConvSpec, NetSpec, PoolSpec
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pad_hw(x: jax.Array, pad: int) -> jax.Array:
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+
+
+def conv_grouped(x: jax.Array, w: jax.Array, b: jax.Array, *, stride: int,
+                 shift: int, relu: bool, groups: int) -> jax.Array:
+    """Grouped convolution (original AlexNet conv2/4/5): each group is an
+    independent conv over a channel slice — exactly how the compiler maps
+    groups onto feature-decomposition passes."""
+    if groups == 1:
+        return conv_any(x, w, b, stride=stride, shift=shift, relu=relu)
+    cin = x.shape[2]
+    cout = w.shape[3]
+    assert cin % groups == 0 and cout % groups == 0
+    cg, mg = cin // groups, cout // groups
+    assert w.shape[2] == cg, f"grouped weight cin {w.shape[2]} != {cg}"
+    outs = []
+    for g in range(groups):
+        outs.append(conv_any(
+            x[:, :, g * cg:(g + 1) * cg],
+            w[:, :, :, g * mg:(g + 1) * mg],
+            b[g * mg:(g + 1) * mg],
+            stride=stride, shift=shift, relu=relu))
+    return jnp.concatenate(outs, axis=2)
+
+
+def conv_any(x: jax.Array, w: jax.Array, b: jax.Array, *, stride: int,
+             shift: int, relu: bool) -> jax.Array:
+    """KxK conv via the 3x3 CU primitive (direct for K=3, decomposed else).
+
+    For K>3 the filter is zero-padded to Kp = 3*ceil(K/3) and split into a
+    (Kp/3 x Kp/3) grid of 3x3 sub-kernels. Sub-kernel (p, q) sees the
+    input shifted by (3p, 3q); all partials accumulate in wrapping int32
+    (order-independent), then bias + requantize once — identical to the
+    hardware pass schedule.
+    """
+    k = w.shape[0]
+    if k == 3:
+        return conv3x3_int(x, w, b, stride=stride, shift=shift, relu=relu)
+    kp = _ceil_to(k, 3)
+    h, wid, _ = x.shape
+    ho = (h - k) // stride + 1
+    wo = (wid - k) // stride + 1
+    # Pad the filter to Kp and the input so every shifted 3x3 pass sees a
+    # full window (the zero filter taps contribute nothing).
+    w_p = jnp.pad(w, ((0, kp - k), (0, kp - k), (0, 0), (0, 0)))
+    x_p = jnp.pad(x, ((0, kp - k), (0, kp - k), (0, 0)))
+    acc = None
+    for p in range(kp // 3):
+        for q in range(kp // 3):
+            sub = w_p[3 * p:3 * p + 3, 3 * q:3 * q + 3]
+            xs = x_p[3 * p:, 3 * q:, :]
+            part = conv3x3_acc(xs, sub, stride=stride)[:ho, :wo, :]
+            acc = part if acc is None else acc + part
+    acc = acc + b.astype(jnp.int32)
+    return requantize(acc, shift=shift, relu=relu)
+
+
+def layer_params(l: ConvSpec) -> tuple[np.ndarray, np.ndarray]:
+    """Regenerate the layer's deterministic weights (shared with Rust)."""
+    from .nets import B_HI, B_LO, W_HI, W_LO
+    w = prng.weight_tensor(l.wseed, (l.k, l.k, l.cin // l.groups, l.cout),
+                           W_LO, W_HI)
+    b = prng.bias_tensor(l.bseed, l.cout, B_LO, B_HI)
+    return w, b
+
+
+def apply_layer(x: jax.Array, l, params=None) -> jax.Array:
+    if isinstance(l, PoolSpec) or getattr(l, "kind", None) == "pool":
+        return maxpool_int(x, k=l.k, stride=l.stride)
+    w, b = params if params is not None else layer_params(l)
+    x = pad_hw(x, l.pad)
+    return conv_grouped(x, jnp.asarray(w), jnp.asarray(b), stride=l.stride,
+                        shift=l.shift, relu=l.relu, groups=l.groups)
+
+
+def net_forward(net: NetSpec, x: jax.Array) -> jax.Array:
+    """Full quantized forward pass; weights baked as HLO constants."""
+    for l in net.layers:
+        x = apply_layer(x, l)
+    return x
+
+
+def make_net_fn(net: NetSpec):
+    """A jit-able fn(image int16 (H,W,C)) -> int16 feature map, with the
+    weight constants closed over (they become HLO constants on lowering,
+    mirroring the chip's 'weights pre-stored in DRAM' model)."""
+    params = [layer_params(l) if l.kind == "conv" else None
+              for l in net.layers]
+
+    def fwd(x):
+        for l, p in zip(net.layers, params):
+            x = apply_layer(x, l, p)
+        return (x,)  # 1-tuple: lowered with return_tuple=True for rust
+
+    return fwd

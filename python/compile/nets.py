@@ -1,0 +1,150 @@
+"""Network zoo shared with the Rust side (``rust/src/model/zoo.rs``).
+
+Layer specs, weight seeds, and quantization shifts are the contract:
+both sides regenerate identical synthetic weights from the xorshift32
+seeds, so the Rust cycle simulator and the AOT HLO artifacts must agree
+bit-for-bit. Any edit here must be mirrored in ``zoo.rs`` (the
+integration tests catch drift).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    name: str
+    k: int          # kernel size (KxK); K>3 is run via kernel decomposition
+    stride: int
+    pad: int
+    cin: int
+    cout: int
+    shift: int      # requantization right-shift (power-of-two scale)
+    relu: bool
+    wseed: int
+    bseed: int
+    groups: int = 1   # grouped convolution (original AlexNet conv2/4/5)
+    kind: str = field(default="conv", init=False)
+
+
+@dataclass(frozen=True)
+class PoolSpec:
+    name: str
+    k: int          # 2 or 3
+    stride: int
+    kind: str = field(default="pool", init=False)
+
+
+@dataclass(frozen=True)
+class NetSpec:
+    name: str
+    in_h: int
+    in_w: int
+    in_c: int
+    layers: tuple
+
+
+# Weight magnitudes: |w| <= 127, biases |b| <= 1023, pixels 0..255 —
+# together with the per-layer shifts this keeps typical activations in
+# a few-hundred range (no saturation on synthetic data) while the
+# contract itself is wrap/saturate-exact either way.
+W_LO, W_HI = -128, 127
+B_LO, B_HI = -1024, 1023
+
+
+def quicknet() -> NetSpec:
+    """Tiny net for the quickstart example: one conv + one pool."""
+    base = 5000
+    return NetSpec(
+        "quicknet", 18, 18, 4,
+        (
+            ConvSpec("conv1", 3, 1, 0, 4, 16, 9, True, base, base + 1),
+            PoolSpec("pool1", 2, 2),
+        ),
+    )
+
+
+def facenet() -> NetSpec:
+    """Small face-detection CNN (the Fig. 8 FPGA demo workload).
+
+    64x64 grayscale -> 4x4x16 score map; detection = per-cell score
+    thresholding on channel 0 (see examples/face_detection.rs).
+    """
+    base = 7000
+    return NetSpec(
+        "facenet", 64, 64, 1,
+        (
+            ConvSpec("conv1", 3, 1, 1, 1, 8, 8, True, base + 0, base + 1),
+            PoolSpec("pool1", 2, 2),
+            ConvSpec("conv2", 3, 1, 1, 8, 16, 9, True, base + 2, base + 3),
+            PoolSpec("pool2", 2, 2),
+            ConvSpec("conv3", 3, 1, 1, 16, 32, 10, True, base + 4, base + 5),
+            PoolSpec("pool3", 2, 2),
+            ConvSpec("conv4", 3, 1, 0, 32, 16, 10, True, base + 6, base + 7),
+            ConvSpec("score", 3, 1, 0, 16, 16, 10, False, base + 8, base + 9),
+        ),
+    )
+
+
+def alexnet_convstack() -> NetSpec:
+    """AlexNet CONV+POOL stack (Table 1 of the paper; FC layers excluded
+    per the paper's scope). 227x227x3 -> 6x6x256."""
+    base = 9000
+    return NetSpec(
+        "alexnet", 227, 227, 3,
+        (
+            ConvSpec("conv1", 11, 4, 0, 3, 96, 11, True, base + 0, base + 1),
+            PoolSpec("pool1", 3, 2),
+            ConvSpec("conv2", 5, 1, 2, 96, 256, 12, True, base + 2, base + 3, groups=2),
+            PoolSpec("pool2", 3, 2),
+            ConvSpec("conv3", 3, 1, 1, 256, 384, 12, True, base + 4, base + 5),
+            ConvSpec("conv4", 3, 1, 1, 384, 384, 12, True, base + 6, base + 7, groups=2),
+            ConvSpec("conv5", 3, 1, 1, 384, 256, 12, True, base + 8, base + 9, groups=2),
+            PoolSpec("pool5", 3, 2),
+        ),
+    )
+
+
+def vgg16_convstack() -> NetSpec:
+    """VGG-16 conv stack (all-3x3 — the shape the streaming CU array is
+    natively built for). Used by the decomposition and throughput sweeps."""
+    base = 11000
+    layers = []
+    cfg = [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]
+    cin = 3
+    seed = base
+    for bi, (cout, reps) in enumerate(cfg, start=1):
+        for ri in range(1, reps + 1):
+            layers.append(ConvSpec(f"conv{bi}_{ri}", 3, 1, 1, cin, cout, 8 if cin == 3 else 11,
+                                   True, seed, seed + 1))
+            seed += 2
+            cin = cout
+        layers.append(PoolSpec(f"pool{bi}", 2, 2))
+    return NetSpec("vgg16", 224, 224, 3, tuple(layers))
+
+
+ZOO = {
+    "quicknet": quicknet,
+    "facenet": facenet,
+    "alexnet": alexnet_convstack,
+    "vgg16": vgg16_convstack,
+}
+
+
+def conv_out_hw(h: int, w: int, k: int, stride: int, pad: int) -> tuple[int, int]:
+    return (h + 2 * pad - k) // stride + 1, (w + 2 * pad - k) // stride + 1
+
+
+def net_shapes(net: NetSpec) -> list[tuple[str, int, int, int]]:
+    """(layer name, H, W, C) of every layer *output*, input first."""
+    shapes = [("input", net.in_h, net.in_w, net.in_c)]
+    h, w, c = net.in_h, net.in_w, net.in_c
+    for l in net.layers:
+        if l.kind == "conv":
+            h, w = conv_out_hw(h, w, l.k, l.stride, l.pad)
+            c = l.cout
+        else:
+            h, w = (h - l.k) // l.stride + 1, (w - l.k) // l.stride + 1
+        shapes.append((l.name, h, w, c))
+    return shapes

@@ -1,0 +1,64 @@
+"""Deterministic xorshift32 PRNG shared bit-for-bit with the Rust side.
+
+The accelerator reproduction needs *identical* synthetic weights on the
+Python (L1/L2 compile path) and Rust (L3 simulator) sides so that the
+cycle simulator's output can be compared bit-exactly against the
+PJRT-executed HLO artifact. numpy/jax RNGs are not stable contracts
+across versions, so we pin a tiny xorshift32 implemented identically in
+``rust/src/util/rng.rs``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class XorShift32:
+    """xorshift32 (Marsaglia) — mirrors ``kn_stream::util::rng::XorShift32``."""
+
+    def __init__(self, seed: int):
+        seed &= 0xFFFFFFFF
+        if seed == 0:
+            seed = 0x9E3779B9
+        self.state = seed
+
+    def next_u32(self) -> int:
+        x = self.state
+        x ^= (x << 13) & 0xFFFFFFFF
+        x ^= x >> 17
+        x ^= (x << 5) & 0xFFFFFFFF
+        self.state = x
+        return x
+
+    def next_i16_in(self, lo: int, hi: int) -> int:
+        """Uniform int in [lo, hi] via modulo (bias irrelevant for synthetic weights)."""
+        span = hi - lo + 1
+        return lo + self.next_u32() % span
+
+
+def weight_tensor(seed: int, shape: tuple[int, ...], lo: int = -128, hi: int = 127) -> np.ndarray:
+    """Deterministic int16 weight tensor; generation order is C-contiguous."""
+    rng = XorShift32(seed)
+    n = int(np.prod(shape))
+    flat = np.empty(n, dtype=np.int16)
+    for i in range(n):
+        flat[i] = rng.next_i16_in(lo, hi)
+    return flat.reshape(shape)
+
+
+def bias_tensor(seed: int, n: int, lo: int = -1024, hi: int = 1023) -> np.ndarray:
+    rng = XorShift32(seed)
+    out = np.empty(n, dtype=np.int32)
+    for i in range(n):
+        out[i] = rng.next_i16_in(lo, hi)
+    return out
+
+
+def image_tensor(seed: int, shape: tuple[int, ...], lo: int = 0, hi: int = 255) -> np.ndarray:
+    """Deterministic int16 activation/image tensor (8-bit pixel range by default)."""
+    rng = XorShift32(seed)
+    n = int(np.prod(shape))
+    flat = np.empty(n, dtype=np.int16)
+    for i in range(n):
+        flat[i] = rng.next_i16_in(lo, hi)
+    return flat.reshape(shape)

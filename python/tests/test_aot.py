@@ -1,0 +1,68 @@
+"""AOT path tests: HLO text must be loadable by the rust side's parser
+(no elided constants, tuple-rooted, parameter dtypes as expected)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import prng
+from compile.aot import to_hlo_text, tile_conv_fn, TILE_SEEDS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_constants_not_elided():
+    """print_large_constants must be on: an elided 'constant({...})' would
+    silently zero the baked weights on the rust side."""
+    ws, bs = TILE_SEEDS["conv_s1"]
+    fn = tile_conv_fn(3, 1, 8, 16, 10, True, ws, bs)
+    lowered = jax.jit(fn).lower(jnp.zeros((10, 10, 8), jnp.int16))
+    text = to_hlo_text(lowered)
+    assert "constant({...})" not in text
+    assert "s16[3,3,8,16]" in text  # the weight constant, fully printed
+
+
+def test_root_is_tuple():
+    """rust unwraps with to_tuple1(); the root must be a 1-tuple."""
+    ws, bs = TILE_SEEDS["conv_s1"]
+    fn = tile_conv_fn(3, 1, 8, 16, 10, True, ws, bs)
+    lowered = jax.jit(fn).lower(jnp.zeros((10, 10, 8), jnp.int16))
+    text = to_hlo_text(lowered)
+    root_lines = [l for l in text.splitlines() if "ROOT" in l and "tuple" in l]
+    assert root_lines, "entry root must be a tuple"
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_manifest_consistent_with_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    names = set()
+    for a in man["artifacts"]:
+        assert os.path.exists(os.path.join(ART, a["file"])), a["file"]
+        assert a["name"] not in names, "duplicate artifact name"
+        names.add(a["name"])
+        assert a["input"]["dtype"] == "int16"
+        assert a["output"]["dtype"] == "int16"
+    # the contract set the rust runtime expects
+    for required in ("conv3x3_s1_tile", "facenet_fwd", "alexnet_fwd",
+                     "quicknet_fwd"):
+        assert required in names
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_artifact_constants_present_on_disk():
+    """Spot-check: the alexnet artifact must contain the conv2 weight
+    tensor fully printed (it is ~600k values; elision would shrink the
+    file by >10x)."""
+    path = os.path.join(ART, "alexnet_fwd.hlo.txt")
+    assert os.path.getsize(path) > 4 * 1024 * 1024
+    with open(path) as f:
+        head = f.read(1 << 20)
+    assert "constant({...})" not in head

@@ -1,0 +1,138 @@
+"""L1 conv3x3 Pallas kernel vs the pure-numpy oracle — the CORE
+correctness signal of the compile path. Hypothesis sweeps shapes,
+strides, channel counts, shifts, and value ranges."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import prng
+from compile.kernels import conv3x3_acc, conv3x3_int
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _case(seed, h, w, c, m, lo=-128, hi=127):
+    x = prng.image_tensor(seed, (h, w, c))
+    wt = prng.weight_tensor(seed + 1, (3, 3, c, m), lo, hi)
+    b = prng.bias_tensor(seed + 2, m)
+    return x, wt, b
+
+
+class TestConvBasic:
+    def test_identity_kernel(self):
+        """A center-tap delta filter must reproduce the input (shift 0)."""
+        x = prng.image_tensor(1, (10, 10, 1))
+        w = np.zeros((3, 3, 1, 1), np.int16)
+        w[1, 1, 0, 0] = 1
+        b = np.zeros(1, np.int32)
+        out = np.asarray(conv3x3_int(jnp.asarray(x), jnp.asarray(w),
+                                     jnp.asarray(b), stride=1, shift=0,
+                                     relu=False))
+        assert np.array_equal(out[:, :, 0], x[1:-1, 1:-1, 0])
+
+    def test_bias_only(self):
+        x = np.zeros((8, 8, 2), np.int16)
+        w = np.zeros((3, 3, 2, 4), np.int16)
+        b = np.array([5, -7, 100, 0], np.int32)
+        out = np.asarray(conv3x3_int(jnp.asarray(x), jnp.asarray(w),
+                                     jnp.asarray(b), stride=1, shift=0,
+                                     relu=False))
+        assert np.array_equal(out[0, 0], b.astype(np.int16))
+
+    def test_relu_clamps_negative(self):
+        x = np.ones((6, 6, 1), np.int16)
+        w = np.full((3, 3, 1, 1), -1, np.int16)
+        b = np.zeros(1, np.int32)
+        out = np.asarray(conv3x3_int(jnp.asarray(x), jnp.asarray(w),
+                                     jnp.asarray(b), stride=1, shift=0,
+                                     relu=True))
+        assert (out == 0).all()
+
+    def test_saturation(self):
+        """Large accumulators must saturate to int16, not wrap."""
+        x = np.full((5, 5, 4), 255, np.int16)
+        w = np.full((3, 3, 4, 1), 127, np.int16)
+        b = np.zeros(1, np.int32)
+        out = np.asarray(conv3x3_int(jnp.asarray(x), jnp.asarray(w),
+                                     jnp.asarray(b), stride=1, shift=0,
+                                     relu=False))
+        assert (out == 32767).all()
+        w = -w
+        out = np.asarray(conv3x3_int(jnp.asarray(x), jnp.asarray(w),
+                                     jnp.asarray(b), stride=1, shift=0,
+                                     relu=False))
+        assert (out == -32768).all()
+
+    def test_nonsquare_and_nondivisible(self):
+        """H_out not a multiple of the 8-row stripe, M not 16-wide."""
+        x, w, b = _case(10, 13, 21, 3, 5)
+        got = np.asarray(conv3x3_int(jnp.asarray(x), jnp.asarray(w),
+                                     jnp.asarray(b), stride=1, shift=8,
+                                     relu=True))
+        want = ref.conv_ref(x, w, b, stride=1, shift=8, relu=True)
+        assert np.array_equal(got, want)
+
+    def test_min_size(self):
+        """Smallest legal input: 3x3 -> 1x1."""
+        x, w, b = _case(11, 3, 3, 2, 1)
+        got = np.asarray(conv3x3_int(jnp.asarray(x), jnp.asarray(w),
+                                     jnp.asarray(b), stride=1, shift=4,
+                                     relu=False))
+        want = ref.conv_ref(x, w, b, stride=1, shift=4, relu=False)
+        assert got.shape == (1, 1, 1)
+        assert np.array_equal(got, want)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    h=st.integers(3, 40),
+    w=st.integers(3, 40),
+    c=st.integers(1, 24),
+    m=st.integers(1, 40),
+    stride=st.sampled_from([1, 2, 4]),
+    shift=st.integers(0, 16),
+    relu=st.booleans(),
+)
+def test_conv_matches_oracle(seed, h, w, c, m, stride, shift, relu):
+    if h < 3 or w < 3 or (h - 3) // stride < 0:
+        return
+    x = prng.image_tensor(seed, (h, w, c), lo=-256, hi=255)
+    wt = prng.weight_tensor(seed ^ 0xABCD, (3, 3, c, m))
+    b = prng.bias_tensor(seed ^ 0x1234, m)
+    got = np.asarray(conv3x3_int(jnp.asarray(x), jnp.asarray(wt),
+                                 jnp.asarray(b), stride=stride, shift=shift,
+                                 relu=relu))
+    want = ref.conv_ref(x, wt, b, stride=stride, shift=shift, relu=relu)
+    assert np.array_equal(got, want)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    h=st.integers(3, 24),
+    w=st.integers(3, 24),
+    c=st.integers(1, 8),
+    m=st.integers(1, 20),
+    stride=st.sampled_from([1, 2]),
+)
+def test_acc_matches_oracle(seed, h, w, c, m, stride):
+    """Raw int32 partial path (decomposition building block)."""
+    x = prng.image_tensor(seed, (h, w, c), lo=-300, hi=300)
+    wt = prng.weight_tensor(seed + 7, (3, 3, c, m), -300, 300)
+    got = np.asarray(conv3x3_acc(jnp.asarray(x), jnp.asarray(wt), stride=stride))
+    want = ref.conv_acc_ref(x, wt, stride)
+    assert np.array_equal(got.astype(np.int64), want)
+
+
+def test_extreme_values_wrap_exactly():
+    """int32 accumulator overflow must wrap identically to the oracle's
+    explicit two's-complement model (C = 64 of max-magnitude products)."""
+    x = np.full((6, 6, 64), 32767, np.int16)
+    w = np.full((3, 3, 64, 1), 32767, np.int16)  # 9*64*2^30 >> int32
+    got = np.asarray(conv3x3_acc(jnp.asarray(x), jnp.asarray(w), stride=1))
+    want = ref.conv_acc_ref(x, w, 1)
+    assert np.array_equal(got.astype(np.int64), want)

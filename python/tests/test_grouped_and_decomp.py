@@ -1,0 +1,96 @@
+"""Grouped convolution + kernel decomposition edge cases (the AlexNet
+conv2/4/5 path) — L2 vs the numpy oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import prng
+from compile.model import conv_grouped, layer_params, apply_layer
+from compile.kernels import ref
+from compile.nets import ZOO
+
+
+def _grouped_oracle(x, w, b, stride, shift, relu, groups):
+    cg = x.shape[2] // groups
+    mg = w.shape[3] // groups
+    outs = [
+        ref.conv_ref(x[:, :, g * cg:(g + 1) * cg],
+                     w[:, :, :, g * mg:(g + 1) * mg],
+                     b[g * mg:(g + 1) * mg],
+                     stride=stride, shift=shift, relu=relu)
+        for g in range(groups)
+    ]
+    return np.concatenate(outs, axis=2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    groups=st.sampled_from([1, 2, 4]),
+    k=st.sampled_from([3, 5]),
+    cg=st.integers(1, 4),
+    mg=st.integers(1, 8),
+    extra=st.integers(0, 8),
+)
+def test_grouped_conv_matches_oracle(seed, groups, k, cg, mg, extra):
+    cin, cout = groups * cg, groups * mg
+    h = w_dim = k + extra
+    x = prng.image_tensor(seed, (h, w_dim, cin))
+    w = prng.weight_tensor(seed + 1, (k, k, cg, cout))
+    b = prng.bias_tensor(seed + 2, cout)
+    got = np.asarray(conv_grouped(jnp.asarray(x), jnp.asarray(w),
+                                  jnp.asarray(b), stride=1, shift=9,
+                                  relu=True, groups=groups))
+    want = _grouped_oracle(x, w, b, 1, 9, True, groups)
+    assert np.array_equal(got, want)
+
+
+def test_alexnet_conv2_layer_exact():
+    """The real AlexNet conv2 (k5, pad2, groups=2, 96->256 ch)."""
+    net = ZOO["alexnet"]()
+    conv2 = net.layers[2]
+    assert conv2.name == "conv2" and conv2.groups == 2
+    x = prng.image_tensor(5, (27, 27, 96))
+    got = np.asarray(apply_layer(jnp.asarray(x), conv2))
+    w, b = layer_params(conv2)
+    want = _grouped_oracle(ref.pad_hw(x, conv2.pad), w, b, conv2.stride,
+                           conv2.shift, conv2.relu, conv2.groups)
+    assert got.shape == (27, 27, 256)
+    assert np.array_equal(got, want)
+
+
+def test_grouped_weight_shape():
+    net = ZOO["alexnet"]()
+    conv2 = net.layers[2]
+    w, b = layer_params(conv2)
+    assert w.shape == (5, 5, 48, 256)  # cin/groups = 48
+    assert b.shape == (256,)
+
+
+@pytest.mark.parametrize("k,stride", [(7, 1), (7, 2), (9, 3), (11, 4)])
+def test_large_kernel_decomposition(k, stride):
+    """Kernel sizes beyond AlexNet's (future-work coverage)."""
+    from compile.model import conv_any
+    h = k + 2 * stride + 1
+    x = prng.image_tensor(k, (h, h, 2))
+    w = prng.weight_tensor(k + 1, (k, k, 2, 5))
+    b = prng.bias_tensor(k + 2, 5)
+    got = np.asarray(conv_any(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                              stride=stride, shift=10, relu=False))
+    want = ref.conv_ref(x, w, b, stride=stride, shift=10, relu=False)
+    assert np.array_equal(got, want)
+
+
+def test_1x1_kernel_via_padding():
+    """K=1 pads to a 3x3 with zero ring — must equal the 1x1 oracle."""
+    from compile.model import conv_any
+    x = prng.image_tensor(31, (6, 6, 3))
+    w = prng.weight_tensor(32, (1, 1, 3, 4))
+    b = prng.bias_tensor(33, 4)
+    got = np.asarray(conv_any(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+                              stride=1, shift=6, relu=True))
+    want = ref.conv_ref(x, w, b, stride=1, shift=6, relu=True)
+    assert got.shape == (6, 6, 4)
+    assert np.array_equal(got, want)

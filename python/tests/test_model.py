@@ -1,0 +1,111 @@
+"""L2 model graph tests: kernel decomposition, padding, net forwards."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import prng
+from compile.model import conv_any, make_net_fn, layer_params
+from compile.kernels import ref
+from compile.nets import ZOO, net_shapes, conv_out_hw
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    k=st.sampled_from([3, 5, 7, 11]),
+    stride=st.sampled_from([1, 2, 4]),
+    c=st.integers(1, 6),
+    m=st.integers(1, 12),
+    extra=st.integers(0, 9),
+)
+def test_kernel_decomposition_matches_direct(seed, k, stride, c, m, extra):
+    """K>3 decomposed into shifted 3x3 passes == direct KxK oracle.
+
+    This is the invariant that makes the fixed 3x3 CU array able to run
+    arbitrary kernel sizes (paper §1: 'image, feature and kernel
+    decompositions')."""
+    h = w = k + extra + (stride - 1)
+    x = prng.image_tensor(seed, (h, w, c))
+    wt = prng.weight_tensor(seed + 1, (k, k, c, m))
+    b = prng.bias_tensor(seed + 2, m)
+    got = np.asarray(conv_any(jnp.asarray(x), jnp.asarray(wt), jnp.asarray(b),
+                              stride=stride, shift=9, relu=True))
+    want = ref.conv_ref(x, wt, b, stride=stride, shift=9, relu=True)
+    assert np.array_equal(got, want)
+
+
+def _net_oracle(net, x):
+    """Run the whole net through the numpy oracle."""
+    for l in net.layers:
+        if l.kind == "pool":
+            x = ref.maxpool_ref(x, l.k, l.stride)
+        else:
+            w, b = layer_params(l)
+            x = ref.conv_ref(ref.pad_hw(x, l.pad), w, b, stride=l.stride,
+                             shift=l.shift, relu=l.relu)
+    return x
+
+
+@pytest.mark.parametrize("name", ["quicknet", "facenet"])
+def test_net_forward_matches_oracle(name):
+    net = ZOO[name]()
+    x = prng.image_tensor(123, (net.in_h, net.in_w, net.in_c))
+    got = np.asarray(make_net_fn(net)(jnp.asarray(x))[0])
+    want = _net_oracle(net, x)
+    assert np.array_equal(got, want)
+
+
+def test_net_shapes_match_eval_shape():
+    """Static shape calculator agrees with jax tracing for every net."""
+    import jax
+    for name, mk in ZOO.items():
+        net = mk()
+        want = net_shapes(net)[-1][1:]
+        fn = make_net_fn(net)
+        aval = jax.eval_shape(fn, jnp.zeros((net.in_h, net.in_w, net.in_c),
+                                            jnp.int16))[0]
+        assert tuple(aval.shape) == tuple(want), name
+
+
+def test_alexnet_table1_shapes():
+    """The zoo must reproduce the layer shapes of the paper's Table 1."""
+    net = ZOO["alexnet"]()
+    shapes = {n: (h, w, c) for n, h, w, c in net_shapes(net)}
+    assert shapes["input"] == (227, 227, 3)
+    assert shapes["conv1"] == (55, 55, 96)
+    assert shapes["conv2"] == (27, 27, 256)
+    assert shapes["conv3"] == (13, 13, 384)
+    assert shapes["conv4"] == (13, 13, 384)
+    assert shapes["conv5"] == (13, 13, 256)
+
+
+def test_facenet_signal_not_dead():
+    """The synthetic quantization schedule must preserve signal (no
+    all-zero collapse through the stack)."""
+    net = ZOO["facenet"]()
+    x = prng.image_tensor(7, (64, 64, 1))
+    out = np.asarray(make_net_fn(net)(jnp.asarray(x))[0])
+    assert out.std() > 5.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_conv_out_hw_consistency(seed):
+    """conv_out_hw matches the oracle's actual output shape."""
+    rng = prng.XorShift32(seed)
+    k = [3, 5, 7][rng.next_u32() % 3]
+    stride = [1, 2][rng.next_u32() % 2]
+    pad = rng.next_u32() % 3
+    h = k + rng.next_u32() % 12
+    w = k + rng.next_u32() % 12
+    x = prng.image_tensor(seed, (h, w, 2))
+    wt = prng.weight_tensor(seed + 1, (k, k, 2, 3))
+    b = prng.bias_tensor(seed + 2, 3)
+    want_h, want_w = conv_out_hw(h, w, k, stride, pad)
+    if want_h < 1 or want_w < 1:
+        return
+    out = ref.conv_ref(ref.pad_hw(x, pad), wt, b, stride=stride, shift=8,
+                       relu=False)
+    assert out.shape == (want_h, want_w, 3)

@@ -1,0 +1,55 @@
+"""Pooling Pallas kernel vs oracle: 2x2/3x3 windows, strides 1..3."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import prng
+from compile.kernels import maxpool_int
+from compile.kernels import ref
+
+
+class TestPoolBasic:
+    def test_pool2x2_known(self):
+        x = np.arange(16, dtype=np.int16).reshape(4, 4, 1)
+        out = np.asarray(maxpool_int(jnp.asarray(x), k=2, stride=2))
+        assert np.array_equal(out[:, :, 0], [[5, 7], [13, 15]])
+
+    def test_pool3x3_overlapping(self):
+        """AlexNet-style overlapping pool: k=3, stride=2."""
+        x = prng.image_tensor(5, (9, 9, 3))
+        out = np.asarray(maxpool_int(jnp.asarray(x), k=3, stride=2))
+        assert out.shape == (4, 4, 3)
+        assert np.array_equal(out, ref.maxpool_ref(x, 3, 2))
+
+    def test_negative_values(self):
+        """All-negative inputs: max must not clamp to zero."""
+        x = np.full((6, 6, 2), -100, np.int16)
+        x[1, 1, 0] = -7
+        out = np.asarray(maxpool_int(jnp.asarray(x), k=2, stride=2))
+        assert out[0, 0, 0] == -7
+        assert out[0, 0, 1] == -100
+
+    def test_int16_min_padding_not_leaked(self):
+        """Channel padding uses INT16_MIN sentinels; they must never win."""
+        x = np.full((5, 5, 17), -32767, np.int16)  # 17 ch -> padded to 32
+        out = np.asarray(maxpool_int(jnp.asarray(x), k=2, stride=2))
+        assert (out == -32767).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    h=st.integers(3, 40),
+    w=st.integers(3, 40),
+    c=st.integers(1, 40),
+    k=st.sampled_from([2, 3]),
+    stride=st.integers(1, 3),
+)
+def test_pool_matches_oracle(seed, h, w, c, k, stride):
+    if h < k or w < k:
+        return
+    x = prng.image_tensor(seed, (h, w, c), lo=-3000, hi=3000)
+    got = np.asarray(maxpool_int(jnp.asarray(x), k=k, stride=stride))
+    want = ref.maxpool_ref(x, k, stride)
+    assert np.array_equal(got, want)

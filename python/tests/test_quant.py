@@ -1,0 +1,55 @@
+"""Requantization kernel: the bit-exactness contract itself."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import requantize, requant_scalar
+from compile.kernels.ref import requant_ref
+
+
+class TestRequantKnown:
+    def test_round_half_up(self):
+        # 3/2 -> 2 (half rounds up), -3/2 -> -1 (toward +inf)
+        acc = np.array([3, -3, 2, -2, 1, -1], np.int32)
+        out = np.asarray(requantize(jnp.asarray(acc), shift=1))
+        assert out.tolist() == [2, -1, 1, -1, 1, 0]
+
+    def test_shift_zero_passthrough(self):
+        acc = np.array([123, -456, 32767, -32768], np.int32)
+        out = np.asarray(requantize(jnp.asarray(acc), shift=0))
+        assert out.tolist() == [123, -456, 32767, -32768]
+
+    def test_saturation_both_rails(self):
+        acc = np.array([1 << 30, -(1 << 30), 32768 << 4, -(32769 << 4)], np.int32)
+        out = np.asarray(requantize(jnp.asarray(acc), shift=4))
+        assert out.tolist() == [32767, -32768, 32767, -32768]
+
+    def test_relu(self):
+        acc = np.array([-1000, -1, 0, 1, 1000], np.int32)
+        out = np.asarray(requantize(jnp.asarray(acc), shift=0, relu=True))
+        assert out.tolist() == [0, 0, 0, 1, 1000]
+
+    def test_rounding_add_can_wrap(self):
+        """acc near INT32_MAX: the rounding add wraps (hardware register
+        semantics) — all three implementations must agree."""
+        acc = np.array([2**31 - 1, 2**31 - 64, -(2**31)], np.int32)
+        out = np.asarray(requantize(jnp.asarray(acc), shift=8))
+        want = requant_ref(acc.astype(np.int64), 8)
+        scal = [requant_scalar(int(a), 8) for a in acc]
+        assert out.tolist() == want.tolist() == scal
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    accs=st.lists(st.integers(-(2**31), 2**31 - 1), min_size=1, max_size=64),
+    shift=st.integers(0, 24),
+    relu=st.booleans(),
+)
+def test_requant_three_way_agreement(accs, shift, relu):
+    acc = np.array(accs, np.int32)
+    kern = np.asarray(requantize(jnp.asarray(acc), shift=shift, relu=relu))
+    orac = requant_ref(acc.astype(np.int64), shift, relu)
+    scal = np.array([requant_scalar(int(a), shift, relu) for a in accs], np.int16)
+    assert np.array_equal(kern, orac)
+    assert np.array_equal(kern, scal)

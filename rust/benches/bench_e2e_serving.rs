@@ -1,0 +1,88 @@
+//! End-to-end serving bench (the Fig. 8 system): coordinator + simulated
+//! accelerator streaming synthetic camera frames, vs the PJRT CPU
+//! baseline executing the same AOT artifact.
+//!
+//! `cargo bench --bench bench_e2e_serving`
+
+use kn_stream::coordinator::{Coordinator, CoordinatorConfig};
+use kn_stream::energy::{dvfs, EnergyModel, OperatingPoint};
+use kn_stream::model::{zoo, Tensor};
+use kn_stream::runtime::Golden;
+use kn_stream::util::bench::{bench_once, Table};
+
+fn main() {
+    let energy = EnergyModel::default();
+    let frames_n = 32;
+
+    let mut t = Table::new(
+        "End-to-end serving (coordinator + simulated accelerator)",
+        &["net", "f (MHz)", "workers", "device fps", "p50", "p99", "mJ/frame",
+          "host sim fps"],
+    );
+    for net_name in ["quicknet", "facenet"] {
+        let net = zoo::by_name(net_name).unwrap();
+        for (freq, workers) in [(500.0, 1usize), (20.0, 1), (500.0, 4)] {
+            let op = OperatingPoint::for_freq(freq);
+            let coord = Coordinator::start(
+                &net,
+                CoordinatorConfig { workers, queue_depth: 4, op },
+            )
+            .unwrap();
+            let frames: Vec<Tensor> = (0..frames_n)
+                .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))
+                .collect();
+            let m = coord.run_stream(frames);
+            let e = energy.energy(&m.totals, op);
+            t.row(&[
+                net_name.into(),
+                format!("{freq:.0}"),
+                format!("{workers}"),
+                format!("{:.1}", m.device_fps() * workers as f64),
+                format!("{:.2}ms", m.dev_lat_us.quantile(0.5) / 1e3),
+                format!("{:.2}ms", m.dev_lat_us.quantile(0.99) / 1e3),
+                format!("{:.3}", e.total_j() / m.frames as f64 * 1e3),
+                format!("{:.1}", m.wall_fps()),
+            ]);
+            coord.stop();
+        }
+    }
+    t.print();
+
+    // ---- PJRT CPU baseline (the "reference platform") -----------------------
+    match Golden::load_default() {
+        Ok(mut golden) => {
+            let mut t = Table::new(
+                "Baseline: same AOT artifact on the PJRT CPU client",
+                &["artifact", "first run (compile+exec)", "steady-state", "vs device @500MHz"],
+            );
+            for (art, net_name) in [("facenet_fwd", "facenet"), ("alexnet_fwd", "alexnet")] {
+                let net = zoo::by_name(net_name).unwrap();
+                let frame = Tensor::random_image(3, net.in_h, net.in_w, net.in_c);
+                let cold = bench_once(art, || golden.run(art, &frame).unwrap());
+                // steady state: average of 5
+                let t0 = std::time::Instant::now();
+                for _ in 0..5 {
+                    let _ = golden.run(art, &frame).unwrap();
+                }
+                let steady = t0.elapsed() / 5;
+                // device time at 500 MHz from one sim run
+                let runner = kn_stream::compiler::NetRunner::new(&net).unwrap();
+                let (_, stats) = runner.run_frame(&frame).unwrap();
+                let dev = stats.cycles as f64 * dvfs::PEAK.cycle_s();
+                t.row(&[
+                    art.into(),
+                    format!("{:.1} ms", cold.mean.as_secs_f64() * 1e3),
+                    format!("{:.2} ms", steady.as_secs_f64() * 1e3),
+                    format!("{:.2}x device time", steady.as_secs_f64() / dev),
+                ]);
+            }
+            t.print();
+            println!(
+                "\nNote: the PJRT row is a *numerical* baseline (same bits), not a fair \
+                 perf baseline — it runs on a desktop-class CPU, the device model is a \
+                 7..425 mW accelerator."
+            );
+        }
+        Err(e) => println!("PJRT baseline skipped: {e}"),
+    }
+}

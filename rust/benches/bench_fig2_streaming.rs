@@ -1,0 +1,78 @@
+//! Regenerates **Fig. 2** (streaming architecture): the column buffer
+//! turns row-streamed SRAM reads into one valid 3×3 window per cycle
+//! after an 2-row fill — vs a naive window fetcher that re-reads the
+//! 3×3 neighbourhood from SRAM for every output pixel.
+//!
+//! `cargo bench --bench bench_fig2_streaming`
+
+use kn_stream::model::Tensor;
+use kn_stream::sim::colbuf::ColumnBuffer;
+use kn_stream::sim::sram::WORD_PX;
+use kn_stream::util::bench::{bench, fmt_dur, Table};
+
+fn main() {
+    // ---- continuity: valid windows per streamed pixel ----------------------
+    let mut t = Table::new(
+        "Fig. 2b — streaming continuity (single channel, W x H tile)",
+        &["tile", "pixels in", "fill px", "valid windows", "valid/cycle after fill",
+          "SRAM words (col buf)", "SRAM words (naive)", "saving"],
+    );
+    for (h, w) in [(16usize, 16usize), (32, 32), (55, 55), (112, 112)] {
+        let tensor = Tensor::random_image(1, h, w, 1);
+        let mut cb = ColumnBuffer::new(w);
+        let mut valid = 0u64;
+        let mut fill_px = 0u64;
+        for y in 0..h {
+            for x in 0..w {
+                if cb.push_px(tensor.at(y, x, 0)).is_some() {
+                    valid += 1;
+                } else if valid == 0 {
+                    fill_px += 1;
+                }
+            }
+        }
+        let expect = ((h - 2) * (w - 2)) as u64;
+        assert_eq!(valid, expect);
+        // column buffer: every pixel read once = h*w/8 words
+        let stream_words = (h * w).div_ceil(WORD_PX) as u64;
+        // naive: 9 reads per output window, word-granular
+        let naive_words = expect * 9 / WORD_PX as u64;
+        let after_fill_rate = valid as f64 / (h * w) as f64 / ((h - 2) as f64 / h as f64);
+        t.row(&[
+            format!("{h}x{w}"),
+            format!("{}", h * w),
+            format!("{fill_px}"),
+            format!("{valid}"),
+            format!("{:.2}", after_fill_rate.min(1.0)),
+            format!("{stream_words}"),
+            format!("{naive_words}"),
+            format!("{:.1}x", naive_words as f64 / stream_words as f64),
+        ]);
+    }
+    t.print();
+
+    // ---- host-side throughput of the streaming model -----------------------
+    let tensor = Tensor::random_image(2, 64, 64, 1);
+    let r = bench("column buffer 64x64 stream", || {
+        let mut cb = ColumnBuffer::new(64);
+        let mut acc = 0i64;
+        for y in 0..64 {
+            for x in 0..64 {
+                if let Some(win) = cb.push_px(tensor.at(y, x, 0)) {
+                    acc += win[4] as i64;
+                }
+            }
+        }
+        acc
+    });
+    println!(
+        "\nhost microbench: 64x64 stream in {} ({:.1} Mpx/s simulated)",
+        fmt_dur(r.mean),
+        4096.0 / r.mean.as_secs_f64() / 1e6
+    );
+    println!(
+        "Takeaway (paper Fig. 2): after the 2-row fill the pipeline yields one valid \
+         window per streamed pixel — no pauses — while SRAM traffic drops ~9x vs \
+         re-fetching windows."
+    );
+}

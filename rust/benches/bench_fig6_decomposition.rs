@@ -1,0 +1,115 @@
+//! Regenerates **Fig. 6** (image & feature decomposition of AlexNet
+//! conv1): SRAM footprints with and without decomposition, the paper's
+//! canonical ÷9/÷2 plan, the solver's plan, and the DRAM-traffic cost
+//! of decomposing ("at the cost of slower computation").
+//!
+//! `cargo bench --bench bench_fig6_decomposition`
+
+use kn_stream::compiler::decompose::{plan_conv, plan_fixed_grid};
+use kn_stream::compiler::NetRunner;
+use kn_stream::model::{zoo, LayerSpec, NetSpec, Tensor};
+use kn_stream::util::bench::Table;
+use kn_stream::SRAM_BYTES;
+
+fn main() {
+    let net = zoo::alexnet();
+    let LayerSpec::Conv(c1) = &net.layers[0] else { unreachable!() };
+    let (h, w) = (227usize, 227usize);
+
+    // ---- SRAM footprint table (the Fig. 6 numbers) -------------------------
+    let naive_in = h * w * c1.cin * 2;
+    let naive_out = 55 * 55 * c1.cout * 2;
+    let mut t = Table::new(
+        "Fig. 6 — AlexNet conv1 SRAM footprint vs decomposition",
+        &["plan", "tiles", "feat split", "in tile", "out tile", "fits 128KB?"],
+    );
+    t.row(&[
+        "undecomposed".into(),
+        "1".into(),
+        "1".into(),
+        format!("{:.0}KB", naive_in as f64 / 1e3),
+        format!("{:.0}KB", naive_out as f64 / 1e3),
+        "NO (309KB input alone)".into(),
+    ]);
+    for (gy, gx, fs, label) in [(3, 3, 2, "paper ÷9, ÷2"), (2, 2, 4, "2x2, ÷4"), (4, 4, 1, "4x4, ÷1")] {
+        let (tiles, in_b, out_b) = plan_fixed_grid(c1, h, w, gy, gx, fs);
+        let fits = in_b + out_b <= SRAM_BYTES;
+        t.row(&[
+            label.into(),
+            format!("{}", tiles.len()),
+            format!("{fs}"),
+            format!("{:.0}KB", in_b as f64 / 1e3),
+            format!("{:.0}KB", out_b as f64 / 1e3),
+            if fits { "yes".into() } else { "NO".into() },
+        ]);
+    }
+    let solver = plan_conv(c1, h, w).unwrap();
+    t.row(&[
+        "solver optimum".into(),
+        format!("{}", solver.tiles.len()),
+        format!("(16-wide x{})", solver.m_tiles),
+        format!("{:.0}KB", solver.in_tile_bytes as f64 / 1e3),
+        format!("{:.0}KB", solver.out_tile_bytes as f64 / 1e3),
+        "yes".into(),
+    ]);
+    t.print();
+    println!("paper: input 309KB -> 34KB (÷9), output 581KB -> 33KB (÷9 image x ÷2 feature)");
+
+    // ---- decomposition cost: DRAM traffic & cycles vs grid ------------------
+    let mut t = Table::new(
+        "Decomposition cost on conv1 (measured on the simulator)",
+        &["grid", "cycles", "DRAM read MB", "DRAM write MB", "halo overhead"],
+    );
+    let ideal_read = (h * w * c1.cin * 2) as f64 / 1e6;
+    for force in [None, Some(2), Some(3), Some(4), Some(5)] {
+        // single-layer net; to force a grid we shrink ACC_TILE via tiles:
+        // easiest honest knob: run the solver plan (None) vs fixed grids by
+        // constructing a plan-equivalent via plan_fixed_grid is codegen-
+        // internal, so measure the solver plan and report fixed grids
+        // analytically from tile halos.
+        match force {
+            None => {
+                let single = NetSpec {
+                    name: "conv1".into(),
+                    in_h: h,
+                    in_w: w,
+                    in_c: c1.cin,
+                    layers: vec![net.layers[0].clone()],
+                };
+                let runner = NetRunner::new(&single).unwrap();
+                let frame = Tensor::random_image(3, h, w, c1.cin);
+                let (_, stats) = runner.run_frame(&frame).unwrap();
+                t.row(&[
+                    format!("solver ({}x{})", solver.gy, solver.gx),
+                    format!("{}", stats.cycles),
+                    format!("{:.2}", stats.dram_read_bytes as f64 / 1e6),
+                    format!("{:.2}", stats.dram_write_bytes as f64 / 1e6),
+                    format!(
+                        "{:.2}x vs ideal {:.2}MB",
+                        stats.dram_read_bytes as f64 / 1e6 / ideal_read,
+                        ideal_read
+                    ),
+                ]);
+            }
+            Some(g) => {
+                let (tiles, _, _) = plan_fixed_grid(c1, h, w, g, g, 2);
+                let read_px: usize =
+                    tiles.iter().map(|tl| tl.ih * tl.iw * c1.cin).sum::<usize>() * solver.m_tiles;
+                t.row(&[
+                    format!("{g}x{g} (analytic)"),
+                    "-".into(),
+                    format!("{:.2}", (read_px * 2) as f64 / 1e6),
+                    "-".into(),
+                    format!("{:.2}x", (read_px * 2) as f64 / 1e6 / ideal_read),
+                ]);
+            }
+        }
+    }
+    t.print();
+    println!(
+        "\nTakeaway (paper §5): decomposition turns an un-runnable 309KB working set \
+         into <128KB tiles; the price is halo re-reads and per-feature-tile input \
+         re-streaming — DRAM traffic grows with the grid, which is why the solver \
+         prefers the coarsest grid that fits."
+    );
+}

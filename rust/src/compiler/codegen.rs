@@ -1,0 +1,374 @@
+//! Command-stream code generation: decomposition plan → ISA program +
+//! DRAM image (weights, biases, activation canvases).
+//!
+//! ## DRAM layout
+//!
+//! Activations live in **padded planar canvases**: layer *i*'s output
+//! canvas is (C, Hc, Wc) planar with a `pad_next` zero border on all
+//! sides plus a `margin` zero skirt on bottom/right for the next
+//! layer's kernel-decomposition overshoot (Kp − K). Because DRAM is
+//! zero-initialised and the apron is never written, conv padding comes
+//! for free and tile loads are simple 2-D DMA reads.
+//!
+//! Weights/biases are laid out in exactly the blocks `LoadWeights` /
+//! `LoadBias` consume (CU staging order `[ch][tap9][feat16]`), one block
+//! per (layer, conv-group, feature-tile, tap, channel-group).
+
+use std::collections::HashMap;
+
+use super::decompose::{plan_conv, Plan, PlanError};
+use super::kernel_decomp::{tap_weights, taps};
+use crate::isa::{BiasLoad, Cmd, ConvCfg, ConvPass, DmaDesc, PoolPass, WeightLoad, PASS_FIRST, PASS_LAST};
+use crate::model::{ConvSpec, LayerSpec, NetSpec};
+use crate::{NUM_CU, SRAM_BYTES};
+
+/// A padded planar activation canvas in DRAM.
+#[derive(Clone, Debug)]
+pub struct Canvas {
+    pub base_px: usize,
+    /// Valid (unpadded) dims.
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Zero border on top/left (= consumer's conv pad).
+    pub pad: usize,
+    /// Extra zero skirt on bottom/right (consumer's Kp − K).
+    pub margin: usize,
+    /// Full canvas dims.
+    pub ch: usize,
+    pub cw: usize,
+}
+
+impl Canvas {
+    fn layout(base_px: usize, h: usize, w: usize, c: usize, pad: usize, margin: usize) -> Self {
+        let ch = h + 2 * pad + margin;
+        let cw = w + 2 * pad + margin;
+        Self { base_px, h, w, c, pad, margin, ch, cw }
+    }
+    pub fn len_px(&self) -> usize {
+        self.c * self.ch * self.cw
+    }
+    /// DRAM pixel address of valid-region (y, x) of channel `ch_idx`.
+    pub fn px(&self, ch_idx: usize, y: usize, x: usize) -> usize {
+        self.base_px + (ch_idx * self.ch + y + self.pad) * self.cw + x + self.pad
+    }
+    /// Address of a *canvas-space* coordinate (tile windows use this:
+    /// tile iy0/ix0 are relative to the padded canvas origin).
+    pub fn px_canvas(&self, ch_idx: usize, cy: usize, cx: usize) -> usize {
+        self.base_px + (ch_idx * self.ch + cy) * self.cw + cx
+    }
+}
+
+/// Everything the runtime needs to run one network on the accelerator.
+pub struct CompiledNet {
+    pub net: NetSpec,
+    pub program: Vec<Cmd>,
+    /// Initial DRAM image (weights + zeroed canvases). Length = DRAM px.
+    pub dram_init: Vec<i16>,
+    /// Input canvas (frame goes here) and final output canvas.
+    pub input: Canvas,
+    pub output: Canvas,
+    /// Per conv layer: the decomposition plan (reporting / benches).
+    pub plans: Vec<(String, Plan)>,
+    /// Total DRAM pixels used.
+    pub dram_px: usize,
+}
+
+/// What the next layer needs from the current output canvas.
+fn consumer_needs(layers: &[LayerSpec], idx: usize) -> (usize, usize) {
+    match layers.get(idx + 1) {
+        Some(LayerSpec::Conv(c)) => {
+            let kp = 3 * c.k.div_ceil(3);
+            (c.pad, kp - c.k)
+        }
+        _ => (0, 0),
+    }
+}
+
+struct Emitter {
+    program: Vec<Cmd>,
+    dram: Vec<i16>,
+    /// weight-block offset cache: (layer, group, mtile, tap, cgroup)
+    wcache: HashMap<(usize, usize, usize, usize, usize), (usize, usize)>,
+    bcache: HashMap<(usize, usize, usize), usize>,
+}
+
+impl Emitter {
+    fn alloc_dram(&mut self, len: usize) -> usize {
+        let base = self.dram.len();
+        self.dram.resize(base + len, 0);
+        base
+    }
+    fn push(&mut self, c: Cmd) {
+        self.program.push(c);
+    }
+}
+
+/// Compile a network into a command program + DRAM image.
+pub fn compile_net(net: &NetSpec) -> Result<CompiledNet, PlanError> {
+    let mut em = Emitter {
+        program: Vec::new(),
+        dram: Vec::new(),
+        wcache: HashMap::new(),
+        bcache: HashMap::new(),
+    };
+
+    // ---- canvases --------------------------------------------------------
+    let (pad0, margin0) = match &net.layers[0] {
+        LayerSpec::Conv(c) => (c.pad, 3 * c.k.div_ceil(3) - c.k),
+        _ => (0, 0),
+    };
+    let in_canvas = {
+        let base = em.alloc_dram(0);
+        let cv = Canvas::layout(base, net.in_h, net.in_w, net.in_c, pad0, margin0);
+        em.alloc_dram(cv.len_px());
+        cv
+    };
+    let mut canvases = vec![in_canvas.clone()];
+    let mut shape = net.in_shape();
+    for (i, l) in net.layers.iter().enumerate() {
+        shape = l.out_shape(shape);
+        let (pad, margin) = consumer_needs(&net.layers, i);
+        let base = em.alloc_dram(0);
+        let cv = Canvas::layout(base, shape.0, shape.1, shape.2, pad, margin);
+        em.alloc_dram(cv.len_px());
+        canvases.push(cv);
+    }
+
+    // ---- per-layer programs ----------------------------------------------
+    let mut plans = Vec::new();
+    let mut shape = net.in_shape();
+    for (li, l) in net.layers.iter().enumerate() {
+        let (src, dst) = (canvases[li].clone(), canvases[li + 1].clone());
+        match l {
+            LayerSpec::Conv(c) => {
+                let plan = plan_conv(c, shape.0, shape.1)?;
+                emit_conv(&mut em, li, c, &plan, &src, &dst);
+                plans.push((c.name.clone(), plan));
+            }
+            LayerSpec::Pool(p) => {
+                emit_pool(&mut em, p, &src, &dst);
+            }
+        }
+        shape = l.out_shape(shape);
+    }
+    em.push(Cmd::Halt);
+
+    let dram_px = em.dram.len();
+    Ok(CompiledNet {
+        net: net.clone(),
+        program: em.program,
+        dram_init: em.dram,
+        input: canvases[0].clone(),
+        output: canvases[canvases.len() - 1].clone(),
+        plans,
+        dram_px,
+    })
+}
+
+/// Emit one conv layer.
+fn emit_conv(em: &mut Emitter, li: usize, c: &ConvSpec, plan: &Plan, src: &Canvas, dst: &Canvas) {
+    let weights = c.weights();
+    let biases = c.biases();
+    let cg = c.cin / c.groups; // channels per conv group
+    let mg = c.cout / c.groups; // features per conv group
+    let tap_list = taps(c.k);
+    em.push(Cmd::SetConv(ConvCfg { stride: c.stride as u8, shift: c.shift, relu: c.relu }));
+
+    // SRAM layout per tile: [input tile (c_per_group planar)] [out staging 16]
+    let in_tile_px_max =
+        plan.tiles.iter().map(|t| t.ih * t.iw).max().unwrap() * plan.c_per_group;
+
+    for tile in &plan.tiles {
+        let in_px = tile.ih * tile.iw;
+        let sram_in = 0u32;
+        let sram_out = in_tile_px_max as u32;
+        debug_assert!(
+            (in_tile_px_max + tile.oh * tile.ow * NUM_CU) * 2 <= SRAM_BYTES,
+            "plan exceeded SRAM"
+        );
+        // track which channel slice currently resides in SRAM
+        let mut loaded: Option<(usize, usize)> = None; // (group, cgroup)
+        for g in 0..c.groups {
+            for mt in 0..plan.m_tiles {
+                // bias block
+                let bkey = (li, g, mt);
+                let boff = match em.bcache.get(&bkey) {
+                    Some(&o) => o,
+                    None => {
+                        let o = em.alloc_dram(2 * NUM_CU);
+                        for f in 0..NUM_CU {
+                            let m = mt * NUM_CU + f;
+                            let v = if m < mg { biases[g * mg + m] } else { 0 };
+                            em.dram[o + 2 * f] = (v as u32 & 0xFFFF) as u16 as i16;
+                            em.dram[o + 2 * f + 1] = ((v as u32) >> 16) as u16 as i16;
+                        }
+                        em.bcache.insert(bkey, o);
+                        o
+                    }
+                };
+                em.push(Cmd::LoadBias(BiasLoad { dram_px: boff as u32 }));
+
+                // Collect this feature-group's pass list, then emit it
+                // software-pipelined: the LoadWeights for pass i+1 is
+                // issued before Conv(i), so the shadow bank (depth 2)
+                // lets the prefetch DMA hide behind Conv(i)'s compute —
+                // exactly the §4.2 "pre-fetch controller" behaviour.
+                struct PassDesc {
+                    cgi: usize,
+                    cn: usize,
+                    woff: usize,
+                    dy: u8,
+                    dx: u8,
+                }
+                let mut passes: Vec<PassDesc> = Vec::new();
+                for cgi in 0..plan.c_groups {
+                    let c0 = cgi * plan.c_per_group;
+                    let cn = plan.c_per_group.min(cg - c0);
+                    for (ti, tp) in tap_list.iter().enumerate() {
+                        let wkey = (li, g, mt, ti, cgi);
+                        let (woff, _wlen) = match em.wcache.get(&wkey) {
+                            Some(&v) => v,
+                            None => {
+                                let blk = tap_weights(
+                                    &weights,
+                                    c.k,
+                                    cg,
+                                    c.cout,
+                                    *tp,
+                                    c0,
+                                    cn,
+                                    g * mg + mt * NUM_CU,
+                                );
+                                let o = em.alloc_dram(blk.len());
+                                em.dram[o..o + blk.len()].copy_from_slice(&blk);
+                                em.wcache.insert(wkey, (o, blk.len()));
+                                (o, blk.len())
+                            }
+                        };
+                        passes.push(PassDesc { cgi, cn, woff, dy: tp.dy, dx: tp.dx });
+                    }
+                }
+                let total_passes = passes.len();
+                // prime the shadow bank with pass 0's weights
+                em.push(Cmd::LoadWeights(WeightLoad {
+                    dram_px: passes[0].woff as u32,
+                    cn: passes[0].cn as u16,
+                }));
+                for (pass, pd) in passes.iter().enumerate() {
+                    // (re)load the input channel slice if not resident
+                    if loaded != Some((g, pd.cgi)) {
+                        let c0 = pd.cgi * plan.c_per_group;
+                        for ci in 0..pd.cn {
+                            let ch = g * cg + c0 + ci;
+                            em.push(Cmd::LoadImage(DmaDesc {
+                                dram_px: src.px_canvas(ch, tile.iy0, tile.ix0) as u32,
+                                sram_px: sram_in + (ci * in_px) as u32,
+                                row_px: tile.iw as u32,
+                                rows: tile.ih as u16,
+                                dram_pitch: src.cw as u32,
+                                sram_pitch: tile.iw as u32,
+                            }));
+                        }
+                        em.push(Cmd::Sync);
+                        loaded = Some((g, pd.cgi));
+                    }
+                    // prefetch the NEXT pass's weights before this Conv
+                    if let Some(next) = passes.get(pass + 1) {
+                        em.push(Cmd::LoadWeights(WeightLoad {
+                            dram_px: next.woff as u32,
+                            cn: next.cn as u16,
+                        }));
+                    }
+                    let mut flags = 0u8;
+                    if pass == 0 {
+                        flags |= PASS_FIRST;
+                    }
+                    if pass + 1 == total_passes {
+                        flags |= PASS_LAST;
+                    }
+                    em.push(Cmd::Conv(ConvPass {
+                        src_px: sram_in,
+                        acc_px: 0,
+                        dst_px: sram_out,
+                        ih: tile.ih as u16,
+                        iw: tile.iw as u16,
+                        ctot: pd.cn as u16,
+                        c0: 0,
+                        cn: pd.cn as u16,
+                        oh: tile.oh as u16,
+                        ow: tile.ow as u16,
+                        dy: pd.dy,
+                        dx: pd.dx,
+                        flags,
+                    }));
+                }
+                // store the 16-feature group to the output canvas
+                for f in 0..NUM_CU {
+                    let m = mt * NUM_CU + f;
+                    if m >= mg {
+                        break;
+                    }
+                    let gm = g * mg + m;
+                    em.push(Cmd::Store(DmaDesc {
+                        dram_px: dst.px(gm, tile.oy0, tile.ox0) as u32,
+                        sram_px: sram_out + (f * tile.oh * tile.ow) as u32,
+                        row_px: tile.ow as u32,
+                        rows: tile.oh as u16,
+                        dram_pitch: dst.cw as u32,
+                        sram_pitch: tile.ow as u32,
+                    }));
+                }
+                em.push(Cmd::Sync);
+            }
+        }
+    }
+}
+
+/// Emit one pool layer: channel-chunked SRAM-resident pooling.
+fn emit_pool(em: &mut Emitter, p: &crate::model::PoolSpec, src: &Canvas, dst: &Canvas) {
+    let (ih, iw, c) = (src.h, src.w, src.c);
+    let oh = (ih - p.k) / p.stride + 1;
+    let ow = (iw - p.k) / p.stride + 1;
+    // channels per chunk limited by SRAM: (ih*iw + oh*ow) * 2 bytes each
+    let per_ch = (ih * iw + oh * ow) * 2;
+    let cc_max = (SRAM_BYTES / per_ch).max(1).min(c);
+    let mut ch0 = 0;
+    while ch0 < c {
+        let cc = cc_max.min(c - ch0);
+        let sram_in = 0u32;
+        let sram_out = (cc * ih * iw) as u32;
+        for ci in 0..cc {
+            em.push(Cmd::LoadImage(DmaDesc {
+                dram_px: src.px(ch0 + ci, 0, 0) as u32,
+                sram_px: sram_in + (ci * ih * iw) as u32,
+                row_px: iw as u32,
+                rows: ih as u16,
+                dram_pitch: src.cw as u32,
+                sram_pitch: iw as u32,
+            }));
+        }
+        em.push(Cmd::Sync);
+        em.push(Cmd::Pool(PoolPass {
+            src_px: sram_in,
+            dst_px: sram_out,
+            ih: ih as u16,
+            iw: iw as u16,
+            c: cc as u16,
+            k: p.k as u8,
+            stride: p.stride as u8,
+        }));
+        for ci in 0..cc {
+            em.push(Cmd::Store(DmaDesc {
+                dram_px: dst.px(ch0 + ci, 0, 0) as u32,
+                sram_px: sram_out + (ci * oh * ow) as u32,
+                row_px: ow as u32,
+                rows: oh as u16,
+                dram_pitch: dst.cw as u32,
+                sram_pitch: ow as u32,
+            }));
+        }
+        em.push(Cmd::Sync);
+        ch0 += cc;
+    }
+}

@@ -1,0 +1,344 @@
+//! Image / feature / channel decomposition solver (paper §5, Fig. 6).
+//!
+//! Fits an arbitrary CONV layer into the fixed on-chip resources:
+//!
+//! * **SRAM budget** (128 KB): `input tile (channel group, planar)` +
+//!   `output staging (one 16-feature group)` + weight staging must fit.
+//! * **ACC BUF**: output tile ≤ 1024 pixels (int32 partial plane,
+//!   16 features wide).
+//!
+//! Decomposition axes, in the paper's terms:
+//! * *image decomposition*: split the output plane into a `gy × gx`
+//!   grid of tiles, re-loading each tile's input window (with halo)
+//!   from DRAM — trades DRAM traffic for SRAM footprint;
+//! * *feature decomposition*: output features computed in groups of 16
+//!   (the engine width) — `fsplit` counts the groups per DRAM round;
+//! * *channel decomposition*: input channels loaded in groups when one
+//!   channel set alone exceeds SRAM; partial sums persist in the ACC
+//!   BUF across groups.
+//!
+//! The solver prefers the fewest image tiles (halo overhead), then the
+//! fewest channel groups (input re-streaming), and reports the SRAM
+//! footprint of the chosen plan (the Fig. 6 numbers).
+
+use crate::model::ConvSpec;
+use crate::sim::accbuf::ACC_TILE_PX;
+use crate::{NUM_CU, SRAM_BYTES};
+
+/// One spatial tile of a layer's output plane.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tile {
+    /// Output-plane origin and size.
+    pub oy0: usize,
+    pub ox0: usize,
+    pub oh: usize,
+    pub ow: usize,
+    /// Padded-input-canvas origin and size of the window this tile reads
+    /// (includes halo; the canvas bakes the conv padding).
+    pub iy0: usize,
+    pub ix0: usize,
+    pub ih: usize,
+    pub iw: usize,
+}
+
+/// The decomposition plan for one CONV layer.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// Image-decomposition grid.
+    pub gy: usize,
+    pub gx: usize,
+    pub tiles: Vec<Tile>,
+    /// Input channels per load group (per conv group).
+    pub c_per_group: usize,
+    /// Number of channel load groups (per conv group).
+    pub c_groups: usize,
+    /// 16-feature engine tiles per conv group.
+    pub m_tiles: usize,
+    /// Peak SRAM bytes: input tile + output staging.
+    pub sram_bytes: usize,
+    /// Largest input-tile bytes (the Fig. 6 "input SRAM" number).
+    pub in_tile_bytes: usize,
+    /// Output staging bytes (one 16-feature group of one tile).
+    pub out_tile_bytes: usize,
+}
+
+/// Errors a plan request can hit.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PlanError {
+    #[error("layer cannot fit: single pixel tile still exceeds resources")]
+    Unsatisfiable,
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// Split `n` into `parts` nearly-equal spans (first ones larger).
+pub fn split_even(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut at = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push((at, len));
+        at += len;
+    }
+    out
+}
+
+/// Build the tile list for a given grid over the output plane.
+/// `kp` = padded kernel span (3·⌈K/3⌉), `canvas` dims are the padded
+/// input canvas (H + 2·pad).
+fn tiles_for_grid(
+    (oh, ow): (usize, usize),
+    (gy, gx): (usize, usize),
+    stride: usize,
+    kp: usize,
+) -> Vec<Tile> {
+    let mut tiles = Vec::with_capacity(gy * gx);
+    for (oy0, th) in split_even(oh, gy) {
+        for (ox0, tw) in split_even(ow, gx) {
+            if th == 0 || tw == 0 {
+                continue;
+            }
+            // input window: rows oy0*s .. (oy0+th-1)*s + kp
+            let iy0 = oy0 * stride;
+            let ix0 = ox0 * stride;
+            let ih = (th - 1) * stride + kp;
+            let iw = (tw - 1) * stride + kp;
+            tiles.push(Tile { oy0, ox0, oh: th, ow: tw, iy0, ix0, ih, iw });
+        }
+    }
+    tiles
+}
+
+/// SRAM cost of a candidate: input tile (one channel group, planar,
+/// padded kernel halo) + output staging (16 features, int16) + weight
+/// staging for one pass.
+fn candidate_sram(tile: &Tile, c_per_group: usize) -> (usize, usize, usize) {
+    let in_bytes = tile.ih * tile.iw * c_per_group * 2;
+    let out_bytes = tile.oh * tile.ow * NUM_CU * 2;
+    let w_bytes = c_per_group * 9 * NUM_CU * 2;
+    (in_bytes, out_bytes, w_bytes)
+}
+
+/// Solve the decomposition for `spec` with input plane (h, w) (pre-pad).
+pub fn plan_conv(spec: &ConvSpec, h: usize, w: usize) -> Result<Plan, PlanError> {
+    let (oh, ow) = (
+        (h + 2 * spec.pad - spec.k) / spec.stride + 1,
+        (w + 2 * spec.pad - spec.k) / spec.stride + 1,
+    );
+    let kp = 3 * ceil_div(spec.k, 3);
+    let cg_in = spec.cin / spec.groups; // channels per conv group
+    // grid search: smallest tile count first, square-ish grids preferred
+    for tiles_target in 1..=oh * ow {
+        let mut grids: Vec<(usize, usize)> = Vec::new();
+        for gy in 1..=tiles_target.min(oh) {
+            if tiles_target % gy == 0 {
+                let gx = tiles_target / gy;
+                if gx <= ow {
+                    grids.push((gy, gx));
+                }
+            }
+        }
+        // prefer square-ish
+        grids.sort_by_key(|&(gy, gx)| (gy as i64 - gx as i64).abs());
+        for (gy, gx) in grids {
+            let tiles = tiles_for_grid((oh, ow), (gy, gx), spec.stride, kp);
+            if tiles.is_empty() {
+                continue;
+            }
+            // ACC BUF constraint on the largest tile
+            let max_px = tiles.iter().map(|t| t.oh * t.ow).max().unwrap();
+            if max_px > ACC_TILE_PX {
+                continue;
+            }
+            // channel grouping: largest c_per_group that fits SRAM
+            let worst = tiles
+                .iter()
+                .max_by_key(|t| t.ih * t.iw)
+                .unwrap()
+                .clone();
+            let mut c_per_group = cg_in;
+            loop {
+                let (ib, ob, wb) = candidate_sram(&worst, c_per_group);
+                if ib + ob + wb <= SRAM_BYTES {
+                    let plan = Plan {
+                        gy,
+                        gx,
+                        tiles,
+                        c_per_group,
+                        c_groups: ceil_div(cg_in, c_per_group),
+                        m_tiles: ceil_div(spec.cout / spec.groups, NUM_CU),
+                        sram_bytes: ib + ob + wb,
+                        in_tile_bytes: ib,
+                        out_tile_bytes: ob,
+                    };
+                    return Ok(plan);
+                }
+                if c_per_group == 1 {
+                    break; // this grid can't fit even one channel
+                }
+                c_per_group = ceil_div(c_per_group, 2);
+            }
+        }
+    }
+    Err(PlanError::Unsatisfiable)
+}
+
+/// The paper's canonical Fig. 6 plan for a layer: force a `g × g` image
+/// grid and report footprints (used by the Fig. 6 bench to reproduce
+/// the 309 KB → 34 KB / 581 KB → 33 KB numbers).
+pub fn plan_fixed_grid(
+    spec: &ConvSpec,
+    h: usize,
+    w: usize,
+    gy: usize,
+    gx: usize,
+    fsplit: usize,
+) -> (Vec<Tile>, usize, usize) {
+    let (oh, ow) = (
+        (h + 2 * spec.pad - spec.k) / spec.stride + 1,
+        (w + 2 * spec.pad - spec.k) / spec.stride + 1,
+    );
+    let kp = 3 * ceil_div(spec.k, 3);
+    let tiles = tiles_for_grid((oh, ow), (gy, gx), spec.stride, kp);
+    let worst = tiles.iter().max_by_key(|t| t.ih * t.iw).unwrap();
+    let in_bytes = worst.ih * worst.iw * spec.cin * 2;
+    let out_bytes = worst.oh * worst.ow * (spec.cout / fsplit) * 2;
+    (tiles, in_bytes, out_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::model::LayerSpec;
+    use crate::util::prop::check;
+
+    fn conv_of(net: &str, layer: &str) -> (ConvSpec, usize, usize) {
+        let net = zoo::by_name(net).unwrap();
+        let mut shape = net.in_shape();
+        for l in &net.layers {
+            if l.name() == layer {
+                if let LayerSpec::Conv(c) = l {
+                    return (c.clone(), shape.0, shape.1);
+                }
+            }
+            shape = l.out_shape(shape);
+        }
+        panic!("layer not found");
+    }
+
+    #[test]
+    fn tiles_cover_output_exactly_once() {
+        check("tiles partition the output plane", 60, |g| {
+            let oh = g.usize_in(1, 60);
+            let ow = g.usize_in(1, 60);
+            let gy = g.usize_in(1, oh.min(6));
+            let gx = g.usize_in(1, ow.min(6));
+            let stride = g.usize_in(1, 4);
+            let kp = 3 * g.usize_in(1, 4);
+            let tiles = tiles_for_grid((oh, ow), (gy, gx), stride, kp);
+            let mut cover = vec![0u8; oh * ow];
+            for t in &tiles {
+                for y in t.oy0..t.oy0 + t.oh {
+                    for x in t.ox0..t.ox0 + t.ow {
+                        cover[y * ow + x] += 1;
+                    }
+                }
+            }
+            if cover.iter().all(|&c| c == 1) {
+                Ok(())
+            } else {
+                Err(format!("{oh}x{ow} grid {gy}x{gx}: coverage {:?}", cover.iter().filter(|&&c| c != 1).count()))
+            }
+        });
+    }
+
+    #[test]
+    fn tile_input_windows_reach_only_valid_canvas() {
+        check("input windows in canvas bounds", 60, |g| {
+            let k = *g.choose(&[1usize, 3, 5, 7, 11]);
+            let stride = *g.choose(&[1usize, 2, 4]);
+            let pad = g.usize_in(0, 3);
+            let h = k + stride * g.usize_in(0, 40);
+            let w = k + stride * g.usize_in(0, 40);
+            let oh = (h + 2 * pad - k) / stride + 1;
+            let ow = (w + 2 * pad - k) / stride + 1;
+            let kp = 3 * k.div_ceil(3);
+            let gy = g.usize_in(1, oh.min(4));
+            let gx = g.usize_in(1, ow.min(4));
+            let canvas_h = h + 2 * pad + (kp - k);
+            let canvas_w = w + 2 * pad + (kp - k);
+            for t in tiles_for_grid((oh, ow), (gy, gx), stride, kp) {
+                if t.iy0 + t.ih > canvas_h || t.ix0 + t.iw > canvas_w {
+                    return Err(format!(
+                        "tile {t:?} exceeds canvas {canvas_h}x{canvas_w} (k={k} s={stride} p={pad})"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn alexnet_conv1_fits_with_image_decomposition() {
+        let (c1, h, w) = conv_of("alexnet", "conv1");
+        let plan = plan_conv(&c1, h, w).unwrap();
+        assert!(plan.gy * plan.gx > 1, "conv1 must image-decompose (309 KB input)");
+        assert!(plan.sram_bytes <= SRAM_BYTES);
+        assert!(plan.tiles.iter().all(|t| t.oh * t.ow <= ACC_TILE_PX));
+    }
+
+    #[test]
+    fn fig6_canonical_9_and_2() {
+        // Paper Fig. 6: image ÷ 9 (3x3 grid), features ÷ 2 →
+        // input tile ≈ 34 KB, output tile ≈ 33 KB (KB = 1000 B).
+        let (c1, h, w) = conv_of("alexnet", "conv1");
+        let (tiles, in_b, out_b) = plan_fixed_grid(&c1, h, w, 3, 3, 2);
+        assert_eq!(tiles.len(), 9);
+        // halo makes our input tile a bit larger than the paper's naive
+        // /9; both land in the same few-tens-of-KB class.
+        assert!(in_b as f64 / 1000.0 < 45.0, "in={in_b}");
+        assert!((out_b as f64 / 1000.0 - 33.0).abs() < 3.0, "out={out_b}");
+    }
+
+    #[test]
+    fn every_zoo_conv_layer_has_a_plan() {
+        for name in zoo::ALL {
+            let net = zoo::by_name(name).unwrap();
+            let mut shape = net.in_shape();
+            for l in &net.layers {
+                if let LayerSpec::Conv(c) = l {
+                    let plan = plan_conv(c, shape.0, shape.1)
+                        .unwrap_or_else(|e| panic!("{name}/{}: {e}", c.name));
+                    assert!(plan.sram_bytes <= SRAM_BYTES, "{name}/{}", c.name);
+                }
+                shape = l.out_shape(shape);
+            }
+        }
+    }
+
+    #[test]
+    fn split_even_properties() {
+        check("split_even partitions", 50, |g| {
+            let n = g.usize_in(1, 200);
+            let parts = g.usize_in(1, n.min(17));
+            let spans = split_even(n, parts);
+            let total: usize = spans.iter().map(|s| s.1).sum();
+            if total != n {
+                return Err(format!("sum {total} != {n}"));
+            }
+            let mut at = 0;
+            for (start, len) in &spans {
+                if *start != at {
+                    return Err(format!("gap at {start}"));
+                }
+                at += len;
+            }
+            Ok(())
+        });
+    }
+}

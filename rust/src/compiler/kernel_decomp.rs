@@ -1,0 +1,141 @@
+//! Kernel decomposition (paper §1/§5): any K×K filter runs on the fixed
+//! 3×3 CU array as a grid of shifted 3×3 sub-kernels ("taps"), padded
+//! with zero weights to Kp = 3·⌈K/3⌉.
+//!
+//! Sub-kernel (p, q) covers filter rows 3p..3p+3 and cols 3q..3q+3 and
+//! sees the input shifted by (3p, 3q); all taps accumulate into the same
+//! partial plane (wrapping int32 — order-free). `conv_any` in the Python
+//! L2 implements the identical schedule, so the two agree bit-for-bit.
+
+/// One decomposition tap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tap {
+    /// Input shift (= 3p, 3q). Bounded by 9 for K ≤ 11 (fits the ISA's
+    /// 4-bit tap fields).
+    pub dy: u8,
+    pub dx: u8,
+    /// Filter-row/col origin of the 3×3 sub-kernel.
+    pub fy: usize,
+    pub fx: usize,
+}
+
+/// Enumerate the taps of a K×K kernel.
+pub fn taps(k: usize) -> Vec<Tap> {
+    assert!(k >= 1 && k <= 15, "kernel size {k} out of range");
+    let kp = 3 * k.div_ceil(3);
+    let n = kp / 3;
+    let mut out = Vec::with_capacity(n * n);
+    for p in 0..n {
+        for q in 0..n {
+            out.push(Tap { dy: (3 * p) as u8, dx: (3 * q) as u8, fy: 3 * p, fx: 3 * q });
+        }
+    }
+    out
+}
+
+/// Extract the weights of one tap for one channel range and one
+/// 16-feature group, in the CU staging layout `[ch][tap9][feat16]`,
+/// zero-padded where the tap exceeds K or the feature exceeds cout.
+///
+/// `w` is the layer's full weight tensor in (K, K, cg, cout) C-order
+/// (cg = cin/groups); `m0` is the *global* output-feature origin of the
+/// group (already includes the conv-group offset).
+pub fn tap_weights(
+    w: &[i16],
+    k: usize,
+    cg: usize,
+    cout: usize,
+    tap: Tap,
+    c0: usize,
+    cn: usize,
+    m0: usize,
+) -> Vec<i16> {
+    let mut out = vec![0i16; cn * 9 * crate::NUM_CU];
+    for ci in 0..cn {
+        let ch = c0 + ci;
+        for ty in 0..3 {
+            for tx in 0..3 {
+                let (fy, fx) = (tap.fy + ty, tap.fx + tx);
+                if fy >= k || fx >= k {
+                    continue; // zero padding beyond the real kernel
+                }
+                for f in 0..crate::NUM_CU {
+                    let m = m0 + f;
+                    if m >= cout {
+                        continue; // zero padding beyond real features
+                    }
+                    let v = w[((fy * k + fx) * cg + ch) * cout + m];
+                    out[(ci * 9 + ty * 3 + tx) * crate::NUM_CU + f] = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tap_counts() {
+        assert_eq!(taps(3).len(), 1);
+        assert_eq!(taps(5).len(), 4);
+        assert_eq!(taps(7).len(), 9);
+        assert_eq!(taps(11).len(), 16);
+        assert_eq!(taps(1).len(), 1);
+    }
+
+    #[test]
+    fn tap_shifts_fit_isa_fields() {
+        for k in 1..=11 {
+            for t in taps(k) {
+                assert!(t.dy <= 9 && t.dx <= 9, "k={k} tap {t:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn taps_tile_the_padded_kernel_disjointly() {
+        for k in [3usize, 5, 7, 11] {
+            let kp = 3 * k.div_ceil(3);
+            let mut cover = vec![0u8; kp * kp];
+            for t in taps(k) {
+                for ty in 0..3 {
+                    for tx in 0..3 {
+                        cover[(t.fy + ty) * kp + (t.fx + tx)] += 1;
+                    }
+                }
+            }
+            assert!(cover.iter().all(|&c| c == 1), "k={k}");
+        }
+    }
+
+    #[test]
+    fn tap_weight_extraction_zero_pads() {
+        // K=5, cg=2, cout=3: tap (3,3) covers rows 3..6 of a 6x6 padded
+        // kernel — only (3..5, 3..5) are real.
+        let k = 5;
+        let (cg, cout) = (2usize, 3usize);
+        let w: Vec<i16> = (0..k * k * cg * cout).map(|i| i as i16 + 1).collect();
+        let tp = taps(5)[3];
+        assert_eq!((tp.fy, tp.fx), (3, 3));
+        let tw = tap_weights(&w, k, cg, cout, tp, 0, cg, 0);
+        assert_eq!(tw.len(), cg * 9 * 16);
+        for ci in 0..cg {
+            for ty in 0..3 {
+                for tx in 0..3 {
+                    for f in 0..16 {
+                        let got = tw[(ci * 9 + ty * 3 + tx) * 16 + f];
+                        let want = if ty < 2 && tx < 2 && f < cout {
+                            w[(((3 + ty) * k + 3 + tx) * cg + ci) * cout + f]
+                        } else {
+                            0
+                        };
+                        assert_eq!(got, want, "ci={ci} ty={ty} tx={tx} f={f}");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Layer → decomposition plan → ISA command stream (the paper's §5
+//! contribution, as a compiler).
+//!
+//! * [`decompose`] — the image/feature/channel decomposition solver.
+//! * [`kernel_decomp`] — K×K → 3×3 tap enumeration (fixed CU array).
+//! * [`codegen`] — plan → command program + DRAM image.
+//! * [`NetRunner`] — convenience: compile once, run frames on a fresh or
+//!   reused simulator, extract outputs (what the coordinator uses).
+
+pub mod codegen;
+pub mod decompose;
+pub mod kernel_decomp;
+
+pub use codegen::{compile_net, CompiledNet};
+pub use decompose::{plan_conv, Plan, PlanError};
+
+use crate::model::{NetSpec, Tensor};
+use crate::sim::{Accelerator, SimConfig, SimStats};
+
+/// Compile-once / run-many harness around the simulator.
+pub struct NetRunner {
+    pub compiled: CompiledNet,
+    cfg: SimConfig,
+}
+
+impl NetRunner {
+    pub fn new(net: &NetSpec) -> anyhow::Result<Self> {
+        Self::with_config(net, SimConfig::default())
+    }
+
+    pub fn with_config(net: &NetSpec, mut cfg: SimConfig) -> anyhow::Result<Self> {
+        let compiled = compile_net(net).map_err(|e| anyhow::anyhow!("{e}"))?;
+        cfg.dram_px = compiled.dram_px;
+        Ok(Self { compiled, cfg })
+    }
+
+    /// Run one frame through a fresh accelerator instance; returns the
+    /// output tensor and the run's statistics.
+    pub fn run_frame(&self, frame: &Tensor) -> anyhow::Result<(Tensor, SimStats)> {
+        let net = &self.compiled.net;
+        anyhow::ensure!(
+            frame.shape() == net.in_shape(),
+            "frame shape {:?} != net input {:?}",
+            frame.shape(),
+            net.in_shape()
+        );
+        let mut accel = Accelerator::new(self.cfg.clone());
+        accel.dram.data[..self.compiled.dram_init.len()]
+            .copy_from_slice(&self.compiled.dram_init);
+        // write the frame into the input canvas (HWC -> padded planar)
+        let cv = &self.compiled.input;
+        for ch in 0..frame.c {
+            for y in 0..frame.h {
+                for x in 0..frame.w {
+                    accel.dram.data[cv.px(ch, y, x)] = frame.at(y, x, ch);
+                }
+            }
+        }
+        accel.run_program(&self.compiled.program)?;
+        // extract the output canvas (planar -> HWC)
+        let ov = &self.compiled.output;
+        let mut out = Tensor::zeros(ov.h, ov.w, ov.c);
+        for ch in 0..ov.c {
+            for y in 0..ov.h {
+                for x in 0..ov.w {
+                    out.set(y, x, ch, accel.dram.data[ov.px(ch, y, x)]);
+                }
+            }
+        }
+        Ok((out, accel.stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::reference::run_net_ref;
+    use crate::model::zoo;
+
+    #[test]
+    fn quicknet_sim_matches_reference_bit_exactly() {
+        let net = zoo::quicknet();
+        let runner = NetRunner::new(&net).unwrap();
+        let frame = Tensor::random_image(42, net.in_h, net.in_w, net.in_c);
+        let (got, stats) = runner.run_frame(&frame).unwrap();
+        let want = run_net_ref(&net, &frame);
+        assert_eq!(got.shape(), want.shape());
+        assert_eq!(got, want, "simulator output != reference");
+        assert!(stats.macs > 0 && stats.cycles > 0);
+    }
+
+    #[test]
+    fn facenet_sim_matches_reference_bit_exactly() {
+        let net = zoo::facenet();
+        let runner = NetRunner::new(&net).unwrap();
+        let frame = Tensor::random_image(7, 64, 64, 1);
+        let (got, stats) = runner.run_frame(&frame).unwrap();
+        let want = run_net_ref(&net, &frame);
+        assert_eq!(got, want, "simulator output != reference");
+        // sanity: sim performs at least the net's real MACs (padding taps
+        // and 16-feature rounding only add)
+        let static_macs: u64 = net.total_ops() / 2;
+        assert!(stats.macs >= static_macs, "sim must do at least the real MACs");
+    }
+
+    #[test]
+    fn wrong_frame_shape_rejected() {
+        let runner = NetRunner::new(&zoo::quicknet()).unwrap();
+        assert!(runner.run_frame(&Tensor::zeros(4, 4, 1)).is_err());
+    }
+}

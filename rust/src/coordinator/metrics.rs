@@ -1,0 +1,107 @@
+//! Serving metrics: latency histograms + throughput + energy rollup.
+
+use crate::energy::{EnergyModel, OperatingPoint};
+use crate::sim::SimStats;
+use crate::util::stats::{eng, Histogram, Running};
+
+/// Aggregated metrics of a serving run.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub frames: u64,
+    pub wall_s: f64,
+    /// Wall-clock latency histogram (µs buckets).
+    pub wall_lat_us: Histogram,
+    /// Device latency histogram (µs at the DVFS point).
+    pub dev_lat_us: Histogram,
+    pub queue_wait_us: Running,
+    pub totals: SimStats,
+    pub op: OperatingPoint,
+}
+
+impl RunMetrics {
+    pub fn new(op: OperatingPoint) -> Self {
+        Self {
+            frames: 0,
+            wall_s: 0.0,
+            wall_lat_us: Histogram::new(),
+            dev_lat_us: Histogram::new(),
+            queue_wait_us: Running::new(),
+            totals: SimStats::default(),
+            op,
+        }
+    }
+
+    pub fn record(&mut self, stats: &SimStats, wall_latency_s: f64, device_latency_s: f64) {
+        self.frames += 1;
+        self.wall_lat_us.record(wall_latency_s * 1e6);
+        self.dev_lat_us.record(device_latency_s * 1e6);
+        self.totals.add(stats);
+    }
+
+    /// Device-side throughput: frames per *simulated* second.
+    pub fn device_fps(&self) -> f64 {
+        let total_dev_s = self.totals.cycles as f64 * self.op.cycle_s();
+        if total_dev_s == 0.0 {
+            return 0.0;
+        }
+        self.frames as f64 / total_dev_s
+    }
+
+    /// Effective device throughput in ops/s (2×MACs / device time).
+    pub fn device_ops_per_s(&self) -> f64 {
+        let total_dev_s = self.totals.cycles as f64 * self.op.cycle_s();
+        if total_dev_s == 0.0 {
+            return 0.0;
+        }
+        self.totals.ops() as f64 / total_dev_s
+    }
+
+    /// Host-side sim throughput (frames / wall second).
+    pub fn wall_fps(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            return 0.0;
+        }
+        self.frames as f64 / self.wall_s
+    }
+
+    pub fn report(&self, energy: &EnergyModel) -> String {
+        let e = energy.energy(&self.totals, self.op);
+        format!(
+            "frames={} | device: {:.1} fps, {}OPS eff, util {:.2} | dev-lat p50/p95/p99 = \
+             {:.1}/{:.1}/{:.1} ms | energy/frame {:.2} mJ (on-chip {:.2} mJ) | host {:.1} fps",
+            self.frames,
+            self.device_fps(),
+            eng(self.device_ops_per_s()),
+            self.totals.utilization(),
+            self.dev_lat_us.quantile(0.50) / 1e3,
+            self.dev_lat_us.quantile(0.95) / 1e3,
+            self.dev_lat_us.quantile(0.99) / 1e3,
+            e.total_j() / self.frames.max(1) as f64 * 1e3,
+            e.onchip_j() / self.frames.max(1) as f64 * 1e3,
+            self.wall_fps(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::dvfs::PEAK;
+
+    #[test]
+    fn record_and_rates() {
+        let mut m = RunMetrics::new(PEAK);
+        let stats = SimStats { cycles: 500_000, macs: 50_000_000, ..Default::default() };
+        for _ in 0..10 {
+            m.record(&stats, 0.01, 0.001);
+        }
+        m.wall_s = 0.1;
+        assert_eq!(m.frames, 10);
+        // 10 frames / (5M cycles / 500MHz = 10ms) = 1000 fps
+        assert!((m.device_fps() - 1000.0).abs() < 1.0, "{}", m.device_fps());
+        assert!((m.wall_fps() - 100.0).abs() < 1.0);
+        assert!(m.device_ops_per_s() > 0.0);
+        let rep = m.report(&EnergyModel::default());
+        assert!(rep.contains("frames=10"));
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordinator: the streaming frame server in front of the
+//! (simulated) accelerator — the system the paper's FPGA demo (Fig. 8)
+//! sketches, built out as a deployable component.
+//!
+//! A smart-vision device streams camera frames; the coordinator owns the
+//! request queue, dispatches frames to accelerator workers (one chip =
+//! one worker; multi-chip setups just add workers), applies
+//! backpressure when the queue fills, and reports latency/throughput
+//! both in wall time and in *simulated device time* (cycles at the
+//! configured DVFS point).
+//!
+//! Threads + bounded channels (tokio is not vendorable offline — see
+//! DESIGN.md §Deviations); the dataflow is the same reactor shape.
+
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use metrics::RunMetrics;
+pub use request::{FrameRequest, FrameResult};
+pub use server::{Coordinator, CoordinatorConfig};

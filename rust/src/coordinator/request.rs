@@ -1,0 +1,47 @@
+//! Request/response types of the frame-serving API.
+
+use std::time::Instant;
+
+use crate::model::Tensor;
+use crate::sim::SimStats;
+
+/// One camera frame submitted for inference.
+#[derive(Clone, Debug)]
+pub struct FrameRequest {
+    pub id: u64,
+    pub frame: Tensor,
+    pub submitted: Instant,
+}
+
+impl FrameRequest {
+    pub fn new(id: u64, frame: Tensor) -> Self {
+        Self { id, frame, submitted: Instant::now() }
+    }
+}
+
+/// The inference result for one frame.
+#[derive(Clone, Debug)]
+pub struct FrameResult {
+    pub id: u64,
+    pub output: Tensor,
+    /// Simulator event counts for this frame.
+    pub stats: SimStats,
+    /// Wall-clock latency through the coordinator (queue + sim).
+    pub wall_latency_s: f64,
+    /// Device latency: cycles / f at the configured operating point.
+    pub device_latency_s: f64,
+    /// Worker that served the frame.
+    pub worker: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_timestamps() {
+        let r = FrameRequest::new(1, Tensor::zeros(2, 2, 1));
+        assert!(r.submitted.elapsed().as_secs() < 1);
+        assert_eq!(r.id, 1);
+    }
+}

@@ -1,0 +1,172 @@
+//! The streaming frame server: bounded queue → worker pool → results.
+//!
+//! Each worker owns one simulated accelerator (compile-once, run-many);
+//! the dispatcher is a bounded mpsc channel, so a saturated device
+//! back-pressures the camera source instead of buffering unboundedly —
+//! the same control law a real smart-vision pipeline needs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::metrics::RunMetrics;
+use super::request::{FrameRequest, FrameResult};
+use crate::compiler::NetRunner;
+use crate::energy::OperatingPoint;
+use crate::model::{NetSpec, Tensor};
+
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    /// Accelerator instances (chips).
+    pub workers: usize,
+    /// Bounded queue depth (frames) — backpressure beyond this.
+    pub queue_depth: usize,
+    /// DVFS point the devices run at.
+    pub op: OperatingPoint,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { workers: 1, queue_depth: 4, op: crate::energy::dvfs::PEAK }
+    }
+}
+
+enum Job {
+    Frame(FrameRequest, SyncSender<FrameResult>),
+    Stop,
+}
+
+/// The serving front-end.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    tx: SyncSender<Job>,
+    handles: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    /// Compile `net` once and start the worker pool.
+    pub fn start(net: &NetSpec, cfg: CoordinatorConfig) -> anyhow::Result<Self> {
+        let runner = Arc::new(NetRunner::new(net)?);
+        let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let mut handles = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let runner = Arc::clone(&runner);
+            let op = cfg.op;
+            handles.push(std::thread::spawn(move || loop {
+                let job = { rx.lock().unwrap().recv() };
+                match job {
+                    Ok(Job::Frame(req, out)) => {
+                        let t0 = Instant::now();
+                        match runner.run_frame(&req.frame) {
+                            Ok((output, stats)) => {
+                                let _ = t0;
+                                let result = FrameResult {
+                                    id: req.id,
+                                    output,
+                                    device_latency_s: stats.cycles as f64 * op.cycle_s(),
+                                    wall_latency_s: req.submitted.elapsed().as_secs_f64(),
+                                    stats,
+                                    worker: w,
+                                };
+                                let _ = out.send(result);
+                            }
+                            Err(e) => {
+                                eprintln!("worker {w}: frame {} failed: {e}", req.id);
+                            }
+                        }
+                    }
+                    Ok(Job::Stop) | Err(_) => break,
+                }
+            }));
+        }
+        Ok(Self { cfg, tx, handles, next_id: AtomicU64::new(0) })
+    }
+
+    /// Submit one frame; blocks when the queue is full (backpressure).
+    /// Returns the receiver for this frame's result.
+    pub fn submit(&self, frame: Tensor) -> Receiver<FrameResult> {
+        let (otx, orx) = sync_channel(1);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .send(Job::Frame(FrameRequest::new(id, frame), otx))
+            .expect("coordinator stopped");
+        orx
+    }
+
+    /// Convenience: push a batch of frames through and gather metrics.
+    pub fn run_stream(&self, frames: Vec<Tensor>) -> RunMetrics {
+        let mut metrics = RunMetrics::new(self.cfg.op);
+        let t0 = Instant::now();
+        let mut pending = std::collections::VecDeque::new();
+        for f in frames {
+            pending.push_back(self.submit(f));
+            // drain opportunistically to keep the pipe moving
+            while let Some(front) = pending.front() {
+                match front.try_recv() {
+                    Ok(r) => {
+                        metrics.record(&r.stats, r.wall_latency_s, r.device_latency_s);
+                        pending.pop_front();
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+        for rx in pending {
+            if let Ok(r) = rx.recv() {
+                metrics.record(&r.stats, r.wall_latency_s, r.device_latency_s);
+            }
+        }
+        metrics.wall_s = t0.elapsed().as_secs_f64();
+        metrics
+    }
+
+    pub fn stop(mut self) {
+        for _ in 0..self.handles.len() {
+            let _ = self.tx.send(Job::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::reference::run_net_ref;
+    use crate::model::zoo;
+
+    #[test]
+    fn serves_frames_correctly_in_order_of_ids() {
+        let net = zoo::quicknet();
+        let coord = Coordinator::start(&net, CoordinatorConfig::default()).unwrap();
+        let frames: Vec<Tensor> =
+            (0..6).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
+        let rxs: Vec<_> = frames.iter().map(|f| coord.submit(f.clone())).collect();
+        for (i, (rx, f)) in rxs.into_iter().zip(&frames).enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.output, run_net_ref(&net, f), "frame {i} wrong result");
+            assert!(r.device_latency_s > 0.0);
+        }
+        coord.stop();
+    }
+
+    #[test]
+    fn multi_worker_stream_has_all_frames() {
+        let net = zoo::quicknet();
+        let cfg = CoordinatorConfig { workers: 3, queue_depth: 2, ..Default::default() };
+        let coord = Coordinator::start(&net, cfg).unwrap();
+        let frames: Vec<Tensor> =
+            (0..20).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
+        let m = coord.run_stream(frames);
+        assert_eq!(m.frames, 20);
+        assert!(m.device_fps() > 0.0);
+        coord.stop();
+    }
+}

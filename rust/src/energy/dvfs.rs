@@ -1,0 +1,68 @@
+//! DVFS operating points (paper Table 2: 0.6–1.0 V, 20–500 MHz).
+
+/// One voltage/frequency operating point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OperatingPoint {
+    pub freq_mhz: f64,
+    pub vdd: f64,
+}
+
+/// The paper's published corners.
+pub const PEAK: OperatingPoint = OperatingPoint { freq_mhz: 500.0, vdd: 1.0 };
+pub const EFFICIENT: OperatingPoint = OperatingPoint { freq_mhz: 20.0, vdd: 0.6 };
+
+impl OperatingPoint {
+    /// Minimum supply for a target frequency: linear V/f law anchored at
+    /// the paper's two corners (the usual near-threshold..nominal range
+    /// approximation for 65 nm GP).
+    pub fn for_freq(freq_mhz: f64) -> Self {
+        let f = freq_mhz.clamp(EFFICIENT.freq_mhz, PEAK.freq_mhz);
+        let t = (f - EFFICIENT.freq_mhz) / (PEAK.freq_mhz - EFFICIENT.freq_mhz);
+        OperatingPoint { freq_mhz: f, vdd: EFFICIENT.vdd + t * (PEAK.vdd - EFFICIENT.vdd) }
+    }
+
+    /// Dynamic-energy scale vs the 1.0 V nominal: (V/Vnom)².
+    pub fn dyn_scale(&self) -> f64 {
+        (self.vdd / PEAK.vdd).powi(2)
+    }
+
+    /// Leakage-power scale vs nominal: ≈ (V/Vnom)³ (DIBL-ish).
+    pub fn leak_scale(&self) -> f64 {
+        (self.vdd / PEAK.vdd).powi(3)
+    }
+
+    /// Cycle time in seconds.
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / (self.freq_mhz * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corners() {
+        assert_eq!(OperatingPoint::for_freq(500.0), PEAK);
+        assert_eq!(OperatingPoint::for_freq(20.0), EFFICIENT);
+        assert_eq!(OperatingPoint::for_freq(5.0).vdd, 0.6); // clamped
+        assert_eq!(OperatingPoint::for_freq(900.0).vdd, 1.0);
+    }
+
+    #[test]
+    fn monotone_vf_law() {
+        let mut last = 0.0;
+        for f in [20.0, 100.0, 260.0, 400.0, 500.0] {
+            let v = OperatingPoint::for_freq(f).vdd;
+            assert!(v >= last);
+            last = v;
+        }
+    }
+
+    #[test]
+    fn scales() {
+        assert!((EFFICIENT.dyn_scale() - 0.36).abs() < 1e-12);
+        assert!((PEAK.dyn_scale() - 1.0).abs() < 1e-12);
+        assert!(EFFICIENT.leak_scale() < EFFICIENT.dyn_scale());
+    }
+}

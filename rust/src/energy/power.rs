@@ -1,0 +1,156 @@
+//! Event-based energy model calibrated to the paper's Table 2.
+//!
+//! Per-event energies are 65 nm-class values (Horowitz, ISSCC'14 scaled
+//! to 16-bit datapaths); `e_ctrl_cycle` (clock tree + control) and
+//! `p_leak_nom` are the calibration knobs fitted so that the model's
+//! peak-activity power hits the paper's two corners:
+//!
+//! * 500 MHz / 1.0 V, 144 GOPS → **425 mW**  (0.34 TOPS/W)
+//! * 20 MHz / 0.6 V,  5.8 GOPS → **7 mW**    (0.82 TOPS/W)
+
+use super::dvfs::OperatingPoint;
+use crate::sim::SimStats;
+use crate::{NUM_CU, PES_PER_CU};
+
+/// Per-event energies at the nominal 1.0 V corner (picojoules).
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    /// One 16-bit MAC incl. weight-register read + local wiring.
+    pub e_mac_pj: f64,
+    /// One 16 B SRAM word access (single-port bank).
+    pub e_sram_word_pj: f64,
+    /// One int32 accumulation-buffer op (read-add-write).
+    pub e_accbuf_pj: f64,
+    /// One pooling comparator op.
+    pub e_pool_pj: f64,
+    /// Off-chip DRAM energy per byte (does not scale with core VDD).
+    pub e_dram_byte_pj: f64,
+    /// Control + clock-tree energy per active cycle (calibrated).
+    pub e_ctrl_cycle_pj: f64,
+    /// Leakage power at 1.0 V (calibrated), watts.
+    pub p_leak_nom_w: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self {
+            e_mac_pj: 5.0,
+            e_sram_word_pj: 12.0,
+            e_accbuf_pj: 1.0,
+            e_pool_pj: 0.4,
+            e_dram_byte_pj: 80.0,
+            e_ctrl_cycle_pj: 112.0,
+            p_leak_nom_w: 2.0e-3,
+        }
+    }
+}
+
+/// Energy split of a run (joules).
+#[derive(Clone, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub mac_j: f64,
+    pub sram_j: f64,
+    pub accbuf_j: f64,
+    pub pool_j: f64,
+    pub dram_j: f64,
+    pub ctrl_j: f64,
+    pub leak_j: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_j(&self) -> f64 {
+        self.mac_j + self.sram_j + self.accbuf_j + self.pool_j + self.dram_j + self.ctrl_j
+            + self.leak_j
+    }
+    /// On-chip-only total (the paper's TOPS/W excludes DRAM).
+    pub fn onchip_j(&self) -> f64 {
+        self.total_j() - self.dram_j
+    }
+}
+
+impl EnergyModel {
+    /// Energy of a simulated run at an operating point.
+    pub fn energy(&self, stats: &SimStats, op: OperatingPoint) -> EnergyBreakdown {
+        let ds = op.dyn_scale();
+        let t = stats.cycles as f64 * op.cycle_s();
+        let pj = 1e-12;
+        EnergyBreakdown {
+            mac_j: stats.macs as f64 * self.e_mac_pj * ds * pj,
+            sram_j: (stats.sram_reads + stats.sram_writes) as f64 * self.e_sram_word_pj * ds * pj,
+            accbuf_j: stats.macs as f64 / PES_PER_CU as f64 * self.e_accbuf_pj * ds * pj,
+            pool_j: stats.pool_ops as f64 * self.e_pool_pj * ds * pj,
+            dram_j: (stats.dram_read_bytes + stats.dram_write_bytes) as f64
+                * self.e_dram_byte_pj
+                * pj,
+            ctrl_j: stats.cycles as f64 * self.e_ctrl_cycle_pj * ds * pj,
+            leak_j: self.p_leak_nom_w * op.leak_scale() * t,
+        }
+    }
+
+    /// Peak-activity power (W): every cycle does 144 MACs + one SRAM
+    /// stream word + 16 ACC ops — the "GOPS plate" the paper's Table 2
+    /// power numbers describe.
+    pub fn peak_power_w(&self, op: OperatingPoint) -> f64 {
+        let per_cycle_pj = (NUM_CU * PES_PER_CU) as f64 * self.e_mac_pj
+            + 1.2 * self.e_sram_word_pj
+            + NUM_CU as f64 * self.e_accbuf_pj
+            + self.e_ctrl_cycle_pj;
+        per_cycle_pj * 1e-12 * op.dyn_scale() * op.freq_mhz * 1e6
+            + self.p_leak_nom_w * op.leak_scale()
+    }
+
+    /// Peak throughput in ops/s at a frequency (144 MACs × 2 per cycle).
+    pub fn peak_ops(&self, op: OperatingPoint) -> f64 {
+        (2 * NUM_CU * PES_PER_CU) as f64 * op.freq_mhz * 1e6
+    }
+
+    /// Peak energy efficiency (TOPS/W) at an operating point.
+    pub fn peak_tops_per_w(&self, op: OperatingPoint) -> f64 {
+        self.peak_ops(op) / self.peak_power_w(op) / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::dvfs::{EFFICIENT, PEAK};
+
+    #[test]
+    fn calibration_hits_table2_peak_corner() {
+        let m = EnergyModel::default();
+        let p = m.peak_power_w(PEAK) * 1e3;
+        assert!((p - 425.0).abs() / 425.0 < 0.05, "peak power {p:.1} mW vs 425 mW");
+        let ops = m.peak_ops(PEAK) / 1e9;
+        assert!((ops - 144.0).abs() < 1e-9, "peak {ops} GOPS");
+        let eff = m.peak_tops_per_w(PEAK);
+        assert!((eff - 0.3).abs() < 0.08, "peak eff {eff:.3} TOPS/W vs 0.3");
+    }
+
+    #[test]
+    fn calibration_hits_table2_efficient_corner() {
+        let m = EnergyModel::default();
+        let p = m.peak_power_w(EFFICIENT) * 1e3;
+        assert!((p - 7.0).abs() / 7.0 < 0.12, "low power {p:.2} mW vs 7 mW");
+        let ops = m.peak_ops(EFFICIENT) / 1e9;
+        assert!((ops - 5.76).abs() < 0.01, "low-f {ops} GOPS vs 5.8");
+        let eff = m.peak_tops_per_w(EFFICIENT);
+        assert!((eff - 0.8).abs() < 0.1, "eff {eff:.3} TOPS/W vs 0.8");
+    }
+
+    #[test]
+    fn efficiency_improves_at_low_voltage() {
+        let m = EnergyModel::default();
+        assert!(m.peak_tops_per_w(EFFICIENT) > 2.0 * m.peak_tops_per_w(PEAK));
+    }
+
+    #[test]
+    fn run_energy_scales_with_voltage() {
+        let m = EnergyModel::default();
+        let stats = SimStats { cycles: 1_000_000, macs: 100_000_000, ..Default::default() };
+        let hi = m.energy(&stats, PEAK);
+        let lo = m.energy(&stats, EFFICIENT);
+        assert!(lo.mac_j < hi.mac_j * 0.4);
+        // DRAM term identical (off-chip, no VDD scaling)
+        assert_eq!(lo.dram_j, hi.dram_j);
+    }
+}

@@ -1,0 +1,145 @@
+//! 16-bit fixed-point numerics — the cross-language bit-exactness contract.
+//!
+//! Mirrors `python/compile/kernels/quant.py` / the Pallas conv kernel:
+//!
+//! * activations/weights: `i16`; biases and accumulators: **wrapping** `i32`
+//! * multiply: `(a as i32) * (w as i32)` (never overflows i32)
+//! * accumulate: `i32::wrapping_add` — wrapping makes accumulation
+//!   **order-independent**, which is what lets the decomposition compiler
+//!   replay partial sums in any schedule and still match bit-for-bit
+//! * requantize: round-half-up via wrapping add of `1 << (shift-1)` then
+//!   arithmetic right shift, saturate to i16, optional ReLU
+
+/// Saturating bounds of the output precision.
+pub const QMAX: i32 = i16::MAX as i32;
+pub const QMIN: i32 = i16::MIN as i32;
+
+/// One multiply of the PE: int16 × int16 → int32 (exact).
+#[inline(always)]
+pub fn pe_mul(a: i16, w: i16) -> i32 {
+    a as i32 * w as i32
+}
+
+/// Accumulation-buffer add: wrapping int32.
+#[inline(always)]
+pub fn acc_add(acc: i32, x: i32) -> i32 {
+    acc.wrapping_add(x)
+}
+
+/// The ACC BUF output stage: round-half-up shift → saturate → ReLU.
+///
+/// `shift == 0` is a pass-through (still saturating). The rounding add
+/// may wrap — that is the hardware register semantics, and the Pallas /
+/// numpy twins do the same.
+#[inline(always)]
+pub fn requantize(acc: i32, shift: u8, relu: bool) -> i16 {
+    debug_assert!(shift < 31);
+    let mut v = acc;
+    if shift > 0 {
+        v = v.wrapping_add(1 << (shift - 1));
+        v >>= shift; // arithmetic shift (i32)
+    }
+    v = v.clamp(QMIN, QMAX);
+    if relu {
+        v = v.max(0);
+    }
+    v as i16
+}
+
+/// 3×3 window dot product — what one CU computes per output pixel
+/// (9 PE multiplies + adder tree), fed channel-serially by the caller.
+#[inline(always)]
+pub fn cu_dot9(window: &[i16; 9], weights: &[i16; 9]) -> i32 {
+    let mut acc = 0i32;
+    for i in 0..9 {
+        acc = acc.wrapping_add(pe_mul(window[i], weights[i]));
+    }
+    acc
+}
+
+/// Reference scalar conv for one output element over all taps/channels —
+/// used by tests as a third, trivially-auditable implementation.
+pub fn conv_point(
+    x: &[i16],
+    (h, w, c): (usize, usize, usize),
+    wt: &[i16],
+    k: usize,
+    (oy, ox): (usize, usize),
+    stride: usize,
+    m_idx: usize,
+    m_total: usize,
+) -> i32 {
+    let _ = h;
+    let mut acc = 0i32;
+    for i in 0..k {
+        for j in 0..k {
+            for ch in 0..c {
+                let xi = x[((oy * stride + i) * w + (ox * stride + j)) * c + ch];
+                let wi = wt[((i * k + j) * c + ch) * m_total + m_idx];
+                acc = acc.wrapping_add(pe_mul(xi, wi));
+            }
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn requant_known_vectors() {
+        // pinned against python/tests/test_quant.py::test_round_half_up
+        assert_eq!(requantize(3, 1, false), 2);
+        assert_eq!(requantize(-3, 1, false), -1);
+        assert_eq!(requantize(2, 1, false), 1);
+        assert_eq!(requantize(-2, 1, false), -1);
+        assert_eq!(requantize(1, 1, false), 1);
+        assert_eq!(requantize(-1, 1, false), 0);
+    }
+
+    #[test]
+    fn requant_saturates() {
+        assert_eq!(requantize(1 << 30, 4, false), 32767);
+        assert_eq!(requantize(-(1 << 30), 4, false), -32768);
+        assert_eq!(requantize(32768 << 4, 4, false), 32767);
+    }
+
+    #[test]
+    fn requant_passthrough_shift0() {
+        assert_eq!(requantize(123, 0, false), 123);
+        assert_eq!(requantize(-40000, 0, false), -32768);
+        assert_eq!(requantize(40000, 0, false), 32767);
+    }
+
+    #[test]
+    fn requant_relu() {
+        assert_eq!(requantize(-1000, 0, true), 0);
+        assert_eq!(requantize(1000, 0, true), 1000);
+    }
+
+    #[test]
+    fn requant_rounding_add_wraps() {
+        // acc near INT32_MAX — pinned against the python kernel's
+        // test_rounding_add_can_wrap
+        assert_eq!(requantize(i32::MAX, 8, false), -32768);
+        assert_eq!(requantize(i32::MAX - 63, 8, false), -32768);
+        assert_eq!(requantize(i32::MIN, 8, false), -32768);
+    }
+
+    #[test]
+    fn wrapping_accumulate_is_order_independent() {
+        let vals = [i32::MAX, 123, i32::MAX, -77, i32::MIN, 99];
+        let fwd = vals.iter().fold(0i32, |a, &b| acc_add(a, b));
+        let rev = vals.iter().rev().fold(0i32, |a, &b| acc_add(a, b));
+        assert_eq!(fwd, rev);
+    }
+
+    #[test]
+    fn cu_dot9_matches_naive() {
+        let w: [i16; 9] = [1, -2, 3, -4, 5, -6, 7, -8, 9];
+        let x: [i16; 9] = [9, 8, 7, 6, 5, 4, 3, 2, 1];
+        let want: i32 = x.iter().zip(w.iter()).map(|(&a, &b)| a as i32 * b as i32).sum();
+        assert_eq!(cu_dot9(&x, &w), want);
+    }
+}

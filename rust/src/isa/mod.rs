@@ -1,0 +1,467 @@
+//! The accelerator command set (paper §4.1).
+//!
+//! Commands are streamed over the 16-bit AXI bus into a 128-deep command
+//! FIFO; the on-chip command decoder pulls words and drives the blocks.
+//! Each command is an opcode word followed by fixed-length operand words
+//! (16-bit each, little-endian packing of wider fields).
+//!
+//! The compiler (`compiler/codegen.rs`) emits exactly this stream; the
+//! simulator's AXI front-end (`sim/axi.rs`) decodes it back. Encode →
+//! decode round-trips are property-tested.
+
+/// Opcode values (the first 16-bit word of every command).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u16)]
+pub enum Opcode {
+    Nop = 0x0000,
+    /// Configure the conv datapath for the following `Conv` passes.
+    SetConv = 0x0001,
+    /// DMA: DRAM → SRAM (input tile / apron).
+    LoadImage = 0x0002,
+    /// DMA: weight block DRAM → CU prefetch buffer.
+    LoadWeights = 0x0003,
+    /// Run one convolution pass (one 3×3 tap × channel range × 16-feature
+    /// tile) over the configured tile.
+    Conv = 0x0004,
+    /// Run the streaming pooling module over an SRAM region.
+    Pool = 0x0005,
+    /// DMA: SRAM → DRAM (output tile).
+    Store = 0x0006,
+    /// Barrier: wait until DMA + datapath are idle.
+    Sync = 0x0007,
+    /// DMA: 16 int32 bias words DRAM → ACC BUF bias registers.
+    LoadBias = 0x0008,
+    /// End of command stream.
+    Halt = 0x000F,
+}
+
+impl Opcode {
+    pub fn from_u16(v: u16) -> Option<Opcode> {
+        Some(match v {
+            0x0000 => Opcode::Nop,
+            0x0001 => Opcode::SetConv,
+            0x0002 => Opcode::LoadImage,
+            0x0003 => Opcode::LoadWeights,
+            0x0004 => Opcode::Conv,
+            0x0005 => Opcode::Pool,
+            0x0006 => Opcode::Store,
+            0x0007 => Opcode::Sync,
+            0x0008 => Opcode::LoadBias,
+            0x000F => Opcode::Halt,
+            _ => return None,
+        })
+    }
+}
+
+impl Opcode {
+    /// Total 16-bit words of a command with this opcode (incl. opcode).
+    pub fn words_needed(self) -> usize {
+        match self {
+            Opcode::Nop | Opcode::Halt | Opcode::Sync => 1,
+            Opcode::SetConv => 2,
+            Opcode::LoadImage | Opcode::Store => 12,
+            Opcode::LoadWeights => 4,
+            Opcode::LoadBias => 3,
+            Opcode::Conv => 15,
+            Opcode::Pool => 9,
+        }
+    }
+}
+
+/// Conv datapath configuration (persists until the next `SetConv`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvCfg {
+    /// Convolution stride (EN_Ctrl gating for stride > 1).
+    pub stride: u8,
+    /// Requantization shift of the ACC BUF output stage.
+    pub shift: u8,
+    /// ReLU at the output stage.
+    pub relu: bool,
+}
+
+/// One convolution pass.
+///
+/// The pass streams input channels `c0..c0+cn` of an SRAM-resident tile
+/// of shape (`ih`, `iw`, `ctot`) located at `src_px` (pixel units),
+/// computes a 3×3 conv tap offset by (`dy`, `dx`) with stride from the
+/// active [`ConvCfg`], and accumulates int32 partials for a 16-feature
+/// group into the partial plane at `acc_px`. `FIRST` initialises the
+/// plane with the bias, `LAST` requantizes to int16 at `dst_px`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvPass {
+    pub src_px: u32,
+    pub acc_px: u32,
+    pub dst_px: u32,
+    pub ih: u16,
+    pub iw: u16,
+    /// Total channels of the SRAM tile (addressing pitch).
+    pub ctot: u16,
+    /// First channel and channel count of this pass.
+    pub c0: u16,
+    pub cn: u16,
+    /// Output tile shape.
+    pub oh: u16,
+    pub ow: u16,
+    /// Kernel-decomposition tap offset.
+    pub dy: u8,
+    pub dx: u8,
+    pub flags: u8, // bit0 FIRST, bit1 LAST
+}
+
+pub const PASS_FIRST: u8 = 1 << 0;
+pub const PASS_LAST: u8 = 1 << 1;
+
+/// 2-D DMA descriptor (pixel-granular; 1 px = 2 bytes): `rows` rows of
+/// `row_px` pixels, with independent DRAM/SRAM row pitches — the shape
+/// every tile/canvas transfer needs. A flat copy is `rows == 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DmaDesc {
+    pub dram_px: u32,
+    pub sram_px: u32,
+    pub row_px: u32,
+    pub rows: u16,
+    pub dram_pitch: u32,
+    pub sram_pitch: u32,
+}
+
+impl DmaDesc {
+    /// Flat 1-D copy.
+    pub fn flat(dram_px: u32, sram_px: u32, len_px: u32) -> Self {
+        Self { dram_px, sram_px, row_px: len_px, rows: 1, dram_pitch: len_px, sram_pitch: len_px }
+    }
+
+    pub fn total_px(&self) -> u32 {
+        self.row_px * self.rows as u32
+    }
+}
+
+/// Weight-block prefetch: 9 taps × `cn` channels × 16 features starting
+/// at DRAM address `dram_px`, into the CU weight-register shadow bank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WeightLoad {
+    pub dram_px: u32,
+    pub cn: u16,
+}
+
+/// Bias prefetch: 16 int32 values (32 px) at `dram_px` into the ACC BUF
+/// bias registers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BiasLoad {
+    pub dram_px: u32,
+}
+
+/// Pooling pass over an SRAM region (int16 plane, C-interleaved).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PoolPass {
+    pub src_px: u32,
+    pub dst_px: u32,
+    pub ih: u16,
+    pub iw: u16,
+    pub c: u16,
+    pub k: u8,
+    pub stride: u8,
+}
+
+/// Decoded command.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cmd {
+    Nop,
+    SetConv(ConvCfg),
+    LoadImage(DmaDesc),
+    LoadWeights(WeightLoad),
+    LoadBias(BiasLoad),
+    Conv(ConvPass),
+    Pool(PoolPass),
+    Store(DmaDesc),
+    Sync,
+    Halt,
+}
+
+fn push32(words: &mut Vec<u16>, v: u32) {
+    words.push((v & 0xFFFF) as u16);
+    words.push((v >> 16) as u16);
+}
+
+fn read32(words: &[u16], i: &mut usize) -> Option<u32> {
+    let lo = *words.get(*i)? as u32;
+    let hi = *words.get(*i + 1)? as u32;
+    *i += 2;
+    Some(lo | (hi << 16))
+}
+
+fn read16(words: &[u16], i: &mut usize) -> Option<u16> {
+    let v = *words.get(*i)?;
+    *i += 1;
+    Some(v)
+}
+
+impl Cmd {
+    /// Encode to the 16-bit AXI word stream.
+    pub fn encode(&self, out: &mut Vec<u16>) {
+        match self {
+            Cmd::Nop => out.push(Opcode::Nop as u16),
+            Cmd::Halt => out.push(Opcode::Halt as u16),
+            Cmd::Sync => out.push(Opcode::Sync as u16),
+            Cmd::SetConv(c) => {
+                out.push(Opcode::SetConv as u16);
+                out.push((c.stride as u16) | ((c.shift as u16) << 4) | ((c.relu as u16) << 12));
+            }
+            Cmd::LoadImage(d) | Cmd::Store(d) => {
+                out.push(if matches!(self, Cmd::LoadImage(_)) {
+                    Opcode::LoadImage as u16
+                } else {
+                    Opcode::Store as u16
+                });
+                push32(out, d.dram_px);
+                push32(out, d.sram_px);
+                push32(out, d.row_px);
+                out.push(d.rows);
+                push32(out, d.dram_pitch);
+                push32(out, d.sram_pitch);
+            }
+            Cmd::LoadWeights(w) => {
+                out.push(Opcode::LoadWeights as u16);
+                push32(out, w.dram_px);
+                out.push(w.cn);
+            }
+            Cmd::LoadBias(b) => {
+                out.push(Opcode::LoadBias as u16);
+                push32(out, b.dram_px);
+            }
+            Cmd::Conv(p) => {
+                out.push(Opcode::Conv as u16);
+                push32(out, p.src_px);
+                push32(out, p.acc_px);
+                push32(out, p.dst_px);
+                out.extend_from_slice(&[
+                    p.ih,
+                    p.iw,
+                    p.ctot,
+                    p.c0,
+                    p.cn,
+                    p.oh,
+                    p.ow,
+                    (p.dy as u16) | ((p.dx as u16) << 4) | ((p.flags as u16) << 8),
+                ]);
+            }
+            Cmd::Pool(p) => {
+                out.push(Opcode::Pool as u16);
+                push32(out, p.src_px);
+                push32(out, p.dst_px);
+                out.extend_from_slice(&[p.ih, p.iw, p.c, (p.k as u16) | ((p.stride as u16) << 4)]);
+            }
+        }
+    }
+
+    /// Decode one command starting at `*i`; advances `*i`.
+    pub fn decode(words: &[u16], i: &mut usize) -> Option<Cmd> {
+        let op = Opcode::from_u16(read16(words, i)?)?;
+        Some(match op {
+            Opcode::Nop => Cmd::Nop,
+            Opcode::Halt => Cmd::Halt,
+            Opcode::Sync => Cmd::Sync,
+            Opcode::SetConv => {
+                let v = read16(words, i)?;
+                Cmd::SetConv(ConvCfg {
+                    stride: (v & 0xF) as u8,
+                    shift: ((v >> 4) & 0xFF) as u8,
+                    relu: (v >> 12) & 1 == 1,
+                })
+            }
+            Opcode::LoadImage | Opcode::Store => {
+                let d = DmaDesc {
+                    dram_px: read32(words, i)?,
+                    sram_px: read32(words, i)?,
+                    row_px: read32(words, i)?,
+                    rows: read16(words, i)?,
+                    dram_pitch: read32(words, i)?,
+                    sram_pitch: read32(words, i)?,
+                };
+                if op == Opcode::LoadImage {
+                    Cmd::LoadImage(d)
+                } else {
+                    Cmd::Store(d)
+                }
+            }
+            Opcode::LoadWeights => Cmd::LoadWeights(WeightLoad {
+                dram_px: read32(words, i)?,
+                cn: read16(words, i)?,
+            }),
+            Opcode::LoadBias => Cmd::LoadBias(BiasLoad { dram_px: read32(words, i)? }),
+            Opcode::Conv => {
+                let src_px = read32(words, i)?;
+                let acc_px = read32(words, i)?;
+                let dst_px = read32(words, i)?;
+                let ih = read16(words, i)?;
+                let iw = read16(words, i)?;
+                let ctot = read16(words, i)?;
+                let c0 = read16(words, i)?;
+                let cn = read16(words, i)?;
+                let oh = read16(words, i)?;
+                let ow = read16(words, i)?;
+                let packed = read16(words, i)?;
+                Cmd::Conv(ConvPass {
+                    src_px,
+                    acc_px,
+                    dst_px,
+                    ih,
+                    iw,
+                    ctot,
+                    c0,
+                    cn,
+                    oh,
+                    ow,
+                    dy: (packed & 0xF) as u8,
+                    dx: ((packed >> 4) & 0xF) as u8,
+                    flags: ((packed >> 8) & 0xFF) as u8,
+                })
+            }
+            Opcode::Pool => {
+                let src_px = read32(words, i)?;
+                let dst_px = read32(words, i)?;
+                let ih = read16(words, i)?;
+                let iw = read16(words, i)?;
+                let c = read16(words, i)?;
+                let packed = read16(words, i)?;
+                Cmd::Pool(PoolPass {
+                    src_px,
+                    dst_px,
+                    ih,
+                    iw,
+                    c,
+                    k: (packed & 0xF) as u8,
+                    stride: ((packed >> 4) & 0xF) as u8,
+                })
+            }
+        })
+    }
+
+    /// Encode a whole program.
+    pub fn encode_program(cmds: &[Cmd]) -> Vec<u16> {
+        let mut out = Vec::new();
+        for c in cmds {
+            c.encode(&mut out);
+        }
+        out
+    }
+
+    /// Decode a whole program (stops at Halt or end of stream).
+    pub fn decode_program(words: &[u16]) -> Option<Vec<Cmd>> {
+        let mut i = 0;
+        let mut cmds = Vec::new();
+        while i < words.len() {
+            let c = Cmd::decode(words, &mut i)?;
+            let is_halt = c == Cmd::Halt;
+            cmds.push(c);
+            if is_halt {
+                break;
+            }
+        }
+        Some(cmds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn arb_cmd(g: &mut Gen) -> Cmd {
+        match g.usize_in(0, 8) {
+            0 => Cmd::Nop,
+            8 => Cmd::LoadBias(BiasLoad { dram_px: g.int(0, i64::from(u32::MAX)) as u32 }),
+            1 => Cmd::SetConv(ConvCfg {
+                stride: g.usize_in(1, 4) as u8,
+                shift: g.usize_in(0, 24) as u8,
+                relu: g.bool(),
+            }),
+            2 => Cmd::LoadImage(DmaDesc {
+                dram_px: g.int(0, i64::from(u32::MAX)) as u32,
+                sram_px: g.int(0, 65535) as u32,
+                row_px: g.int(1, 65535) as u32,
+                rows: g.usize_in(1, 512) as u16,
+                dram_pitch: g.int(0, 65535) as u32,
+                sram_pitch: g.int(0, 65535) as u32,
+            }),
+            3 => Cmd::LoadWeights(WeightLoad {
+                dram_px: g.int(0, i64::from(u32::MAX)) as u32,
+                cn: g.usize_in(1, 512) as u16,
+            }),
+            4 => Cmd::Conv(ConvPass {
+                src_px: g.int(0, 65535) as u32,
+                acc_px: g.int(0, 65535) as u32,
+                dst_px: g.int(0, 65535) as u32,
+                ih: g.usize_in(3, 256) as u16,
+                iw: g.usize_in(3, 256) as u16,
+                ctot: g.usize_in(1, 512) as u16,
+                c0: g.usize_in(0, 256) as u16,
+                cn: g.usize_in(1, 256) as u16,
+                oh: g.usize_in(1, 256) as u16,
+                ow: g.usize_in(1, 256) as u16,
+                dy: g.usize_in(0, 9) as u8,
+                dx: g.usize_in(0, 9) as u8,
+                flags: g.usize_in(0, 3) as u8,
+            }),
+            5 => Cmd::Pool(PoolPass {
+                src_px: g.int(0, 65535) as u32,
+                dst_px: g.int(0, 65535) as u32,
+                ih: g.usize_in(2, 256) as u16,
+                iw: g.usize_in(2, 256) as u16,
+                c: g.usize_in(1, 64) as u16,
+                k: if g.bool() { 2 } else { 3 },
+                stride: g.usize_in(1, 3) as u8,
+            }),
+            6 => Cmd::Store(DmaDesc {
+                dram_px: g.int(0, i64::from(u32::MAX)) as u32,
+                sram_px: g.int(0, 65535) as u32,
+                row_px: g.int(1, 65535) as u32,
+                rows: g.usize_in(1, 512) as u16,
+                dram_pitch: g.int(0, 65535) as u32,
+                sram_pitch: g.int(0, 65535) as u32,
+            }),
+            _ => Cmd::Sync,
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check("isa encode/decode roundtrip", 500, |g| {
+            let cmd = arb_cmd(g);
+            let mut words = Vec::new();
+            cmd.encode(&mut words);
+            let mut i = 0;
+            match Cmd::decode(&words, &mut i) {
+                Some(back) if back == cmd && i == words.len() => Ok(()),
+                Some(back) => Err(format!("{cmd:?} -> {back:?} (i={i}/{})", words.len())),
+                None => Err(format!("{cmd:?} failed to decode")),
+            }
+        });
+    }
+
+    #[test]
+    fn program_roundtrip_with_halt() {
+        check("program roundtrip", 100, |g| {
+            let n = g.usize_in(0, 20);
+            let mut cmds: Vec<Cmd> = (0..n).map(|_| arb_cmd(g)).collect();
+            cmds.push(Cmd::Halt);
+            let words = Cmd::encode_program(&cmds);
+            match Cmd::decode_program(&words) {
+                Some(back) if back == cmds => Ok(()),
+                other => Err(format!("{} cmds -> {other:?}", cmds.len())),
+            }
+        });
+    }
+
+    #[test]
+    fn bad_opcode_rejected() {
+        assert!(Cmd::decode(&[0x00FE], &mut 0).is_none());
+    }
+
+    #[test]
+    fn truncated_command_rejected() {
+        let mut words = Vec::new();
+        Cmd::LoadImage(DmaDesc::flat(1, 2, 3)).encode(&mut words);
+        words.truncate(3);
+        assert!(Cmd::decode(&words, &mut 0).is_none());
+    }
+}

@@ -1,0 +1,54 @@
+//! # kn-stream
+//!
+//! A production-shaped reproduction of *"A Streaming Accelerator for Deep
+//! Convolutional Neural Networks with Image and Feature Decomposition for
+//! Resource-limited System Applications"* (Du, Du, Li, Su, Chang — 2017).
+//!
+//! The paper's 65 nm ASIC is replaced (see `DESIGN.md` §Substitution) by a
+//! functionally **bit-exact, cycle-level simulator** plus the full system
+//! around it:
+//!
+//! - [`sim`] — the accelerator microarchitecture: 128 KB single-port SRAM
+//!   buffer bank, streaming column buffer, 16×(3×3) CU engine array,
+//!   accumulation buffer, reconfigurable pooling module, DMA/DRAM, AXI
+//!   command front-end.
+//! - [`isa`] — the command set streamed over the 16-bit AXI bus.
+//! - [`compiler`] — CNN layer → decomposition plan (image / feature /
+//!   kernel decomposition, paper §5) → command stream.
+//! - [`model`] — network descriptions + the deterministic synthetic zoo
+//!   shared with the Python compile path.
+//! - [`fixed`] — the 16-bit fixed-point numerics contract (bit-exact with
+//!   the Pallas kernels).
+//! - [`energy`] — area / power / DVFS models reproducing Table 2 & Fig. 7.
+//! - [`runtime`] — PJRT client that loads the AOT HLO artifacts produced
+//!   by `python/compile/aot.py` (golden models; never Python at runtime).
+//! - [`coordinator`] — the streaming frame server: request queue, layer
+//!   scheduling onto the accelerator, metrics.
+//! - [`util`] — offline-environment substrates built from scratch: PRNG,
+//!   JSON parser, CLI parser, stats, bench harness, property testing.
+
+pub mod compiler;
+pub mod coordinator;
+pub mod energy;
+pub mod fixed;
+pub mod isa;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Number of convolution units in the engine array (paper §4.1).
+pub const NUM_CU: usize = 16;
+/// Processing engines (multipliers) per CU — one 3×3 window (paper §4.2).
+pub const PES_PER_CU: usize = 9;
+/// On-chip buffer-bank capacity in bytes (paper §4.1).
+pub const SRAM_BYTES: usize = 128 * 1024;
+/// SRAM word width in bytes — streams 8 int16 pixels per cycle (paper §3).
+pub const SRAM_WIDTH_BYTES: usize = 16;
+/// Pixels streamed per cycle (16 B word / 2 B pixel).
+pub const PIXELS_PER_CYCLE: usize = SRAM_WIDTH_BYTES / 2;
+/// Command FIFO depth (paper §4.1).
+pub const CMD_FIFO_DEPTH: usize = 128;

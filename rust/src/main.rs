@@ -1,0 +1,203 @@
+//! `kn-stream` — CLI for the streaming-CNN-accelerator reproduction.
+//!
+//! Subcommands:
+//!   run      run a zoo net on the simulated accelerator, report
+//!            cycles / utilization / energy at a DVFS point
+//!   serve    streaming frame server (coordinator) over synthetic camera
+//!   verify   golden check: simulator output vs PJRT-executed artifact
+//!   plan     print the decomposition plan of every conv layer
+//!   info     chip configuration, area and DVFS summary
+
+use kn_stream::compiler::NetRunner;
+use kn_stream::coordinator::{Coordinator, CoordinatorConfig};
+use kn_stream::energy::{AreaModel, EnergyModel, OperatingPoint};
+use kn_stream::model::{zoo, Tensor};
+use kn_stream::runtime::Golden;
+use kn_stream::util::cli::Cli;
+use kn_stream::util::stats::eng;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match args.split_first() {
+        Some((s, r)) if !s.starts_with("--") => (s.clone(), r.to_vec()),
+        _ => {
+            print_usage();
+            return Ok(());
+        }
+    };
+    match sub.as_str() {
+        "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
+        "verify" => cmd_verify(rest),
+        "plan" => cmd_plan(rest),
+        "info" => cmd_info(),
+        other => {
+            print_usage();
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "kn-stream — streaming CNN accelerator (Du et al. 2017) reproduction\n\n\
+         USAGE: kn-stream <run|serve|verify|plan|info> [options]\n\
+         Try `kn-stream run --help`."
+    );
+}
+
+fn net_arg(name: &str) -> anyhow::Result<kn_stream::model::NetSpec> {
+    zoo::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown net '{name}' (have: {})", zoo::ALL.join(", ")))
+}
+
+fn cmd_run(args: Vec<String>) -> anyhow::Result<()> {
+    let mut cli = Cli::new("kn-stream run", "run a net on the simulated accelerator");
+    cli.opt("net", "facenet", "zoo net (quicknet|facenet|alexnet|vgg16)")
+        .opt("frames", "1", "number of frames")
+        .opt("freq", "500", "clock in MHz (20..500, sets VDD by DVFS law)")
+        .opt("seed", "1", "input frame seed");
+    let m = cli.parse_from(args)?;
+    let net = net_arg(m.get("net"))?;
+    let op = OperatingPoint::for_freq(m.get_f64("freq"));
+    let runner = NetRunner::new(&net)?;
+    let energy = EnergyModel::default();
+    println!("net={} in={:?} out={:?}  @ {:.0} MHz / {:.2} V", net.name, net.in_shape(),
+             net.out_shape(), op.freq_mhz, op.vdd);
+    for i in 0..m.get_u64("frames") {
+        let frame = Tensor::random_image(m.get_u64("seed") as u32 + i as u32, net.in_h, net.in_w, net.in_c);
+        let t0 = std::time::Instant::now();
+        let (out, stats) = runner.run_frame(&frame)?;
+        let dev_ms = stats.cycles as f64 * op.cycle_s() * 1e3;
+        let e = energy.energy(&stats, op);
+        println!(
+            "frame {i}: out{:?} | {} cycles = {:.2} ms on-device ({:.1} fps) | util {:.2} | \
+             {}OPS eff | {:.2} mJ | sim wall {:.0} ms",
+            out.shape(),
+            stats.cycles,
+            dev_ms,
+            1e3 / dev_ms,
+            stats.utilization(),
+            eng(stats.ops() as f64 / (stats.cycles as f64 * op.cycle_s())),
+            e.total_j() * 1e3,
+            t0.elapsed().as_secs_f64() * 1e3,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
+    let mut cli = Cli::new("kn-stream serve", "streaming frame server over synthetic camera");
+    cli.opt("net", "facenet", "zoo net")
+        .opt("frames", "64", "frames to stream")
+        .opt("workers", "1", "accelerator instances")
+        .opt("queue", "4", "bounded queue depth")
+        .opt("freq", "500", "clock in MHz");
+    let m = cli.parse_from(args)?;
+    let net = net_arg(m.get("net"))?;
+    let cfg = CoordinatorConfig {
+        workers: m.get_usize("workers"),
+        queue_depth: m.get_usize("queue"),
+        op: OperatingPoint::for_freq(m.get_f64("freq")),
+    };
+    let coord = Coordinator::start(&net, cfg)?;
+    let frames: Vec<Tensor> = (0..m.get_usize("frames"))
+        .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))
+        .collect();
+    let metrics = coord.run_stream(frames);
+    println!("{}", metrics.report(&EnergyModel::default()));
+    coord.stop();
+    Ok(())
+}
+
+fn cmd_verify(args: Vec<String>) -> anyhow::Result<()> {
+    let mut cli = Cli::new("kn-stream verify", "simulator vs PJRT golden artifacts (bit-exact)");
+    cli.opt("net", "all", "net to verify (or 'all')").opt("seed", "123", "frame seed");
+    let m = cli.parse_from(args)?;
+    let mut golden = Golden::load_default()?;
+    let nets: Vec<String> = if m.get("net") == "all" {
+        golden.net_artifacts().iter().map(|a| a.net.clone()).collect()
+    } else {
+        vec![m.get("net").to_string()]
+    };
+    let mut failed = 0;
+    for name in nets {
+        let net = net_arg(&name)?;
+        let art = format!("{name}_fwd");
+        let frame = Tensor::random_image(m.get_u64("seed") as u32, net.in_h, net.in_w, net.in_c);
+        let want = golden.run(&art, &frame)?;
+        let runner = NetRunner::new(&net)?;
+        let (got, stats) = runner.run_frame(&frame)?;
+        if got == want {
+            println!("{name}: OK — simulator == PJRT artifact bit-for-bit \
+                      ({} px, {} cycles, util {:.2})", got.data.len(), stats.cycles,
+                     stats.utilization());
+        } else {
+            let diff = got.data.iter().zip(&want.data).filter(|(a, b)| a != b).count();
+            println!("{name}: FAIL — {diff}/{} px differ", got.data.len());
+            failed += 1;
+        }
+    }
+    anyhow::ensure!(failed == 0, "{failed} net(s) failed golden verification");
+    Ok(())
+}
+
+fn cmd_plan(args: Vec<String>) -> anyhow::Result<()> {
+    let mut cli = Cli::new("kn-stream plan", "print decomposition plans");
+    cli.opt("net", "alexnet", "zoo net");
+    let m = cli.parse_from(args)?;
+    let net = net_arg(m.get("net"))?;
+    let runner = NetRunner::new(&net)?;
+    println!("{}: {} commands, DRAM image {:.1} MB", net.name,
+             runner.compiled.program.len(), runner.compiled.dram_px as f64 * 2.0 / 1e6);
+    println!("{:<10} {:>6} {:>8} {:>8} {:>8} {:>10} {:>10}",
+             "layer", "grid", "c-grps", "m-tiles", "tiles", "in-tile", "sram");
+    for (name, p) in &runner.compiled.plans {
+        println!(
+            "{:<10} {:>6} {:>8} {:>8} {:>8} {:>9.1}K {:>9.1}K",
+            name,
+            format!("{}x{}", p.gy, p.gx),
+            p.c_groups,
+            p.m_tiles,
+            p.tiles.len(),
+            p.in_tile_bytes as f64 / 1000.0,
+            p.sram_bytes as f64 / 1000.0,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let area = AreaModel::default();
+    let rpt = area.paper_config();
+    let (s, c, b) = rpt.shares();
+    let energy = EnergyModel::default();
+    println!("kn-stream accelerator model (Du et al. 2017, TSMC 65 nm)");
+    println!("  CU engine array : {} CUs x {} PEs = {} MACs/cycle",
+             kn_stream::NUM_CU, kn_stream::PES_PER_CU, kn_stream::NUM_CU * kn_stream::PES_PER_CU);
+    println!("  buffer bank     : {} KB single-port, {} B word", kn_stream::SRAM_BYTES / 1024,
+             kn_stream::SRAM_WIDTH_BYTES);
+    println!("  command FIFO    : {} deep, 16-bit AXI", kn_stream::CMD_FIFO_DEPTH);
+    println!("  core area       : {:.2} mm²  (SRAM {:.0}% / CU {:.0}% / COL BUF {:.0}%), {:.2} M gates",
+             rpt.total_mm2(), s * 100.0, c * 100.0, b * 100.0,
+             area.gate_count(&rpt) / 1e6);
+    for f in [20.0, 100.0, 250.0, 500.0] {
+        let op = OperatingPoint::for_freq(f);
+        println!(
+            "  @ {:>3.0} MHz / {:.2} V : {:>7} peak, {:>6.1} mW, {:.2} TOPS/W",
+            f,
+            op.vdd,
+            format!("{}OPS", eng(energy.peak_ops(op))),
+            energy.peak_power_w(op) * 1e3,
+            energy.peak_tops_per_w(op)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,228 @@
+//! Layer and network descriptions + the static cost model behind the
+//! paper's Table 1 (ops & storage per layer).
+
+use crate::util::rng;
+
+/// Convolution layer spec — mirror of `python/compile/nets.py::ConvSpec`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConvSpec {
+    pub name: String,
+    /// Kernel size K (K×K). K>3 runs via kernel decomposition on the 3×3 CU.
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub cin: usize,
+    pub cout: usize,
+    /// Requantization right-shift (power-of-two output scale).
+    pub shift: u8,
+    pub relu: bool,
+    pub wseed: u32,
+    pub bseed: u32,
+    /// Grouped convolution (original AlexNet conv2/4/5). Each group is an
+    /// independent conv over cin/groups -> cout/groups channels.
+    pub groups: usize,
+}
+
+/// Pooling layer spec (max pooling, window 2 or 3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolSpec {
+    pub name: String,
+    pub k: usize,
+    pub stride: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerSpec {
+    Conv(ConvSpec),
+    Pool(PoolSpec),
+}
+
+impl LayerSpec {
+    pub fn name(&self) -> &str {
+        match self {
+            LayerSpec::Conv(c) => &c.name,
+            LayerSpec::Pool(p) => &p.name,
+        }
+    }
+
+    /// Output (H, W, C) for an input (H, W, C).
+    pub fn out_shape(&self, (h, w, c): (usize, usize, usize)) -> (usize, usize, usize) {
+        match self {
+            LayerSpec::Conv(s) => {
+                assert_eq!(c, s.cin, "layer {}: cin mismatch", s.name);
+                (
+                    (h + 2 * s.pad - s.k) / s.stride + 1,
+                    (w + 2 * s.pad - s.k) / s.stride + 1,
+                    s.cout,
+                )
+            }
+            LayerSpec::Pool(s) => ((h - s.k) / s.stride + 1, (w - s.k) / s.stride + 1, c),
+        }
+    }
+}
+
+impl ConvSpec {
+    /// Deterministic weights in (K, K, Cin, Cout) C-order — identical
+    /// bytes to `python/compile/model.py::layer_params`.
+    pub fn weights(&self) -> Vec<i16> {
+        rng::weight_tensor(
+            self.wseed,
+            self.k * self.k * (self.cin / self.groups) * self.cout,
+            W_LO,
+            W_HI,
+        )
+    }
+    pub fn biases(&self) -> Vec<i32> {
+        rng::bias_tensor(self.bseed, self.cout, B_LO, B_HI)
+    }
+    /// MAC count for an output of (ho, wo).
+    pub fn macs(&self, ho: usize, wo: usize) -> u64 {
+        (ho * wo * self.cout) as u64 * (self.k * self.k * self.cin / self.groups) as u64
+    }
+    /// Paper-style op count (1 MAC = 2 ops: multiply + add).
+    pub fn ops(&self, ho: usize, wo: usize) -> u64 {
+        2 * self.macs(ho, wo)
+    }
+    pub fn weight_bytes(&self) -> usize {
+        self.k * self.k * (self.cin / self.groups) * self.cout * 2
+    }
+}
+
+/// Shared weight value ranges (contract with `python/compile/nets.py`).
+pub const W_LO: i32 = -128;
+pub const W_HI: i32 = 127;
+pub const B_LO: i32 = -1024;
+pub const B_HI: i32 = 1023;
+
+/// A whole network: input shape + layer stack.
+#[derive(Clone, Debug)]
+pub struct NetSpec {
+    pub name: String,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub layers: Vec<LayerSpec>,
+}
+
+/// Per-layer static costs — the rows of the paper's Table 1.
+#[derive(Clone, Debug)]
+pub struct LayerCost {
+    pub name: String,
+    pub in_shape: (usize, usize, usize),
+    pub out_shape: (usize, usize, usize),
+    /// Paper counts ops only for CONV layers (Table 1 sums to 1.3 G).
+    pub ops: u64,
+    pub in_bytes: usize,
+    pub out_bytes: usize,
+    pub weight_bytes: usize,
+}
+
+impl NetSpec {
+    pub fn in_shape(&self) -> (usize, usize, usize) {
+        (self.in_h, self.in_w, self.in_c)
+    }
+
+    /// Shapes of every layer output, input first (mirror of
+    /// `nets.net_shapes`).
+    pub fn shapes(&self) -> Vec<(String, usize, usize, usize)> {
+        let mut out = vec![("input".to_string(), self.in_h, self.in_w, self.in_c)];
+        let mut s = self.in_shape();
+        for l in &self.layers {
+            s = l.out_shape(s);
+            out.push((l.name().to_string(), s.0, s.1, s.2));
+        }
+        out
+    }
+
+    pub fn out_shape(&self) -> (usize, usize, usize) {
+        let mut s = self.in_shape();
+        for l in &self.layers {
+            s = l.out_shape(s);
+        }
+        s
+    }
+
+    /// Table-1 style cost rows for every layer.
+    pub fn costs(&self) -> Vec<LayerCost> {
+        let mut rows = Vec::new();
+        let mut shape = self.in_shape();
+        for l in &self.layers {
+            let out = l.out_shape(shape);
+            let (ops, wbytes) = match l {
+                LayerSpec::Conv(c) => (c.ops(out.0, out.1), c.weight_bytes()),
+                LayerSpec::Pool(_) => (0, 0),
+            };
+            rows.push(LayerCost {
+                name: l.name().to_string(),
+                in_shape: shape,
+                out_shape: out,
+                ops,
+                in_bytes: shape.0 * shape.1 * shape.2 * 2,
+                out_bytes: out.0 * out.1 * out.2 * 2,
+                weight_bytes: wbytes,
+            });
+            shape = out;
+        }
+        rows
+    }
+
+    /// Total CONV ops (the paper's "1.3 G" for AlexNet).
+    pub fn total_ops(&self) -> u64 {
+        self.costs().iter().map(|c| c.ops).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(k: usize, stride: usize, pad: usize, cin: usize, cout: usize) -> LayerSpec {
+        LayerSpec::Conv(ConvSpec {
+            name: "c".into(),
+            k,
+            stride,
+            pad,
+            cin,
+            cout,
+            shift: 8,
+            relu: true,
+            wseed: 1,
+            bseed: 2,
+            groups: 1,
+        })
+    }
+
+    #[test]
+    fn conv_shapes() {
+        assert_eq!(conv(11, 4, 0, 3, 96).out_shape((227, 227, 3)), (55, 55, 96));
+        assert_eq!(conv(5, 1, 2, 96, 256).out_shape((27, 27, 96)), (27, 27, 256));
+        assert_eq!(conv(3, 1, 1, 256, 384).out_shape((13, 13, 256)), (13, 13, 384));
+    }
+
+    #[test]
+    fn pool_shapes() {
+        let p = LayerSpec::Pool(PoolSpec { name: "p".into(), k: 3, stride: 2 });
+        assert_eq!(p.out_shape((55, 55, 96)), (27, 27, 96));
+        assert_eq!(p.out_shape((13, 13, 256)), (6, 6, 256));
+    }
+
+    #[test]
+    fn alexnet_conv1_ops_match_table1() {
+        // Table 1 row 1: 211 M ops
+        if let LayerSpec::Conv(c) = conv(11, 4, 0, 3, 96) {
+            let ops = c.ops(55, 55);
+            assert_eq!(ops, 2 * 55 * 55 * 96 * 11 * 11 * 3);
+            assert!((ops as f64 - 211e6).abs() / 211e6 < 0.01, "ops={ops}");
+        }
+    }
+
+    #[test]
+    fn weights_deterministic_and_sized() {
+        if let LayerSpec::Conv(c) = conv(3, 1, 1, 4, 8) {
+            let w = c.weights();
+            assert_eq!(w.len(), 3 * 3 * 4 * 8);
+            assert_eq!(w, c.weights());
+            assert_eq!(c.weight_bytes(), w.len() * 2);
+        }
+    }
+}

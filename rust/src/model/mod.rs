@@ -1,0 +1,11 @@
+//! Network descriptions, tensors, the deterministic synthetic model zoo
+//! (shared with `python/compile/nets.py`), and a straightforward scalar
+//! reference implementation used as the in-crate oracle.
+
+pub mod layer;
+pub mod reference;
+pub mod tensor;
+pub mod zoo;
+
+pub use layer::{ConvSpec, LayerSpec, NetSpec, PoolSpec};
+pub use tensor::Tensor;

@@ -1,0 +1,161 @@
+//! Scalar reference implementation (the in-crate oracle).
+//!
+//! Straight nested loops over the layer math, written for auditability,
+//! not speed. The cycle simulator (`sim/`), the compiler's decomposed
+//! schedules, and the PJRT-executed artifacts are all tested against
+//! this — and this, in turn, matches the Python numpy oracle through the
+//! shared PRNG + fixed-point contract.
+
+use super::layer::{ConvSpec, LayerSpec, NetSpec, PoolSpec};
+use super::tensor::Tensor;
+use crate::fixed;
+
+/// Full KxK conv (valid padding — pad the input first), fused requantize.
+pub fn conv_ref(x: &Tensor, spec: &ConvSpec) -> Tensor {
+    let w = spec.weights();
+    let b = spec.biases();
+    conv_ref_with(x, spec, &w, &b)
+}
+
+/// Like [`conv_ref`] but with caller-provided parameters (used by tests
+/// that inject special weights).
+pub fn conv_ref_with(x: &Tensor, spec: &ConvSpec, w: &[i16], b: &[i32]) -> Tensor {
+    assert_eq!(x.c, spec.cin);
+    let cg = spec.cin / spec.groups; // channels per group
+    let mg = spec.cout / spec.groups; // output features per group
+    assert_eq!(w.len(), spec.k * spec.k * cg * spec.cout);
+    assert_eq!(b.len(), spec.cout);
+    let ho = (x.h - spec.k) / spec.stride + 1;
+    let wo = (x.w - spec.k) / spec.stride + 1;
+    let mut out = Tensor::zeros(ho, wo, spec.cout);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for m in 0..spec.cout {
+                let g = m / mg; // which group this output feature is in
+                let mut acc = b[m];
+                for i in 0..spec.k {
+                    for j in 0..spec.k {
+                        for ch in 0..cg {
+                            let xv =
+                                x.at(oy * spec.stride + i, ox * spec.stride + j, g * cg + ch);
+                            // weight layout (K, K, cg, cout) C-order: the
+                            // group's features live at columns [g*mg, (g+1)*mg)
+                            let wv = w[((i * spec.k + j) * cg + ch) * spec.cout + m];
+                            acc = fixed::acc_add(acc, fixed::pe_mul(xv, wv));
+                        }
+                    }
+                }
+                out.set(oy, ox, m, fixed::requantize(acc, spec.shift, spec.relu));
+            }
+        }
+    }
+    out
+}
+
+/// Max pooling oracle.
+pub fn pool_ref(x: &Tensor, spec: &PoolSpec) -> Tensor {
+    let ho = (x.h - spec.k) / spec.stride + 1;
+    let wo = (x.w - spec.k) / spec.stride + 1;
+    let mut out = Tensor::zeros(ho, wo, x.c);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ch in 0..x.c {
+                let mut m = i16::MIN;
+                for i in 0..spec.k {
+                    for j in 0..spec.k {
+                        m = m.max(x.at(oy * spec.stride + i, ox * spec.stride + j, ch));
+                    }
+                }
+                out.set(oy, ox, ch, m);
+            }
+        }
+    }
+    out
+}
+
+/// One layer (applies conv padding).
+pub fn run_layer_ref(x: &Tensor, layer: &LayerSpec) -> Tensor {
+    match layer {
+        LayerSpec::Conv(c) => conv_ref(&x.pad_hw(c.pad), c),
+        LayerSpec::Pool(p) => pool_ref(x, p),
+    }
+}
+
+/// Whole net.
+pub fn run_net_ref(net: &NetSpec, input: &Tensor) -> Tensor {
+    assert_eq!(input.shape(), net.in_shape(), "net {} input shape", net.name);
+    let mut x = input.clone();
+    for l in &net.layers {
+        x = run_layer_ref(&x, l);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn identity_kernel_reproduces_input() {
+        let x = Tensor::random_image(1, 10, 10, 1);
+        let spec = ConvSpec {
+            name: "id".into(),
+            k: 3,
+            stride: 1,
+            pad: 0,
+            cin: 1,
+            cout: 1,
+            shift: 0,
+            relu: false,
+            wseed: 0,
+            bseed: 0,
+            groups: 1,
+        };
+        let mut w = vec![0i16; 9];
+        w[4] = 1; // center tap
+        let out = conv_ref_with(&x, &spec, &w, &[0]);
+        assert_eq!(out.shape(), (8, 8, 1));
+        for y in 0..8 {
+            for xx in 0..8 {
+                assert_eq!(out.at(y, xx, 0), x.at(y + 1, xx + 1, 0));
+            }
+        }
+    }
+
+    #[test]
+    fn pool_known_values() {
+        let x = Tensor::from_vec(4, 4, 1, (0..16).map(|v| v as i16).collect());
+        let out = pool_ref(&x, &PoolSpec { name: "p".into(), k: 2, stride: 2 });
+        assert_eq!(out.data, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    fn facenet_runs_and_keeps_signal() {
+        let net = zoo::facenet();
+        let x = Tensor::random_image(7, 64, 64, 1);
+        let out = run_net_ref(&net, &x);
+        assert_eq!(out.shape(), (4, 4, 16));
+        let nonzero = out.data.iter().filter(|&&v| v != 0).count();
+        assert!(nonzero > 8, "signal died: {nonzero} nonzero of {}", out.data.len());
+    }
+
+    #[test]
+    fn stride2_shapes() {
+        let x = Tensor::random_image(2, 11, 11, 2);
+        let spec = ConvSpec {
+            name: "s2".into(),
+            k: 3,
+            stride: 2,
+            pad: 0,
+            cin: 2,
+            cout: 4,
+            shift: 8,
+            relu: true,
+            wseed: 3,
+            bseed: 4,
+            groups: 1,
+        };
+        assert_eq!(conv_ref(&x, &spec).shape(), (5, 5, 4));
+    }
+}

@@ -1,0 +1,177 @@
+//! Minimal HWC int16 tensor (and int32 accumulator plane) — the only
+//! tensor type the accelerator moves around. Row-major HWC matches the
+//! DRAM layout the DMA streams (channel-interleaved pixels).
+
+use crate::util::rng;
+
+/// (H, W, C) int16 tensor, row-major HWC.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<i16>,
+}
+
+impl Tensor {
+    pub fn zeros(h: usize, w: usize, c: usize) -> Self {
+        Self { h, w, c, data: vec![0; h * w * c] }
+    }
+
+    pub fn from_vec(h: usize, w: usize, c: usize, data: Vec<i16>) -> Self {
+        assert_eq!(data.len(), h * w * c, "tensor shape/data mismatch");
+        Self { h, w, c, data }
+    }
+
+    /// Deterministic synthetic image (mirrors `prng.image_tensor`).
+    pub fn random_image(seed: u32, h: usize, w: usize, c: usize) -> Self {
+        Self::from_vec(h, w, c, rng::image_tensor(seed, h * w * c, 0, 255))
+    }
+
+    #[inline(always)]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> i16 {
+        debug_assert!(y < self.h && x < self.w && ch < self.c);
+        self.data[(y * self.w + x) * self.c + ch]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, y: usize, x: usize, ch: usize, v: i16) {
+        debug_assert!(y < self.h && x < self.w && ch < self.c);
+        self.data[(y * self.w + x) * self.c + ch] = v;
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.h, self.w, self.c)
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 2
+    }
+
+    /// Zero-pad H and W by `pad` on every side (the DMA writes a zero
+    /// apron around each tile for 'same' convolutions).
+    pub fn pad_hw(&self, pad: usize) -> Tensor {
+        if pad == 0 {
+            return self.clone();
+        }
+        let mut out = Tensor::zeros(self.h + 2 * pad, self.w + 2 * pad, self.c);
+        for y in 0..self.h {
+            let src = &self.data[y * self.w * self.c..(y + 1) * self.w * self.c];
+            let off = ((y + pad) * out.w + pad) * out.c;
+            out.data[off..off + src.len()].copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Crop a (y0..y0+h, x0..x0+w) window, all channels.
+    pub fn crop(&self, y0: usize, x0: usize, h: usize, w: usize) -> Tensor {
+        assert!(y0 + h <= self.h && x0 + w <= self.w, "crop out of bounds");
+        let mut out = Tensor::zeros(h, w, self.c);
+        for y in 0..h {
+            let src = ((y0 + y) * self.w + x0) * self.c;
+            let dst = y * w * self.c;
+            out.data[dst..dst + w * self.c]
+                .copy_from_slice(&self.data[src..src + w * self.c]);
+        }
+        out
+    }
+
+    /// Channel slice [c0, c0+n).
+    pub fn channels(&self, c0: usize, n: usize) -> Tensor {
+        assert!(c0 + n <= self.c);
+        let mut out = Tensor::zeros(self.h, self.w, n);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                for ch in 0..n {
+                    out.set(y, x, ch, self.at(y, x, c0 + ch));
+                }
+            }
+        }
+        out
+    }
+
+    /// Write `src` into self at channel offset `c0` (feature-decomposition
+    /// re-assembly).
+    pub fn write_channels(&mut self, c0: usize, src: &Tensor) {
+        assert_eq!((self.h, self.w), (src.h, src.w));
+        assert!(c0 + src.c <= self.c);
+        for y in 0..self.h {
+            for x in 0..self.w {
+                for ch in 0..src.c {
+                    self.set(y, x, c0 + ch, src.at(y, x, ch));
+                }
+            }
+        }
+    }
+
+    /// Write `src` into self at spatial offset (y0, x0) (image-
+    /// decomposition re-assembly).
+    pub fn write_window(&mut self, y0: usize, x0: usize, src: &Tensor) {
+        assert_eq!(self.c, src.c);
+        assert!(y0 + src.h <= self.h && x0 + src.w <= self.w);
+        for y in 0..src.h {
+            let dst = ((y0 + y) * self.w + x0) * self.c;
+            let s = y * src.w * src.c;
+            self.data[dst..dst + src.w * src.c]
+                .copy_from_slice(&src.data[s..s + src.w * src.c]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip() {
+        let mut t = Tensor::zeros(4, 5, 3);
+        t.set(2, 3, 1, -77);
+        assert_eq!(t.at(2, 3, 1), -77);
+        assert_eq!(t.at(2, 3, 0), 0);
+    }
+
+    #[test]
+    fn pad_places_image_centered() {
+        let t = Tensor::from_vec(1, 1, 1, vec![9]);
+        let p = t.pad_hw(2);
+        assert_eq!(p.shape(), (5, 5, 1));
+        assert_eq!(p.at(2, 2, 0), 9);
+        assert_eq!(p.data.iter().filter(|&&v| v != 0).count(), 1);
+    }
+
+    #[test]
+    fn crop_window() {
+        let t = Tensor::random_image(1, 6, 6, 2);
+        let c = t.crop(1, 2, 3, 3);
+        assert_eq!(c.shape(), (3, 3, 2));
+        assert_eq!(c.at(0, 0, 0), t.at(1, 2, 0));
+        assert_eq!(c.at(2, 2, 1), t.at(3, 4, 1));
+    }
+
+    #[test]
+    fn channel_split_and_reassemble() {
+        let t = Tensor::random_image(2, 4, 4, 6);
+        let a = t.channels(0, 3);
+        let b = t.channels(3, 3);
+        let mut r = Tensor::zeros(4, 4, 6);
+        r.write_channels(0, &a);
+        r.write_channels(3, &b);
+        assert_eq!(r, t);
+    }
+
+    #[test]
+    fn window_reassemble() {
+        let t = Tensor::random_image(3, 8, 8, 2);
+        let mut r = Tensor::zeros(8, 8, 2);
+        for (y0, x0) in [(0, 0), (0, 4), (4, 0), (4, 4)] {
+            r.write_window(y0, x0, &t.crop(y0, x0, 4, 4));
+        }
+        assert_eq!(r, t);
+    }
+
+    #[test]
+    #[should_panic(expected = "crop out of bounds")]
+    fn crop_bounds_checked() {
+        Tensor::zeros(4, 4, 1).crop(2, 2, 3, 3);
+    }
+}

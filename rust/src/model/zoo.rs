@@ -1,0 +1,218 @@
+//! The deterministic synthetic model zoo — EXACT mirror of
+//! `python/compile/nets.py`. Seeds, shifts and shapes are the
+//! cross-language contract; integration tests compare the simulator
+//! against the AOT artifacts bit-for-bit and catch any drift.
+
+use super::layer::{ConvSpec, LayerSpec, NetSpec, PoolSpec};
+
+fn conv(
+    name: &str,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    cin: usize,
+    cout: usize,
+    shift: u8,
+    relu: bool,
+    wseed: u32,
+    bseed: u32,
+) -> LayerSpec {
+    LayerSpec::Conv(ConvSpec {
+        name: name.into(),
+        k,
+        stride,
+        pad,
+        cin,
+        cout,
+        shift,
+        relu,
+        wseed,
+        bseed,
+        groups: 1,
+    })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gconv(
+    name: &str,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    cin: usize,
+    cout: usize,
+    shift: u8,
+    relu: bool,
+    wseed: u32,
+    bseed: u32,
+    groups: usize,
+) -> LayerSpec {
+    LayerSpec::Conv(ConvSpec {
+        name: name.into(),
+        k,
+        stride,
+        pad,
+        cin,
+        cout,
+        shift,
+        relu,
+        wseed,
+        bseed,
+        groups,
+    })
+}
+
+fn pool(name: &str, k: usize, stride: usize) -> LayerSpec {
+    LayerSpec::Pool(PoolSpec { name: name.into(), k, stride })
+}
+
+/// Tiny net for the quickstart example: one conv + one pool.
+pub fn quicknet() -> NetSpec {
+    let base = 5000;
+    NetSpec {
+        name: "quicknet".into(),
+        in_h: 18,
+        in_w: 18,
+        in_c: 4,
+        layers: vec![
+            conv("conv1", 3, 1, 0, 4, 16, 9, true, base, base + 1),
+            pool("pool1", 2, 2),
+        ],
+    }
+}
+
+/// Small face-detection CNN (the paper's Fig. 8 FPGA demo workload).
+pub fn facenet() -> NetSpec {
+    let base = 7000;
+    NetSpec {
+        name: "facenet".into(),
+        in_h: 64,
+        in_w: 64,
+        in_c: 1,
+        layers: vec![
+            conv("conv1", 3, 1, 1, 1, 8, 8, true, base, base + 1),
+            pool("pool1", 2, 2),
+            conv("conv2", 3, 1, 1, 8, 16, 9, true, base + 2, base + 3),
+            pool("pool2", 2, 2),
+            conv("conv3", 3, 1, 1, 16, 32, 10, true, base + 4, base + 5),
+            pool("pool3", 2, 2),
+            conv("conv4", 3, 1, 0, 32, 16, 10, true, base + 6, base + 7),
+            conv("score", 3, 1, 0, 16, 16, 10, false, base + 8, base + 9),
+        ],
+    }
+}
+
+/// AlexNet CONV+POOL stack (paper Table 1; FC layers out of scope).
+pub fn alexnet() -> NetSpec {
+    let base = 9000;
+    NetSpec {
+        name: "alexnet".into(),
+        in_h: 227,
+        in_w: 227,
+        in_c: 3,
+        layers: vec![
+            conv("conv1", 11, 4, 0, 3, 96, 11, true, base, base + 1),
+            pool("pool1", 3, 2),
+            gconv("conv2", 5, 1, 2, 96, 256, 12, true, base + 2, base + 3, 2),
+            pool("pool2", 3, 2),
+            conv("conv3", 3, 1, 1, 256, 384, 12, true, base + 4, base + 5),
+            gconv("conv4", 3, 1, 1, 384, 384, 12, true, base + 6, base + 7, 2),
+            gconv("conv5", 3, 1, 1, 384, 256, 12, true, base + 8, base + 9, 2),
+            pool("pool5", 3, 2),
+        ],
+    }
+}
+
+/// VGG-16 conv stack — all 3×3, the native shape of the CU array.
+pub fn vgg16() -> NetSpec {
+    let base = 11000u32;
+    let cfg: &[(usize, usize)] = &[(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+    let mut layers = Vec::new();
+    let mut cin = 3usize;
+    let mut seed = base;
+    for (bi, &(cout, reps)) in cfg.iter().enumerate() {
+        let bi = bi + 1;
+        for ri in 1..=reps {
+            let shift = if cin == 3 { 8 } else { 11 };
+            layers.push(conv(
+                &format!("conv{bi}_{ri}"),
+                3,
+                1,
+                1,
+                cin,
+                cout,
+                shift,
+                true,
+                seed,
+                seed + 1,
+            ));
+            seed += 2;
+            cin = cout;
+        }
+        layers.push(pool(&format!("pool{bi}"), 2, 2));
+    }
+    NetSpec { name: "vgg16".into(), in_h: 224, in_w: 224, in_c: 3, layers }
+}
+
+/// Look up a net by name.
+pub fn by_name(name: &str) -> Option<NetSpec> {
+    match name {
+        "quicknet" => Some(quicknet()),
+        "facenet" => Some(facenet()),
+        "alexnet" => Some(alexnet()),
+        "vgg16" => Some(vgg16()),
+        _ => None,
+    }
+}
+
+pub const ALL: &[&str] = &["quicknet", "facenet", "alexnet", "vgg16"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_matches_paper_table1_shapes() {
+        let shapes = alexnet().shapes();
+        let find = |n: &str| shapes.iter().find(|s| s.0 == n).map(|s| (s.1, s.2, s.3)).unwrap();
+        assert_eq!(find("input"), (227, 227, 3));
+        assert_eq!(find("conv1"), (55, 55, 96));
+        assert_eq!(find("conv2"), (27, 27, 256));
+        assert_eq!(find("conv3"), (13, 13, 384));
+        assert_eq!(find("conv4"), (13, 13, 384));
+        assert_eq!(find("conv5"), (13, 13, 256));
+        assert_eq!(find("pool5"), (6, 6, 256));
+    }
+
+    #[test]
+    fn alexnet_total_ops_about_1p3g() {
+        // Table 1 total: 1.3 GOPs (sum of the five conv rows).
+        let total = alexnet().total_ops() as f64;
+        assert!((total - 1.33e9).abs() / 1.33e9 < 0.02, "total={total}");
+    }
+
+    #[test]
+    fn facenet_output_shape() {
+        assert_eq!(facenet().out_shape(), (4, 4, 16));
+    }
+
+    #[test]
+    fn quicknet_output_shape() {
+        assert_eq!(quicknet().out_shape(), (8, 8, 16));
+    }
+
+    #[test]
+    fn vgg16_has_13_convs_and_ends_7x7() {
+        let net = vgg16();
+        let convs = net.layers.iter().filter(|l| matches!(l, LayerSpec::Conv(_))).count();
+        assert_eq!(convs, 13);
+        assert_eq!(net.out_shape(), (7, 7, 512));
+    }
+
+    #[test]
+    fn zoo_lookup() {
+        for n in ALL {
+            assert!(by_name(n).is_some());
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

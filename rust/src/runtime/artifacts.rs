@@ -1,0 +1,119 @@
+//! `artifacts/manifest.json` — the contract written by `aot.py`.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    /// "conv" | "pool" | "net"
+    pub kind: String,
+    /// conv-kind params (0 when not applicable)
+    pub k: usize,
+    pub stride: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub shift: usize,
+    pub relu: bool,
+    pub wseed: u32,
+    pub bseed: u32,
+    /// net-kind: zoo name
+    pub net: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+fn shape_of(j: &Json, key: &str) -> Vec<usize> {
+    j.get(key)
+        .and_then(|io| io.get("shape"))
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    /// Default artifact dir: `$KN_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("KN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> anyhow::Result<Manifest> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("{}: {e} (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        anyhow::ensure!(j.usize_or("version", 0) == 1, "unsupported manifest version");
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).unwrap_or(&[]) {
+            artifacts.push(Artifact {
+                name: a.str_or("name", "").to_string(),
+                file: dir.join(a.str_or("file", "")),
+                in_shape: shape_of(a, "input"),
+                out_shape: shape_of(a, "output"),
+                kind: a.str_or("kind", "").to_string(),
+                k: a.usize_or("k", 0),
+                stride: a.usize_or("stride", 0),
+                cin: a.usize_or("cin", 0),
+                cout: a.usize_or("cout", 0),
+                shift: a.usize_or("shift", 0),
+                relu: a.bool_or("relu", false),
+                wseed: a.usize_or("wseed", 0) as u32,
+                bseed: a.usize_or("bseed", 0) as u32,
+                net: a.str_or("net", "").to_string(),
+            });
+        }
+        anyhow::ensure!(!artifacts.is_empty(), "empty manifest");
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        if !have_artifacts() {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load_default().unwrap();
+        for required in ["conv3x3_s1_tile", "facenet_fwd", "alexnet_fwd", "quicknet_fwd"] {
+            let a = m.find(required).unwrap_or_else(|| panic!("missing {required}"));
+            assert!(a.file.exists(), "{:?}", a.file);
+            assert_eq!(a.in_shape.len(), 3);
+            assert_eq!(a.out_shape.len(), 3);
+        }
+        let conv = m.find("conv3x3_s1_tile").unwrap();
+        assert_eq!(conv.kind, "conv");
+        assert_eq!((conv.k, conv.stride, conv.cin, conv.cout), (3, 1, 8, 16));
+    }
+
+    #[test]
+    fn missing_dir_errors_with_hint() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT HLO artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client —
+//! Python never runs on this path.
+//!
+//! Used for (a) **golden verification**: the cycle simulator's output
+//! must match the PJRT-executed artifact bit-for-bit, and (b) as the
+//! "reference CPU" baseline in the end-to-end benches.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{Artifact, Manifest};
+pub use pjrt::Golden;

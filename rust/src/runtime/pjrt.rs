@@ -1,0 +1,155 @@
+//! PJRT executor: HLO text → compiled executable → int16 tensor I/O.
+//!
+//! Interchange is HLO **text** (xla_extension 0.5.1 rejects jax ≥ 0.5
+//! serialized protos — 64-bit instruction ids; the text parser reassigns
+//! them). Artifacts are lowered with `return_tuple=True`, so results
+//! unwrap with `to_tuple1()`.
+
+use std::collections::HashMap;
+
+use crate::model::Tensor;
+
+use super::artifacts::{Artifact, Manifest};
+
+/// A compiled golden-model registry over one PJRT CPU client.
+pub struct Golden {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Golden {
+    /// Create the CPU client and load the manifest (compiles lazily).
+    pub fn load_default() -> anyhow::Result<Self> {
+        let manifest = Manifest::load_default()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e}"))?;
+        Ok(Self { client, manifest, compiled: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile(&mut self, name: &str) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let art = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
+            let path = art.file.to_string_lossy().to_string();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {path}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute artifact `name` on an HWC int16 tensor.
+    pub fn run(&mut self, name: &str, input: &Tensor) -> anyhow::Result<Tensor> {
+        let art = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        anyhow::ensure!(
+            art.in_shape == vec![input.h, input.w, input.c],
+            "{name}: input {:?} != artifact {:?}",
+            input.shape(),
+            art.in_shape
+        );
+        let exe = self.compile(&name.to_string())?;
+        // i16 lacks a NativeType impl in the crate; build the literal
+        // from raw bytes with an explicit S16 shape instead.
+        let bytes: Vec<u8> = input.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S16,
+            &[input.h, input.w, input.c],
+            &bytes,
+        )
+        .map_err(|e| anyhow::anyhow!("literal: {e}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        let data = out.to_vec::<i16>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        let (h, w, c) = (art.out_shape[0], art.out_shape[1], art.out_shape[2]);
+        anyhow::ensure!(data.len() == h * w * c, "{name}: output size mismatch");
+        Ok(Tensor::from_vec(h, w, c, data))
+    }
+
+    /// Artifact kind="net" names present.
+    pub fn net_artifacts(&self) -> Vec<&Artifact> {
+        self.manifest.artifacts.iter().filter(|a| a.kind == "net").collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    /// The PJRT-executed conv tile must equal the in-crate scalar oracle
+    /// — this closes the Python-kernel ↔ Rust-contract loop at runtime.
+    #[test]
+    fn conv_tile_matches_rust_oracle() {
+        if !have_artifacts() {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        }
+        let mut g = Golden::load_default().unwrap();
+        let art = g.manifest().find("conv3x3_s1_tile").unwrap().clone();
+        let input = Tensor::random_image(42, art.in_shape[0], art.in_shape[1], art.in_shape[2]);
+        let got = g.run("conv3x3_s1_tile", &input).unwrap();
+
+        use crate::model::layer::{ConvSpec, B_HI, B_LO, W_HI, W_LO};
+        let spec = ConvSpec {
+            name: art.name.clone(),
+            k: art.k,
+            stride: art.stride,
+            pad: 0,
+            cin: art.cin,
+            cout: art.cout,
+            shift: art.shift as u8,
+            relu: art.relu,
+            wseed: art.wseed,
+            bseed: art.bseed,
+            groups: 1,
+        };
+        let _ = (W_LO, W_HI, B_LO, B_HI);
+        let want = crate::model::reference::conv_ref(&input, &spec);
+        assert_eq!(got, want, "PJRT artifact != rust oracle (contract broken)");
+    }
+
+    #[test]
+    fn facenet_artifact_runs() {
+        if !have_artifacts() {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        }
+        let mut g = Golden::load_default().unwrap();
+        let input = Tensor::random_image(7, 64, 64, 1);
+        let out = g.run("facenet_fwd", &input).unwrap();
+        assert_eq!(out.shape(), (4, 4, 16));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        if !have_artifacts() {
+            eprintln!("skipped: run `make artifacts`");
+            return;
+        }
+        let mut g = Golden::load_default().unwrap();
+        assert!(g.run("facenet_fwd", &Tensor::zeros(3, 3, 1)).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Accumulation buffer (paper §4.1, Fig. 3): a dedicated int32 partial-
+//! sum memory between the CU engine array and the buffer bank, with the
+//! fused bias / requantize / ReLU output stage.
+//!
+//! Partial planes persist across conv passes (channel groups and
+//! kernel-decomposition taps) for the current output tile; the LAST pass
+//! requantizes to int16 and drains to SRAM. Capacity bounds the output
+//! tile (`oh*ow <= 1024` pixels × 16 features) — a constraint the
+//! decomposition solver enforces.
+
+use crate::fixed;
+use crate::NUM_CU;
+
+/// Output-tile pixels the ACC BUF can hold (× 16 features × int32 = 64 KB).
+pub const ACC_TILE_PX: usize = 1024;
+/// Total int32 entries.
+pub const ACC_ENTRIES: usize = ACC_TILE_PX * NUM_CU;
+
+pub struct AccBuf {
+    data: Vec<i32>,
+    /// Bias registers for the active 16-feature group.
+    bias: [i32; NUM_CU],
+    /// Accumulate operations performed (energy model input).
+    pub acc_ops: u64,
+}
+
+impl Default for AccBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AccBuf {
+    pub fn new() -> Self {
+        Self { data: vec![0; ACC_ENTRIES], bias: [0; NUM_CU], acc_ops: 0 }
+    }
+
+    pub fn load_bias(&mut self, b: &[i32; NUM_CU]) {
+        self.bias = *b;
+    }
+
+    /// FIRST pass: initialise `n_px` pixels of the plane at `base` with
+    /// the bias registers.
+    pub fn init_plane(&mut self, base: usize, n_px: usize) {
+        assert!(base + n_px <= ACC_TILE_PX, "ACC BUF overflow: {base}+{n_px}");
+        for p in 0..n_px {
+            let off = (base + p) * NUM_CU;
+            self.data[off..off + NUM_CU].copy_from_slice(&self.bias);
+        }
+    }
+
+    /// Accumulate one cycle's 16 partial sums into pixel `px` of the plane.
+    #[inline(always)]
+    pub fn accumulate(&mut self, base: usize, px: usize, partials: &[i32; NUM_CU]) {
+        debug_assert!(base + px < ACC_TILE_PX, "ACC BUF overflow");
+        let off = (base + px) * NUM_CU;
+        for m in 0..NUM_CU {
+            self.data[off + m] = self.data[off + m].wrapping_add(partials[m]);
+        }
+        self.acc_ops += NUM_CU as u64;
+    }
+
+    /// LAST pass: requantize pixel `px` to 16 int16 lanes.
+    #[inline(always)]
+    pub fn requant_px(&self, base: usize, px: usize, shift: u8, relu: bool) -> [i16; NUM_CU] {
+        let off = (base + px) * NUM_CU;
+        core::array::from_fn(|m| fixed::requantize(self.data[off + m], shift, relu))
+    }
+
+    /// Mutable 16-lane row of pixel `px` (fused engine accumulation).
+    #[inline(always)]
+    pub fn row_mut(&mut self, base: usize, px: usize) -> &mut [i32] {
+        debug_assert!(base + px < ACC_TILE_PX, "ACC BUF overflow");
+        let off = (base + px) * NUM_CU;
+        self.acc_ops += NUM_CU as u64;
+        &mut self.data[off..off + NUM_CU]
+    }
+
+    /// Raw plane readback (tests).
+    pub fn peek(&self, base: usize, px: usize, m: usize) -> i32 {
+        self.data[(base + px) * NUM_CU + m]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_init_then_accumulate_then_requant() {
+        let mut ab = AccBuf::new();
+        let bias: [i32; NUM_CU] = core::array::from_fn(|m| m as i32 * 10);
+        ab.load_bias(&bias);
+        ab.init_plane(0, 4);
+        let partial: [i32; NUM_CU] = core::array::from_fn(|m| m as i32);
+        ab.accumulate(0, 2, &partial);
+        ab.accumulate(0, 2, &partial);
+        assert_eq!(ab.peek(0, 2, 3), 30 + 3 + 3);
+        assert_eq!(ab.peek(0, 1, 3), 30);
+        let q = ab.requant_px(0, 2, 1, false);
+        assert_eq!(q[3], fixed::requantize(36, 1, false));
+        assert_eq!(ab.acc_ops, 32);
+    }
+
+    #[test]
+    fn wrapping_accumulation() {
+        let mut ab = AccBuf::new();
+        ab.load_bias(&[i32::MAX; NUM_CU]);
+        ab.init_plane(0, 1);
+        ab.accumulate(0, 0, &[1; NUM_CU]);
+        assert_eq!(ab.peek(0, 0, 0), i32::MIN); // wrapped, by contract
+    }
+
+    #[test]
+    #[should_panic(expected = "ACC BUF overflow")]
+    fn capacity_enforced() {
+        let mut ab = AccBuf::new();
+        ab.init_plane(0, ACC_TILE_PX + 1);
+    }
+}

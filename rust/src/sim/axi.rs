@@ -1,0 +1,134 @@
+//! AXI command front-end (paper §4.1): 16-bit bus → 128-deep command
+//! FIFO → command decoder.
+//!
+//! The host (here: the coordinator) pushes encoded command words; the
+//! decoder pulls complete commands. FIFO-full is backpressure the host
+//! must respect — `push_word` returns false and the word must be
+//! re-offered (tested).
+
+use std::collections::VecDeque;
+
+use crate::isa::{Cmd, Opcode};
+use crate::CMD_FIFO_DEPTH;
+
+#[derive(Default)]
+pub struct CmdFifo {
+    words: VecDeque<u16>,
+    /// Words accepted over the bus (16 bits per cycle at bus clock).
+    pub words_in: u64,
+    /// Decoded commands.
+    pub cmds_out: u64,
+}
+
+impl CmdFifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Offer one word over the AXI bus. Returns false on backpressure
+    /// (FIFO full) — the host retries.
+    pub fn push_word(&mut self, w: u16) -> bool {
+        if self.words.len() >= CMD_FIFO_DEPTH {
+            return false;
+        }
+        self.words.push_back(w);
+        self.words_in += 1;
+        true
+    }
+
+    /// Decoder: pull one complete command if the FIFO holds one.
+    /// Returns `Ok(None)` when more words are needed, `Err` on an
+    /// invalid opcode (a real decoder would raise an error IRQ).
+    pub fn pop_cmd(&mut self) -> Result<Option<Cmd>, u16> {
+        let Some(&op_word) = self.words.front() else {
+            return Ok(None);
+        };
+        let Some(op) = Opcode::from_u16(op_word) else {
+            return Err(op_word);
+        };
+        let need = op.words_needed();
+        if self.words.len() < need {
+            return Ok(None);
+        }
+        let buf: Vec<u16> = self.words.iter().take(need).copied().collect();
+        let mut i = 0;
+        let cmd = Cmd::decode(&buf, &mut i).expect("length-checked decode");
+        debug_assert_eq!(i, need);
+        for _ in 0..need {
+            self.words.pop_front();
+        }
+        self.cmds_out += 1;
+        Ok(Some(cmd))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{ConvCfg, DmaDesc};
+
+    #[test]
+    fn fifo_depth_backpressure() {
+        let mut f = CmdFifo::new();
+        for i in 0..CMD_FIFO_DEPTH {
+            assert!(f.push_word(i as u16));
+        }
+        assert!(!f.push_word(0xFFFF), "word 129 must be refused");
+        assert_eq!(f.len(), 128);
+    }
+
+    #[test]
+    fn partial_command_waits() {
+        let mut f = CmdFifo::new();
+        let mut words = Vec::new();
+        Cmd::LoadImage(DmaDesc::flat(7, 9, 11)).encode(&mut words);
+        // push all but the last word: decoder must hold off
+        for &w in &words[..words.len() - 1] {
+            f.push_word(w);
+        }
+        assert_eq!(f.pop_cmd(), Ok(None));
+        f.push_word(words[words.len() - 1]);
+        assert_eq!(
+            f.pop_cmd(),
+            Ok(Some(Cmd::LoadImage(DmaDesc::flat(7, 9, 11))))
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn invalid_opcode_raises() {
+        let mut f = CmdFifo::new();
+        f.push_word(0x00EE);
+        assert_eq!(f.pop_cmd(), Err(0x00EE));
+    }
+
+    #[test]
+    fn streams_multiple_commands() {
+        let mut f = CmdFifo::new();
+        let cmds = vec![
+            Cmd::SetConv(ConvCfg { stride: 2, shift: 9, relu: true }),
+            Cmd::Sync,
+            Cmd::Halt,
+        ];
+        for w in Cmd::encode_program(&cmds) {
+            assert!(f.push_word(w));
+        }
+        let mut got = Vec::new();
+        while let Ok(Some(c)) = f.pop_cmd() {
+            got.push(c);
+            if c == Cmd::Halt {
+                break;
+            }
+        }
+        assert_eq!(got, cmds);
+        assert_eq!(f.cmds_out, 3);
+    }
+}

@@ -1,0 +1,163 @@
+//! Streaming column buffer (paper §3, Fig. 2).
+//!
+//! A 2×N row buffer pair in front of the CU array: as pixel rows of the
+//! current channel stream out of SRAM 8-per-cycle, the two row buffers
+//! hold the previous two rows, so every incoming pixel completes a 3×3
+//! window column and the convolution never pauses ("no need to wait for
+//! the incomplete convolution calculation"). This module models the
+//! state machine exactly — fill level, row wrap, boundary behaviour —
+//! and exposes the windows the CU array consumes.
+
+/// Column buffer for one channel scan of a (h × w) tile.
+pub struct ColumnBuffer {
+    w: usize,
+    /// The 2×N row buffers (N = tile width).
+    rows: [Vec<i16>; 2],
+    /// Incoming row index (0-based); rows 0 and 1 only fill.
+    next_row: usize,
+    /// Shift registers holding the left two columns of the window.
+    cols: [[i16; 3]; 2],
+    /// Current x position within the streaming row.
+    x: usize,
+}
+
+impl ColumnBuffer {
+    pub fn new(w: usize) -> Self {
+        assert!(w >= 3, "column buffer needs width >= 3");
+        Self {
+            w,
+            rows: [vec![0; w], vec![0; w]],
+            next_row: 0,
+            cols: [[0; 3]; 2],
+            x: 0,
+        }
+    }
+
+    /// Number of fill cycles (SRAM words) before the first valid window:
+    /// two full rows at 8 px/word.
+    pub fn fill_words(&self) -> usize {
+        (2 * self.w).div_ceil(super::sram::WORD_PX)
+    }
+
+    /// Stream one pixel of the current input row. Returns a complete 3×3
+    /// window (centered on the column just completed) once both the row
+    /// fill and the 3-column fill are satisfied.
+    ///
+    /// The window rows are (row-2, row-1, row) = the two row buffers plus
+    /// the live pixel; window columns are the last three streamed.
+    pub fn push_px(&mut self, px: i16) -> Option<[i16; 9]> {
+        debug_assert!(self.x < self.w);
+        let x = self.x;
+        // Column vector for this x: two buffered rows + live pixel.
+        let col = [self.rows[0][x], self.rows[1][x], px];
+        // Row buffers shift down: row-1 becomes row-2, live becomes row-1.
+        self.rows[0][x] = self.rows[1][x];
+        self.rows[1][x] = px;
+        // Column shift registers.
+        let out = if self.next_row >= 2 && x >= 2 {
+            Some([
+                self.cols[0][0], self.cols[1][0], col[0],
+                self.cols[0][1], self.cols[1][1], col[1],
+                self.cols[0][2], self.cols[1][2], col[2],
+            ])
+        } else {
+            None
+        };
+        self.cols[0] = self.cols[1];
+        self.cols[1] = col;
+        self.x += 1;
+        if self.x == self.w {
+            self.x = 0;
+            self.next_row += 1;
+            // new row: the column shift registers restart at the boundary
+            self.cols = [[0; 3]; 2];
+        }
+        out
+    }
+
+    /// Rows streamed so far.
+    pub fn rows_streamed(&self) -> usize {
+        self.next_row
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Tensor;
+
+    /// Stream a whole single-channel tile and collect windows; they must
+    /// equal the naive 3×3 window extraction — and there must be exactly
+    /// (h-2)*(w-2) of them, one per cycle after the fill (streaming
+    /// continuity, Fig. 2b).
+    #[test]
+    fn windows_match_naive_extraction() {
+        let t = Tensor::random_image(11, 9, 7, 1);
+        let mut cb = ColumnBuffer::new(t.w);
+        let mut got = Vec::new();
+        for y in 0..t.h {
+            for x in 0..t.w {
+                if let Some(win) = cb.push_px(t.at(y, x, 0)) {
+                    got.push(((y, x), win));
+                }
+            }
+        }
+        assert_eq!(got.len(), (t.h - 2) * (t.w - 2));
+        let mut i = 0;
+        for oy in 0..t.h - 2 {
+            for ox in 0..t.w - 2 {
+                let ((y, x), win) = got[i];
+                // window completes when its bottom-right pixel streams in
+                assert_eq!((y, x), (oy + 2, ox + 2));
+                let mut want = [0i16; 9];
+                for dy in 0..3 {
+                    for dx in 0..3 {
+                        want[dy * 3 + dx] = t.at(oy + dy, ox + dx, 0);
+                    }
+                }
+                assert_eq!(win, want, "window at ({oy},{ox})");
+                i += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn no_windows_during_fill() {
+        let mut cb = ColumnBuffer::new(5);
+        // first two rows: no output at all
+        for _ in 0..2 {
+            for x in 0..5 {
+                assert!(cb.push_px(x as i16).is_none());
+            }
+        }
+        // third row: first two pixels still fill columns, then valid
+        assert!(cb.push_px(1).is_none());
+        assert!(cb.push_px(2).is_none());
+        assert!(cb.push_px(3).is_some());
+    }
+
+    #[test]
+    fn fill_words_accounting() {
+        let cb = ColumnBuffer::new(55);
+        assert_eq!(cb.fill_words(), (2 * 55usize).div_ceil(8));
+    }
+
+    #[test]
+    fn row_boundary_resets_columns() {
+        // windows must never mix pixels from the end of one row with the
+        // start of the next (the Fig. 2a "boundary issue")
+        let t = Tensor::from_vec(3, 4, 1, (1..=12).collect());
+        let mut cb = ColumnBuffer::new(4);
+        let mut wins = Vec::new();
+        for y in 0..3 {
+            for x in 0..4 {
+                if let Some(w) = cb.push_px(t.at(y, x, 0)) {
+                    wins.push(w);
+                }
+            }
+        }
+        assert_eq!(wins.len(), 2);
+        assert_eq!(wins[0], [1, 2, 3, 5, 6, 7, 9, 10, 11]);
+        assert_eq!(wins[1], [2, 3, 4, 6, 7, 8, 10, 11, 12]);
+    }
+}

@@ -1,0 +1,95 @@
+//! Convolution unit (paper §4.2, Fig. 4): nine PEs + an adder tree.
+//!
+//! Per cycle a CU consumes one 3×3 window (presented by the column
+//! buffer) and produces one int32 partial sum for its output feature.
+//! Weights are double-banked: the prefetch controller fills the shadow
+//! bank while the active bank computes; `swap_weights` is the §4.2
+//! "synchronized filter update request" at each channel boundary.
+
+use super::pe::Pe;
+
+#[derive(Clone, Debug, Default)]
+pub struct Cu {
+    pes: [Pe; 9],
+    shadow: [i16; 9],
+    shadow_valid: bool,
+}
+
+impl Cu {
+    /// Prefetch the next channel's 3×3 weights into the shadow bank.
+    pub fn prefetch(&mut self, w: &[i16; 9]) {
+        self.shadow = *w;
+        self.shadow_valid = true;
+    }
+
+    /// Filter-update request: activate the shadow bank. Returns false
+    /// (a stall) if the prefetch hasn't arrived.
+    pub fn swap_weights(&mut self) -> bool {
+        if !self.shadow_valid {
+            return false;
+        }
+        for (pe, &w) in self.pes.iter_mut().zip(self.shadow.iter()) {
+            pe.load_weight(w);
+        }
+        self.shadow_valid = false;
+        true
+    }
+
+    /// Directly load the active bank (reset / test path).
+    pub fn load_weights(&mut self, w: &[i16; 9]) {
+        for (pe, &w) in self.pes.iter_mut().zip(w.iter()) {
+            pe.load_weight(w);
+        }
+    }
+
+    /// One cycle: 9 parallel PE multiplies + adder tree. `en` is the
+    /// EN_Ctrl stride gate.
+    #[inline]
+    pub fn step(&mut self, window: &[i16; 9], en: bool) -> i32 {
+        let mut acc = 0i32;
+        for (pe, &x) in self.pes.iter_mut().zip(window.iter()) {
+            let (_down, p) = pe.step(x, en);
+            acc = acc.wrapping_add(p);
+        }
+        acc
+    }
+
+    pub fn mul_count(&self) -> u64 {
+        self.pes.iter().map(|p| p.mul_count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed;
+
+    #[test]
+    fn dot9_matches_fixed() {
+        let mut cu = Cu::default();
+        let w: [i16; 9] = [1, -2, 3, -4, 5, -6, 7, -8, 9];
+        let x: [i16; 9] = [9, 8, 7, 6, 5, 4, 3, 2, 1];
+        cu.load_weights(&w);
+        assert_eq!(cu.step(&x, true), fixed::cu_dot9(&x, &w));
+        assert_eq!(cu.mul_count(), 9);
+    }
+
+    #[test]
+    fn gated_step_is_zero_and_free() {
+        let mut cu = Cu::default();
+        cu.load_weights(&[1; 9]);
+        assert_eq!(cu.step(&[100; 9], false), 0);
+        assert_eq!(cu.mul_count(), 0);
+    }
+
+    #[test]
+    fn swap_requires_prefetch() {
+        let mut cu = Cu::default();
+        assert!(!cu.swap_weights(), "swap without prefetch must stall");
+        cu.prefetch(&[2; 9]);
+        assert!(cu.swap_weights());
+        assert_eq!(cu.step(&[1; 9], true), 18);
+        // shadow consumed: a second swap stalls again
+        assert!(!cu.swap_weights());
+    }
+}

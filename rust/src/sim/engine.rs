@@ -1,0 +1,200 @@
+//! CU engine array (paper §4.1–4.2): sixteen CUs sharing one input
+//! window (input-stationary broadcast) and producing 16 output features
+//! per cycle, plus the weight prefetch controller.
+
+use super::cu::Cu;
+use crate::NUM_CU;
+
+/// The 16-CU array + prefetch controller state.
+pub struct CuEngine {
+    cus: Vec<Cu>,
+    /// Weight prefetch staging: per CU, the next channel's 3×3 block.
+    staged: Vec<[i16; 9]>,
+    staged_valid: bool,
+    /// Stall cycles caused by swap-before-prefetch.
+    pub weight_stalls: u64,
+    /// Active weights, feature-major [m*9 + tap] — the fast-path mirror
+    /// of the PE weight registers (see `step_fast`).
+    active_flat: Vec<i16>,
+    /// Pre-widened i32 mirror [m*9 + tap] — saves 144 sign-extensions
+    /// per simulated cycle in the fused fast path.
+    active_wide: Vec<i32>,
+    /// Multiplies performed through the fast path.
+    fast_muls: u64,
+}
+
+impl Default for CuEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CuEngine {
+    pub fn new() -> Self {
+        Self {
+            cus: (0..NUM_CU).map(|_| Cu::default()).collect(),
+            staged: vec![[0; 9]; NUM_CU],
+            staged_valid: false,
+            weight_stalls: 0,
+            active_flat: vec![0; NUM_CU * 9],
+            active_wide: vec![0; NUM_CU * 9],
+            fast_muls: 0,
+        }
+    }
+
+    /// Prefetch controller: stage the weights for one channel — layout
+    /// `w[tap][feature]` flattened as 9×16 (tap-major), matching the
+    /// (K, K, C, M) DRAM layout sliced at one (tap-row, tap-col, channel).
+    pub fn prefetch_channel(&mut self, w: &[i16]) {
+        assert_eq!(w.len(), 9 * NUM_CU, "one channel = 9 taps x 16 features");
+        for (m, s) in self.staged.iter_mut().enumerate() {
+            for tap in 0..9 {
+                s[tap] = w[tap * NUM_CU + m];
+            }
+        }
+        self.staged_valid = true;
+    }
+
+    /// Channel boundary: synchronized filter update across all CUs.
+    /// Returns stall cycles incurred (0 if the prefetch was ready —
+    /// double-buffering hid the load).
+    pub fn update_weights(&mut self) -> u64 {
+        if !self.staged_valid {
+            // Model: a blocking reload costs one cycle per weight word
+            // (9×16 px / 8 px-per-word).
+            let stall = (9 * NUM_CU).div_ceil(super::sram::WORD_PX) as u64;
+            self.weight_stalls += stall;
+            return stall;
+        }
+        for (m, (cu, s)) in self.cus.iter_mut().zip(self.staged.iter()).enumerate() {
+            cu.prefetch(s);
+            let ok = cu.swap_weights();
+            debug_assert!(ok);
+            self.active_flat[m * 9..m * 9 + 9].copy_from_slice(s);
+            for (tap, &w) in s.iter().enumerate() {
+                self.active_wide[m * 9 + tap] = w as i32;
+            }
+        }
+        self.staged_valid = false;
+        0
+    }
+
+    /// Fast path of [`CuEngine::step`]: identical arithmetic (wrapping
+    /// int32 dot-9 per CU over the active weight bank) without mutating
+    /// the per-PE D-FF chain — the chain's observable effect on the
+    /// conv pass is only the pipeline *timing*, which the pass-level
+    /// cycle accounting already charges. Bit-exactness is enforced by
+    /// the `fast_path_matches_slow_path` test below.
+    #[inline]
+    pub fn step_fast(&mut self, window: &[i16; 9]) -> [i32; NUM_CU] {
+        self.fast_muls += (NUM_CU * super::super::PES_PER_CU as usize) as u64;
+        // Feature-major dot-9 per CU lane. (A tap-major broadcast variant
+        // was tried and was ~15% slower — see EXPERIMENTS.md §Perf.)
+        let mut out = [0i32; NUM_CU];
+        for (m, o) in out.iter_mut().enumerate() {
+            let w = &self.active_flat[m * 9..m * 9 + 9];
+            let mut acc = 0i32;
+            for t in 0..9 {
+                acc = acc.wrapping_add(window[t] as i32 * w[t] as i32);
+            }
+            *o = acc;
+        }
+        out
+    }
+
+    /// Fused variant: one engine cycle accumulated straight into the
+    /// ACC BUF row (saves a 16-lane round trip per cycle on the sim's
+    /// hottest loop). Arithmetic identical to `step_fast` + wrapping add.
+    #[inline]
+    pub fn step_accumulate(&mut self, window: &[i16; 9], acc_row: &mut [i32]) {
+        debug_assert_eq!(acc_row.len(), NUM_CU);
+        self.fast_muls += (NUM_CU * super::super::PES_PER_CU as usize) as u64;
+        let mut win = [0i32; 9];
+        for t in 0..9 {
+            win[t] = window[t] as i32;
+        }
+        for (m, o) in acc_row.iter_mut().enumerate() {
+            let w = &self.active_wide[m * 9..m * 9 + 9];
+            let mut acc = 0i32;
+            for t in 0..9 {
+                acc = acc.wrapping_add(win[t].wrapping_mul(w[t]));
+            }
+            *o = o.wrapping_add(acc);
+        }
+    }
+
+    /// One engine cycle: broadcast the window to all 16 CUs.
+    /// Returns the 16 int32 partial sums. `en` = EN_Ctrl stride gate.
+    #[inline]
+    pub fn step(&mut self, window: &[i16; 9], en: bool) -> [i32; NUM_CU] {
+        let mut out = [0i32; NUM_CU];
+        for (o, cu) in out.iter_mut().zip(self.cus.iter_mut()) {
+            *o = cu.step(window, en);
+        }
+        out
+    }
+
+    /// Total multiplies performed across all PEs (energy model input).
+    pub fn mul_count(&self) -> u64 {
+        self.fast_muls + self.cus.iter().map(|c| c.mul_count()).sum::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed;
+    use crate::util::rng::XorShift32;
+
+    #[test]
+    fn sixteen_features_parallel() {
+        let mut eng = CuEngine::new();
+        let mut rng = XorShift32::new(3);
+        // one channel of weights: 9 taps x 16 features
+        let w: Vec<i16> = (0..9 * NUM_CU).map(|_| rng.next_in(-128, 127) as i16).collect();
+        eng.prefetch_channel(&w);
+        assert_eq!(eng.update_weights(), 0);
+        let win: [i16; 9] = core::array::from_fn(|i| (i as i16 + 1) * 3);
+        let out = eng.step(&win, true);
+        for (m, &o) in out.iter().enumerate() {
+            let wt: [i16; 9] = core::array::from_fn(|tap| w[tap * NUM_CU + m]);
+            assert_eq!(o, fixed::cu_dot9(&win, &wt), "feature {m}");
+        }
+        assert_eq!(eng.mul_count(), 9 * 16);
+    }
+
+    #[test]
+    fn fast_path_matches_slow_path() {
+        let mut rng = XorShift32::new(77);
+        for trial in 0..50 {
+            let mut eng = CuEngine::new();
+            let w: Vec<i16> =
+                (0..9 * NUM_CU).map(|_| rng.next_in(-32768, 32767) as i16).collect();
+            eng.prefetch_channel(&w);
+            eng.update_weights();
+            let win: [i16; 9] = core::array::from_fn(|_| rng.next_in(-32768, 32767) as i16);
+            let slow = eng.step(&win, true);
+            let fast = eng.step_fast(&win);
+            assert_eq!(slow, fast, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn missing_prefetch_stalls() {
+        let mut eng = CuEngine::new();
+        let stall = eng.update_weights();
+        assert_eq!(stall, (9 * 16usize).div_ceil(8) as u64);
+        assert_eq!(eng.weight_stalls, stall);
+    }
+
+    #[test]
+    fn double_buffering_hides_load() {
+        let mut eng = CuEngine::new();
+        let w = vec![1i16; 9 * NUM_CU];
+        eng.prefetch_channel(&w);
+        assert_eq!(eng.update_weights(), 0);
+        eng.prefetch_channel(&w);
+        assert_eq!(eng.update_weights(), 0);
+        assert_eq!(eng.weight_stalls, 0);
+    }
+}

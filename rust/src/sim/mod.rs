@@ -1,0 +1,94 @@
+//! Cycle-level, functionally bit-exact simulator of the streaming
+//! accelerator (paper Figs. 2–5).
+//!
+//! ## Microarchitectural model
+//!
+//! One simulated **cycle** is one step of the CU engine array: 16 CUs ×
+//! 9 PEs = 144 multiplies (the paper's peak 144 GOPS at 500 MHz = 144
+//! MACs × 2 ops × f). Channels are the outer streaming loop — "when one
+//! channel is scanned, a synchronized filter update request updates the
+//! weights for the upcoming channel" (§4.2) — and int32 partial planes
+//! accumulate in the SRAM-backed accumulation buffer across channel
+//! scans and kernel-decomposition taps.
+//!
+//! Cycle accounting per conv pass (one 3×3 tap × `cn` channels × one
+//! 16-feature group):
+//!
+//! ```text
+//! compute cycles   = oh*ow*cn                  (1 output px / cycle / CU)
+//! stream  cycles   = rows_used*iw*cn / 8       (8 px per SRAM word)
+//! rmw     cycles   = oh*ow*2/8 * (multi-pass)  (int32 partial RMW)
+//! pass    cycles   = max(compute, stream) + rmw + fill
+//! ```
+//!
+//! plus DMA cycles from the DRAM model (overlappable with compute via
+//! double buffering — the scheduler decides). All event counts (MACs,
+//! SRAM words, DRAM bytes, weight loads) feed the energy model.
+
+pub mod accbuf;
+pub mod accel;
+pub mod axi;
+pub mod colbuf;
+pub mod cu;
+pub mod dma;
+pub mod engine;
+pub mod pe;
+pub mod pool;
+pub mod sram;
+
+pub use accel::{Accelerator, SimConfig};
+
+/// Event/cycle counters — the interface between simulation and the
+/// energy/performance models.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SimStats {
+    /// Total cycles consumed (datapath + non-hidden DMA stalls).
+    pub cycles: u64,
+    /// Cycles where the CU array did useful work.
+    pub active_cycles: u64,
+    /// Multiply-accumulate operations actually performed.
+    pub macs: u64,
+    /// SRAM word accesses (16 B words; single-port — reads + writes).
+    pub sram_reads: u64,
+    pub sram_writes: u64,
+    /// DRAM traffic in bytes.
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    /// DMA cycles that could not be hidden behind compute.
+    pub dma_stall_cycles: u64,
+    /// Weight words loaded into the CU register banks.
+    pub weight_loads: u64,
+    /// Pooling comparator operations.
+    pub pool_ops: u64,
+    /// Commands executed.
+    pub commands: u64,
+}
+
+impl SimStats {
+    pub fn add(&mut self, o: &SimStats) {
+        self.cycles += o.cycles;
+        self.active_cycles += o.active_cycles;
+        self.macs += o.macs;
+        self.sram_reads += o.sram_reads;
+        self.sram_writes += o.sram_writes;
+        self.dram_read_bytes += o.dram_read_bytes;
+        self.dram_write_bytes += o.dram_write_bytes;
+        self.dma_stall_cycles += o.dma_stall_cycles;
+        self.weight_loads += o.weight_loads;
+        self.pool_ops += o.pool_ops;
+        self.commands += o.commands;
+    }
+
+    /// CU array utilization: achieved MACs / (144 × cycles).
+    pub fn utilization(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.macs as f64 / (crate::NUM_CU * crate::PES_PER_CU) as f64 / self.cycles as f64
+    }
+
+    /// Paper-style ops (1 MAC = 2 ops).
+    pub fn ops(&self) -> u64 {
+        2 * self.macs
+    }
+}

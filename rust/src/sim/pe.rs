@@ -1,0 +1,77 @@
+//! Processing engine (paper §4.2, Fig. 4).
+//!
+//! One PE = one int16×int16 multiplier + a D flip-flop that passes its
+//! input pixel to the next PE in the systolic chain. `EN_Ctrl` gates the
+//! multiplier off on stride-skipped positions to save power (the energy
+//! model charges only enabled multiplies).
+
+use crate::fixed;
+
+/// One processing engine. The D-FF chain is modeled by the `pass` value
+/// returned from [`Pe::step`]; the CU wires nine of these in series.
+#[derive(Clone, Debug, Default)]
+pub struct Pe {
+    /// Weight register (written on filter-update requests).
+    pub weight: i16,
+    /// D flip-flop holding the pixel being passed downstream.
+    dff: i16,
+    /// Multiplies actually performed (EN_Ctrl-gated).
+    pub mul_count: u64,
+}
+
+impl Pe {
+    /// One cycle: latch `x_in`, emit the previous pixel downstream, and
+    /// (if enabled) produce the product of the *incoming* pixel with the
+    /// stored weight.
+    #[inline]
+    pub fn step(&mut self, x_in: i16, en: bool) -> (i16, i32) {
+        let downstream = self.dff;
+        self.dff = x_in;
+        let product = if en {
+            self.mul_count += 1;
+            fixed::pe_mul(x_in, self.weight)
+        } else {
+            0
+        };
+        (downstream, product)
+    }
+
+    pub fn load_weight(&mut self, w: i16) {
+        self.weight = w;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multiply_and_pass() {
+        let mut pe = Pe::default();
+        pe.load_weight(3);
+        let (down0, p0) = pe.step(5, true);
+        assert_eq!(down0, 0); // DFF was empty
+        assert_eq!(p0, 15);
+        let (down1, p1) = pe.step(-7, true);
+        assert_eq!(down1, 5); // previous pixel emerges one cycle later
+        assert_eq!(p1, -21);
+        assert_eq!(pe.mul_count, 2);
+    }
+
+    #[test]
+    fn en_ctrl_gates_power() {
+        let mut pe = Pe::default();
+        pe.load_weight(100);
+        let (_, p) = pe.step(50, false);
+        assert_eq!(p, 0);
+        assert_eq!(pe.mul_count, 0); // gated multiply not counted
+    }
+
+    #[test]
+    fn extreme_products_fit_i32() {
+        let mut pe = Pe::default();
+        pe.load_weight(i16::MIN);
+        let (_, p) = pe.step(i16::MIN, true);
+        assert_eq!(p, (i16::MIN as i32) * (i16::MIN as i32));
+    }
+}

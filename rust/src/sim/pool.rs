@@ -1,0 +1,178 @@
+//! Reconfigurable streaming pooling module (paper §4.3, Fig. 5).
+//!
+//! The scratchpad presents rows of one output feature in parallel; a
+//! multiplexer selects the rows valid for the configured conv stride,
+//! and the max-pool unit — a four-input comparator with a feedback
+//! register — reduces the k×k window as the columns stream by. The
+//! pooled output feeds back to the scratchpad (here: the buffer bank).
+//!
+//! Functional model: per output pixel the comparator performs k cycles
+//! (one per window column), comparing up to 3 row inputs + the feedback
+//! register — exactly the §4.3 procedure. Cycle cost: `oh*ow*k` per
+//! channel plane, overlappable with the next conv's streaming (the
+//! scheduler decides; the accelerator charges it serially by default).
+
+use super::sram::BufferBank;
+
+/// One max-pool unit: 4-input comparator + feedback register.
+#[derive(Default)]
+pub struct MaxPoolUnit {
+    feedback: i16,
+    valid: bool,
+    pub compare_ops: u64,
+}
+
+impl MaxPoolUnit {
+    /// One cycle: compare up to three incoming row values with the
+    /// feedback register.
+    #[inline]
+    pub fn step(&mut self, inputs: &[i16]) -> i16 {
+        debug_assert!(inputs.len() <= 3, "comparator has 4 inputs incl. feedback");
+        let mut m = if self.valid { self.feedback } else { i16::MIN };
+        for &v in inputs {
+            m = m.max(v);
+        }
+        self.compare_ops += inputs.len() as u64 + self.valid as u64;
+        self.feedback = m;
+        self.valid = true;
+        m
+    }
+
+    /// Window boundary: emit and clear the feedback register.
+    #[inline]
+    pub fn emit(&mut self) -> i16 {
+        let m = self.feedback;
+        self.valid = false;
+        self.feedback = i16::MIN;
+        m
+    }
+}
+
+/// Pooling pass over a planar (C, H, W) int16 region in the buffer bank.
+/// Returns cycles consumed.
+#[allow(clippy::too_many_arguments)]
+pub fn pool_pass(
+    sram: &mut BufferBank,
+    src_px: usize,
+    dst_px: usize,
+    ih: usize,
+    iw: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    compare_ops: &mut u64,
+) -> u64 {
+    assert!(k == 2 || k == 3, "pool window must be 2 or 3 (paper §4.3)");
+    assert!(stride >= 1);
+    let oh = (ih - k) / stride + 1;
+    let ow = (iw - k) / stride + 1;
+    let mut unit = MaxPoolUnit::default();
+    let mut cycles = 0u64;
+    for ch in 0..c {
+        let splane = src_px + ch * ih * iw;
+        let dplane = dst_px + ch * oh * ow;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                // k columns stream through the comparator
+                for j in 0..k {
+                    // mux selects the k valid rows of this window column
+                    let mut col = [0i16; 3];
+                    for (i, cv) in col.iter_mut().enumerate().take(k) {
+                        *cv = sram.read_px(splane + (oy * stride + i) * iw + (ox * stride + j));
+                    }
+                    unit.step(&col[..k]);
+                    cycles += 1;
+                }
+                let m = unit.emit();
+                sram.write_px(dplane + oy * ow + ox, m);
+            }
+        }
+        // port traffic: each input pixel is read once per window it joins;
+        // the scratchpad serves row-parallel reads, the bank sees one word
+        // stream per row (charge one pass of the plane) + output writes.
+        sram.charge_read_px(ih * iw);
+        sram.charge_write_px(oh * ow);
+    }
+    *compare_ops += unit.compare_ops;
+    cycles
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::reference::pool_ref;
+    use crate::model::{PoolSpec, Tensor};
+    use crate::util::prop::check;
+
+    /// Load a HWC tensor into SRAM planar (C,H,W) at `base`.
+    fn load_planar(sram: &mut BufferBank, base: usize, t: &Tensor) {
+        for ch in 0..t.c {
+            for y in 0..t.h {
+                for x in 0..t.w {
+                    sram.write_px(base + ch * t.h * t.w + y * t.w + x, t.at(y, x, ch));
+                }
+            }
+        }
+    }
+
+    fn read_planar(sram: &mut BufferBank, base: usize, h: usize, w: usize, c: usize) -> Tensor {
+        let mut t = Tensor::zeros(h, w, c);
+        for ch in 0..c {
+            for y in 0..h {
+                for x in 0..w {
+                    t.set(y, x, ch, sram.read_px(base + ch * h * w + y * w + x));
+                }
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn comparator_feedback_procedure() {
+        let mut u = MaxPoolUnit::default();
+        // 3x3 window scanned as 3 columns of 3
+        u.step(&[1, 5, 2]);
+        u.step(&[4, 3, 0]);
+        u.step(&[-1, -2, 7]);
+        assert_eq!(u.emit(), 7);
+        // feedback cleared for the next window
+        u.step(&[-5, -6]);
+        assert_eq!(u.emit(), -5);
+    }
+
+    #[test]
+    fn pool_pass_matches_oracle_property() {
+        check("pool_pass == pool_ref", 40, |g| {
+            let k = if g.bool() { 2 } else { 3 };
+            let stride = g.usize_in(1, 3);
+            let ih = g.usize_in(k, 24);
+            let iw = g.usize_in(k, 24);
+            let c = g.usize_in(1, 5);
+            let data = g.vec_i16(ih * iw * c, -3000, 3000);
+            let t = Tensor::from_vec(ih, iw, c, data);
+            let want = pool_ref(&t, &PoolSpec { name: "p".into(), k, stride });
+            let mut sram = BufferBank::new();
+            load_planar(&mut sram, 0, &t);
+            let mut ops = 0;
+            let dst = (ih * iw * c).next_multiple_of(8);
+            pool_pass(&mut sram, 0, dst, ih, iw, c, k, stride, &mut ops);
+            let got = read_planar(&mut sram, dst, want.h, want.w, c);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("pool {k}x{k}/s{stride} {ih}x{iw}x{c} mismatch"))
+            }
+        });
+    }
+
+    #[test]
+    fn cycle_count_is_k_per_output() {
+        let mut sram = BufferBank::new();
+        let t = Tensor::random_image(5, 8, 8, 2);
+        load_planar(&mut sram, 0, &t);
+        let mut ops = 0;
+        let cy = pool_pass(&mut sram, 0, 256, 8, 8, 2, 2, 2, &mut ops);
+        assert_eq!(cy, (4 * 4 * 2 * 2) as u64); // oh*ow*k per channel
+        assert!(ops > 0);
+    }
+}

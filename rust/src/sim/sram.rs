@@ -1,0 +1,185 @@
+//! The 128 KB single-port SRAM buffer bank (paper §4.1, Fig. 3).
+//!
+//! 16-byte words (8 int16 pixels per access). Single-ported: every read
+//! or write occupies the port for one cycle — the accelerator charges
+//! the port-conflict cycles, this module counts the accesses and
+//! enforces capacity. A bump allocator hands out tile regions (the
+//! compiler plans them; the simulator validates).
+
+use crate::{SRAM_BYTES, SRAM_WIDTH_BYTES};
+
+/// Pixels (int16) per SRAM word.
+pub const WORD_PX: usize = SRAM_WIDTH_BYTES / 2;
+/// Total capacity in pixels.
+pub const CAP_PX: usize = SRAM_BYTES / 2;
+
+/// The buffer bank. Data is held in pixel (int16) granularity; access
+/// counters are in words (one word = one port cycle).
+pub struct BufferBank {
+    data: Vec<i16>,
+    pub reads: u64,
+    pub writes: u64,
+    alloc_top: usize,
+}
+
+impl Default for BufferBank {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufferBank {
+    pub fn new() -> Self {
+        Self { data: vec![0; CAP_PX], reads: 0, writes: 0, alloc_top: 0 }
+    }
+
+    pub fn capacity_px(&self) -> usize {
+        CAP_PX
+    }
+
+    /// Allocate a region of `len_px` pixels (compiler-planned layout).
+    /// Panics if the bank is over-committed — the decomposition solver is
+    /// supposed to make that impossible; tests assert it.
+    pub fn alloc(&mut self, len_px: usize) -> u32 {
+        let base = self.alloc_top;
+        assert!(
+            base + len_px <= CAP_PX,
+            "SRAM over-committed: {} + {} > {} px",
+            base,
+            len_px,
+            CAP_PX
+        );
+        self.alloc_top += len_px;
+        base as u32
+    }
+
+    /// Release everything (between layers / tiles).
+    pub fn reset_alloc(&mut self) {
+        self.alloc_top = 0;
+    }
+
+    pub fn allocated_px(&self) -> usize {
+        self.alloc_top
+    }
+
+    /// Raw view of the whole bank (fast-path window reads; traffic is
+    /// charged separately at streaming granularity).
+    #[inline(always)]
+    pub fn raw(&self) -> &[i16] {
+        &self.data
+    }
+
+    // -- pixel access (counts port words) -----------------------------------
+
+    #[inline(always)]
+    pub fn read_px(&mut self, addr: usize) -> i16 {
+        debug_assert!(addr < CAP_PX, "SRAM read OOB: {addr}");
+        self.data[addr]
+    }
+
+    #[inline(always)]
+    pub fn write_px(&mut self, addr: usize, v: i16) {
+        debug_assert!(addr < CAP_PX, "SRAM write OOB: {addr}");
+        self.data[addr] = v;
+    }
+
+    /// Charge `n` pixels of read traffic (rounded up to words).
+    #[inline(always)]
+    pub fn charge_read_px(&mut self, n: usize) {
+        self.reads += n.div_ceil(WORD_PX) as u64;
+    }
+
+    #[inline(always)]
+    pub fn charge_write_px(&mut self, n: usize) {
+        self.writes += n.div_ceil(WORD_PX) as u64;
+    }
+
+    /// Bulk copy helpers used by the DMA engine (charging included).
+    pub fn write_slice(&mut self, addr: usize, src: &[i16]) {
+        assert!(addr + src.len() <= CAP_PX, "SRAM write_slice OOB");
+        self.data[addr..addr + src.len()].copy_from_slice(src);
+        self.charge_write_px(src.len());
+    }
+
+    pub fn read_slice(&mut self, addr: usize, len: usize) -> Vec<i16> {
+        assert!(addr + len <= CAP_PX, "SRAM read_slice OOB");
+        self.charge_read_px(len);
+        self.data[addr..addr + len].to_vec()
+    }
+
+    /// int32 partial-plane access: one int32 = 2 pixels, little-endian
+    /// halves (the ACC BUF's view of the bank).
+    #[inline(always)]
+    pub fn read_i32(&mut self, addr_px: usize) -> i32 {
+        let lo = self.read_px(addr_px) as u16 as u32;
+        let hi = self.read_px(addr_px + 1) as u16 as u32;
+        (lo | (hi << 16)) as i32
+    }
+
+    #[inline(always)]
+    pub fn write_i32(&mut self, addr_px: usize, v: i32) {
+        self.write_px(addr_px, (v as u32 & 0xFFFF) as u16 as i16);
+        self.write_px(addr_px + 1, ((v as u32) >> 16) as u16 as i16);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_is_128kb() {
+        assert_eq!(CAP_PX * 2, 128 * 1024);
+        assert_eq!(WORD_PX, 8);
+    }
+
+    #[test]
+    fn alloc_and_overcommit() {
+        let mut b = BufferBank::new();
+        let a = b.alloc(1000);
+        let c = b.alloc(2000);
+        assert_eq!(a, 0);
+        assert_eq!(c, 1000);
+        assert_eq!(b.allocated_px(), 3000);
+        b.reset_alloc();
+        assert_eq!(b.allocated_px(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "SRAM over-committed")]
+    fn overcommit_panics() {
+        let mut b = BufferBank::new();
+        b.alloc(CAP_PX);
+        b.alloc(1);
+    }
+
+    #[test]
+    fn word_charging_rounds_up() {
+        let mut b = BufferBank::new();
+        b.charge_read_px(1); // 1 px -> 1 word
+        b.charge_read_px(8); // 8 px -> 1 word
+        b.charge_read_px(9); // 9 px -> 2 words
+        assert_eq!(b.reads, 4);
+        b.charge_write_px(17);
+        assert_eq!(b.writes, 3);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let mut b = BufferBank::new();
+        for v in [0, 1, -1, i32::MAX, i32::MIN, 123_456_789, -987_654_321] {
+            b.write_i32(100, v);
+            assert_eq!(b.read_i32(100), v);
+        }
+    }
+
+    #[test]
+    fn slices_roundtrip_and_charge() {
+        let mut b = BufferBank::new();
+        let data: Vec<i16> = (0..100).collect();
+        b.write_slice(50, &data);
+        assert_eq!(b.read_slice(50, 100), data);
+        assert_eq!(b.writes, 13); // ceil(100/8)
+        assert_eq!(b.reads, 13);
+    }
+}

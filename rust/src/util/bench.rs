@@ -1,0 +1,184 @@
+//! Micro-bench harness (criterion is not vendorable offline).
+//!
+//! Auto-calibrating: warms up, picks an iteration count targeting a fixed
+//! measurement window, reports mean/σ/min and throughput. Every
+//! `rust/benches/bench_*.rs` builds on this plus table printers that
+//! regenerate the paper's tables/figures row-for-row.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Running;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` repeatedly and measure. `f` must return something observable
+/// to prevent the optimizer from deleting the work (use `std::hint::black_box`
+/// in the closure for extra safety).
+pub fn bench<F: FnMut() -> R, R>(name: &str, mut f: F) -> BenchResult {
+    bench_cfg(name, Duration::from_millis(300), Duration::from_millis(700), &mut f)
+}
+
+/// Short variant for heavyweight cases (full-network simulations).
+pub fn bench_once<F: FnMut() -> R, R>(name: &str, mut f: F) -> BenchResult {
+    // single timed run, no calibration
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let dt = t0.elapsed();
+    BenchResult { name: name.into(), iters: 1, mean: dt, std: Duration::ZERO, min: dt }
+}
+
+pub fn bench_cfg<F: FnMut() -> R, R>(
+    name: &str,
+    warmup: Duration,
+    measure: Duration,
+    f: &mut F,
+) -> BenchResult {
+    // Warm-up and single-iteration estimate.
+    let mut one = Duration::from_nanos(u64::MAX);
+    let t0 = Instant::now();
+    let mut warm_iters = 0u64;
+    while t0.elapsed() < warmup || warm_iters < 3 {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        one = one.min(t.elapsed().max(Duration::from_nanos(1)));
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    // Batch size so that one sample ~ measure/16.
+    let target_sample = measure / 16;
+    let batch = (target_sample.as_nanos() / one.as_nanos().max(1)).clamp(1, 1 << 24) as u64;
+    let mut stats = Running::new();
+    let mut total_iters = 0u64;
+    let t1 = Instant::now();
+    while t1.elapsed() < measure {
+        let t = Instant::now();
+        for _ in 0..batch {
+            std::hint::black_box(f());
+        }
+        stats.push(t.elapsed().as_secs_f64() / batch as f64);
+        total_iters += batch;
+    }
+    BenchResult {
+        name: name.into(),
+        iters: total_iters,
+        mean: Duration::from_secs_f64(stats.mean().max(1e-12)),
+        std: Duration::from_secs_f64(stats.std()),
+        min: Duration::from_secs_f64(if stats.count() == 0 { 0.0 } else { stats.min() }),
+    }
+}
+
+/// Pretty table printer used by all bench binaries.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("\n== {} ==", self.title);
+        let sep: String = "-".repeat(line);
+        println!("{sep}");
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .zip(&widths)
+            .map(|(h, w)| format!("{h:>w$}"))
+            .collect();
+        println!("| {} |", hdr.join(" | "));
+        println!("{sep}");
+        for r in &self.rows {
+            let cells: Vec<String> =
+                r.iter().zip(&widths).map(|(c, w)| format!("{c:>w$}")).collect();
+            println!("| {} |", cells.join(" | "));
+        }
+        println!("{sep}");
+    }
+}
+
+/// Format a Duration human-readably.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", d.as_secs_f64())
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_cfg(
+            "spin",
+            Duration::from_millis(5),
+            Duration::from_millis(20),
+            &mut || {
+                let mut acc = 0u64;
+                for i in 0..100 {
+                    // black_box defeats const-folding in release builds
+                    acc = acc.wrapping_add(std::hint::black_box(i) * i);
+                }
+                acc
+            },
+        );
+        assert!(r.iters > 10);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn table_arity_enforced() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(12)), "12ns");
+        assert_eq!(fmt_dur(Duration::from_micros(12)), "12.00us");
+        assert_eq!(fmt_dur(Duration::from_millis(12)), "12.00ms");
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.00s");
+    }
+}

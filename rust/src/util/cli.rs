@@ -1,0 +1,208 @@
+//! Tiny declarative CLI argument parser (clap is not vendorable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positionals, defaults
+//! and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// One declared argument.
+#[derive(Clone)]
+struct ArgSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative CLI parser.
+///
+/// ```no_run
+/// // (no_run: doctest binaries don't inherit the rpath to the parked
+/// // libstdc++ — see .cargo/config.toml; the same code is exercised in
+/// // the unit tests below)
+/// use kn_stream::util::cli::Cli;
+/// let mut cli = Cli::new("demo", "demo tool");
+/// cli.opt("frames", "64", "number of frames");
+/// cli.flag("verbose", "chatty output");
+/// let m = cli.parse_from(vec!["--frames".into(), "8".into(), "--verbose".into()]).unwrap();
+/// assert_eq!(m.get_usize("frames"), 8);
+/// assert!(m.get_flag("verbose"));
+/// ```
+pub struct Cli {
+    name: String,
+    about: String,
+    specs: Vec<ArgSpec>,
+}
+
+/// Parsed matches.
+pub struct Matches {
+    vals: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(name: &str, about: &str) -> Self {
+        Self { name: name.into(), about: about.into(), specs: Vec::new() }
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(&mut self, name: &str, default: &str, help: &str) -> &mut Self {
+        self.specs.push(ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(&mut self, name: &str, help: &str) -> &mut Self {
+        self.specs.push(ArgSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nUSAGE:\n  {} [OPTIONS] [ARGS..]\n\nOPTIONS:\n",
+            self.name, self.about, self.name);
+        for s in &self.specs {
+            if s.is_flag {
+                out.push_str(&format!("  --{:<24} {}\n", s.name, s.help));
+            } else {
+                out.push_str(&format!(
+                    "  --{:<24} {} (default: {})\n",
+                    format!("{} <v>", s.name),
+                    s.help,
+                    s.default.as_deref().unwrap_or("")
+                ));
+            }
+        }
+        out.push_str("  --help                     print this help\n");
+        out
+    }
+
+    /// Parse `std::env::args().skip(1)`.
+    pub fn parse(&self) -> anyhow::Result<Matches> {
+        self.parse_from(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse_from(&self, args: Vec<String>) -> anyhow::Result<Matches> {
+        let mut m = Matches {
+            vals: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positionals: Vec::new(),
+        };
+        for s in &self.specs {
+            if let Some(d) = &s.default {
+                m.vals.insert(s.name.clone(), d.clone());
+            }
+            if s.is_flag {
+                m.flags.insert(s.name.clone(), false);
+            }
+        }
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{key} takes no value");
+                    }
+                    m.flags.insert(key, true);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{key} needs a value"))?,
+                    };
+                    m.vals.insert(key, v);
+                }
+            } else {
+                m.positionals.push(a);
+            }
+        }
+        Ok(m)
+    }
+}
+
+impl Matches {
+    pub fn get(&self, key: &str) -> &str {
+        self.vals.get(key).map(String::as_str).unwrap_or("")
+    }
+    pub fn get_usize(&self, key: &str) -> usize {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+    pub fn get_u64(&self, key: &str) -> u64 {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be an integer"))
+    }
+    pub fn get_f64(&self, key: &str) -> f64 {
+        self.get(key).parse().unwrap_or_else(|_| panic!("--{key} must be a number"))
+    }
+    pub fn get_flag(&self, key: &str) -> bool {
+        self.flags.get(key).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        let mut c = Cli::new("t", "test");
+        c.opt("n", "4", "count").opt("name", "x", "a name").flag("fast", "go fast");
+        c
+    }
+
+    #[test]
+    fn defaults() {
+        let m = cli().parse_from(vec![]).unwrap();
+        assert_eq!(m.get_usize("n"), 4);
+        assert_eq!(m.get("name"), "x");
+        assert!(!m.get_flag("fast"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let m = cli()
+            .parse_from(vec!["--n".into(), "9".into(), "--name=foo".into(), "--fast".into()])
+            .unwrap();
+        assert_eq!(m.get_usize("n"), 9);
+        assert_eq!(m.get("name"), "foo");
+        assert!(m.get_flag("fast"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let m = cli().parse_from(vec!["a".into(), "--n".into(), "2".into(), "b".into()]).unwrap();
+        assert_eq!(m.positionals, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse_from(vec!["--bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(cli().parse_from(vec!["--n".into()]).is_err());
+    }
+}

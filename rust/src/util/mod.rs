@@ -1,0 +1,10 @@
+//! Substrates built from scratch for the offline environment (no serde /
+//! clap / criterion / proptest vendorable): PRNG, JSON, CLI, statistics,
+//! a micro-bench harness and a property-test engine.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

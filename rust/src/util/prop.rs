@@ -1,0 +1,138 @@
+//! Hand-rolled property-test engine (proptest is not vendorable offline).
+//!
+//! A `Gen` wraps the shared xorshift32 and produces random cases; `check`
+//! runs N cases and, on failure, re-runs a simple halving **shrink** over
+//! the failing case's size parameters before panicking with the minimal
+//! reproduction seed. Coordinator invariants (routing, batching, state),
+//! decomposition legality and numerics contracts are all property-tested
+//! with this.
+
+use super::rng::XorShift32;
+
+/// Random-case generator handed to properties.
+pub struct Gen {
+    pub rng: XorShift32,
+    /// Current size budget — shrinking lowers this.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u32, size: usize) -> Self {
+        Self { rng: XorShift32::new(seed), size }
+    }
+    /// Integer in [lo, hi] (inclusive), clamped by the size budget above lo.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        let hi_eff = lo + ((hi - lo) as u64).min(self.size as u64) as i64;
+        lo + (self.rng.next_u32() as i64).rem_euclid(hi_eff - lo + 1)
+    }
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.int(lo as i64, hi as i64) as usize
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.next_usize(xs.len())]
+    }
+    pub fn vec_i16(&mut self, len: usize, lo: i32, hi: i32) -> Vec<i16> {
+        (0..len).map(|_| self.rng.next_in(lo, hi) as i16).collect()
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop`. On failure, shrink the size budget
+/// (halving) to find a smaller failing case, then panic with diagnostics.
+pub fn check(name: &str, cases: u32, prop: impl Fn(&mut Gen) -> CaseResult) {
+    check_seeded(name, 0xC0FFEE, cases, prop)
+}
+
+pub fn check_seeded(name: &str, base_seed: u32, cases: u32, prop: impl Fn(&mut Gen) -> CaseResult) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case).wrapping_mul(0x9E37_79B9) | 1;
+        let mut g = Gen::new(seed, 64);
+        if let Err(msg) = prop(&mut g) {
+            // shrink: halve the size budget while it still fails
+            let mut best = (64usize, msg);
+            let mut size = 32usize;
+            while size >= 1 {
+                let mut g = Gen::new(seed, size);
+                match prop(&mut g) {
+                    Err(m) => {
+                        best = (size, m);
+                        size /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, shrunk size {}):\n  {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("add commutes", 100, |g| {
+            let a = g.int(-1000, 1000);
+            let b = g.int(-1000, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a}+{b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |g| {
+            let v = g.int(0, 10);
+            Err(format!("v={v}"))
+        });
+    }
+
+    #[test]
+    fn shrink_reduces_size() {
+        // property failing only for size >= 2 — the shrinker must find
+        // that size 1 passes and report a small failing budget.
+        let result = std::panic::catch_unwind(|| {
+            check("fails when big", 1, |g| {
+                let v = g.usize_in(0, 60);
+                if v >= 2 {
+                    Err(format!("v={v}"))
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn gen_respects_bounds() {
+        let mut g = Gen::new(1, 1000);
+        for _ in 0..1000 {
+            let v = g.int(-5, 5);
+            assert!((-5..=5).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! xorshift32 PRNG — bit-for-bit mirror of `python/compile/prng.py`.
+//!
+//! Both sides regenerate identical synthetic weights/images from the same
+//! seeds; that is what makes the cycle simulator's output comparable
+//! **bit-exactly** against the PJRT-executed HLO artifacts (whose weights
+//! were baked at AOT time from the Python twin of this generator).
+
+/// Marsaglia xorshift32. Seed 0 is remapped to the golden-ratio constant
+/// (state must never be zero).
+#[derive(Clone, Debug)]
+pub struct XorShift32 {
+    state: u32,
+}
+
+impl XorShift32 {
+    pub fn new(seed: u32) -> Self {
+        Self { state: if seed == 0 { 0x9E37_79B9 } else { seed } }
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 17;
+        x ^= x << 5;
+        self.state = x;
+        x
+    }
+
+    /// Uniform integer in `[lo, hi]` via modulo (mirrors the Python side;
+    /// modulo bias is irrelevant for synthetic weights).
+    #[inline]
+    pub fn next_in(&mut self, lo: i32, hi: i32) -> i32 {
+        let span = (hi - lo + 1) as u32;
+        lo + (self.next_u32() % span) as i32
+    }
+
+    /// Uniform float in [0, 1) — used by workload generators (not shared
+    /// with Python, so no cross-language contract).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        f64::from(self.next_u32()) / f64::from(u32::MAX)
+    }
+
+    /// Uniform usize in `[0, n)`.
+    #[inline]
+    pub fn next_usize(&mut self, n: usize) -> usize {
+        (self.next_u32() as usize) % n.max(1)
+    }
+}
+
+/// Deterministic int16 weight tensor, C-contiguous generation order
+/// (mirror of `prng.weight_tensor`).
+pub fn weight_tensor(seed: u32, len: usize, lo: i32, hi: i32) -> Vec<i16> {
+    let mut rng = XorShift32::new(seed);
+    (0..len).map(|_| rng.next_in(lo, hi) as i16).collect()
+}
+
+/// Deterministic int32 bias tensor (mirror of `prng.bias_tensor`).
+pub fn bias_tensor(seed: u32, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+    let mut rng = XorShift32::new(seed);
+    (0..len).map(|_| rng.next_in(lo, hi)).collect()
+}
+
+/// Deterministic int16 image tensor (mirror of `prng.image_tensor`),
+/// default pixel range 0..=255.
+pub fn image_tensor(seed: u32, len: usize, lo: i32, hi: i32) -> Vec<i16> {
+    let mut rng = XorShift32::new(seed);
+    (0..len).map(|_| rng.next_in(lo, hi) as i16).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pinned vectors — the SAME values are pinned in
+    /// `python/tests/test_prng.py`. If this test fails the cross-language
+    /// weight contract is broken.
+    #[test]
+    fn pinned_vectors_match_python() {
+        let mut r = XorShift32::new(1);
+        let got: Vec<u32> = (0..5).map(|_| r.next_u32()).collect();
+        assert_eq!(got, vec![270_369, 67_634_689, 2_647_435_461, 307_599_695, 2_398_689_233]);
+        assert_eq!(XorShift32::new(0).next_u32(), 1_359_758_873);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut r = XorShift32::new(99);
+        let vals: Vec<i32> = (0..1000).map(|_| r.next_in(-128, 127)).collect();
+        assert!(vals.iter().all(|&v| (-128..=127).contains(&v)));
+        assert!(vals.iter().any(|&v| v < -100));
+        assert!(vals.iter().any(|&v| v > 100));
+    }
+
+    #[test]
+    fn deterministic_tensors() {
+        assert_eq!(weight_tensor(7, 64, -128, 127), weight_tensor(7, 64, -128, 127));
+        assert_ne!(weight_tensor(7, 64, -128, 127), weight_tensor(8, 64, -128, 127));
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = XorShift32::new(5);
+        for _ in 0..100 {
+            let v = r.next_f64();
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+}

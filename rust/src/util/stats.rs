@@ -1,0 +1,172 @@
+//! Streaming statistics + fixed-bucket latency histogram (for the
+//! coordinator's metrics and the bench harness).
+
+/// Running mean / min / max / stddev (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn var(&self) -> f64 {
+        if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
+    }
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+}
+
+/// Log-bucketed histogram with exact quantile estimation good enough for
+/// latency reporting (p50/p95/p99). Buckets are powers of `2^(1/8)` —
+/// <9 % relative error per bucket.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+const BUCKETS: usize = 512;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKETS], total: 0, sum: 0.0 }
+    }
+
+    fn bucket(x: f64) -> usize {
+        if x <= 1.0 {
+            return 0;
+        }
+        // index = log_{2^(1/8)}(x) = 8*log2(x)
+        ((8.0 * x.log2()) as usize).min(BUCKETS - 1)
+    }
+
+    fn bucket_value(i: usize) -> f64 {
+        2f64.powf(i as f64 / 8.0)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.counts[Self::bucket(x)] += 1;
+        self.total += 1;
+        self.sum += x;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.sum / self.total as f64 }
+    }
+
+    /// Quantile in [0,1] -> approximate value.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return Self::bucket_value(i);
+            }
+        }
+        Self::bucket_value(BUCKETS - 1)
+    }
+}
+
+/// Pretty-print a f64 with engineering suffix (K/M/G/T).
+pub fn eng(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e12 {
+        format!("{:.2}T", x / 1e12)
+    } else if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_moments() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 8);
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.std() - 2.138).abs() < 0.01);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_bucket_error() {
+        let mut h = Histogram::new();
+        for i in 1..=10_000 {
+            h.record(i as f64);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!((p50 - 5000.0).abs() / 5000.0 < 0.10, "p50={p50}");
+        assert!((p99 - 9900.0).abs() / 9900.0 < 0.10, "p99={p99}");
+        assert_eq!(h.count(), 10_000);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn eng_suffixes() {
+        assert_eq!(eng(144e9), "144.00G");
+        assert_eq!(eng(5.76e9), "5.76G");
+        assert_eq!(eng(0.8e12), "800.00G");
+        assert_eq!(eng(42.0), "42.00");
+    }
+}

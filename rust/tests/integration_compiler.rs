@@ -1,0 +1,156 @@
+//! Compiler ↔ simulator integration: randomized single-layer nets run
+//! through the full compile→ISA→simulate pipeline must match the scalar
+//! oracle bit-for-bit, across kernel sizes, strides, pads, groups and
+//! channel counts — the decomposition legality property.
+
+use kn_stream::compiler::NetRunner;
+use kn_stream::model::reference::run_net_ref;
+use kn_stream::model::{ConvSpec, LayerSpec, NetSpec, PoolSpec, Tensor};
+use kn_stream::util::prop::{check_seeded, Gen};
+
+fn random_conv_net(g: &mut Gen) -> NetSpec {
+    let k = *g.choose(&[1usize, 3, 5, 7, 11]);
+    let stride = *g.choose(&[1usize, 2, 4]);
+    let pad = g.usize_in(0, 2);
+    let groups = *g.choose(&[1usize, 1, 1, 2]);
+    let cin = groups * g.usize_in(1, 8);
+    let cout = groups * g.usize_in(1, 20);
+    // input big enough for one output pixel
+    let extra = g.usize_in(0, 20);
+    let h = (k + stride + extra).max(k);
+    let w = (k + g.usize_in(0, 20) + stride).max(k);
+    NetSpec {
+        name: "prop".into(),
+        in_h: h,
+        in_w: w,
+        in_c: cin,
+        layers: vec![LayerSpec::Conv(ConvSpec {
+            name: "c".into(),
+            k,
+            stride,
+            pad,
+            cin,
+            cout,
+            shift: g.usize_in(0, 14) as u8,
+            relu: g.bool(),
+            wseed: g.int(1, 1 << 30) as u32,
+            bseed: g.int(1, 1 << 30) as u32,
+            groups,
+        })],
+    }
+}
+
+#[test]
+fn random_conv_layers_bit_exact() {
+    check_seeded("compiled conv == oracle", 0xA11CE, 60, |g| {
+        let net = random_conv_net(g);
+        let LayerSpec::Conv(c) = &net.layers[0] else { unreachable!() };
+        let (oh, ow) = (
+            (net.in_h + 2 * c.pad).checked_sub(c.k).map(|v| v / c.stride + 1),
+            (net.in_w + 2 * c.pad).checked_sub(c.k).map(|v| v / c.stride + 1),
+        );
+        if oh.unwrap_or(0) == 0 || ow.unwrap_or(0) == 0 {
+            return Ok(()); // degenerate
+        }
+        let runner = match NetRunner::new(&net) {
+            Ok(r) => r,
+            Err(e) => return Err(format!("plan failed: {e} ({c:?})")),
+        };
+        let frame = Tensor::random_image(g.int(0, 1 << 30) as u32, net.in_h, net.in_w, net.in_c);
+        let (got, _) = runner.run_frame(&frame).map_err(|e| format!("sim: {e} ({c:?})"))?;
+        let want = run_net_ref(&net, &frame);
+        if got == want {
+            Ok(())
+        } else {
+            let diff = got.data.iter().zip(&want.data).filter(|(a, b)| a != b).count();
+            Err(format!("{diff}/{} px differ for {c:?}", got.data.len()))
+        }
+    });
+}
+
+#[test]
+fn random_conv_pool_stacks_bit_exact() {
+    check_seeded("conv+pool stack == oracle", 0xB0B, 25, |g| {
+        let cin = g.usize_in(1, 4);
+        let cout = g.usize_in(1, 24);
+        let h = g.usize_in(8, 40);
+        let w = g.usize_in(8, 40);
+        let pk = if g.bool() { 2 } else { 3 };
+        let net = NetSpec {
+            name: "stack".into(),
+            in_h: h,
+            in_w: w,
+            in_c: cin,
+            layers: vec![
+                LayerSpec::Conv(ConvSpec {
+                    name: "c1".into(),
+                    k: 3,
+                    stride: 1,
+                    pad: 1,
+                    cin,
+                    cout,
+                    shift: 9,
+                    relu: true,
+                    wseed: g.int(1, 1 << 30) as u32,
+                    bseed: g.int(1, 1 << 30) as u32,
+                    groups: 1,
+                }),
+                LayerSpec::Pool(PoolSpec { name: "p1".into(), k: pk, stride: 2 }),
+            ],
+        };
+        if (h < pk) || (w < pk) {
+            return Ok(());
+        }
+        let runner = NetRunner::new(&net).map_err(|e| format!("plan: {e}"))?;
+        let frame = Tensor::random_image(g.int(0, 1 << 30) as u32, h, w, cin);
+        let (got, stats) = runner.run_frame(&frame).map_err(|e| format!("sim: {e}"))?;
+        let want = run_net_ref(&net, &frame);
+        if got != want {
+            return Err(format!("stack mismatch {h}x{w}x{cin}->{cout} pool{pk}"));
+        }
+        if stats.pool_ops == 0 {
+            return Err("pool module never engaged".into());
+        }
+        Ok(())
+    });
+}
+
+/// Cycle accounting sanity across random layers: cycles bound MACs/144
+/// from below; utilization ≤ 1.
+#[test]
+fn cycle_accounting_invariants() {
+    check_seeded("cycles >= macs/144, util <= 1", 0xCAFE, 30, |g| {
+        let net = random_conv_net(g);
+        let LayerSpec::Conv(c) = &net.layers[0] else { unreachable!() };
+        if (net.in_h + 2 * c.pad) < c.k || (net.in_w + 2 * c.pad) < c.k {
+            return Ok(());
+        }
+        let runner = match NetRunner::new(&net) {
+            Ok(r) => r,
+            Err(_) => return Ok(()),
+        };
+        let frame = Tensor::random_image(1, net.in_h, net.in_w, net.in_c);
+        let (_, stats) = runner.run_frame(&frame).map_err(|e| format!("{e}"))?;
+        let lower = stats.macs / 144;
+        if stats.cycles < lower {
+            return Err(format!("cycles {} < macs/144 {}", stats.cycles, lower));
+        }
+        if stats.utilization() > 1.0 + 1e-9 {
+            return Err(format!("util {} > 1", stats.utilization()));
+        }
+        Ok(())
+    });
+}
+
+/// Determinism: same frame, same compiled program → identical stats and
+/// output across runs.
+#[test]
+fn simulation_is_deterministic() {
+    let net = kn_stream::model::zoo::facenet();
+    let runner = NetRunner::new(&net).unwrap();
+    let frame = Tensor::random_image(5, 64, 64, 1);
+    let (o1, s1) = runner.run_frame(&frame).unwrap();
+    let (o2, s2) = runner.run_frame(&frame).unwrap();
+    assert_eq!(o1, o2);
+    assert_eq!(s1, s2);
+}

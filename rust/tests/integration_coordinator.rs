@@ -1,0 +1,89 @@
+//! Coordinator invariants: result integrity under concurrency,
+//! backpressure, id assignment, multi-worker equivalence.
+
+use std::collections::HashSet;
+
+use kn_stream::coordinator::{Coordinator, CoordinatorConfig};
+use kn_stream::energy::dvfs;
+use kn_stream::model::reference::run_net_ref;
+use kn_stream::model::{zoo, Tensor};
+
+#[test]
+fn results_correct_under_concurrency() {
+    let net = zoo::quicknet();
+    for workers in [1usize, 2, 4] {
+        let coord = Coordinator::start(
+            &net,
+            CoordinatorConfig { workers, queue_depth: 2, op: dvfs::PEAK },
+        )
+        .unwrap();
+        let frames: Vec<Tensor> =
+            (0..12).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
+        let rxs: Vec<_> = frames.iter().map(|f| coord.submit(f.clone())).collect();
+        for (rx, f) in rxs.into_iter().zip(&frames) {
+            let r = rx.recv().expect("result");
+            assert_eq!(r.output, run_net_ref(&net, f), "workers={workers}");
+        }
+        coord.stop();
+    }
+}
+
+#[test]
+fn ids_unique_and_monotonic_per_submit_order() {
+    let net = zoo::quicknet();
+    let coord =
+        Coordinator::start(&net, CoordinatorConfig::default()).unwrap();
+    let mut ids = HashSet::new();
+    let rxs: Vec<_> = (0..8)
+        .map(|s| coord.submit(Tensor::random_image(s, net.in_h, net.in_w, net.in_c)))
+        .collect();
+    let mut last = None;
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(ids.insert(r.id), "duplicate id {}", r.id);
+        if let Some(prev) = last {
+            assert_eq!(r.id, prev + 1, "submit order ids");
+        }
+        last = Some(r.id);
+    }
+    coord.stop();
+}
+
+#[test]
+fn run_stream_accounts_every_frame() {
+    let net = zoo::quicknet();
+    let coord = Coordinator::start(
+        &net,
+        CoordinatorConfig { workers: 2, queue_depth: 3, op: dvfs::EFFICIENT },
+    )
+    .unwrap();
+    let n = 30;
+    let frames: Vec<Tensor> =
+        (0..n).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
+    let m = coord.run_stream(frames);
+    assert_eq!(m.frames, n as u64);
+    assert!(m.totals.macs > 0);
+    assert!(m.device_fps() > 0.0);
+    assert!(m.dev_lat_us.quantile(0.99) >= m.dev_lat_us.quantile(0.5));
+    coord.stop();
+}
+
+#[test]
+fn metrics_use_operating_point() {
+    // identical workload at 20 vs 500 MHz: device fps must scale ~25x
+    let net = zoo::quicknet();
+    let mut fps = Vec::new();
+    for freq in [dvfs::EFFICIENT, dvfs::PEAK] {
+        let coord = Coordinator::start(
+            &net,
+            CoordinatorConfig { workers: 1, queue_depth: 2, op: freq },
+        )
+        .unwrap();
+        let frames: Vec<Tensor> =
+            (0..6).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
+        fps.push(coord.run_stream(frames).device_fps());
+        coord.stop();
+    }
+    let ratio = fps[1] / fps[0];
+    assert!((ratio - 25.0).abs() < 0.5, "fps ratio {ratio} != f ratio 25");
+}

@@ -1,0 +1,118 @@
+//! THE cross-language contract test: the cycle simulator's output must
+//! equal the PJRT-executed JAX/Pallas AOT artifact **bit-for-bit** for
+//! every net in the zoo that has an artifact.
+//!
+//! Requires `make artifacts`; tests self-skip otherwise (CI runs them).
+
+use kn_stream::compiler::NetRunner;
+use kn_stream::model::{zoo, Tensor};
+use kn_stream::runtime::{Golden, Manifest};
+
+fn golden() -> Option<Golden> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("skipped: run `make artifacts` first");
+        return None;
+    }
+    Some(Golden::load_default().expect("PJRT client"))
+}
+
+fn check_net(name: &str, seed: u32) {
+    let Some(mut g) = golden() else { return };
+    let net = zoo::by_name(name).unwrap();
+    let frame = Tensor::random_image(seed, net.in_h, net.in_w, net.in_c);
+    let want = g.run(&format!("{name}_fwd"), &frame).expect("artifact run");
+    let runner = NetRunner::new(&net).expect("compile");
+    let (got, stats) = runner.run_frame(&frame).expect("simulate");
+    assert_eq!(
+        got, want,
+        "{name}: simulator != PJRT artifact ({} differing px)",
+        got.data.iter().zip(&want.data).filter(|(a, b)| a != b).count()
+    );
+    assert!(stats.macs > 0);
+}
+
+#[test]
+fn quicknet_bit_exact_vs_artifact() {
+    check_net("quicknet", 11);
+}
+
+#[test]
+fn facenet_bit_exact_vs_artifact() {
+    check_net("facenet", 22);
+}
+
+#[test]
+#[ignore = "slow in debug profile — run with `cargo test --release -- --ignored` or via alexnet_inference example"]
+fn alexnet_bit_exact_vs_artifact() {
+    check_net("alexnet", 33);
+}
+
+#[test]
+fn facenet_bit_exact_across_many_frames() {
+    let Some(mut g) = golden() else { return };
+    let net = zoo::facenet();
+    let runner = NetRunner::new(&net).expect("compile");
+    for seed in [0u32, 1, 0xDEAD, 0xBEEF, 12345] {
+        let frame = Tensor::random_image(seed, 64, 64, 1);
+        let want = g.run("facenet_fwd", &frame).unwrap();
+        let (got, _) = runner.run_frame(&frame).unwrap();
+        assert_eq!(got, want, "seed {seed}");
+    }
+}
+
+/// Standalone conv tiles: PJRT artifact vs the scalar oracle, all shapes
+/// from the manifest (closes the kernel-level loop at runtime).
+#[test]
+fn conv_tiles_match_oracle() {
+    let Some(mut g) = golden() else { return };
+    let arts: Vec<_> = g
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "conv")
+        .cloned()
+        .collect();
+    assert!(arts.len() >= 3, "expected conv tile artifacts");
+    for art in arts {
+        let input = Tensor::random_image(7, art.in_shape[0], art.in_shape[1], art.in_shape[2]);
+        let got = g.run(&art.name, &input).unwrap();
+        let spec = kn_stream::model::ConvSpec {
+            name: art.name.clone(),
+            k: art.k,
+            stride: art.stride,
+            pad: 0,
+            cin: art.cin,
+            cout: art.cout,
+            shift: art.shift as u8,
+            relu: art.relu,
+            wseed: art.wseed,
+            bseed: art.bseed,
+            groups: 1,
+        };
+        let want = kn_stream::model::reference::conv_ref(&input, &spec);
+        assert_eq!(got, want, "{}", art.name);
+    }
+}
+
+/// Pool tiles likewise.
+#[test]
+fn pool_tiles_match_oracle() {
+    let Some(mut g) = golden() else { return };
+    let arts: Vec<_> = g
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "pool")
+        .cloned()
+        .collect();
+    assert!(arts.len() >= 2);
+    for art in arts {
+        let input = Tensor::random_image(9, art.in_shape[0], art.in_shape[1], art.in_shape[2]);
+        let got = g.run(&art.name, &input).unwrap();
+        let want = kn_stream::model::reference::pool_ref(
+            &input,
+            &kn_stream::model::PoolSpec { name: art.name.clone(), k: art.k, stride: art.stride },
+        );
+        assert_eq!(got, want, "{}", art.name);
+    }
+}
