@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     let net = zoo::facenet();
     let coord = Coordinator::start(
         &net,
-        CoordinatorConfig { workers: 1, queue_depth: 4, op: dvfs::PEAK },
+        CoordinatorConfig { workers: 1, queue_depth: 4, tile_workers: 2, op: dvfs::PEAK },
     )?;
 
     // calibrate a decision threshold on blank frames

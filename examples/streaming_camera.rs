@@ -17,7 +17,8 @@ fn main() -> anyhow::Result<()> {
     let mut cli = Cli::new("streaming_camera", "fixed-rate camera through the coordinator");
     cli.opt("net", "facenet", "zoo net")
         .opt("frames", "64", "frames per operating point")
-        .opt("workers", "1", "accelerator instances");
+        .opt("workers", "1", "accelerator instances")
+        .opt("tile-workers", "1", "parallel tile threads per frame");
     let m = cli.parse()?;
     let net = zoo::by_name(m.get("net"))
         .ok_or_else(|| anyhow::anyhow!("unknown net {}", m.get("net")))?;
@@ -32,7 +33,12 @@ fn main() -> anyhow::Result<()> {
         let op = OperatingPoint::for_freq(freq);
         let coord = Coordinator::start(
             &net,
-            CoordinatorConfig { workers: m.get_usize("workers"), queue_depth: 4, op },
+            CoordinatorConfig {
+                workers: m.get_usize("workers"),
+                queue_depth: 4,
+                tile_workers: m.get_usize("tile-workers"),
+                op,
+            },
         )?;
         let frames: Vec<Tensor> = (0..frames_n)
             .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))

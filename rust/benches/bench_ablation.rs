@@ -8,7 +8,8 @@
 use kn_stream::compiler::NetRunner;
 use kn_stream::model::{zoo, Tensor};
 use kn_stream::sim::SimConfig;
-use kn_stream::util::bench::Table;
+use kn_stream::util::bench::{fmt_dur, JsonReport, Table};
+use kn_stream::util::json::{num, obj, s};
 
 fn run(net_name: &str, cfg: SimConfig) -> kn_stream::sim::SimStats {
     let net = zoo::by_name(net_name).unwrap();
@@ -18,6 +19,8 @@ fn run(net_name: &str, cfg: SimConfig) -> kn_stream::sim::SimStats {
 }
 
 fn main() {
+    let mut report = JsonReport::new("ablation");
+    report.text("bench", "ablation");
     // ---- DMA overlap (double buffering) ------------------------------------
     let mut t = Table::new(
         "Ablation: DMA/compute overlap (double buffering)",
@@ -64,9 +67,50 @@ fn main() {
         }
     }
     t.print();
+
+    // ---- host tile parallelism (run_frame_parallel) ------------------------
+    let mut t = Table::new(
+        "Ablation: host-side parallel tile execution (bit-identical output/stats)",
+        &["net", "tile threads", "wall/frame", "speedup"],
+    );
+    for net_name in ["facenet", "alexnet"] {
+        let net = zoo::by_name(net_name).unwrap();
+        let runner = NetRunner::new(&net).unwrap();
+        let frame = Tensor::random_image(7, net.in_h, net.in_w, net.in_c);
+        let mut base = None;
+        for workers in [1usize, 2, 4, 8] {
+            // warm the pools, then take best-of-3
+            let _ = runner.run_frame_parallel(&frame, workers).unwrap();
+            let mut best = std::time::Duration::MAX;
+            for _ in 0..3 {
+                let t0 = std::time::Instant::now();
+                let _ = runner.run_frame_parallel(&frame, workers).unwrap();
+                best = best.min(t0.elapsed());
+            }
+            let base_s = *base.get_or_insert(best.as_secs_f64());
+            t.row(&[
+                net_name.into(),
+                format!("{workers}"),
+                fmt_dur(best),
+                format!("{:.2}x", base_s / best.as_secs_f64()),
+            ]);
+            report.push_row(
+                "tile_parallel",
+                obj(vec![
+                    ("net", s(net_name)),
+                    ("tile_workers", num(workers as f64)),
+                    ("wall_ns", num(best.as_nanos() as f64)),
+                    ("speedup", num(base_s / best.as_secs_f64())),
+                ]),
+            );
+        }
+    }
+    t.print();
+    report.write().expect("write BENCH_ablation.json");
     println!(
         "\nTakeaway: with overlap on, the decomposition schedule hides nearly all DMA \
          behind compute (stall column); serialized DMA shows the raw bandwidth \
-         sensitivity the on-chip reuse exists to suppress."
+         sensitivity the on-chip reuse exists to suppress. Host tile threads speed \
+         up the wall clock without touching device-side numbers."
     );
 }

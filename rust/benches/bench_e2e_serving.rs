@@ -8,24 +8,30 @@ use kn_stream::coordinator::{Coordinator, CoordinatorConfig};
 use kn_stream::energy::{dvfs, EnergyModel, OperatingPoint};
 use kn_stream::model::{zoo, Tensor};
 use kn_stream::runtime::Golden;
-use kn_stream::util::bench::{bench_once, Table};
+use kn_stream::util::bench::{bench_once, JsonReport, Table};
+use kn_stream::util::json::{num, obj, s};
 
 fn main() {
     let energy = EnergyModel::default();
     let frames_n = 32;
+    let mut report = JsonReport::new("e2e");
+    report.text("bench", "e2e_serving").num("frames_per_config", frames_n as f64);
 
     let mut t = Table::new(
         "End-to-end serving (coordinator + simulated accelerator)",
-        &["net", "f (MHz)", "workers", "device fps", "p50", "p99", "mJ/frame",
-          "host sim fps"],
+        &["net", "f (MHz)", "workers", "tile thr", "device fps", "p50", "p99",
+          "mJ/frame", "host sim fps"],
     );
     for net_name in ["quicknet", "facenet"] {
         let net = zoo::by_name(net_name).unwrap();
-        for (freq, workers) in [(500.0, 1usize), (20.0, 1), (500.0, 4)] {
+        // (freq, chip workers, host tile threads per frame)
+        for (freq, workers, tile_workers) in
+            [(500.0, 1usize, 1usize), (20.0, 1, 1), (500.0, 4, 1), (500.0, 1, 4)]
+        {
             let op = OperatingPoint::for_freq(freq);
             let coord = Coordinator::start(
                 &net,
-                CoordinatorConfig { workers, queue_depth: 4, op },
+                CoordinatorConfig { workers, queue_depth: 4, tile_workers, op },
             )
             .unwrap();
             let frames: Vec<Tensor> = (0..frames_n)
@@ -37,16 +43,32 @@ fn main() {
                 net_name.into(),
                 format!("{freq:.0}"),
                 format!("{workers}"),
+                format!("{tile_workers}"),
                 format!("{:.1}", m.device_fps() * workers as f64),
                 format!("{:.2}ms", m.dev_lat_us.quantile(0.5) / 1e3),
                 format!("{:.2}ms", m.dev_lat_us.quantile(0.99) / 1e3),
                 format!("{:.3}", e.total_j() / m.frames as f64 * 1e3),
                 format!("{:.1}", m.wall_fps()),
             ]);
+            report.push_row(
+                "configs",
+                obj(vec![
+                    ("net", s(net_name)),
+                    ("freq_mhz", num(freq)),
+                    ("workers", num(workers as f64)),
+                    ("tile_workers", num(tile_workers as f64)),
+                    ("device_fps", num(m.device_fps() * workers as f64)),
+                    ("frames_per_sec", num(m.wall_fps())),
+                    ("gops_device", num(m.device_ops_per_s() / 1e9)),
+                    ("p99_device_ms", num(m.dev_lat_us.quantile(0.99) / 1e3)),
+                    ("mj_per_frame", num(e.total_j() / m.frames as f64 * 1e3)),
+                ]),
+            );
             coord.stop();
         }
     }
     t.print();
+    report.write().expect("write BENCH_e2e.json");
 
     // ---- PJRT CPU baseline (the "reference platform") -----------------------
     match Golden::load_default() {

@@ -8,7 +8,7 @@
 use kn_stream::model::Tensor;
 use kn_stream::sim::colbuf::ColumnBuffer;
 use kn_stream::sim::sram::WORD_PX;
-use kn_stream::util::bench::{bench, fmt_dur, Table};
+use kn_stream::util::bench::{bench, fmt_dur, JsonReport, Table};
 
 fn main() {
     // ---- continuity: valid windows per streamed pixel ----------------------
@@ -70,6 +70,12 @@ fn main() {
         fmt_dur(r.mean),
         4096.0 / r.mean.as_secs_f64() / 1e6
     );
+    let mut report = JsonReport::new("fig2");
+    report
+        .text("bench", "fig2_streaming")
+        .num("colbuf_64x64_wall_ns", r.mean.as_nanos() as f64)
+        .num("colbuf_mpx_per_sec", 4096.0 / r.mean.as_secs_f64() / 1e6);
+    report.write().expect("write BENCH_fig2.json");
     println!(
         "Takeaway (paper Fig. 2): after the 2-row fill the pipeline yields one valid \
          window per streamed pixel — no pauses — while SRAM traffic drops ~9x vs \

@@ -8,7 +8,7 @@
 use kn_stream::compiler::decompose::{plan_conv, plan_fixed_grid};
 use kn_stream::compiler::NetRunner;
 use kn_stream::model::{zoo, LayerSpec, NetSpec, Tensor};
-use kn_stream::util::bench::Table;
+use kn_stream::util::bench::{JsonReport, Table};
 use kn_stream::SRAM_BYTES;
 
 fn main() {
@@ -106,6 +106,13 @@ fn main() {
         }
     }
     t.print();
+    let mut report = JsonReport::new("fig6");
+    report
+        .text("bench", "fig6_decomposition")
+        .num("solver_tiles", solver.tiles.len() as f64)
+        .num("solver_in_tile_bytes", solver.in_tile_bytes as f64)
+        .num("solver_sram_bytes", solver.sram_bytes as f64);
+    report.write().expect("write BENCH_fig6.json");
     println!(
         "\nTakeaway (paper §5): decomposition turns an un-runnable 309KB working set \
          into <128KB tiles; the price is halo re-reads and per-feature-tile input \

@@ -5,7 +5,7 @@
 //! `cargo bench --bench bench_fig7_area`
 
 use kn_stream::energy::AreaModel;
-use kn_stream::util::bench::Table;
+use kn_stream::util::bench::{JsonReport, Table};
 use kn_stream::{NUM_CU, SRAM_BYTES};
 
 fn main() {
@@ -68,6 +68,15 @@ fn main() {
         ]);
     }
     t.print();
+    let mut report = JsonReport::new("fig7");
+    report
+        .text("bench", "fig7_area")
+        .num("core_mm2", rpt.total_mm2())
+        .num("sram_share", s)
+        .num("cu_share", c)
+        .num("colbuf_share", b)
+        .num("gate_count_m", m.gate_count(&rpt) / 1e6);
+    report.write().expect("write BENCH_fig7.json");
     println!(
         "\nTakeaway (paper Fig. 7): memory dominates — even at 128 KB the buffer bank \
          is ~57% of the core, which is why §5's decomposition (not more SRAM) is the \

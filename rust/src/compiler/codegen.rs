@@ -59,6 +59,23 @@ impl Canvas {
     }
 }
 
+/// One independently executable span of the command program: all passes
+/// of one decomposed work unit (a conv image-tile with its feature
+/// groups, or a pool channel chunk). Segments of the same layer read
+/// only the previous layer's canvas and write disjoint regions of their
+/// own output canvas, so the runner may execute them concurrently;
+/// between layers sits a barrier. Every segment ends on a `Sync`, which
+/// makes its stat deltas translation-invariant — the parallel runner
+/// relies on both properties.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    /// Index of the layer this segment belongs to.
+    pub layer: usize,
+    /// Command range `[start, end)` into `CompiledNet::program`.
+    pub start: usize,
+    pub end: usize,
+}
+
 /// Everything the runtime needs to run one network on the accelerator.
 pub struct CompiledNet {
     pub net: NetSpec,
@@ -72,6 +89,12 @@ pub struct CompiledNet {
     pub plans: Vec<(String, Plan)>,
     /// Total DRAM pixels used.
     pub dram_px: usize,
+    /// Independently schedulable command spans (parallel tile execution).
+    pub segments: Vec<Segment>,
+    /// Per layer: the conv datapath config its segments assume (`None`
+    /// for pool layers). The parallel runner applies this in lieu of
+    /// the single `SetConv` command emitted outside the segments.
+    pub layer_cfgs: Vec<Option<ConvCfg>>,
 }
 
 /// What the next layer needs from the current output canvas.
@@ -88,6 +111,7 @@ fn consumer_needs(layers: &[LayerSpec], idx: usize) -> (usize, usize) {
 struct Emitter {
     program: Vec<Cmd>,
     dram: Vec<i16>,
+    segments: Vec<Segment>,
     /// weight-block offset cache: (layer, group, mtile, tap, cgroup)
     wcache: HashMap<(usize, usize, usize, usize, usize), (usize, usize)>,
     bcache: HashMap<(usize, usize, usize), usize>,
@@ -109,6 +133,7 @@ pub fn compile_net(net: &NetSpec) -> Result<CompiledNet, PlanError> {
     let mut em = Emitter {
         program: Vec::new(),
         dram: Vec::new(),
+        segments: Vec::new(),
         wcache: HashMap::new(),
         bcache: HashMap::new(),
     };
@@ -147,13 +172,23 @@ pub fn compile_net(net: &NetSpec) -> Result<CompiledNet, PlanError> {
                 plans.push((c.name.clone(), plan));
             }
             LayerSpec::Pool(p) => {
-                emit_pool(&mut em, p, &src, &dst);
+                emit_pool(&mut em, li, p, &src, &dst);
             }
         }
         shape = l.out_shape(shape);
     }
     em.push(Cmd::Halt);
 
+    let layer_cfgs = net
+        .layers
+        .iter()
+        .map(|l| match l {
+            LayerSpec::Conv(c) => {
+                Some(ConvCfg { stride: c.stride as u8, shift: c.shift, relu: c.relu })
+            }
+            LayerSpec::Pool(_) => None,
+        })
+        .collect();
     let dram_px = em.dram.len();
     Ok(CompiledNet {
         net: net.clone(),
@@ -163,6 +198,8 @@ pub fn compile_net(net: &NetSpec) -> Result<CompiledNet, PlanError> {
         output: canvases[canvases.len() - 1].clone(),
         plans,
         dram_px,
+        segments: em.segments,
+        layer_cfgs,
     })
 }
 
@@ -180,6 +217,10 @@ fn emit_conv(em: &mut Emitter, li: usize, c: &ConvSpec, plan: &Plan, src: &Canva
         plan.tiles.iter().map(|t| t.ih * t.iw).max().unwrap() * plan.c_per_group;
 
     for tile in &plan.tiles {
+        // Everything one tile needs — channel loads, weight/bias
+        // prefetches, all conv passes and the output stores — forms one
+        // self-contained, independently executable segment.
+        let seg_start = em.program.len();
         let in_px = tile.ih * tile.iw;
         let sram_in = 0u32;
         let sram_out = in_tile_px_max as u32;
@@ -322,11 +363,12 @@ fn emit_conv(em: &mut Emitter, li: usize, c: &ConvSpec, plan: &Plan, src: &Canva
                 em.push(Cmd::Sync);
             }
         }
+        em.segments.push(Segment { layer: li, start: seg_start, end: em.program.len() });
     }
 }
 
 /// Emit one pool layer: channel-chunked SRAM-resident pooling.
-fn emit_pool(em: &mut Emitter, p: &crate::model::PoolSpec, src: &Canvas, dst: &Canvas) {
+fn emit_pool(em: &mut Emitter, li: usize, p: &crate::model::PoolSpec, src: &Canvas, dst: &Canvas) {
     let (ih, iw, c) = (src.h, src.w, src.c);
     let oh = (ih - p.k) / p.stride + 1;
     let ow = (iw - p.k) / p.stride + 1;
@@ -335,6 +377,8 @@ fn emit_pool(em: &mut Emitter, p: &crate::model::PoolSpec, src: &Canvas, dst: &C
     let cc_max = (SRAM_BYTES / per_ch).max(1).min(c);
     let mut ch0 = 0;
     while ch0 < c {
+        // One channel chunk = one independently executable segment.
+        let seg_start = em.program.len();
         let cc = cc_max.min(c - ch0);
         let sram_in = 0u32;
         let sram_out = (cc * ih * iw) as u32;
@@ -369,6 +413,61 @@ fn emit_pool(em: &mut Emitter, p: &crate::model::PoolSpec, src: &Canvas, dst: &C
             }));
         }
         em.push(Cmd::Sync);
+        em.segments.push(Segment { layer: li, start: seg_start, end: em.program.len() });
         ch0 += cc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    /// Segments must exactly cover the program minus the per-conv-layer
+    /// `SetConv` and the final `Halt`, without overlap, in layer order,
+    /// and each must end on the `Sync` barrier the parallel runner's
+    /// translation-invariance argument depends on.
+    #[test]
+    fn segments_partition_the_program() {
+        // (vgg16 omitted: compiling its full weight image is bench-scale)
+        for name in ["quicknet", "facenet", "alexnet"] {
+            let net = zoo::by_name(name).unwrap();
+            let compiled = compile_net(&net).unwrap();
+            let mut covered = 0usize;
+            let mut at = 0usize;
+            let mut last_layer = 0usize;
+            for s in &compiled.segments {
+                assert!(s.start < s.end && s.end <= compiled.program.len(), "{name}: {s:?}");
+                assert!(s.start >= at, "{name}: overlapping segments at {s:?}");
+                assert!(s.layer >= last_layer, "{name}: segments out of layer order");
+                assert_eq!(
+                    compiled.program[s.end - 1],
+                    Cmd::Sync,
+                    "{name}: segment {s:?} must end on a Sync barrier"
+                );
+                // commands skipped between segments are layer prologues
+                for cmd in &compiled.program[at..s.start] {
+                    assert!(matches!(cmd, Cmd::SetConv(_)), "{name}: uncovered {cmd:?}");
+                }
+                covered += s.end - s.start;
+                at = s.end;
+                last_layer = s.layer;
+            }
+            // tail: only the Halt remains
+            assert_eq!(&compiled.program[at..], &[Cmd::Halt], "{name}");
+            let n_conv = compiled.layer_cfgs.iter().filter(|c| c.is_some()).count();
+            assert_eq!(covered + n_conv + 1, compiled.program.len(), "{name}");
+            assert_eq!(compiled.layer_cfgs.len(), net.layers.len(), "{name}");
+        }
+    }
+
+    /// facenet's early layers exceed the 1024-px ACC BUF tile, so the
+    /// plan must decompose them into multiple parallel segments.
+    #[test]
+    fn facenet_has_parallel_width() {
+        let compiled = compile_net(&zoo::facenet()).unwrap();
+        let first_layer: Vec<_> =
+            compiled.segments.iter().filter(|s| s.layer == 0).collect();
+        assert!(first_layer.len() >= 4, "expected >=4 tiles, got {}", first_layer.len());
     }
 }

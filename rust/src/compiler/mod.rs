@@ -3,24 +3,42 @@
 //!
 //! * [`decompose`] — the image/feature/channel decomposition solver.
 //! * [`kernel_decomp`] — K×K → 3×3 tap enumeration (fixed CU array).
-//! * [`codegen`] — plan → command program + DRAM image.
-//! * [`NetRunner`] — convenience: compile once, run frames on a fresh or
-//!   reused simulator, extract outputs (what the coordinator uses).
+//! * [`codegen`] — plan → command program + DRAM image (+ the segment
+//!   map of independently executable work units).
+//! * [`NetRunner`] — compile-once / run-many harness: pooled, reusable
+//!   simulator instances (no per-frame SRAM/DRAM reallocation), a
+//!   sequential path ([`NetRunner::run_frame`]) and a parallel path
+//!   ([`NetRunner::run_frame_parallel`]) that executes a layer's
+//!   decomposed tiles/feature-groups concurrently.
 
 pub mod codegen;
 pub mod decompose;
 pub mod kernel_decomp;
 
-pub use codegen::{compile_net, CompiledNet};
+pub use codegen::{compile_net, CompiledNet, Segment};
 pub use decompose::{plan_conv, Plan, PlanError};
 
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
 use crate::model::{NetSpec, Tensor};
+use crate::sim::accel::StoreLog;
 use crate::sim::{Accelerator, SimConfig, SimStats};
 
 /// Compile-once / run-many harness around the simulator.
 pub struct NetRunner {
     pub compiled: CompiledNet,
     cfg: SimConfig,
+    /// Segments grouped by layer (indexed `[layer]`), precomputed once —
+    /// the parallel path consumes this per frame.
+    layer_segments: Vec<Vec<Segment>>,
+    /// Reusable full simulators (sequential path).
+    pool: Mutex<Vec<Accelerator>>,
+    /// Reusable DRAM-less simulators: parallel tile workers execute
+    /// against a shared frame DRAM image instead of owning one.
+    worker_pool: Mutex<Vec<Accelerator>>,
+    /// Reusable shared frame DRAM images (parallel path).
+    dram_pool: Mutex<Vec<Vec<i16>>>,
 }
 
 impl NetRunner {
@@ -31,10 +49,63 @@ impl NetRunner {
     pub fn with_config(net: &NetSpec, mut cfg: SimConfig) -> anyhow::Result<Self> {
         let compiled = compile_net(net).map_err(|e| anyhow::anyhow!("{e}"))?;
         cfg.dram_px = compiled.dram_px;
-        Ok(Self { compiled, cfg })
+        let mut layer_segments = vec![Vec::new(); net.layers.len()];
+        for s in &compiled.segments {
+            layer_segments[s.layer].push(*s);
+        }
+        Ok(Self {
+            compiled,
+            cfg,
+            layer_segments,
+            pool: Mutex::new(Vec::new()),
+            worker_pool: Mutex::new(Vec::new()),
+            dram_pool: Mutex::new(Vec::new()),
+        })
     }
 
-    /// Run one frame through a fresh accelerator instance; returns the
+    fn take_full(&self) -> Accelerator {
+        match self.pool.lock().unwrap().pop() {
+            Some(a) => a,
+            None => Accelerator::new(self.cfg.clone()),
+        }
+    }
+
+    fn take_worker(&self) -> Accelerator {
+        match self.worker_pool.lock().unwrap().pop() {
+            Some(a) => a,
+            None => Accelerator::new(SimConfig { dram_px: 0, ..self.cfg.clone() }),
+        }
+    }
+
+    /// Write the frame and initial image into a DRAM backing store.
+    fn init_dram(&self, dram: &mut [i16], frame: &Tensor) {
+        dram[..self.compiled.dram_init.len()].copy_from_slice(&self.compiled.dram_init);
+        // frame into the input canvas (HWC -> padded planar)
+        let cv = &self.compiled.input;
+        for ch in 0..frame.c {
+            for y in 0..frame.h {
+                for x in 0..frame.w {
+                    dram[cv.px(ch, y, x)] = frame.at(y, x, ch);
+                }
+            }
+        }
+    }
+
+    /// Extract the output canvas (planar -> HWC).
+    fn extract_output(&self, dram: &[i16]) -> Tensor {
+        let ov = &self.compiled.output;
+        let mut out = Tensor::zeros(ov.h, ov.w, ov.c);
+        for ch in 0..ov.c {
+            for y in 0..ov.h {
+                for x in 0..ov.w {
+                    out.set(y, x, ch, dram[ov.px(ch, y, x)]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Run one frame through a pooled simulator instance; returns the
     /// output tensor and the run's statistics.
     pub fn run_frame(&self, frame: &Tensor) -> anyhow::Result<(Tensor, SimStats)> {
         let net = &self.compiled.net;
@@ -44,30 +115,112 @@ impl NetRunner {
             frame.shape(),
             net.in_shape()
         );
-        let mut accel = Accelerator::new(self.cfg.clone());
-        accel.dram.data[..self.compiled.dram_init.len()]
-            .copy_from_slice(&self.compiled.dram_init);
-        // write the frame into the input canvas (HWC -> padded planar)
-        let cv = &self.compiled.input;
-        for ch in 0..frame.c {
-            for y in 0..frame.h {
-                for x in 0..frame.w {
-                    accel.dram.data[cv.px(ch, y, x)] = frame.at(y, x, ch);
-                }
-            }
-        }
+        let mut accel = self.take_full();
+        accel.reset_counters();
+        self.init_dram(&mut accel.dram.data, frame);
+        // On error the instance is dropped (mid-program state is not
+        // worth recycling); on success it returns to the pool.
         accel.run_program(&self.compiled.program)?;
-        // extract the output canvas (planar -> HWC)
-        let ov = &self.compiled.output;
-        let mut out = Tensor::zeros(ov.h, ov.w, ov.c);
-        for ch in 0..ov.c {
-            for y in 0..ov.h {
-                for x in 0..ov.w {
-                    out.set(y, x, ch, accel.dram.data[ov.px(ch, y, x)]);
+        let out = self.extract_output(&accel.dram.data);
+        let stats = accel.stats.clone();
+        self.pool.lock().unwrap().push(accel);
+        Ok((out, stats))
+    }
+
+    /// Run one frame with each layer's decomposed tiles/feature-groups
+    /// executed concurrently by up to `workers` simulator instances
+    /// (scoped threads, shared read-only frame DRAM, deferred disjoint
+    /// stores). Output **and** aggregated [`SimStats`] are bit-identical
+    /// to [`run_frame`]: segments are independent by construction, and
+    /// every counter delta is translation-invariant across the
+    /// per-segment `Sync` barriers, so summing per-worker stats
+    /// reproduces the sequential totals exactly.
+    pub fn run_frame_parallel(
+        &self,
+        frame: &Tensor,
+        workers: usize,
+    ) -> anyhow::Result<(Tensor, SimStats)> {
+        if workers <= 1 || self.compiled.segments.len() <= 1 {
+            return self.run_frame(frame);
+        }
+        let net = &self.compiled.net;
+        anyhow::ensure!(
+            frame.shape() == net.in_shape(),
+            "frame shape {:?} != net input {:?}",
+            frame.shape(),
+            net.in_shape()
+        );
+        let mut dram = self.dram_pool.lock().unwrap().pop().unwrap_or_default();
+        dram.resize(self.compiled.dram_px, 0);
+        self.init_dram(&mut dram, frame);
+
+        let nworkers = workers.min(self.compiled.segments.len());
+        let mut accels: Vec<Accelerator> = (0..nworkers)
+            .map(|_| {
+                let mut a = self.take_worker();
+                a.reset_counters();
+                a
+            })
+            .collect();
+
+        let program = &self.compiled.program;
+        let mut covered = 0usize;
+        for (li, segs) in self.layer_segments.iter().enumerate() {
+            if segs.is_empty() {
+                continue;
+            }
+            covered += segs.iter().map(|s| s.end - s.start).sum::<usize>();
+            if let Some(cfg) = self.compiled.layer_cfgs[li] {
+                for a in &mut accels {
+                    a.set_conv_cfg(cfg);
+                }
+            }
+            // Fan the layer's segments out over the workers; barrier at
+            // the end of the scope, then apply the deferred stores.
+            let next = AtomicUsize::new(0);
+            let dram_view: &[i16] = &dram;
+            let logs: Vec<StoreLog> = std::thread::scope(|scope| {
+                let next = &next;
+                let handles: Vec<_> = accels
+                    .iter_mut()
+                    .map(|accel| {
+                        scope.spawn(move || {
+                            let mut wlog = StoreLog::new();
+                            loop {
+                                let i = next.fetch_add(1, Ordering::Relaxed);
+                                let Some(seg) = segs.get(i) else { break };
+                                for cmd in &program[seg.start..seg.end] {
+                                    accel.exec_shared(*cmd, dram_view, &mut wlog);
+                                }
+                            }
+                            wlog
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("tile worker panicked")).collect()
+            });
+            for log in logs {
+                for (dst, row) in log {
+                    dram[dst..dst + row.len()].copy_from_slice(&row);
                 }
             }
         }
-        Ok((out, accel.stats))
+
+        // Merge per-worker stats; the SetConv/Halt commands living
+        // outside the segments cost no cycles but are counted by the
+        // sequential stream, so count them here too.
+        let mut totals =
+            SimStats { commands: (program.len() - covered) as u64, ..SimStats::default() };
+        for mut a in accels {
+            a.sync_stats();
+            totals.add(&a.stats);
+            a.reset_counters();
+            self.worker_pool.lock().unwrap().push(a);
+        }
+
+        let out = self.extract_output(&dram);
+        self.dram_pool.lock().unwrap().push(dram);
+        Ok((out, totals))
     }
 }
 
@@ -107,5 +260,41 @@ mod tests {
     fn wrong_frame_shape_rejected() {
         let runner = NetRunner::new(&zoo::quicknet()).unwrap();
         assert!(runner.run_frame(&Tensor::zeros(4, 4, 1)).is_err());
+        assert!(runner.run_frame_parallel(&Tensor::zeros(4, 4, 1), 4).is_err());
+    }
+
+    /// Pooled instance reuse must not leak state between frames: the
+    /// same frame run twice gives identical output and stats, and two
+    /// different frames stay independent.
+    #[test]
+    fn pooled_reuse_is_stateless_across_frames() {
+        let net = zoo::quicknet();
+        let runner = NetRunner::new(&net).unwrap();
+        let f1 = Tensor::random_image(1, net.in_h, net.in_w, net.in_c);
+        let f2 = Tensor::random_image(2, net.in_h, net.in_w, net.in_c);
+        let (o1a, s1a) = runner.run_frame(&f1).unwrap();
+        let (o2, _) = runner.run_frame(&f2).unwrap();
+        let (o1b, s1b) = runner.run_frame(&f1).unwrap();
+        assert_eq!(o1a, o1b, "reused instance changed the result");
+        assert_eq!(s1a, s1b, "reused instance changed the stats");
+        assert_eq!(o2, run_net_ref(&net, &f2));
+    }
+
+    /// The tentpole invariant: parallel tile execution is bit-identical
+    /// to the sequential run — output AND aggregated SimStats.
+    #[test]
+    fn parallel_tiles_match_sequential_bit_exactly() {
+        for name in ["quicknet", "facenet"] {
+            let net = zoo::by_name(name).unwrap();
+            let runner = NetRunner::new(&net).unwrap();
+            let frame = Tensor::random_image(9, net.in_h, net.in_w, net.in_c);
+            let (seq, seq_stats) = runner.run_frame(&frame).unwrap();
+            assert_eq!(seq, run_net_ref(&net, &frame), "{name} sequential");
+            for workers in [2usize, 4] {
+                let (par, par_stats) = runner.run_frame_parallel(&frame, workers).unwrap();
+                assert_eq!(par, seq, "{name} workers={workers} output");
+                assert_eq!(par_stats, seq_stats, "{name} workers={workers} stats");
+            }
+        }
     }
 }

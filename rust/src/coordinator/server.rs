@@ -23,13 +23,18 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Bounded queue depth (frames) — backpressure beyond this.
     pub queue_depth: usize,
+    /// Host-side parallelism *inside* each frame: decomposed
+    /// tiles/feature-groups of a layer execute concurrently
+    /// (`NetRunner::run_frame_parallel`). 1 = sequential. Results and
+    /// stats are bit-identical either way; only wall latency changes.
+    pub tile_workers: usize,
     /// DVFS point the devices run at.
     pub op: OperatingPoint,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { workers: 1, queue_depth: 4, op: crate::energy::dvfs::PEAK }
+        Self { workers: 1, queue_depth: 4, tile_workers: 1, op: crate::energy::dvfs::PEAK }
     }
 }
 
@@ -57,12 +62,13 @@ impl Coordinator {
             let rx = Arc::clone(&rx);
             let runner = Arc::clone(&runner);
             let op = cfg.op;
+            let tile_workers = cfg.tile_workers.max(1);
             handles.push(std::thread::spawn(move || loop {
                 let job = { rx.lock().unwrap().recv() };
                 match job {
                     Ok(Job::Frame(req, out)) => {
                         let t0 = Instant::now();
-                        match runner.run_frame(&req.frame) {
+                        match runner.run_frame_parallel(&req.frame, tile_workers) {
                             Ok((output, stats)) => {
                                 let _ = t0;
                                 let result = FrameResult {
@@ -167,6 +173,19 @@ mod tests {
         let m = coord.run_stream(frames);
         assert_eq!(m.frames, 20);
         assert!(m.device_fps() > 0.0);
+        coord.stop();
+    }
+
+    #[test]
+    fn tile_parallel_serving_is_bit_exact() {
+        let net = zoo::facenet();
+        let cfg = CoordinatorConfig { tile_workers: 3, ..Default::default() };
+        let coord = Coordinator::start(&net, cfg).unwrap();
+        for s in 0..3 {
+            let f = Tensor::random_image(s, net.in_h, net.in_w, net.in_c);
+            let r = coord.submit(f.clone()).recv().unwrap();
+            assert_eq!(r.output, run_net_ref(&net, &f), "frame {s}");
+        }
         coord.stop();
     }
 }

@@ -11,10 +11,15 @@
 //! - [`sim`] — the accelerator microarchitecture: 128 KB single-port SRAM
 //!   buffer bank, streaming column buffer, 16×(3×3) CU engine array,
 //!   accumulation buffer, reconfigurable pooling module, DMA/DRAM, AXI
-//!   command front-end.
+//!   command front-end. Functional conv compute runs through the
+//!   tap-major plane-streaming kernel (`sim::fastconv`, bit-exact with
+//!   the PE chain); cycle/traffic accounting stays in a decoupled
+//!   analytic timing model.
 //! - [`isa`] — the command set streamed over the 16-bit AXI bus.
 //! - [`compiler`] — CNN layer → decomposition plan (image / feature /
-//!   kernel decomposition, paper §5) → command stream.
+//!   kernel decomposition, paper §5) → command stream, plus the segment
+//!   map that lets `NetRunner` execute a layer's decomposed tiles
+//!   concurrently with bit-identical output and stats.
 //! - [`model`] — network descriptions + the deterministic synthetic zoo
 //!   shared with the Python compile path.
 //! - [`fixed`] — the 16-bit fixed-point numerics contract (bit-exact with

@@ -99,12 +99,14 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         .opt("frames", "64", "frames to stream")
         .opt("workers", "1", "accelerator instances")
         .opt("queue", "4", "bounded queue depth")
+        .opt("tile-workers", "1", "parallel tile threads per frame")
         .opt("freq", "500", "clock in MHz");
     let m = cli.parse_from(args)?;
     let net = net_arg(m.get("net"))?;
     let cfg = CoordinatorConfig {
         workers: m.get_usize("workers"),
         queue_depth: m.get_usize("queue"),
+        tile_workers: m.get_usize("tile-workers"),
         op: OperatingPoint::for_freq(m.get_f64("freq")),
     };
     let coord = Coordinator::start(&net, cfg)?;

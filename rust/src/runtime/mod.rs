@@ -7,6 +7,12 @@
 //! "reference CPU" baseline in the end-to-end benches.
 
 pub mod artifacts;
+/// Real PJRT executor — needs the `xla` bindings (feature `pjrt`).
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+/// Offline stub with the same API (see Cargo.toml `pjrt` feature).
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_stub.rs"]
 pub mod pjrt;
 
 pub use artifacts::{Artifact, Manifest};

@@ -1,0 +1,38 @@
+//! Stub `Golden` used when the crate is built without the `pjrt`
+//! feature: the `xla` (PJRT) bindings are not vendorable in the offline
+//! build environment — see Cargo.toml. The API surface matches
+//! `pjrt.rs` so every caller compiles; `load_default` reports the
+//! runtime as unavailable and golden tests / benches self-skip.
+
+use crate::model::Tensor;
+
+use super::artifacts::{Artifact, Manifest};
+
+/// Placeholder for the PJRT golden-model registry.
+pub struct Golden {
+    manifest: Manifest,
+}
+
+impl Golden {
+    /// Always fails: there is no PJRT client in this build.
+    pub fn load_default() -> anyhow::Result<Self> {
+        anyhow::bail!(
+            "PJRT runtime unavailable: built without the `pjrt` feature \
+             (see rust/Cargo.toml for how to enable the xla bindings)"
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Always fails: artifacts cannot execute without a PJRT client.
+    pub fn run(&mut self, name: &str, _input: &Tensor) -> anyhow::Result<Tensor> {
+        anyhow::bail!("PJRT runtime unavailable: cannot execute artifact '{name}'")
+    }
+
+    /// Artifact kind="net" names present.
+    pub fn net_artifacts(&self) -> Vec<&Artifact> {
+        self.manifest.artifacts.iter().filter(|a| a.kind == "net").collect()
+    }
+}

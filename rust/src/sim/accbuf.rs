@@ -76,6 +76,16 @@ impl AccBuf {
         &mut self.data[off..off + NUM_CU]
     }
 
+    /// Mutable int32 plane of `n_px` pixels × 16 lanes at `base`: the
+    /// tap-major fast path accumulates whole channel scans at once.
+    /// Same `acc_ops` charge as `n_px` calls of the per-pixel path.
+    #[inline]
+    pub fn plane_mut(&mut self, base: usize, n_px: usize) -> &mut [i32] {
+        assert!(base + n_px <= ACC_TILE_PX, "ACC BUF overflow: {base}+{n_px}");
+        self.acc_ops += (n_px * NUM_CU) as u64;
+        &mut self.data[base * NUM_CU..(base + n_px) * NUM_CU]
+    }
+
     /// Raw plane readback (tests).
     pub fn peek(&self, base: usize, px: usize, m: usize) -> i32 {
         self.data[(base + px) * NUM_CU + m]

@@ -11,10 +11,16 @@ use super::accbuf::{AccBuf, ACC_TILE_PX};
 use super::axi::CmdFifo;
 use super::dma::{Dma, DramModel};
 use super::engine::CuEngine;
+use super::fastconv;
 use super::sram::{BufferBank, WORD_PX};
 use super::SimStats;
 use crate::isa::{Cmd, ConvCfg, ConvPass, PoolPass, PASS_FIRST, PASS_LAST};
 use crate::{NUM_CU, PES_PER_CU};
+
+/// Deferred DRAM writes produced by [`Accelerator::exec_shared`]:
+/// `(dram_px, row)` pairs the parallel runner applies after the layer
+/// barrier.
+pub type StoreLog = Vec<(usize, Vec<i16>)>;
 
 /// Simulator knobs (microarchitecture is fixed; timing params vary).
 #[derive(Clone, Debug)]
@@ -76,8 +82,10 @@ impl Accelerator {
         }
     }
 
-    /// Execute a full command program (appends Halt semantics at end).
-    /// The host-side view: stream words in, let the decoder drain.
+    /// Execute a full command program. The host-side view: stream words
+    /// in, let the decoder drain. A stream that exhausts without `Halt`
+    /// is a hard error — a real command decoder would hang waiting for
+    /// more words, so letting it pass silently hid compiler bugs.
     pub fn run_program(&mut self, cmds: &[Cmd]) -> anyhow::Result<()> {
         let words = Cmd::encode_program(cmds);
         let mut next = 0usize;
@@ -90,13 +98,19 @@ impl Accelerator {
                 Err(bad) => anyhow::bail!("invalid opcode word {bad:#06x}"),
                 Ok(None) => {
                     if next >= words.len() {
-                        return Ok(()); // stream exhausted, no Halt seen
+                        anyhow::bail!(
+                            "command stream exhausted without Halt after {} command(s) \
+                             ({} word(s) left undecoded)",
+                            self.stats.commands,
+                            self.fifo.len()
+                        );
                     }
                 }
                 Ok(Some(cmd)) => {
                     let halt = cmd == Cmd::Halt;
                     self.exec(cmd);
                     if halt {
+                        self.sync_stats();
                         return Ok(());
                     }
                 }
@@ -127,13 +141,7 @@ impl Accelerator {
                     let row = self.dram.data[src..src + n].to_vec();
                     self.sram.write_slice(dst, &row);
                 }
-                let bytes = d.total_px() as u64 * 2;
-                self.dram.read_bytes += bytes;
-                self.stats.dram_read_bytes += bytes;
-                let done = self.dma.schedule(&self.dram, bytes, self.stats.cycles);
-                if !self.cfg.overlap_dma {
-                    self.stats.cycles = self.stats.cycles.max(done);
-                }
+                self.charge_dma_read(d.total_px() as u64 * 2);
             }
             Cmd::Store(d) => {
                 for r in 0..d.rows as usize {
@@ -144,13 +152,7 @@ impl Accelerator {
                     assert!(dst + n <= self.dram.data.len(), "DRAM write OOB");
                     self.dram.data[dst..dst + n].copy_from_slice(&row);
                 }
-                let bytes = d.total_px() as u64 * 2;
-                self.dram.write_bytes += bytes;
-                self.stats.dram_write_bytes += bytes;
-                let done = self.dma.schedule(&self.dram, bytes, self.stats.cycles);
-                if !self.cfg.overlap_dma {
-                    self.stats.cycles = self.stats.cycles.max(done);
-                }
+                self.charge_dma_write(d.total_px() as u64 * 2);
             }
             Cmd::LoadWeights(w) => {
                 let len = w.cn as usize * PES_PER_CU * NUM_CU;
@@ -222,52 +224,44 @@ impl Accelerator {
         }
 
         let src = p.src_px as usize;
+        // Analytic per-scan timing — same numbers the historical
+        // per-pixel loop charged; the functional kernel below never
+        // touches it, so host-side speed cannot perturb reported cycles.
+        let t = fastconv::scan_timing(ih, iw, oh, ow, st);
+        let chan_w = PES_PER_CU * NUM_CU; // one channel: 9 taps × 16 features
+        let scan_macs = (oh * ow * chan_w) as u64;
         let mut macs = 0u64;
         for ci in 0..cn {
             // §4.2: synchronized filter update at the channel boundary;
             // the prefetch controller staged this channel during the
             // previous scan (double-buffered => usually 0 stall).
-            self.engine
-                .prefetch_channel(&wstage[ci * PES_PER_CU * NUM_CU..(ci + 1) * PES_PER_CU * NUM_CU]);
+            let wtap = &wstage[ci * chan_w..(ci + 1) * chan_w];
+            self.engine.prefetch_channel(wtap);
             self.stats.cycles += self.engine.update_weights();
 
+            // Plane-streaming tap-major scan: contiguous SRAM row slices
+            // fused-multiply-accumulated straight into the ACC BUF plane,
+            // bit-exact with the PE chain (see sim/fastconv.rs).
             let plane = src + ci * ih * iw;
-            // Column-buffer fill for this channel scan.
-            self.stats.cycles += (2 * iw).div_ceil(WORD_PX) as u64;
-            // Fast path: the column buffer presents one 3×3 window per
-            // cycle (validated in colbuf.rs); here we read the window
-            // directly from the SRAM backing store and run the engine's
-            // weight-cached step (validated bit-exact vs the PE-chain
-            // path in engine.rs). Traffic/cycle accounting is unchanged.
-            let data = self.sram.raw();
-            let engine = &mut self.engine;
-            let accbuf = &mut self.accbuf;
-            for oy in 0..oh {
-                let y0 = oy * st + dy;
-                let r0 = plane + y0 * iw + dx;
-                let (r1, r2) = (r0 + iw, r0 + 2 * iw);
-                let mut x = 0usize;
-                for ox in 0..ow {
-                    let win = [
-                        data[r0 + x], data[r0 + x + 1], data[r0 + x + 2],
-                        data[r1 + x], data[r1 + x + 1], data[r1 + x + 2],
-                        data[r2 + x], data[r2 + x + 1], data[r2 + x + 2],
-                    ];
-                    engine.step_accumulate(&win, accbuf.row_mut(0, oy * ow + ox));
-                    x += st;
-                }
-            }
-            macs += (oh * ow * NUM_CU * PES_PER_CU) as u64;
-            // Streaming traffic: each tile pixel of the used rows read
-            // once per channel scan (8 px / word).
-            let rows = (oh - 1) * st + 3;
-            self.sram.charge_read_px(rows.min(ih) * iw);
-            // Cycle cost of the scan: compute- or stream-bound.
-            let compute = (oh * ow) as u64;
-            let stream = ((rows.min(ih) * iw).div_ceil(WORD_PX)) as u64;
-            let scan = compute.max(stream);
-            self.stats.cycles += scan;
-            self.stats.active_cycles += compute;
+            fastconv::conv_scan_tap_major(
+                self.sram.raw(),
+                plane,
+                iw,
+                st,
+                (dy, dx),
+                (oh, ow),
+                wtap,
+                self.accbuf.plane_mut(0, oh * ow),
+            );
+            self.engine.charge_muls(scan_macs);
+            macs += scan_macs;
+
+            // Column-buffer fill + streaming traffic + scan cycles
+            // (compute- or stream-bound), per the analytic model.
+            self.stats.cycles += t.fill_cycles;
+            self.sram.charge_read_px(t.stream_px);
+            self.stats.cycles += t.scan_cycles;
+            self.stats.active_cycles += t.active_cycles;
         }
         self.stats.macs += macs;
 
@@ -312,6 +306,145 @@ impl Accelerator {
 }
 
 impl Accelerator {
+    /// One pipelined-burst DMA read charge: traffic counters + channel
+    /// scheduling (+ serialization when double buffering is off).
+    fn charge_dma_read(&mut self, bytes: u64) {
+        self.dram.read_bytes += bytes;
+        self.stats.dram_read_bytes += bytes;
+        let done = self.dma.schedule(&self.dram, bytes, self.stats.cycles);
+        if !self.cfg.overlap_dma {
+            self.stats.cycles = self.stats.cycles.max(done);
+        }
+    }
+
+    fn charge_dma_write(&mut self, bytes: u64) {
+        self.dram.write_bytes += bytes;
+        self.stats.dram_write_bytes += bytes;
+        let done = self.dma.schedule(&self.dram, bytes, self.stats.cycles);
+        if !self.cfg.overlap_dma {
+            self.stats.cycles = self.stats.cycles.max(done);
+        }
+    }
+
+    /// Fold the cumulative SRAM/pool counters into the stats snapshot.
+    /// Done at frame end — mid-run they lag until the next Conv/Pool,
+    /// and the trailing Store of the last block would otherwise be
+    /// dropped from the reported traffic.
+    pub fn sync_stats(&mut self) {
+        self.stats.sram_reads = self.sram.reads;
+        self.stats.sram_writes = self.sram.writes;
+        self.stats.pool_ops = self.pool_ops_total;
+    }
+
+    /// Set the conv datapath config directly. The parallel runner uses
+    /// this to apply a layer's `SetConv` to every worker without
+    /// re-executing (and re-counting) the command per worker.
+    pub fn set_conv_cfg(&mut self, cfg: ConvCfg) {
+        self.conv_cfg = cfg;
+    }
+
+    /// Reset every event/cycle counter and all transient state so a
+    /// pooled instance can serve a new frame without reallocating its
+    /// SRAM/DRAM backing stores. Memory *contents* are left as-is:
+    /// every compiled program loads a region before reading it.
+    pub fn reset_counters(&mut self) {
+        self.stats = SimStats::default();
+        self.sram.reads = 0;
+        self.sram.writes = 0;
+        self.sram.reset_alloc();
+        self.dram.read_bytes = 0;
+        self.dram.write_bytes = 0;
+        self.dma = Dma::default();
+        self.fifo = CmdFifo::new();
+        self.wstage.clear();
+        self.pool_ops_total = 0;
+        self.accbuf.acc_ops = 0;
+        self.engine.reset_counters();
+        self.conv_cfg = ConvCfg { stride: 1, shift: 0, relu: false };
+    }
+
+    /// Execute one decoded command in **shared-DRAM** mode: DRAM reads
+    /// come from the caller's image `dram`, and `Store` rows are
+    /// appended to `wlog` instead of written (the parallel runner
+    /// applies them after the layer barrier — the tiles/feature-groups
+    /// of one layer write disjoint canvas regions, so application order
+    /// is irrelevant). Event and cycle accounting is identical to
+    /// [`Accelerator::exec`]; since every decomposed work unit ends on
+    /// a `Sync` barrier, per-segment stat deltas are
+    /// translation-invariant and parallel totals match a sequential run
+    /// bit-for-bit (tested in `compiler::tests`).
+    pub fn exec_shared(&mut self, cmd: Cmd, dram: &[i16], wlog: &mut StoreLog) {
+        self.stats.commands += 1;
+        match cmd {
+            Cmd::Nop | Cmd::Halt => {}
+            Cmd::Sync => {
+                if self.dma.busy_until > self.stats.cycles {
+                    self.stats.dma_stall_cycles += self.dma.busy_until - self.stats.cycles;
+                    self.stats.cycles = self.dma.busy_until;
+                }
+            }
+            Cmd::SetConv(c) => self.conv_cfg = c,
+            Cmd::LoadImage(d) => {
+                for r in 0..d.rows as usize {
+                    let src = d.dram_px as usize + r * d.dram_pitch as usize;
+                    let dst = d.sram_px as usize + r * d.sram_pitch as usize;
+                    let n = d.row_px as usize;
+                    assert!(src + n <= dram.len(), "DRAM read OOB");
+                    self.sram.write_slice(dst, &dram[src..src + n]);
+                }
+                self.charge_dma_read(d.total_px() as u64 * 2);
+            }
+            Cmd::Store(d) => {
+                for r in 0..d.rows as usize {
+                    let src = d.sram_px as usize + r * d.sram_pitch as usize;
+                    let dst = d.dram_px as usize + r * d.dram_pitch as usize;
+                    let n = d.row_px as usize;
+                    let row = self.sram.read_slice(src, n);
+                    assert!(dst + n <= dram.len(), "DRAM write OOB");
+                    wlog.push((dst, row));
+                }
+                self.charge_dma_write(d.total_px() as u64 * 2);
+            }
+            Cmd::LoadWeights(w) => {
+                let len = w.cn as usize * PES_PER_CU * NUM_CU;
+                let at = w.dram_px as usize;
+                assert!(at + len <= dram.len(), "DRAM read OOB");
+                let data = dram[at..at + len].to_vec();
+                let bytes = len as u64 * 2;
+                self.dram.read_bytes += bytes;
+                let done = self.dma.schedule(&self.dram, bytes, self.stats.cycles);
+                assert!(self.wstage.len() < 2, "weight shadow bank depth is 2 (compiler bug)");
+                self.wstage.push_back((data, done));
+                self.stats.weight_loads += len as u64;
+                self.stats.dram_read_bytes += bytes;
+                if !self.cfg.overlap_dma {
+                    self.stats.cycles = self.stats.cycles.max(done);
+                }
+            }
+            Cmd::LoadBias(b) => {
+                let len = 2 * NUM_CU;
+                let at = b.dram_px as usize;
+                assert!(at + len <= dram.len(), "DRAM read OOB");
+                let mut bias = [0i32; NUM_CU];
+                for (m, bv) in bias.iter_mut().enumerate() {
+                    let lo = dram[at + 2 * m] as u16 as u32;
+                    let hi = dram[at + 2 * m + 1] as u16 as u32;
+                    *bv = (lo | (hi << 16)) as i32;
+                }
+                self.accbuf.load_bias(&bias);
+                let bytes = len as u64 * 2;
+                self.dram.read_bytes += bytes;
+                let done = self.dma.schedule(&self.dram, bytes, self.stats.cycles);
+                self.stats.dram_read_bytes += bytes;
+                if !self.cfg.overlap_dma {
+                    self.stats.cycles = self.stats.cycles.max(done);
+                }
+            }
+            Cmd::Conv(p) => self.exec_conv(p),
+            Cmd::Pool(p) => self.exec_pool(p),
+        }
+    }
+
     /// DMA busy cycles (utilization reporting).
     pub fn dma_busy_cycles(&self) -> u64 {
         self.dma.busy_cycles
@@ -339,5 +472,62 @@ mod tests {
         let mut acc = Accelerator::new(cfg);
         acc.exec(Cmd::LoadImage(crate::isa::DmaDesc::flat(0, 0, 4096)));
         assert!(acc.stats.cycles > 0);
+    }
+
+    #[test]
+    fn stream_without_halt_is_a_hard_error() {
+        let mut acc = Accelerator::new(SimConfig::default());
+        let err = acc.run_program(&[Cmd::Nop, Cmd::Sync]).unwrap_err();
+        assert!(err.to_string().contains("without Halt"), "{err}");
+        // the same stream with a Halt retires cleanly
+        let mut acc = Accelerator::new(SimConfig::default());
+        acc.run_program(&[Cmd::Nop, Cmd::Sync, Cmd::Halt]).unwrap();
+        assert_eq!(acc.stats.commands, 3);
+    }
+
+    #[test]
+    fn empty_stream_is_a_hard_error() {
+        let mut acc = Accelerator::new(SimConfig::default());
+        assert!(acc.run_program(&[]).is_err());
+    }
+
+    /// Shared-DRAM mode must charge identically to owned mode and defer
+    /// the Store writes to the log.
+    #[test]
+    fn exec_shared_matches_exec_accounting() {
+        let desc = crate::isa::DmaDesc::flat(0, 0, 1024);
+        let store = crate::isa::DmaDesc::flat(4096, 0, 1024);
+
+        let mut own = Accelerator::new(SimConfig { dram_px: 8192, ..SimConfig::default() });
+        for c in [Cmd::LoadImage(desc), Cmd::Store(store), Cmd::Sync] {
+            own.exec(c);
+        }
+        own.sync_stats();
+
+        let mut shared = Accelerator::new(SimConfig { dram_px: 0, ..SimConfig::default() });
+        let dram = vec![7i16; 8192];
+        let mut wlog = StoreLog::new();
+        for c in [Cmd::LoadImage(desc), Cmd::Store(store), Cmd::Sync] {
+            shared.exec_shared(c, &dram, &mut wlog);
+        }
+        shared.sync_stats();
+
+        assert_eq!(own.stats, shared.stats);
+        assert_eq!(wlog.len(), 1);
+        assert_eq!(wlog[0].0, 4096);
+        assert_eq!(wlog[0].1, vec![7i16; 1024]);
+    }
+
+    #[test]
+    fn reset_counters_clears_a_used_instance() {
+        let mut acc = Accelerator::new(SimConfig::default());
+        acc.exec(Cmd::LoadImage(crate::isa::DmaDesc::flat(0, 0, 4096)));
+        acc.exec(Cmd::Sync);
+        acc.sync_stats();
+        assert_ne!(acc.stats, SimStats::default());
+        acc.reset_counters();
+        acc.sync_stats();
+        assert_eq!(acc.stats, SimStats::default());
+        assert_eq!(acc.dma_busy_cycles(), 0);
     }
 }

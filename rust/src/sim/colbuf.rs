@@ -8,6 +8,13 @@
 //! state machine exactly — fill level, row wrap, boundary behaviour —
 //! and exposes the windows the CU array consumes.
 
+/// Fill words before the first valid window of a width-`w` scan: two
+/// full rows at 8 px/word. Shared with the analytic timing model in
+/// `sim/fastconv.rs` so state machine and cycle model cannot drift.
+pub fn fill_words(w: usize) -> usize {
+    (2 * w).div_ceil(super::sram::WORD_PX)
+}
+
 /// Column buffer for one channel scan of a (h × w) tile.
 pub struct ColumnBuffer {
     w: usize,
@@ -36,7 +43,7 @@ impl ColumnBuffer {
     /// Number of fill cycles (SRAM words) before the first valid window:
     /// two full rows at 8 px/word.
     pub fn fill_words(&self) -> usize {
-        (2 * self.w).div_ceil(super::sram::WORD_PX)
+        fill_words(self.w)
     }
 
     /// Stream one pixel of the current input row. Returns a complete 3×3

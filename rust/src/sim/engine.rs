@@ -88,8 +88,10 @@ impl CuEngine {
     #[inline]
     pub fn step_fast(&mut self, window: &[i16; 9]) -> [i32; NUM_CU] {
         self.fast_muls += (NUM_CU * super::super::PES_PER_CU as usize) as u64;
-        // Feature-major dot-9 per CU lane. (A tap-major broadcast variant
-        // was tried and was ~15% slower — see EXPERIMENTS.md §Perf.)
+        // Feature-major dot-9 per CU lane. (A *per-window* tap-major
+        // broadcast was tried and was ~15% slower than this dot; the
+        // plane-level tap-major sweeps in `sim/fastconv.rs` are the
+        // variant that wins — see EXPERIMENTS.md §Perf.)
         let mut out = [0i32; NUM_CU];
         for (m, o) in out.iter_mut().enumerate() {
             let w = &self.active_flat[m * 9..m * 9 + 9];
@@ -132,6 +134,23 @@ impl CuEngine {
             *o = cu.step(window, en);
         }
         out
+    }
+
+    /// Charge `n` multiplies performed on the engine's behalf by the
+    /// tap-major fast path (`sim/fastconv.rs`) — keeps [`Self::mul_count`]
+    /// consistent when the PE chain is bypassed.
+    #[inline]
+    pub fn charge_muls(&mut self, n: u64) {
+        self.fast_muls += n;
+    }
+
+    /// Reset the perf counters and staging flag for pooled-accelerator
+    /// reuse. Weight registers are left as-is: every conv pass re-stages
+    /// its weights before computing.
+    pub fn reset_counters(&mut self) {
+        self.fast_muls = 0;
+        self.weight_stalls = 0;
+        self.staged_valid = false;
     }
 
     /// Total multiplies performed across all PEs (energy model input).

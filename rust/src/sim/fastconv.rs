@@ -1,0 +1,199 @@
+//! Plane-streaming, tap-major convolution fast path — the simulator's
+//! hottest loop, rebuilt around the access pattern the hardware streams.
+//!
+//! The PE-chain model (`engine::step` / `step_accumulate`) consumes one
+//! *gathered* 3×3 window per output pixel: a 9-element scalar gather
+//! followed by a 9×16 scalar dot — the exact anti-pattern the streaming
+//! column buffer exists to avoid, and one LLVM cannot vectorize. This
+//! module computes the same channel scan as nine **tap sweeps over
+//! contiguous SRAM row slices**: for tap (ty, tx), the input pixels
+//! feeding output row `oy` are the row slice starting at
+//! `plane + (oy·s + dy + ty)·iw + dx + tx`, and each pixel broadcasts
+//! into the 16 accumulator lanes of its output pixel — a
+//! splat-multiply-accumulate LLVM auto-vectorizes (no deps, no
+//! intrinsics).
+//!
+//! **Bit-exactness.** Products are exact (i16×i16 → i32) and the ACC
+//! BUF contract is *wrapping* i32 addition (`fixed::acc_add`), which is
+//! associative and commutative — reordering the tap/pixel accumulation
+//! cannot change any output bit. `tap_major_matches_pe_chain` below and
+//! the `integration_fastpath` property suite enforce this against the
+//! PE-chain engine and the scalar oracle.
+//!
+//! **Timing.** Not modeled here: [`ScanTiming`] is the analytic cycle
+//! model of one channel scan (identical numbers to the historical
+//! per-pixel loop), so the functional kernel's host speed never
+//! perturbs reported cycles or traffic.
+
+use super::sram::WORD_PX;
+use crate::NUM_CU;
+
+/// Analytic timing of one channel scan of a conv pass, decoupled from
+/// the functional kernel. See `sim/mod.rs` for the cycle model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScanTiming {
+    /// Column-buffer fill: two rows at 8 px/word.
+    pub fill_cycles: u64,
+    /// Scan cycles: max(compute, stream) — compute- or stream-bound.
+    pub scan_cycles: u64,
+    /// Cycles the CU array does useful work (= output pixels).
+    pub active_cycles: u64,
+    /// SRAM pixels streamed (used rows × tile width), for the traffic
+    /// charge.
+    pub stream_px: usize,
+}
+
+/// Cycle/traffic model of one channel scan over an (ih × iw) tile
+/// producing (oh × ow) outputs at `stride`.
+pub fn scan_timing(ih: usize, iw: usize, oh: usize, ow: usize, stride: usize) -> ScanTiming {
+    let rows = ((oh - 1) * stride + 3).min(ih);
+    let compute = (oh * ow) as u64;
+    let stream = (rows * iw).div_ceil(WORD_PX) as u64;
+    ScanTiming {
+        fill_cycles: super::colbuf::fill_words(iw) as u64,
+        scan_cycles: compute.max(stream),
+        active_cycles: compute,
+        stream_px: rows * iw,
+    }
+}
+
+/// Accumulate one channel scan — one 3×3 tap offset (`dy`, `dx`) at
+/// `stride` — into the int32 ACC plane `acc` (`oh·ow` pixels × 16
+/// feature lanes, pixel-major).
+///
+/// `wtap` is the channel's weight block in the tap-major staging layout
+/// `[tap·16 + feature]` — exactly the order `LoadWeights` delivers from
+/// DRAM, so no transpose happens on the hot path.
+#[allow(clippy::too_many_arguments)]
+pub fn conv_scan_tap_major(
+    sram: &[i16],
+    plane: usize,
+    iw: usize,
+    stride: usize,
+    (dy, dx): (usize, usize),
+    (oh, ow): (usize, usize),
+    wtap: &[i16],
+    acc: &mut [i32],
+) {
+    assert_eq!(wtap.len(), 9 * NUM_CU, "one channel = 9 taps x 16 features");
+    assert_eq!(acc.len(), oh * ow * NUM_CU, "ACC plane shape mismatch");
+    assert!(stride >= 1);
+    // Pre-widen the 9×16 weights once per scan (amortized over
+    // oh·ow·144 MACs).
+    let mut w = [0i32; 9 * NUM_CU];
+    for (wd, &ws) in w.iter_mut().zip(wtap) {
+        *wd = ws as i32;
+    }
+    // Input columns touched by one output row of one tap column.
+    let span = (ow - 1) * stride + 1;
+    for oy in 0..oh {
+        let row0 = plane + (oy * stride + dy) * iw + dx;
+        let arow = &mut acc[oy * ow * NUM_CU..(oy + 1) * ow * NUM_CU];
+        for ty in 0..3 {
+            for tx in 0..3 {
+                let wt = &w[(ty * 3 + tx) * NUM_CU..(ty * 3 + tx + 1) * NUM_CU];
+                let base = row0 + ty * iw + tx;
+                let src = &sram[base..base + span];
+                // One fused multiply-accumulate sweep: contiguous row
+                // pixels broadcast into 16 contiguous ACC lanes each.
+                for (a, &px) in arow.chunks_exact_mut(NUM_CU).zip(src.iter().step_by(stride)) {
+                    let x = px as i32;
+                    for (ai, &wm) in a.iter_mut().zip(wt) {
+                        *ai = ai.wrapping_add(x.wrapping_mul(wm));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::CuEngine;
+    use crate::util::prop::check;
+
+    /// The tap-major plane kernel must be bit-identical to the PE-chain
+    /// engine fed gathered windows, across shapes, strides and offsets,
+    /// over the full i16 value range (wrapping territory included).
+    #[test]
+    fn tap_major_matches_pe_chain() {
+        check("fastconv == PE chain", 40, |g| {
+            let stride = if g.bool() { 1 } else { 2 };
+            let oh = g.usize_in(1, 10);
+            let ow = g.usize_in(1, 10);
+            let (dy, dx) = (g.usize_in(0, 3), g.usize_in(0, 3));
+            let ih = dy + (oh - 1) * stride + 3 + g.usize_in(0, 2);
+            let iw = dx + (ow - 1) * stride + 3 + g.usize_in(0, 2);
+            let sram = g.vec_i16(ih * iw, -32768, 32767);
+            let wtap = g.vec_i16(9 * NUM_CU, -32768, 32767);
+
+            let mut acc = vec![0i32; oh * ow * NUM_CU];
+            conv_scan_tap_major(&sram, 0, iw, stride, (dy, dx), (oh, ow), &wtap, &mut acc);
+
+            // prefetch_channel takes the same tap-major layout as wtap
+            let mut eng = CuEngine::new();
+            eng.prefetch_channel(&wtap);
+            eng.update_weights();
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let (y0, x0) = (oy * stride + dy, ox * stride + dx);
+                    let win: [i16; 9] =
+                        core::array::from_fn(|t| sram[(y0 + t / 3) * iw + x0 + t % 3]);
+                    let want = eng.step(&win, true);
+                    for (m, &wv) in want.iter().enumerate() {
+                        let got = acc[(oy * ow + ox) * NUM_CU + m];
+                        if got != wv {
+                            return Err(format!(
+                                "({oy},{ox}) m={m}: fast {got} != chain {wv} \
+                                 (s={stride} {oh}x{ow} dy={dy} dx={dx})"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Accumulation across scans is order-free (wrapping i32): two scans
+    /// into the same plane equal the pixel-wise wrapping sum of the
+    /// individual scans.
+    #[test]
+    fn scans_accumulate_wrapping() {
+        let mut g = crate::util::prop::Gen::new(0xFA57, 64);
+        let (oh, ow, iw, ih) = (4usize, 5usize, 9usize, 8usize);
+        let sram = g.vec_i16(ih * iw, -32768, 32767);
+        let w1 = g.vec_i16(9 * NUM_CU, -32768, 32767);
+        let w2 = g.vec_i16(9 * NUM_CU, -32768, 32767);
+        let mut both = vec![0i32; oh * ow * NUM_CU];
+        conv_scan_tap_major(&sram, 0, iw, 1, (0, 0), (oh, ow), &w1, &mut both);
+        conv_scan_tap_major(&sram, 0, iw, 1, (1, 1), (oh, ow), &w2, &mut both);
+        let mut a = vec![0i32; oh * ow * NUM_CU];
+        let mut b = vec![0i32; oh * ow * NUM_CU];
+        conv_scan_tap_major(&sram, 0, iw, 1, (0, 0), (oh, ow), &w1, &mut a);
+        conv_scan_tap_major(&sram, 0, iw, 1, (1, 1), (oh, ow), &w2, &mut b);
+        for i in 0..both.len() {
+            assert_eq!(both[i], a[i].wrapping_add(b[i]), "lane {i}");
+        }
+    }
+
+    /// The analytic scan timing reproduces the documented cycle model:
+    /// compute-bound when oh·ow dominates, stream-bound otherwise.
+    #[test]
+    fn analytic_timing_model() {
+        // compute-bound: 8x6 outputs from a 10x8 tile, stride 1
+        let t = scan_timing(10, 8, 8, 6, 1);
+        assert_eq!(t.fill_cycles, 2); // 16 px / 8 per word
+        assert_eq!(t.active_cycles, 48);
+        assert_eq!(t.stream_px, 10 * 8); // rows used = (8-1)+3 = 10
+        assert_eq!(t.scan_cycles, 48); // max(48, 80/8=10)
+        // stream-bound: 4x4 outputs from a wide 40x40 tile
+        let t2 = scan_timing(40, 40, 4, 4, 1);
+        assert_eq!(t2.stream_px, 6 * 40); // rows used = (4-1)+3 = 6
+        assert_eq!(t2.scan_cycles, 30); // max(16, 240/8=30)
+        // stride 2 rows-used clamp
+        let t3 = scan_timing(9, 12, 4, 4, 2);
+        assert_eq!(t3.stream_px, 9 * 12); // (4-1)*2+3 = 9 = ih
+    }
+}

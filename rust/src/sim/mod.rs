@@ -32,6 +32,7 @@ pub mod colbuf;
 pub mod cu;
 pub mod dma;
 pub mod engine;
+pub mod fastconv;
 pub mod pe;
 pub mod pool;
 pub mod sram;

@@ -50,6 +50,14 @@ impl MaxPoolUnit {
 
 /// Pooling pass over a planar (C, H, W) int16 region in the buffer bank.
 /// Returns cycles consumed.
+///
+/// Functional fast path: row-sliced max over the raw plane — max is
+/// associative and commutative, so the result is bit-identical to the
+/// streaming comparator procedure ([`MaxPoolUnit`], kept validated by
+/// the unit tests below). Counters are charged analytically, matching
+/// the comparator exactly: `k` columns per window → `oh·ow·k` cycles
+/// per channel plane, and the 4-input comparator performs
+/// `k + (k−1)·(k+1) = k² + k − 1` compares per window.
 #[allow(clippy::too_many_arguments)]
 pub fn pool_pass(
     sram: &mut BufferBank,
@@ -66,34 +74,37 @@ pub fn pool_pass(
     assert!(stride >= 1);
     let oh = (ih - k) / stride + 1;
     let ow = (iw - k) / stride + 1;
-    let mut unit = MaxPoolUnit::default();
+    let mut out_plane = vec![i16::MIN; oh * ow];
     let mut cycles = 0u64;
     for ch in 0..c {
         let splane = src_px + ch * ih * iw;
         let dplane = dst_px + ch * oh * ow;
-        for oy in 0..oh {
-            for ox in 0..ow {
-                // k columns stream through the comparator
-                for j in 0..k {
-                    // mux selects the k valid rows of this window column
-                    let mut col = [0i16; 3];
-                    for (i, cv) in col.iter_mut().enumerate().take(k) {
-                        *cv = sram.read_px(splane + (oy * stride + i) * iw + (ox * stride + j));
+        {
+            let data = sram.raw();
+            for oy in 0..oh {
+                let orow = &mut out_plane[oy * ow..(oy + 1) * ow];
+                orow.fill(i16::MIN);
+                for i in 0..k {
+                    let row = &data[splane + (oy * stride + i) * iw..][..iw];
+                    for (ox, o) in orow.iter_mut().enumerate() {
+                        for &v in &row[ox * stride..ox * stride + k] {
+                            *o = (*o).max(v);
+                        }
                     }
-                    unit.step(&col[..k]);
-                    cycles += 1;
                 }
-                let m = unit.emit();
-                sram.write_px(dplane + oy * ow + ox, m);
             }
         }
-        // port traffic: each input pixel is read once per window it joins;
-        // the scratchpad serves row-parallel reads, the bank sees one word
-        // stream per row (charge one pass of the plane) + output writes.
+        for (px, &v) in out_plane.iter().enumerate() {
+            sram.write_px(dplane + px, v);
+        }
+        // port traffic: the scratchpad serves row-parallel reads, the
+        // bank sees one word stream per row (one pass of the plane) +
+        // the pooled output writes.
+        cycles += (oh * ow * k) as u64;
         sram.charge_read_px(ih * iw);
         sram.charge_write_px(oh * ow);
     }
-    *compare_ops += unit.compare_ops;
+    *compare_ops += (c * oh * ow * (k * k + k - 1)) as u64;
     cycles
 }
 

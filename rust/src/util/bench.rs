@@ -3,10 +3,16 @@
 //! Auto-calibrating: warms up, picks an iteration count targeting a fixed
 //! measurement window, reports mean/σ/min and throughput. Every
 //! `rust/benches/bench_*.rs` builds on this plus table printers that
-//! regenerate the paper's tables/figures row-for-row.
+//! regenerate the paper's tables/figures row-for-row, and a
+//! [`JsonReport`] writer that emits machine-readable `BENCH_*.json`
+//! artifacts so the perf trajectory is tracked across PRs (CI uploads
+//! them).
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Running;
 
 /// Result of one benchmark case.
@@ -130,6 +136,74 @@ impl Table {
     }
 }
 
+/// Machine-readable benchmark artifact: accumulates scalar fields and
+/// row arrays, then writes `BENCH_<name>.json` into `$KN_BENCH_DIR`
+/// (default: the working directory). All benches emit one so CI can
+/// upload and diff the perf trajectory PR over PR.
+pub struct JsonReport {
+    name: String,
+    fields: BTreeMap<String, Json>,
+}
+
+impl JsonReport {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.into(), fields: BTreeMap::new() }
+    }
+
+    /// Set a scalar numeric field.
+    pub fn num(&mut self, key: &str, v: f64) -> &mut Self {
+        self.fields.insert(key.into(), Json::Num(v));
+        self
+    }
+
+    /// Set a string field.
+    pub fn text(&mut self, key: &str, v: &str) -> &mut Self {
+        self.fields.insert(key.into(), Json::Str(v.into()));
+        self
+    }
+
+    /// Set an arbitrary JSON field.
+    pub fn set(&mut self, key: &str, v: Json) -> &mut Self {
+        self.fields.insert(key.into(), v);
+        self
+    }
+
+    /// Append one row object to the array field `key`.
+    pub fn push_row(&mut self, key: &str, row: Json) -> &mut Self {
+        match self.fields.entry(key.into()).or_insert_with(|| Json::Arr(Vec::new())) {
+            Json::Arr(a) => a.push(row),
+            other => *other = Json::Arr(vec![row]),
+        }
+        self
+    }
+
+    /// Target path: `$KN_BENCH_DIR/BENCH_<name>.json`.
+    pub fn path(&self) -> PathBuf {
+        let dir = std::env::var_os("KN_BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        dir.join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Write the artifact into an explicit directory (testable without
+    /// touching process-global state).
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, format!("{}\n", Json::Obj(self.fields.clone())))?;
+        println!("wrote {}", path.display());
+        Ok(path)
+    }
+
+    /// Write the artifact to [`Self::path`]; prints the path on success
+    /// so bench logs record where the machine-readable copy went.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var_os("KN_BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        self.write_to(&dir)
+    }
+}
+
 /// Format a Duration human-readably.
 pub fn fmt_dur(d: Duration) -> String {
     let ns = d.as_nanos();
@@ -180,5 +254,24 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_micros(12)), "12.00us");
         assert_eq!(fmt_dur(Duration::from_millis(12)), "12.00ms");
         assert_eq!(fmt_dur(Duration::from_secs(2)), "2.00s");
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        use crate::util::json::{obj, s, Json};
+        let dir = std::env::temp_dir().join(format!("kn_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut r = JsonReport::new("unit_test");
+        r.num("gops", 5.76).text("bench", "unit").push_row(
+            "layers",
+            obj(vec![("name", s("conv1")), ("wall_ns", Json::Num(123.0))]),
+        );
+        let path = r.write_to(&dir).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = Json::parse(text.trim()).unwrap();
+        assert_eq!(back.get("gops").and_then(Json::as_f64), Some(5.76));
+        assert_eq!(back.get("bench").and_then(Json::as_str), Some("unit"));
+        assert_eq!(back.get("layers").and_then(Json::as_arr).map(|a| a.len()), Some(1));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -14,7 +14,7 @@ fn results_correct_under_concurrency() {
     for workers in [1usize, 2, 4] {
         let coord = Coordinator::start(
             &net,
-            CoordinatorConfig { workers, queue_depth: 2, op: dvfs::PEAK },
+            CoordinatorConfig { workers, queue_depth: 2, tile_workers: 1, op: dvfs::PEAK },
         )
         .unwrap();
         let frames: Vec<Tensor> =
@@ -54,7 +54,7 @@ fn run_stream_accounts_every_frame() {
     let net = zoo::quicknet();
     let coord = Coordinator::start(
         &net,
-        CoordinatorConfig { workers: 2, queue_depth: 3, op: dvfs::EFFICIENT },
+        CoordinatorConfig { workers: 2, queue_depth: 3, tile_workers: 2, op: dvfs::EFFICIENT },
     )
     .unwrap();
     let n = 30;
@@ -76,7 +76,7 @@ fn metrics_use_operating_point() {
     for freq in [dvfs::EFFICIENT, dvfs::PEAK] {
         let coord = Coordinator::start(
             &net,
-            CoordinatorConfig { workers: 1, queue_depth: 2, op: freq },
+            CoordinatorConfig { workers: 1, queue_depth: 2, tile_workers: 1, op: freq },
         )
         .unwrap();
         let frames: Vec<Tensor> =

@@ -1,0 +1,260 @@
+//! Fast-path bit-exactness: the tap-major plane-streaming kernel
+//! (`sim/fastconv.rs`) driven through the real ISA — `LoadImage` /
+//! `LoadWeights` / `Conv` passes with PASS_FIRST / PASS_LAST tiling —
+//! must match the scalar oracle (`model/reference.rs`) bit-for-bit over
+//! randomized shapes, strides 1/2, shift/relu configs, channel-group
+//! splits and kernel-decomposition taps.
+//!
+//! These tests construct DRAM images and command streams by hand (no
+//! compiler in the loop), so a failure localizes to the simulator's
+//! conv datapath rather than the decomposition planner.
+
+use kn_stream::compiler::kernel_decomp::{tap_weights, taps};
+use kn_stream::isa::{BiasLoad, Cmd, ConvCfg, ConvPass, DmaDesc, WeightLoad, PASS_FIRST, PASS_LAST};
+use kn_stream::model::reference::conv_ref_with;
+use kn_stream::model::{ConvSpec, Tensor};
+use kn_stream::sim::{Accelerator, SimConfig};
+use kn_stream::util::prop::{check_seeded, Gen};
+use kn_stream::NUM_CU;
+
+/// Pack 16 int32 biases as 32 little-endian half-pixels.
+fn bias_px(b: &[i32]) -> Vec<i16> {
+    let mut out = Vec::with_capacity(2 * b.len());
+    for &v in b {
+        out.push((v as u32 & 0xFFFF) as u16 as i16);
+        out.push(((v as u32) >> 16) as u16 as i16);
+    }
+    out
+}
+
+/// Reference ConvSpec for caller-provided weights.
+fn spec(k: usize, stride: usize, cin: usize, shift: u8, relu: bool) -> ConvSpec {
+    ConvSpec {
+        name: "fastpath".into(),
+        k,
+        stride,
+        pad: 0,
+        cin,
+        cout: NUM_CU,
+        shift,
+        relu,
+        wseed: 0,
+        bseed: 0,
+        groups: 1,
+    }
+}
+
+/// Drive one conv layer through the accelerator ISA: the input tile is
+/// (ih × iw × cin) planar in SRAM, split into `c_splits` channel groups
+/// (PASS_FIRST on the first pass, PASS_LAST on the last), with the
+/// K×K kernel decomposed into 3×3 taps. Returns the (oh × ow × 16)
+/// output read back from DRAM.
+#[allow(clippy::too_many_arguments)]
+fn run_conv_isa(
+    x: &Tensor,
+    w: &[i16],
+    b: &[i32],
+    k: usize,
+    stride: usize,
+    shift: u8,
+    relu: bool,
+    c_splits: usize,
+) -> Tensor {
+    let (h, iw_t, cin) = x.shape();
+    let kp = 3 * k.div_ceil(3);
+    let oh = (h - k) / stride + 1;
+    let ow = (iw_t - k) / stride + 1;
+    // SRAM tile: taps reach rows up to dy + (oh-1)·s + 3 with dy ≤ kp-3,
+    // i.e. (oh-1)·s + kp — one margin row/col beyond K when kp > k. The
+    // margin multiplies zero-padded weights, so its content is free; we
+    // lay out a (tih × tiw) tile with the image in the top-left corner.
+    let tih = (oh - 1) * stride + kp;
+    let tiw = (ow - 1) * stride + kp;
+
+    // ---- DRAM image -------------------------------------------------------
+    let mut dram_img: Vec<i16> = Vec::new();
+    let img_base = 0usize;
+    dram_img.resize(cin * tih * tiw, 0);
+    for ch in 0..cin {
+        for y in 0..h {
+            for xx in 0..iw_t {
+                dram_img[img_base + (ch * tih + y) * tiw + xx] = x.at(y, xx, ch);
+            }
+        }
+    }
+    let bias_base = dram_img.len();
+    dram_img.extend_from_slice(&bias_px(b));
+
+    // channel split spans
+    let per = cin.div_ceil(c_splits);
+    let mut groups: Vec<(usize, usize)> = Vec::new(); // (c0, cn)
+    let mut c0 = 0;
+    while c0 < cin {
+        let cn = per.min(cin - c0);
+        groups.push((c0, cn));
+        c0 += cn;
+    }
+    // weight blocks per (group, tap) in the CU staging layout
+    let tap_list = taps(k);
+    let mut wblocks: Vec<(usize, usize, u8, u8)> = Vec::new(); // (off, cn, dy, dx)
+    for &(c0, cn) in &groups {
+        for tp in &tap_list {
+            let blk = tap_weights(w, k, cin, NUM_CU, *tp, c0, cn, 0);
+            let off = dram_img.len();
+            dram_img.extend_from_slice(&blk);
+            wblocks.push((off, cn, tp.dy, tp.dx));
+        }
+    }
+    let out_base = dram_img.len();
+    dram_img.resize(out_base + NUM_CU * oh * ow, 0);
+
+    // ---- command stream ---------------------------------------------------
+    let sram_out = (cin * tih * tiw).next_multiple_of(8) as u32;
+    let mut prog = vec![
+        Cmd::SetConv(ConvCfg { stride: stride as u8, shift, relu }),
+        Cmd::LoadBias(BiasLoad { dram_px: bias_base as u32 }),
+    ];
+    let total = wblocks.len();
+    for (pi, &(woff, cn, dy, dx)) in wblocks.iter().enumerate() {
+        let gi = pi / tap_list.len();
+        let (gc0, gcn) = groups[gi];
+        assert_eq!(gcn, cn);
+        if pi % tap_list.len() == 0 {
+            // (re)load this channel group's planar tile slice
+            prog.push(Cmd::LoadImage(DmaDesc::flat(
+                (img_base + gc0 * tih * tiw) as u32,
+                0,
+                (cn * tih * tiw) as u32,
+            )));
+            prog.push(Cmd::Sync);
+        }
+        prog.push(Cmd::LoadWeights(WeightLoad { dram_px: woff as u32, cn: cn as u16 }));
+        let mut flags = 0u8;
+        if pi == 0 {
+            flags |= PASS_FIRST;
+        }
+        if pi + 1 == total {
+            flags |= PASS_LAST;
+        }
+        prog.push(Cmd::Conv(ConvPass {
+            src_px: 0,
+            acc_px: 0,
+            dst_px: sram_out,
+            ih: tih as u16,
+            iw: tiw as u16,
+            ctot: cn as u16,
+            c0: 0,
+            cn: cn as u16,
+            oh: oh as u16,
+            ow: ow as u16,
+            dy,
+            dx,
+            flags,
+        }));
+    }
+    prog.push(Cmd::Store(DmaDesc::flat(out_base as u32, sram_out, (NUM_CU * oh * ow) as u32)));
+    prog.push(Cmd::Sync);
+    prog.push(Cmd::Halt);
+
+    // ---- simulate ---------------------------------------------------------
+    let mut accel = Accelerator::new(SimConfig {
+        dram_px: dram_img.len().next_multiple_of(8),
+        ..SimConfig::default()
+    });
+    accel.dram.data[..dram_img.len()].copy_from_slice(&dram_img);
+    accel.run_program(&prog).expect("program runs");
+    assert!(accel.stats.macs > 0);
+
+    let mut out = Tensor::zeros(oh, ow, NUM_CU);
+    for m in 0..NUM_CU {
+        for y in 0..oh {
+            for xx in 0..ow {
+                out.set(y, xx, m, accel.dram.data[out_base + (m * oh + y) * ow + xx]);
+            }
+        }
+    }
+    out
+}
+
+/// 3×3 kernels, strides 1/2, random shift/relu, 1–3 channel groups:
+/// the ISA-driven fast path equals the scalar oracle bit-for-bit.
+#[test]
+fn fastpath_3x3_channel_groups_bit_exact() {
+    check_seeded("fastpath 3x3 == oracle", 0xFA57_C0DE, 60, |g: &mut Gen| {
+        let stride = if g.bool() { 1 } else { 2 };
+        let cin = g.usize_in(1, 6);
+        let oh = g.usize_in(1, 10);
+        let ow = g.usize_in(1, 10);
+        let h = (oh - 1) * stride + 3;
+        let w = (ow - 1) * stride + 3;
+        let shift = g.usize_in(0, 14) as u8;
+        let relu = g.bool();
+        let c_splits = g.usize_in(1, cin.min(3));
+        let x = Tensor::from_vec(h, w, cin, g.vec_i16(h * w * cin, -2000, 2000));
+        let wts = g.vec_i16(9 * cin * NUM_CU, -256, 255);
+        let b: Vec<i32> = (0..NUM_CU).map(|_| g.rng.next_in(-100_000, 100_000)).collect();
+
+        let got = run_conv_isa(&x, &wts, &b, 3, stride, shift, relu, c_splits);
+        let want = conv_ref_with(&x, &spec(3, stride, cin, shift, relu), &wts, &b);
+        if got == want {
+            Ok(())
+        } else {
+            let diff = got.data.iter().zip(&want.data).filter(|(a, b)| a != b).count();
+            Err(format!(
+                "{diff}/{} px differ (s={stride} cin={cin} {oh}x{ow} \
+                 shift={shift} relu={relu} splits={c_splits})"
+            , got.data.len()))
+        }
+    });
+}
+
+/// K=5 (4 decomposition taps) and K=7 (9 taps): multi-pass PASS_FIRST /
+/// PASS_LAST accumulation across taps *and* channel groups.
+#[test]
+fn fastpath_kernel_decomposed_bit_exact() {
+    check_seeded("fastpath K>3 == oracle", 0xDEC0_17, 30, |g: &mut Gen| {
+        let k = if g.bool() { 5 } else { 7 };
+        let stride = if g.bool() { 1 } else { 2 };
+        let cin = g.usize_in(1, 3);
+        let oh = g.usize_in(1, 6);
+        let ow = g.usize_in(1, 6);
+        let h = (oh - 1) * stride + k;
+        let w = (ow - 1) * stride + k;
+        let shift = g.usize_in(0, 12) as u8;
+        let relu = g.bool();
+        let c_splits = g.usize_in(1, cin.min(2));
+        let x = Tensor::from_vec(h, w, cin, g.vec_i16(h * w * cin, -1000, 1000));
+        let wts = g.vec_i16(k * k * cin * NUM_CU, -128, 127);
+        let b: Vec<i32> = (0..NUM_CU).map(|_| g.rng.next_in(-50_000, 50_000)).collect();
+
+        let got = run_conv_isa(&x, &wts, &b, k, stride, shift, relu, c_splits);
+        let want = conv_ref_with(&x, &spec(k, stride, cin, shift, relu), &wts, &b);
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("K={k} s={stride} cin={cin} {oh}x{ow} splits={c_splits} mismatch"))
+        }
+    });
+}
+
+/// Wrapping territory: full-range i16 inputs and weights overflow the
+/// int32 accumulator — the wrapping contract must hold through the
+/// tap-major reordering.
+#[test]
+fn fastpath_wrapping_accumulation_bit_exact() {
+    check_seeded("fastpath wrapping == oracle", 0x0F10, 25, |g: &mut Gen| {
+        let cin = g.usize_in(2, 5);
+        let (oh, ow) = (g.usize_in(1, 6), g.usize_in(1, 6));
+        let (h, w) = (oh + 2, ow + 2);
+        let x = Tensor::from_vec(h, w, cin, g.vec_i16(h * w * cin, -32768, 32767));
+        let wts = g.vec_i16(9 * cin * NUM_CU, -32768, 32767);
+        let b: Vec<i32> = (0..NUM_CU).map(|_| g.rng.next_u32() as i32).collect();
+        let got = run_conv_isa(&x, &wts, &b, 3, 1, 0, false, 2.min(cin));
+        let want = conv_ref_with(&x, &spec(3, 1, cin, 0, false), &wts, &b);
+        if got == want {
+            Ok(())
+        } else {
+            Err(format!("wrapping mismatch cin={cin} {oh}x{ow}"))
+        }
+    });
+}
