@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     println!("calibrating on 8 blank frames…");
     let mut blank_max: f64 = 0.0;
     for s in 0..8 {
-        let r = coord.submit(synth_frame(9000 + s, false)).recv()?;
+        let r = coord.submit(synth_frame(9000 + s, false)).recv()?.ok()?;
         blank_max = blank_max.max(score(&r.output));
     }
     let threshold = blank_max * 1.25;
@@ -79,7 +79,7 @@ fn main() -> anyhow::Result<()> {
     let mut correct = 0;
     let mut total_cycles = 0u64;
     for &(seed, has_face) in &cases {
-        let r = coord.submit(synth_frame(seed, has_face)).recv()?;
+        let r = coord.submit(synth_frame(seed, has_face)).recv()?.ok()?;
         let s = score(&r.output);
         let detected = s > threshold;
         let ok = detected == has_face;

@@ -15,12 +15,12 @@ use kn_stream::util::cli::Cli;
 
 fn main() -> anyhow::Result<()> {
     let mut cli = Cli::new("streaming_camera", "fixed-rate camera through the coordinator");
-    cli.opt("net", "facenet", "zoo net")
+    cli.opt("net", "facenet", "zoo net (incl. graph nets edgenet|widenet)")
         .opt("frames", "64", "frames per operating point")
         .opt("workers", "1", "accelerator instances")
         .opt("tile-workers", "1", "parallel tile threads per frame");
     let m = cli.parse()?;
-    let net = zoo::by_name(m.get("net"))
+    let net = zoo::graph_by_name(m.get("net"))
         .ok_or_else(|| anyhow::anyhow!("unknown net {}", m.get("net")))?;
     let frames_n = m.get_usize("frames");
     let energy = EnergyModel::default();
@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     );
     for freq in [20.0, 100.0, 250.0, 500.0] {
         let op = OperatingPoint::for_freq(freq);
-        let coord = Coordinator::start(
+        let coord = Coordinator::start_graph(
             &net,
             CoordinatorConfig {
                 workers: m.get_usize("workers"),

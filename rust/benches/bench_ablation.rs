@@ -68,14 +68,14 @@ fn main() {
     }
     t.print();
 
-    // ---- host tile parallelism (run_frame_parallel) ------------------------
+    // ---- host segment-DAG parallelism (run_frame_parallel) -----------------
     let mut t = Table::new(
-        "Ablation: host-side parallel tile execution (bit-identical output/stats)",
+        "Ablation: host-side segment-DAG execution (bit-identical output/stats)",
         &["net", "tile threads", "wall/frame", "speedup"],
     );
-    for net_name in ["facenet", "alexnet"] {
-        let net = zoo::by_name(net_name).unwrap();
-        let runner = NetRunner::new(&net).unwrap();
+    for net_name in ["facenet", "alexnet", "edgenet", "widenet"] {
+        let net = zoo::graph_by_name(net_name).unwrap();
+        let runner = NetRunner::from_graph(&net).unwrap();
         let frame = Tensor::random_image(7, net.in_h, net.in_w, net.in_c);
         let mut base = None;
         for workers in [1usize, 2, 4, 8] {

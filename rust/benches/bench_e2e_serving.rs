@@ -22,14 +22,14 @@ fn main() {
         &["net", "f (MHz)", "workers", "tile thr", "device fps", "p50", "p99",
           "mJ/frame", "host sim fps"],
     );
-    for net_name in ["quicknet", "facenet"] {
-        let net = zoo::by_name(net_name).unwrap();
+    for net_name in ["quicknet", "facenet", "edgenet", "widenet"] {
+        let net = zoo::graph_by_name(net_name).unwrap();
         // (freq, chip workers, host tile threads per frame)
         for (freq, workers, tile_workers) in
             [(500.0, 1usize, 1usize), (20.0, 1, 1), (500.0, 4, 1), (500.0, 1, 4)]
         {
             let op = OperatingPoint::for_freq(freq);
-            let coord = Coordinator::start(
+            let coord = Coordinator::start_graph(
                 &net,
                 CoordinatorConfig { workers, queue_depth: 4, tile_workers, op },
             )

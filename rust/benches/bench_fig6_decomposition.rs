@@ -31,7 +31,8 @@ fn main() {
         format!("{:.0}KB", naive_out as f64 / 1e3),
         "NO (309KB input alone)".into(),
     ]);
-    for (gy, gx, fs, label) in [(3, 3, 2, "paper ÷9, ÷2"), (2, 2, 4, "2x2, ÷4"), (4, 4, 1, "4x4, ÷1")] {
+    let grids = [(3, 3, 2, "paper ÷9, ÷2"), (2, 2, 4, "2x2, ÷4"), (4, 4, 1, "4x4, ÷1")];
+    for (gy, gx, fs, label) in grids {
         let (tiles, in_b, out_b) = plan_fixed_grid(c1, h, w, gy, gx, fs);
         let fits = in_b + out_b <= SRAM_BYTES;
         t.row(&[

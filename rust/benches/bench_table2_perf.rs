@@ -19,7 +19,8 @@ fn main() {
     println!("Technology        : 65 nm CMOS (modeled — see DESIGN.md substitution)");
     println!("Supply voltage    : 0.6 – 1.0 V");
     println!("Clock rate        : 20 – 500 MHz");
-    println!("Core area         : {:.2} mm² (paper: 2.3 mm x 0.8 mm = 1.84 mm²)", rpt.total_mm2());
+    let core = rpt.total_mm2();
+    println!("Core area         : {core:.2} mm² (paper: 2.3 mm x 0.8 mm = 1.84 mm²)");
     println!("Gate count        : {:.2} M (paper: 0.3 M)", area.gate_count(&rpt) / 1e6);
     println!("CU engines        : {} ({} PEs each)", kn_stream::NUM_CU, kn_stream::PES_PER_CU);
     println!("On-chip SRAM      : {} KB single-port", kn_stream::SRAM_BYTES / 1024);

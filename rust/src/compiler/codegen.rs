@@ -1,25 +1,45 @@
-//! Command-stream code generation: decomposition plan → ISA program +
-//! DRAM image (weights, biases, activation canvases).
+//! Command-stream code generation: graph IR → decomposition plans →
+//! ISA program + DRAM image (weights, biases, activation canvases) +
+//! the dependency-annotated segment DAG the parallel runner schedules.
 //!
 //! ## DRAM layout
 //!
-//! Activations live in **padded planar canvases**: layer *i*'s output
-//! canvas is (C, Hc, Wc) planar with a `pad_next` zero border on all
-//! sides plus a `margin` zero skirt on bottom/right for the next
-//! layer's kernel-decomposition overshoot (Kp − K). Because DRAM is
-//! zero-initialised and the apron is never written, conv padding comes
-//! for free and tile loads are simple 2-D DMA reads.
+//! Activations live in **padded planar canvases**: one canvas per graph
+//! node output (plus the input), (C, Hc, Wc) planar with a zero border
+//! sized for the node's *consumers* — `pad` = the largest conv pad among
+//! them, plus a `margin` zero skirt on bottom/right for kernel-
+//! decomposition overshoot (Kp − K). Because DRAM is zero-initialised
+//! and the apron is never written, conv padding comes for free and tile
+//! loads are simple 2-D DMA reads. A consumer whose own pad is smaller
+//! than the canvas pad simply offsets its reads by the difference.
 //!
 //! Weights/biases are laid out in exactly the blocks `LoadWeights` /
 //! `LoadBias` consume (CU staging order `[ch][tap9][feat16]`), one block
-//! per (layer, conv-group, feature-tile, tap, channel-group).
+//! per (node, conv-group, feature-tile, tap, channel-group).
+//!
+//! ## Segments and the dependency DAG
+//!
+//! Every decomposed work unit (conv image-tile, pool/add channel chunk,
+//! concat input copy) is one [`Segment`]: an independently executable
+//! command span ending on a `Sync`. During emission the compiler records
+//! the canvas-space region each segment reads and writes; afterwards it
+//! derives `deps` — the producer segments whose written region
+//! intersects a read region. Where the decomposition makes output tiles
+//! disjoint this yields *tile-granular* edges (a consumer tile waits
+//! only for the producer tiles under its halo); where it doesn't, the
+//! edges degrade gracefully to node granularity. The runner executes
+//! the DAG with no other barriers.
 
 use std::collections::HashMap;
 
-use super::decompose::{plan_conv, Plan, PlanError};
+use super::decompose::{plan_conv, Plan};
 use super::kernel_decomp::{tap_weights, taps};
-use crate::isa::{BiasLoad, Cmd, ConvCfg, ConvPass, DmaDesc, PoolPass, WeightLoad, PASS_FIRST, PASS_LAST};
-use crate::model::{ConvSpec, LayerSpec, NetSpec};
+use crate::isa::{
+    AddPass, BiasLoad, Cmd, ConvCfg, ConvPass, DmaDesc, PoolPass, WeightLoad, PASS_FIRST,
+    PASS_LAST,
+};
+use crate::model::graph::{Graph, NodeOp, NodeRef};
+use crate::model::{AddSpec, ConcatSpec, ConvSpec, NetSpec, PoolSpec};
 use crate::{NUM_CU, SRAM_BYTES};
 
 /// A padded planar activation canvas in DRAM.
@@ -30,9 +50,9 @@ pub struct Canvas {
     pub h: usize,
     pub w: usize,
     pub c: usize,
-    /// Zero border on top/left (= consumer's conv pad).
+    /// Zero border on top/left (= the largest consumer conv pad).
     pub pad: usize,
-    /// Extra zero skirt on bottom/right (consumer's Kp − K).
+    /// Extra zero skirt on bottom/right (consumer Kp − K overshoot).
     pub margin: usize,
     /// Full canvas dims.
     pub ch: usize,
@@ -61,58 +81,110 @@ impl Canvas {
 
 /// One independently executable span of the command program: all passes
 /// of one decomposed work unit (a conv image-tile with its feature
-/// groups, or a pool channel chunk). Segments of the same layer read
-/// only the previous layer's canvas and write disjoint regions of their
-/// own output canvas, so the runner may execute them concurrently;
-/// between layers sits a barrier. Every segment ends on a `Sync`, which
-/// makes its stat deltas translation-invariant — the parallel runner
-/// relies on both properties.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// groups, a pool/add channel chunk, or one concat input copy). A
+/// segment becomes runnable when every segment in `deps` has completed;
+/// segments of the same node write disjoint regions of its output
+/// canvas, so no further ordering exists. Every segment ends on a
+/// `Sync`, which makes its stat deltas translation-invariant — the
+/// parallel runner relies on both properties.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Segment {
-    /// Index of the layer this segment belongs to.
-    pub layer: usize,
+    /// Index of the graph node this segment belongs to.
+    pub node: usize,
     /// Command range `[start, end)` into `CompiledNet::program`.
     pub start: usize,
     pub end: usize,
+    /// Conv datapath config the span's passes assume (`None` for
+    /// pool/add/concat). The DAG runner applies it before execution in
+    /// lieu of the single `SetConv` emitted outside the segments.
+    pub cfg: Option<ConvCfg>,
+    /// Producer segments (indices into `CompiledNet::segments`) that
+    /// must complete first. Always earlier indices (the emission order
+    /// is topological).
+    pub deps: Vec<usize>,
 }
 
 /// Everything the runtime needs to run one network on the accelerator.
 pub struct CompiledNet {
-    pub net: NetSpec,
+    pub graph: Graph,
     pub program: Vec<Cmd>,
     /// Initial DRAM image (weights + zeroed canvases). Length = DRAM px.
     pub dram_init: Vec<i16>,
     /// Input canvas (frame goes here) and final output canvas.
     pub input: Canvas,
     pub output: Canvas,
-    /// Per conv layer: the decomposition plan (reporting / benches).
+    /// Per conv node: the decomposition plan (reporting / benches).
     pub plans: Vec<(String, Plan)>,
     /// Total DRAM pixels used.
     pub dram_px: usize,
-    /// Independently schedulable command spans (parallel tile execution).
+    /// Independently schedulable command spans with their dependency
+    /// edges (the segment DAG).
     pub segments: Vec<Segment>,
-    /// Per layer: the conv datapath config its segments assume (`None`
-    /// for pool layers). The parallel runner applies this in lieu of
-    /// the single `SetConv` command emitted outside the segments.
-    pub layer_cfgs: Vec<Option<ConvCfg>>,
 }
 
-/// What the next layer needs from the current output canvas.
-fn consumer_needs(layers: &[LayerSpec], idx: usize) -> (usize, usize) {
-    match layers.get(idx + 1) {
-        Some(LayerSpec::Conv(c)) => {
-            let kp = 3 * c.k.div_ceil(3);
-            (c.pad, kp - c.k)
+impl CompiledNet {
+    /// The segment DAG in Graphviz DOT, for `kn-stream plan
+    /// --dump-graph` and scheduler debugging.
+    pub fn segments_dot(&self) -> String {
+        let mut out = String::from(
+            "digraph segments {\n  rankdir=LR;\n  node [shape=box fontname=\"monospace\"];\n",
+        );
+        for (i, s) in self.segments.iter().enumerate() {
+            let name = self.graph.nodes[s.node].name();
+            out.push_str(&format!(
+                "  s{i} [label=\"{name} #{i}\\ncmds [{}..{})\"];\n",
+                s.start, s.end
+            ));
         }
-        _ => (0, 0),
+        for (i, s) in self.segments.iter().enumerate() {
+            for &d in &s.deps {
+                out.push_str(&format!("  s{d} -> s{i};\n"));
+            }
+        }
+        out.push_str("}\n");
+        out
     }
+}
+
+/// Canvas-space rectangle a segment touches: channel, row and column
+/// ranges, all half-open. Reads include the zero apron (halo), writes
+/// cover only valid pixels; intersection of a read with an earlier
+/// write is exactly a scheduling dependency.
+#[derive(Clone, Copy, Debug)]
+struct Region {
+    canvas: usize,
+    c0: usize,
+    c1: usize,
+    y0: usize,
+    y1: usize,
+    x0: usize,
+    x1: usize,
+}
+
+impl Region {
+    fn overlaps(&self, o: &Region) -> bool {
+        self.canvas == o.canvas
+            && self.c0 < o.c1
+            && o.c0 < self.c1
+            && self.y0 < o.y1
+            && o.y0 < self.y1
+            && self.x0 < o.x1
+            && o.x0 < self.x1
+    }
+}
+
+/// What a segment reads and writes (parallel to `Emitter::segments`).
+struct SegMeta {
+    reads: Vec<Region>,
+    write: Region,
 }
 
 struct Emitter {
     program: Vec<Cmd>,
     dram: Vec<i16>,
     segments: Vec<Segment>,
-    /// weight-block offset cache: (layer, group, mtile, tap, cgroup)
+    seg_meta: Vec<SegMeta>,
+    /// weight-block offset cache: (node, group, mtile, tap, cgroup)
     wcache: HashMap<(usize, usize, usize, usize, usize), (usize, usize)>,
     bcache: HashMap<(usize, usize, usize), usize>,
 }
@@ -126,91 +198,149 @@ impl Emitter {
     fn push(&mut self, c: Cmd) {
         self.program.push(c);
     }
+    /// Close the segment opened at command index `start`.
+    fn end_segment(
+        &mut self,
+        node: usize,
+        start: usize,
+        cfg: Option<ConvCfg>,
+        reads: Vec<Region>,
+        write: Region,
+    ) {
+        self.segments.push(Segment { node, start, end: self.program.len(), cfg, deps: Vec::new() });
+        self.seg_meta.push(SegMeta { reads, write });
+    }
 }
 
-/// Compile a network into a command program + DRAM image.
-pub fn compile_net(net: &NetSpec) -> Result<CompiledNet, PlanError> {
+/// Canvas index of a node input: 0 is the graph input, node *i* writes
+/// canvas *i + 1*.
+fn canvas_of(r: NodeRef) -> usize {
+    match r {
+        NodeRef::Input => 0,
+        NodeRef::Node(i) => i + 1,
+    }
+}
+
+/// Compile a linear layer stack (converted to the graph IR underneath).
+pub fn compile_net(net: &NetSpec) -> anyhow::Result<CompiledNet> {
+    compile_graph(&Graph::from_net(net))
+}
+
+/// Compile a graph into a command program + DRAM image + segment DAG.
+pub fn compile_graph(graph: &Graph) -> anyhow::Result<CompiledNet> {
+    let shapes = graph.validate()?;
+    let n_canvas = graph.nodes.len() + 1;
+
+    // ---- canvas padding: what each producer's consumers need -------------
+    let mut pad = vec![0usize; n_canvas];
+    let mut need = vec![0usize; n_canvas]; // max (pad + Kp − K) over conv consumers
+    for node in &graph.nodes {
+        if let NodeOp::Conv(c) = &node.op {
+            let kp = 3 * c.k.div_ceil(3);
+            let j = canvas_of(node.inputs[0]);
+            pad[j] = pad[j].max(c.pad);
+            need[j] = need[j].max(c.pad + kp - c.k);
+        }
+    }
+
     let mut em = Emitter {
         program: Vec::new(),
         dram: Vec::new(),
         segments: Vec::new(),
+        seg_meta: Vec::new(),
         wcache: HashMap::new(),
         bcache: HashMap::new(),
     };
 
     // ---- canvases --------------------------------------------------------
-    let (pad0, margin0) = match &net.layers[0] {
-        LayerSpec::Conv(c) => (c.pad, 3 * c.k.div_ceil(3) - c.k),
-        _ => (0, 0),
-    };
-    let in_canvas = {
+    let mut canvases: Vec<Canvas> = Vec::with_capacity(n_canvas);
+    for j in 0..n_canvas {
+        let r = if j == 0 { NodeRef::Input } else { NodeRef::Node(j - 1) };
+        let (h, w, c) = graph.shape_of(r, &shapes);
+        let margin = need[j].saturating_sub(pad[j]);
         let base = em.alloc_dram(0);
-        let cv = Canvas::layout(base, net.in_h, net.in_w, net.in_c, pad0, margin0);
-        em.alloc_dram(cv.len_px());
-        cv
-    };
-    let mut canvases = vec![in_canvas.clone()];
-    let mut shape = net.in_shape();
-    for (i, l) in net.layers.iter().enumerate() {
-        shape = l.out_shape(shape);
-        let (pad, margin) = consumer_needs(&net.layers, i);
-        let base = em.alloc_dram(0);
-        let cv = Canvas::layout(base, shape.0, shape.1, shape.2, pad, margin);
+        let cv = Canvas::layout(base, h, w, c, pad[j], margin);
         em.alloc_dram(cv.len_px());
         canvases.push(cv);
     }
 
-    // ---- per-layer programs ----------------------------------------------
+    // ---- per-node programs -----------------------------------------------
     let mut plans = Vec::new();
-    let mut shape = net.in_shape();
-    for (li, l) in net.layers.iter().enumerate() {
-        let (src, dst) = (canvases[li].clone(), canvases[li + 1].clone());
-        match l {
-            LayerSpec::Conv(c) => {
-                let plan = plan_conv(c, shape.0, shape.1)?;
-                emit_conv(&mut em, li, c, &plan, &src, &dst);
+    for (ni, node) in graph.nodes.iter().enumerate() {
+        let dst = canvases[ni + 1].clone();
+        let srcs: Vec<(usize, Canvas)> = node
+            .inputs
+            .iter()
+            .map(|r| (canvas_of(*r), canvases[canvas_of(*r)].clone()))
+            .collect();
+        match &node.op {
+            NodeOp::Conv(c) => {
+                let (h, w, _) = graph.shape_of(node.inputs[0], &shapes);
+                let plan = plan_conv(c, h, w)
+                    .map_err(|e| anyhow::anyhow!("conv {}: {e}", c.name))?;
+                emit_conv(&mut em, ni, c, &plan, srcs[0].0, &srcs[0].1, (ni + 1, &dst));
                 plans.push((c.name.clone(), plan));
             }
-            LayerSpec::Pool(p) => {
-                emit_pool(&mut em, li, p, &src, &dst);
-            }
+            NodeOp::Pool(p) => emit_pool(&mut em, ni, p, srcs[0].0, &srcs[0].1, (ni + 1, &dst))?,
+            NodeOp::Add(a) => emit_add(&mut em, ni, a, &srcs, (ni + 1, &dst))?,
+            NodeOp::Concat(c) => emit_concat(&mut em, ni, c, &srcs, (ni + 1, &dst))?,
         }
-        shape = l.out_shape(shape);
     }
     em.push(Cmd::Halt);
 
-    let layer_cfgs = net
-        .layers
-        .iter()
-        .map(|l| match l {
-            LayerSpec::Conv(c) => {
-                Some(ConvCfg { stride: c.stride as u8, shift: c.shift, relu: c.relu })
+    // ---- dependency edges: read/write region intersection ----------------
+    let mut writers: Vec<Vec<usize>> = vec![Vec::new(); n_canvas];
+    for (si, m) in em.seg_meta.iter().enumerate() {
+        writers[m.write.canvas].push(si);
+    }
+    for si in 0..em.segments.len() {
+        let mut deps: Vec<usize> = Vec::new();
+        for r in &em.seg_meta[si].reads {
+            for &wi in &writers[r.canvas] {
+                if wi != si && r.overlaps(&em.seg_meta[wi].write) && !deps.contains(&wi) {
+                    deps.push(wi);
+                }
             }
-            LayerSpec::Pool(_) => None,
-        })
-        .collect();
+        }
+        deps.sort_unstable();
+        debug_assert!(deps.iter().all(|&d| d < si), "non-topological segment dep");
+        em.segments[si].deps = deps;
+    }
+
     let dram_px = em.dram.len();
+    let output = canvases[canvas_of(graph.output)].clone();
     Ok(CompiledNet {
-        net: net.clone(),
+        graph: graph.clone(),
         program: em.program,
         dram_init: em.dram,
         input: canvases[0].clone(),
-        output: canvases[canvases.len() - 1].clone(),
+        output,
         plans,
         dram_px,
         segments: em.segments,
-        layer_cfgs,
     })
 }
 
-/// Emit one conv layer.
-fn emit_conv(em: &mut Emitter, li: usize, c: &ConvSpec, plan: &Plan, src: &Canvas, dst: &Canvas) {
+/// Emit one conv node. `src.pad` may exceed the conv's own pad when a
+/// sibling consumer needs a wider apron; reads shift by the difference.
+fn emit_conv(
+    em: &mut Emitter,
+    ni: usize,
+    c: &ConvSpec,
+    plan: &Plan,
+    src_idx: usize,
+    src: &Canvas,
+    (dst_idx, dst): (usize, &Canvas),
+) {
     let weights = c.weights();
     let biases = c.biases();
     let cg = c.cin / c.groups; // channels per conv group
     let mg = c.cout / c.groups; // features per conv group
     let tap_list = taps(c.k);
-    em.push(Cmd::SetConv(ConvCfg { stride: c.stride as u8, shift: c.shift, relu: c.relu }));
+    let cfg = ConvCfg { stride: c.stride as u8, shift: c.shift, relu: c.relu };
+    // canvas-space offset of this consumer's padded coordinate frame
+    let off = src.pad - c.pad;
+    em.push(Cmd::SetConv(cfg));
 
     // SRAM layout per tile: [input tile (c_per_group planar)] [out staging 16]
     let in_tile_px_max =
@@ -233,7 +363,7 @@ fn emit_conv(em: &mut Emitter, li: usize, c: &ConvSpec, plan: &Plan, src: &Canva
         for g in 0..c.groups {
             for mt in 0..plan.m_tiles {
                 // bias block
-                let bkey = (li, g, mt);
+                let bkey = (ni, g, mt);
                 let boff = match em.bcache.get(&bkey) {
                     Some(&o) => o,
                     None => {
@@ -267,7 +397,7 @@ fn emit_conv(em: &mut Emitter, li: usize, c: &ConvSpec, plan: &Plan, src: &Canva
                     let c0 = cgi * plan.c_per_group;
                     let cn = plan.c_per_group.min(cg - c0);
                     for (ti, tp) in tap_list.iter().enumerate() {
-                        let wkey = (li, g, mt, ti, cgi);
+                        let wkey = (ni, g, mt, ti, cgi);
                         let (woff, _wlen) = match em.wcache.get(&wkey) {
                             Some(&v) => v,
                             None => {
@@ -303,7 +433,8 @@ fn emit_conv(em: &mut Emitter, li: usize, c: &ConvSpec, plan: &Plan, src: &Canva
                         for ci in 0..pd.cn {
                             let ch = g * cg + c0 + ci;
                             em.push(Cmd::LoadImage(DmaDesc {
-                                dram_px: src.px_canvas(ch, tile.iy0, tile.ix0) as u32,
+                                dram_px: src.px_canvas(ch, off + tile.iy0, off + tile.ix0)
+                                    as u32,
                                 sram_px: sram_in + (ci * in_px) as u32,
                                 row_px: tile.iw as u32,
                                 rows: tile.ih as u16,
@@ -363,17 +494,51 @@ fn emit_conv(em: &mut Emitter, li: usize, c: &ConvSpec, plan: &Plan, src: &Canva
                 em.push(Cmd::Sync);
             }
         }
-        em.segments.push(Segment { layer: li, start: seg_start, end: em.program.len() });
+        em.end_segment(
+            ni,
+            seg_start,
+            Some(cfg),
+            vec![Region {
+                canvas: src_idx,
+                c0: 0,
+                c1: c.cin,
+                y0: off + tile.iy0,
+                y1: off + tile.iy0 + tile.ih,
+                x0: off + tile.ix0,
+                x1: off + tile.ix0 + tile.iw,
+            }],
+            Region {
+                canvas: dst_idx,
+                c0: 0,
+                c1: c.cout,
+                y0: dst.pad + tile.oy0,
+                y1: dst.pad + tile.oy0 + tile.oh,
+                x0: dst.pad + tile.ox0,
+                x1: dst.pad + tile.ox0 + tile.ow,
+            },
+        );
     }
 }
 
-/// Emit one pool layer: channel-chunked SRAM-resident pooling.
-fn emit_pool(em: &mut Emitter, li: usize, p: &crate::model::PoolSpec, src: &Canvas, dst: &Canvas) {
+/// Emit one pool node: channel-chunked SRAM-resident pooling.
+fn emit_pool(
+    em: &mut Emitter,
+    ni: usize,
+    p: &PoolSpec,
+    src_idx: usize,
+    src: &Canvas,
+    (dst_idx, dst): (usize, &Canvas),
+) -> anyhow::Result<()> {
     let (ih, iw, c) = (src.h, src.w, src.c);
     let oh = (ih - p.k) / p.stride + 1;
     let ow = (iw - p.k) / p.stride + 1;
     // channels per chunk limited by SRAM: (ih*iw + oh*ow) * 2 bytes each
     let per_ch = (ih * iw + oh * ow) * 2;
+    anyhow::ensure!(
+        per_ch <= SRAM_BYTES,
+        "pool {}: plane {ih}x{iw} exceeds SRAM even one channel at a time",
+        p.name
+    );
     let cc_max = (SRAM_BYTES / per_ch).max(1).min(c);
     let mut ch0 = 0;
     while ch0 < c {
@@ -413,9 +578,199 @@ fn emit_pool(em: &mut Emitter, li: usize, p: &crate::model::PoolSpec, src: &Canv
             }));
         }
         em.push(Cmd::Sync);
-        em.segments.push(Segment { layer: li, start: seg_start, end: em.program.len() });
+        em.end_segment(
+            ni,
+            seg_start,
+            None,
+            vec![Region {
+                canvas: src_idx,
+                c0: ch0,
+                c1: ch0 + cc,
+                y0: src.pad,
+                y1: src.pad + ih,
+                x0: src.pad,
+                x1: src.pad + iw,
+            }],
+            Region {
+                canvas: dst_idx,
+                c0: ch0,
+                c1: ch0 + cc,
+                y0: dst.pad,
+                y1: dst.pad + oh,
+                x0: dst.pad,
+                x1: dst.pad + ow,
+            },
+        );
         ch0 += cc;
     }
+    Ok(())
+}
+
+/// Emit one residual-add node: channel-chunked `Add` passes over both
+/// operand canvases.
+fn emit_add(
+    em: &mut Emitter,
+    ni: usize,
+    spec: &AddSpec,
+    srcs: &[(usize, Canvas)],
+    (dst_idx, dst): (usize, &Canvas),
+) -> anyhow::Result<()> {
+    let (a_idx, a) = (srcs[0].0, &srcs[0].1);
+    let (b_idx, b) = (srcs[1].0, &srcs[1].1);
+    let (h, w, c) = (a.h, a.w, a.c);
+    // SRAM: operand A + operand B + output, each cc·h·w px
+    let per_ch = 3 * h * w * 2;
+    anyhow::ensure!(
+        per_ch <= SRAM_BYTES,
+        "add {}: plane {h}x{w} exceeds SRAM even one channel at a time",
+        spec.name
+    );
+    let cc_max = (SRAM_BYTES / per_ch).max(1).min(c);
+    let mut ch0 = 0;
+    while ch0 < c {
+        let seg_start = em.program.len();
+        let cc = cc_max.min(c - ch0);
+        let n_px = cc * h * w;
+        let sram_a = 0u32;
+        let sram_b = n_px as u32;
+        let sram_out = (2 * n_px) as u32;
+        for (src, base) in [(a, sram_a), (b, sram_b)] {
+            for ci in 0..cc {
+                em.push(Cmd::LoadImage(DmaDesc {
+                    dram_px: src.px(ch0 + ci, 0, 0) as u32,
+                    sram_px: base + (ci * h * w) as u32,
+                    row_px: w as u32,
+                    rows: h as u16,
+                    dram_pitch: src.cw as u32,
+                    sram_pitch: w as u32,
+                }));
+            }
+        }
+        em.push(Cmd::Sync);
+        em.push(Cmd::Add(AddPass {
+            src_a_px: sram_a,
+            src_b_px: sram_b,
+            dst_px: sram_out,
+            n_px: n_px as u32,
+            shift: spec.shift,
+            relu: spec.relu,
+        }));
+        for ci in 0..cc {
+            em.push(Cmd::Store(DmaDesc {
+                dram_px: dst.px(ch0 + ci, 0, 0) as u32,
+                sram_px: sram_out + (ci * h * w) as u32,
+                row_px: w as u32,
+                rows: h as u16,
+                dram_pitch: dst.cw as u32,
+                sram_pitch: w as u32,
+            }));
+        }
+        em.push(Cmd::Sync);
+        let read = |canvas: usize, cv: &Canvas| Region {
+            canvas,
+            c0: ch0,
+            c1: ch0 + cc,
+            y0: cv.pad,
+            y1: cv.pad + h,
+            x0: cv.pad,
+            x1: cv.pad + w,
+        };
+        em.end_segment(
+            ni,
+            seg_start,
+            None,
+            vec![read(a_idx, a), read(b_idx, b)],
+            Region {
+                canvas: dst_idx,
+                c0: ch0,
+                c1: ch0 + cc,
+                y0: dst.pad,
+                y1: dst.pad + h,
+                x0: dst.pad,
+                x1: dst.pad + w,
+            },
+        );
+        ch0 += cc;
+    }
+    Ok(())
+}
+
+/// Emit one concat node: per input, channel-chunked DMA copies into the
+/// destination canvas at the input's channel offset. Pure data movement
+/// (SRAM-staged LoadImage → Store); each copy is its own segment, so a
+/// consumer needing only one branch's channels never waits on the other.
+fn emit_concat(
+    em: &mut Emitter,
+    ni: usize,
+    spec: &ConcatSpec,
+    srcs: &[(usize, Canvas)],
+    (dst_idx, dst): (usize, &Canvas),
+) -> anyhow::Result<()> {
+    let (h, w) = (dst.h, dst.w);
+    let per_ch = h * w * 2;
+    anyhow::ensure!(
+        per_ch <= SRAM_BYTES,
+        "concat {}: plane {h}x{w} exceeds SRAM even one channel at a time",
+        spec.name
+    );
+    let cc_max = (SRAM_BYTES / per_ch).max(1);
+    let mut coff = 0usize;
+    for (src_idx, src) in srcs {
+        let c = src.c;
+        let mut ch0 = 0;
+        while ch0 < c {
+            let seg_start = em.program.len();
+            let cc = cc_max.min(c - ch0);
+            for ci in 0..cc {
+                em.push(Cmd::LoadImage(DmaDesc {
+                    dram_px: src.px(ch0 + ci, 0, 0) as u32,
+                    sram_px: (ci * h * w) as u32,
+                    row_px: w as u32,
+                    rows: h as u16,
+                    dram_pitch: src.cw as u32,
+                    sram_pitch: w as u32,
+                }));
+            }
+            em.push(Cmd::Sync);
+            for ci in 0..cc {
+                em.push(Cmd::Store(DmaDesc {
+                    dram_px: dst.px(coff + ch0 + ci, 0, 0) as u32,
+                    sram_px: (ci * h * w) as u32,
+                    row_px: w as u32,
+                    rows: h as u16,
+                    dram_pitch: dst.cw as u32,
+                    sram_pitch: w as u32,
+                }));
+            }
+            em.push(Cmd::Sync);
+            em.end_segment(
+                ni,
+                seg_start,
+                None,
+                vec![Region {
+                    canvas: *src_idx,
+                    c0: ch0,
+                    c1: ch0 + cc,
+                    y0: src.pad,
+                    y1: src.pad + h,
+                    x0: src.pad,
+                    x1: src.pad + w,
+                }],
+                Region {
+                    canvas: dst_idx,
+                    c0: coff + ch0,
+                    c1: coff + ch0 + cc,
+                    y0: dst.pad,
+                    y1: dst.pad + h,
+                    x0: dst.pad,
+                    x1: dst.pad + w,
+                },
+            );
+            ch0 += cc;
+        }
+        coff += c;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -423,41 +778,81 @@ mod tests {
     use super::*;
     use crate::model::zoo;
 
-    /// Segments must exactly cover the program minus the per-conv-layer
-    /// `SetConv` and the final `Halt`, without overlap, in layer order,
+    /// Segments must exactly cover the program minus the per-conv-node
+    /// `SetConv` and the final `Halt`, without overlap, in node order,
     /// and each must end on the `Sync` barrier the parallel runner's
     /// translation-invariance argument depends on.
     #[test]
     fn segments_partition_the_program() {
         // (vgg16 omitted: compiling its full weight image is bench-scale)
-        for name in ["quicknet", "facenet", "alexnet"] {
-            let net = zoo::by_name(name).unwrap();
-            let compiled = compile_net(&net).unwrap();
+        for name in ["quicknet", "facenet", "alexnet", "edgenet", "widenet"] {
+            let graph = zoo::graph_by_name(name).unwrap();
+            let compiled = compile_graph(&graph).unwrap();
             let mut covered = 0usize;
             let mut at = 0usize;
-            let mut last_layer = 0usize;
+            let mut last_node = 0usize;
             for s in &compiled.segments {
                 assert!(s.start < s.end && s.end <= compiled.program.len(), "{name}: {s:?}");
                 assert!(s.start >= at, "{name}: overlapping segments at {s:?}");
-                assert!(s.layer >= last_layer, "{name}: segments out of layer order");
+                assert!(s.node >= last_node, "{name}: segments out of node order");
                 assert_eq!(
                     compiled.program[s.end - 1],
                     Cmd::Sync,
-                    "{name}: segment {s:?} must end on a Sync barrier"
+                    "{name}: segment must end on a Sync barrier"
                 );
-                // commands skipped between segments are layer prologues
+                // commands skipped between segments are node prologues
                 for cmd in &compiled.program[at..s.start] {
                     assert!(matches!(cmd, Cmd::SetConv(_)), "{name}: uncovered {cmd:?}");
                 }
                 covered += s.end - s.start;
                 at = s.end;
-                last_layer = s.layer;
+                last_node = s.node;
             }
             // tail: only the Halt remains
             assert_eq!(&compiled.program[at..], &[Cmd::Halt], "{name}");
-            let n_conv = compiled.layer_cfgs.iter().filter(|c| c.is_some()).count();
+            let n_conv = graph
+                .nodes
+                .iter()
+                .filter(|n| matches!(n.op, crate::model::NodeOp::Conv(_)))
+                .count();
             assert_eq!(covered + n_conv + 1, compiled.program.len(), "{name}");
-            assert_eq!(compiled.layer_cfgs.len(), net.layers.len(), "{name}");
+        }
+    }
+
+    /// Dependency edges must point backwards, only at segments of
+    /// producer nodes, and every read of a produced canvas must create
+    /// at least one edge.
+    #[test]
+    fn segment_deps_are_topological_and_complete() {
+        for name in ["facenet", "edgenet", "widenet"] {
+            let graph = zoo::graph_by_name(name).unwrap();
+            let compiled = compile_graph(&graph).unwrap();
+            for (si, s) in compiled.segments.iter().enumerate() {
+                for &d in &s.deps {
+                    assert!(d < si, "{name}: forward dep {d} -> {si}");
+                    let producer = compiled.segments[d].node;
+                    assert!(
+                        graph.nodes[s.node]
+                            .inputs
+                            .iter()
+                            .any(|r| matches!(r, crate::model::NodeRef::Node(i) if *i == producer)),
+                        "{name}: segment of node {} depends on non-input node {}",
+                        s.node,
+                        producer
+                    );
+                }
+                // any segment whose node reads a produced tensor needs deps
+                let reads_produced = graph.nodes[s.node]
+                    .inputs
+                    .iter()
+                    .any(|r| matches!(r, crate::model::NodeRef::Node(_)));
+                assert_eq!(
+                    !s.deps.is_empty(),
+                    reads_produced,
+                    "{name}: segment {si} of node {} dep count",
+                    s.node
+                );
+            }
         }
     }
 
@@ -467,7 +862,92 @@ mod tests {
     fn facenet_has_parallel_width() {
         let compiled = compile_net(&zoo::facenet()).unwrap();
         let first_layer: Vec<_> =
-            compiled.segments.iter().filter(|s| s.layer == 0).collect();
+            compiled.segments.iter().filter(|s| s.node == 0).collect();
         assert!(first_layer.len() >= 4, "expected >=4 tiles, got {}", first_layer.len());
+    }
+
+    /// widenet's two stem branches both read only the graph input, so
+    /// neither may depend on the other — the parallel width the DAG
+    /// scheduler exploits. The concat copies depend on exactly one
+    /// branch each.
+    #[test]
+    fn widenet_branches_are_independent() {
+        let graph = zoo::widenet();
+        let compiled = compile_graph(&graph).unwrap();
+        let node = |n: &str| {
+            graph.nodes.iter().position(|x| x.name() == n).unwrap()
+        };
+        let (wa, wb, cat) = (node("wa"), node("wb"), node("cat"));
+        for s in &compiled.segments {
+            if s.node == wa || s.node == wb {
+                assert!(s.deps.is_empty(), "stem branch has deps: {s:?}");
+            }
+            if s.node == cat {
+                assert!(!s.deps.is_empty());
+                let dep_nodes: Vec<usize> =
+                    s.deps.iter().map(|&d| compiled.segments[d].node).collect();
+                assert!(
+                    dep_nodes.iter().all(|&n| n == wa) || dep_nodes.iter().all(|&n| n == wb),
+                    "concat copy should wait on exactly one branch: {dep_nodes:?}"
+                );
+            }
+        }
+    }
+
+    /// A conv consumer tile must depend only on the producer tiles its
+    /// halo actually touches — tile-granular, not node-granular, edges.
+    /// A 3-way spatial split makes the far tile untouchable: the halo is
+    /// 1 px, the middle tile is wider.
+    #[test]
+    fn conv_deps_are_tile_granular_where_disjoint() {
+        use crate::model::{ConvSpec, LayerSpec};
+        let conv = |name: &str, cin: usize| {
+            LayerSpec::Conv(ConvSpec {
+                name: name.into(),
+                k: 3,
+                stride: 1,
+                pad: 1,
+                cin,
+                cout: 16,
+                shift: 9,
+                relu: true,
+                wseed: 77,
+                bseed: 78,
+                groups: 1,
+            })
+        };
+        let net = NetSpec {
+            name: "tall".into(),
+            in_h: 300,
+            in_w: 8,
+            in_c: 2,
+            layers: vec![conv("c1", 2), conv("c2", 16)],
+        };
+        let compiled = compile_net(&net).unwrap();
+        let c1: Vec<usize> = compiled
+            .segments
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.node == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let c2: Vec<&Segment> = compiled.segments.iter().filter(|s| s.node == 1).collect();
+        assert!(c1.len() >= 3, "producer should split >= 3 ways, got {}", c1.len());
+        // first-layer tiles read only the input canvas: no deps
+        assert!(c1.iter().all(|&i| compiled.segments[i].deps.is_empty()));
+        let mut seen: Vec<usize> = Vec::new();
+        let mut some_partial = false;
+        for s in &c2 {
+            assert!(!s.deps.is_empty());
+            assert!(s.deps.iter().all(|d| c1.contains(d)), "dep outside producer: {s:?}");
+            some_partial |= s.deps.len() < c1.len();
+            for &d in &s.deps {
+                if !seen.contains(&d) {
+                    seen.push(d);
+                }
+            }
+        }
+        assert!(some_partial, "every consumer tile waits on every producer tile");
+        assert_eq!(seen.len(), c1.len(), "union of deps must cover the producer");
     }
 }

@@ -252,7 +252,8 @@ mod tests {
             if cover.iter().all(|&c| c == 1) {
                 Ok(())
             } else {
-                Err(format!("{oh}x{ow} grid {gy}x{gx}: coverage {:?}", cover.iter().filter(|&&c| c != 1).count()))
+                let bad = cover.iter().filter(|&&c| c != 1).count();
+                Err(format!("{oh}x{ow} grid {gy}x{gx}: coverage {bad:?}"))
             }
         });
     }

@@ -1,41 +1,96 @@
-//! Layer → decomposition plan → ISA command stream (the paper's §5
-//! contribution, as a compiler).
+//! Graph IR → decomposition plan → ISA command stream (the paper's §5
+//! contribution, as a compiler) → segment-DAG execution.
 //!
 //! * [`decompose`] — the image/feature/channel decomposition solver.
 //! * [`kernel_decomp`] — K×K → 3×3 tap enumeration (fixed CU array).
-//! * [`codegen`] — plan → command program + DRAM image (+ the segment
-//!   map of independently executable work units).
+//! * [`codegen`] — graph → command program + DRAM image + the segment
+//!   DAG (independently executable work units annotated with their
+//!   producer→consumer dependencies).
 //! * [`NetRunner`] — compile-once / run-many harness: pooled, reusable
 //!   simulator instances (no per-frame SRAM/DRAM reallocation), a
 //!   sequential path ([`NetRunner::run_frame`]) and a parallel path
-//!   ([`NetRunner::run_frame_parallel`]) that executes a layer's
-//!   decomposed tiles/feature-groups concurrently.
+//!   ([`NetRunner::run_frame_parallel`]) that executes the segment DAG
+//!   over a worker pool with a ready-queue — a segment becomes runnable
+//!   the moment its producers have stored, with **no layer barriers**,
+//!   so fast tiles of one node overlap slow tiles of another and
+//!   branch/residual topologies parallelize across branches.
 
 pub mod codegen;
 pub mod decompose;
 pub mod kernel_decomp;
 
-pub use codegen::{compile_net, CompiledNet, Segment};
+pub use codegen::{compile_graph, compile_net, CompiledNet, Segment};
 pub use decompose::{plan_conv, Plan, PlanError};
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
 
-use crate::model::{NetSpec, Tensor};
-use crate::sim::accel::StoreLog;
+use crate::model::{Graph, NetSpec, Tensor};
+use crate::sim::accel::{SharedDram, StoreLog};
 use crate::sim::{Accelerator, SimConfig, SimStats};
+
+/// One scheduler event of a traced parallel run: a worker entered
+/// (`enter == true`) or finished a segment. Events are globally ordered
+/// (the trace lock serializes them), so "segment A started before
+/// segment B finished" is a positional check — the overlap property the
+/// DAG scheduler exists to create.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SegTrace {
+    pub seg: usize,
+    pub node: usize,
+    pub enter: bool,
+}
+
+/// Ready-queue state shared by the DAG workers.
+struct Sched {
+    queue: VecDeque<usize>,
+    indeg: Vec<usize>,
+    remaining: usize,
+    /// Set when a worker panicked mid-segment: siblings must exit so
+    /// the thread scope can join them and propagate the panic instead
+    /// of deadlocking on a `remaining` count that will never drain.
+    poisoned: bool,
+}
+
+/// Armed for the duration of one segment's execution; if the segment
+/// panics, `Drop` runs during unwind and poisons the scheduler so the
+/// other workers wake up and bail out.
+struct PoisonGuard<'a> {
+    sched: &'a Mutex<Sched>,
+    cv: &'a Condvar,
+    armed: bool,
+}
+
+impl Drop for PoisonGuard<'_> {
+    fn drop(&mut self) {
+        if self.armed {
+            // Avoid unwrap inside Drop: if the mutex itself is poisoned
+            // the sibling workers' own `lock().unwrap()` already
+            // propagates the panic.
+            if let Ok(mut st) = self.sched.lock() {
+                st.poisoned = true;
+            }
+            self.cv.notify_all();
+        }
+    }
+}
 
 /// Compile-once / run-many harness around the simulator.
 pub struct NetRunner {
     pub compiled: CompiledNet,
     cfg: SimConfig,
-    /// Segments grouped by layer (indexed `[layer]`), precomputed once —
-    /// the parallel path consumes this per frame.
-    layer_segments: Vec<Vec<Segment>>,
+    /// Forward edges of the segment DAG: `dependents[i]` are the
+    /// segments unblocked (in part) by segment `i` completing.
+    dependents: Vec<Vec<usize>>,
+    /// Initial dependency count per segment.
+    indeg: Vec<usize>,
+    /// Total commands covered by segments (the rest — `SetConv`s and
+    /// the `Halt` — are accounted to the parallel totals directly).
+    covered: usize,
     /// Reusable full simulators (sequential path).
     pool: Mutex<Vec<Accelerator>>,
-    /// Reusable DRAM-less simulators: parallel tile workers execute
-    /// against a shared frame DRAM image instead of owning one.
+    /// Reusable DRAM-less simulators: parallel workers execute against
+    /// a shared frame DRAM image instead of owning one.
     worker_pool: Mutex<Vec<Accelerator>>,
     /// Reusable shared frame DRAM images (parallel path).
     dram_pool: Mutex<Vec<Vec<i16>>>,
@@ -46,17 +101,33 @@ impl NetRunner {
         Self::with_config(net, SimConfig::default())
     }
 
-    pub fn with_config(net: &NetSpec, mut cfg: SimConfig) -> anyhow::Result<Self> {
-        let compiled = compile_net(net).map_err(|e| anyhow::anyhow!("{e}"))?;
+    pub fn with_config(net: &NetSpec, cfg: SimConfig) -> anyhow::Result<Self> {
+        Self::from_graph_with_config(&Graph::from_net(net), cfg)
+    }
+
+    pub fn from_graph(graph: &Graph) -> anyhow::Result<Self> {
+        Self::from_graph_with_config(graph, SimConfig::default())
+    }
+
+    pub fn from_graph_with_config(graph: &Graph, mut cfg: SimConfig) -> anyhow::Result<Self> {
+        let compiled = compile_graph(graph)?;
         cfg.dram_px = compiled.dram_px;
-        let mut layer_segments = vec![Vec::new(); net.layers.len()];
-        for s in &compiled.segments {
-            layer_segments[s.layer].push(*s);
+        let n = compiled.segments.len();
+        let mut dependents = vec![Vec::new(); n];
+        let mut indeg = vec![0usize; n];
+        for (i, s) in compiled.segments.iter().enumerate() {
+            indeg[i] = s.deps.len();
+            for &d in &s.deps {
+                dependents[d].push(i);
+            }
         }
+        let covered: usize = compiled.segments.iter().map(|s| s.end - s.start).sum();
         Ok(Self {
             compiled,
             cfg,
-            layer_segments,
+            dependents,
+            indeg,
+            covered,
             pool: Mutex::new(Vec::new()),
             worker_pool: Mutex::new(Vec::new()),
             dram_pool: Mutex::new(Vec::new()),
@@ -105,16 +176,20 @@ impl NetRunner {
         out
     }
 
+    fn check_frame(&self, frame: &Tensor) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            frame.shape() == self.compiled.graph.in_shape(),
+            "frame shape {:?} != net input {:?}",
+            frame.shape(),
+            self.compiled.graph.in_shape()
+        );
+        Ok(())
+    }
+
     /// Run one frame through a pooled simulator instance; returns the
     /// output tensor and the run's statistics.
     pub fn run_frame(&self, frame: &Tensor) -> anyhow::Result<(Tensor, SimStats)> {
-        let net = &self.compiled.net;
-        anyhow::ensure!(
-            frame.shape() == net.in_shape(),
-            "frame shape {:?} != net input {:?}",
-            frame.shape(),
-            net.in_shape()
-        );
+        self.check_frame(frame)?;
         let mut accel = self.take_full();
         accel.reset_counters();
         self.init_dram(&mut accel.dram.data, frame);
@@ -127,34 +202,54 @@ impl NetRunner {
         Ok((out, stats))
     }
 
-    /// Run one frame with each layer's decomposed tiles/feature-groups
-    /// executed concurrently by up to `workers` simulator instances
-    /// (scoped threads, shared read-only frame DRAM, deferred disjoint
-    /// stores). Output **and** aggregated [`SimStats`] are bit-identical
-    /// to [`run_frame`]: segments are independent by construction, and
-    /// every counter delta is translation-invariant across the
-    /// per-segment `Sync` barriers, so summing per-worker stats
-    /// reproduces the sequential totals exactly.
+    /// Run one frame with the segment DAG executed by up to `workers`
+    /// simulator instances over a shared ready-queue: a segment is
+    /// enqueued the moment its dependency count reaches zero, so
+    /// consumer tiles start as soon as *their* producer tiles have
+    /// stored — no per-node barrier, and independent branches run
+    /// concurrently. Output **and** aggregated [`SimStats`] are
+    /// bit-identical to [`run_frame`]: every counter delta is
+    /// translation-invariant across the per-segment `Sync` barriers, so
+    /// summing per-worker stats reproduces the sequential totals
+    /// exactly, in any execution order the DAG admits.
     pub fn run_frame_parallel(
         &self,
         frame: &Tensor,
         workers: usize,
     ) -> anyhow::Result<(Tensor, SimStats)> {
+        self.run_frame_dag(frame, workers, None)
+    }
+
+    /// [`NetRunner::run_frame_parallel`] with a scheduler trace — used
+    /// by tests to prove cross-node overlap and by `--dump-graph`
+    /// debugging.
+    pub fn run_frame_parallel_traced(
+        &self,
+        frame: &Tensor,
+        workers: usize,
+    ) -> anyhow::Result<(Tensor, SimStats, Vec<SegTrace>)> {
+        let trace = Mutex::new(Vec::new());
+        let (out, stats) = self.run_frame_dag(frame, workers, Some(&trace))?;
+        Ok((out, stats, trace.into_inner().unwrap()))
+    }
+
+    fn run_frame_dag(
+        &self,
+        frame: &Tensor,
+        workers: usize,
+        trace: Option<&Mutex<Vec<SegTrace>>>,
+    ) -> anyhow::Result<(Tensor, SimStats)> {
         if workers <= 1 || self.compiled.segments.len() <= 1 {
             return self.run_frame(frame);
         }
-        let net = &self.compiled.net;
-        anyhow::ensure!(
-            frame.shape() == net.in_shape(),
-            "frame shape {:?} != net input {:?}",
-            frame.shape(),
-            net.in_shape()
-        );
+        self.check_frame(frame)?;
         let mut dram = self.dram_pool.lock().unwrap().pop().unwrap_or_default();
         dram.resize(self.compiled.dram_px, 0);
         self.init_dram(&mut dram, frame);
 
-        let nworkers = workers.min(self.compiled.segments.len());
+        let segments = &self.compiled.segments;
+        let program = &self.compiled.program;
+        let nworkers = workers.min(segments.len());
         let mut accels: Vec<Accelerator> = (0..nworkers)
             .map(|_| {
                 let mut a = self.take_worker();
@@ -163,54 +258,103 @@ impl NetRunner {
             })
             .collect();
 
-        let program = &self.compiled.program;
-        let mut covered = 0usize;
-        for (li, segs) in self.layer_segments.iter().enumerate() {
-            if segs.is_empty() {
-                continue;
-            }
-            covered += segs.iter().map(|s| s.end - s.start).sum::<usize>();
-            if let Some(cfg) = self.compiled.layer_cfgs[li] {
-                for a in &mut accels {
-                    a.set_conv_cfg(cfg);
-                }
-            }
-            // Fan the layer's segments out over the workers; barrier at
-            // the end of the scope, then apply the deferred stores.
-            let next = AtomicUsize::new(0);
-            let dram_view: &[i16] = &dram;
-            let logs: Vec<StoreLog> = std::thread::scope(|scope| {
-                let next = &next;
-                let handles: Vec<_> = accels
-                    .iter_mut()
-                    .map(|accel| {
-                        scope.spawn(move || {
-                            let mut wlog = StoreLog::new();
-                            loop {
-                                let i = next.fetch_add(1, Ordering::Relaxed);
-                                let Some(seg) = segs.get(i) else { break };
-                                for cmd in &program[seg.start..seg.end] {
-                                    accel.exec_shared(*cmd, dram_view, &mut wlog);
-                                }
-                            }
-                            wlog
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("tile worker panicked")).collect()
-            });
-            for log in logs {
-                for (dst, row) in log {
-                    dram[dst..dst + row.len()].copy_from_slice(&row);
-                }
+        let mut queue = VecDeque::new();
+        for (i, &d) in self.indeg.iter().enumerate() {
+            if d == 0 {
+                queue.push_back(i);
             }
         }
+        let sched = Mutex::new(Sched {
+            queue,
+            indeg: self.indeg.clone(),
+            remaining: segments.len(),
+            poisoned: false,
+        });
+        let cv = Condvar::new();
+        // All conflicting pixel accesses through this handle are ordered
+        // by the segment DAG: a consumer is enqueued only after its
+        // producers published, under the scheduler mutex (release/
+        // acquire = happens-before); unordered accesses are disjoint.
+        let dram_cell = SharedDram::new(&mut dram);
+
+        std::thread::scope(|scope| {
+            let sched = &sched;
+            let cv = &cv;
+            let dram_cell = &dram_cell;
+            let dependents = &self.dependents;
+            let handles: Vec<_> = accels
+                .iter_mut()
+                .map(|accel| {
+                    scope.spawn(move || {
+                        let mut wlog = StoreLog::new();
+                        loop {
+                            let idx = {
+                                let mut st = sched.lock().unwrap();
+                                loop {
+                                    if st.poisoned {
+                                        return;
+                                    }
+                                    if let Some(i) = st.queue.pop_front() {
+                                        break i;
+                                    }
+                                    if st.remaining == 0 {
+                                        return;
+                                    }
+                                    st = cv.wait(st).unwrap();
+                                }
+                            };
+                            let mut guard = PoisonGuard { sched, cv, armed: true };
+                            let seg = &segments[idx];
+                            if let Some(t) = trace {
+                                t.lock().unwrap().push(SegTrace {
+                                    seg: idx,
+                                    node: seg.node,
+                                    enter: true,
+                                });
+                            }
+                            if let Some(cfg) = seg.cfg {
+                                accel.set_conv_cfg(cfg);
+                            }
+                            for cmd in &program[seg.start..seg.end] {
+                                accel.exec_shared(*cmd, dram_cell, &mut wlog);
+                            }
+                            for (dst, row) in wlog.drain(..) {
+                                dram_cell.write(dst, &row);
+                            }
+                            if let Some(t) = trace {
+                                t.lock().unwrap().push(SegTrace {
+                                    seg: idx,
+                                    node: seg.node,
+                                    enter: false,
+                                });
+                            }
+                            let mut st = sched.lock().unwrap();
+                            st.remaining -= 1;
+                            for &d in &dependents[idx] {
+                                st.indeg[d] -= 1;
+                                if st.indeg[d] == 0 {
+                                    st.queue.push_back(d);
+                                }
+                            }
+                            drop(st);
+                            guard.armed = false;
+                            cv.notify_all();
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().expect("tile worker panicked");
+            }
+        });
 
         // Merge per-worker stats; the SetConv/Halt commands living
         // outside the segments cost no cycles but are counted by the
         // sequential stream, so count them here too.
-        let mut totals =
-            SimStats { commands: (program.len() - covered) as u64, ..SimStats::default() };
+        let mut totals = SimStats {
+            commands: (program.len() - self.covered) as u64,
+            ..SimStats::default()
+        };
         for mut a in accels {
             a.sync_stats();
             totals.add(&a.stats);
@@ -227,7 +371,7 @@ impl NetRunner {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::reference::run_net_ref;
+    use crate::model::reference::{run_graph_ref, run_net_ref};
     use crate::model::zoo;
 
     #[test]
@@ -257,6 +401,18 @@ mod tests {
     }
 
     #[test]
+    fn graph_nets_match_reference_bit_exactly() {
+        for name in ["edgenet", "widenet"] {
+            let graph = zoo::graph_by_name(name).unwrap();
+            let runner = NetRunner::from_graph(&graph).unwrap();
+            let frame = Tensor::random_image(3, graph.in_h, graph.in_w, graph.in_c);
+            let (got, stats) = runner.run_frame(&frame).unwrap();
+            assert_eq!(got, run_graph_ref(&graph, &frame), "{name}");
+            assert!(stats.macs > 0);
+        }
+    }
+
+    #[test]
     fn wrong_frame_shape_rejected() {
         let runner = NetRunner::new(&zoo::quicknet()).unwrap();
         assert!(runner.run_frame(&Tensor::zeros(4, 4, 1)).is_err());
@@ -280,16 +436,16 @@ mod tests {
         assert_eq!(o2, run_net_ref(&net, &f2));
     }
 
-    /// The tentpole invariant: parallel tile execution is bit-identical
-    /// to the sequential run — output AND aggregated SimStats.
+    /// The tentpole invariant: DAG-parallel execution is bit-identical
+    /// to the sequential run — output AND aggregated SimStats — for
+    /// linear and graph topologies alike.
     #[test]
-    fn parallel_tiles_match_sequential_bit_exactly() {
-        for name in ["quicknet", "facenet"] {
-            let net = zoo::by_name(name).unwrap();
-            let runner = NetRunner::new(&net).unwrap();
-            let frame = Tensor::random_image(9, net.in_h, net.in_w, net.in_c);
+    fn parallel_dag_matches_sequential_bit_exactly() {
+        for name in ["quicknet", "facenet", "edgenet", "widenet"] {
+            let graph = zoo::graph_by_name(name).unwrap();
+            let runner = NetRunner::from_graph(&graph).unwrap();
+            let frame = Tensor::random_image(9, graph.in_h, graph.in_w, graph.in_c);
             let (seq, seq_stats) = runner.run_frame(&frame).unwrap();
-            assert_eq!(seq, run_net_ref(&net, &frame), "{name} sequential");
             for workers in [2usize, 4] {
                 let (par, par_stats) = runner.run_frame_parallel(&frame, workers).unwrap();
                 assert_eq!(par, seq, "{name} workers={workers} output");

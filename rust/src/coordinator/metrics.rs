@@ -1,13 +1,21 @@
 //! Serving metrics: latency histograms + throughput + energy rollup.
 
+use super::request::FrameResult;
 use crate::energy::{EnergyModel, OperatingPoint};
 use crate::sim::SimStats;
 use crate::util::stats::{eng, Histogram, Running};
 
-/// Aggregated metrics of a serving run.
+/// Aggregated metrics of a serving run. Failed frames are first-class:
+/// they count in `errors` (with the last message kept for reporting)
+/// instead of silently vanishing from the stream accounting.
 #[derive(Clone, Debug)]
 pub struct RunMetrics {
+    /// Successfully served frames.
     pub frames: u64,
+    /// Frames that failed (delivered as `Err` results).
+    pub errors: u64,
+    /// Most recent failure message, if any.
+    pub last_error: Option<String>,
     pub wall_s: f64,
     /// Wall-clock latency histogram (µs buckets).
     pub wall_lat_us: Histogram,
@@ -22,6 +30,8 @@ impl RunMetrics {
     pub fn new(op: OperatingPoint) -> Self {
         Self {
             frames: 0,
+            errors: 0,
+            last_error: None,
             wall_s: 0.0,
             wall_lat_us: Histogram::new(),
             dev_lat_us: Histogram::new(),
@@ -36,6 +46,19 @@ impl RunMetrics {
         self.wall_lat_us.record(wall_latency_s * 1e6);
         self.dev_lat_us.record(device_latency_s * 1e6);
         self.totals.add(stats);
+    }
+
+    pub fn record_error(&mut self, message: &str) {
+        self.errors += 1;
+        self.last_error = Some(message.to_string());
+    }
+
+    /// Fold one delivered [`FrameResult`] into the rollup.
+    pub fn record_result(&mut self, r: &FrameResult) {
+        match &r.result {
+            Ok(o) => self.record(&o.stats, o.wall_latency_s, o.device_latency_s),
+            Err(e) => self.record_error(&e.message),
+        }
     }
 
     /// Device-side throughput: frames per *simulated* second.
@@ -66,8 +89,12 @@ impl RunMetrics {
 
     pub fn report(&self, energy: &EnergyModel) -> String {
         let e = energy.energy(&self.totals, self.op);
+        let errs = match (&self.last_error, self.errors) {
+            (Some(msg), n) if n > 0 => format!(" | ERRORS {n} (last: {msg})"),
+            _ => String::new(),
+        };
         format!(
-            "frames={} | device: {:.1} fps, {}OPS eff, util {:.2} | dev-lat p50/p95/p99 = \
+            "frames={}{errs} | device: {:.1} fps, {}OPS eff, util {:.2} | dev-lat p50/p95/p99 = \
              {:.1}/{:.1}/{:.1} ms | energy/frame {:.2} mJ (on-chip {:.2} mJ) | host {:.1} fps",
             self.frames,
             self.device_fps(),
@@ -97,11 +124,18 @@ mod tests {
         }
         m.wall_s = 0.1;
         assert_eq!(m.frames, 10);
+        assert_eq!(m.errors, 0);
         // 10 frames / (5M cycles / 500MHz = 10ms) = 1000 fps
         assert!((m.device_fps() - 1000.0).abs() < 1.0, "{}", m.device_fps());
         assert!((m.wall_fps() - 100.0).abs() < 1.0);
         assert!(m.device_ops_per_s() > 0.0);
         let rep = m.report(&EnergyModel::default());
         assert!(rep.contains("frames=10"));
+        assert!(!rep.contains("ERRORS"));
+        m.record_error("shape mismatch");
+        m.record_error("sim fault");
+        assert_eq!(m.errors, 2);
+        let rep = m.report(&EnergyModel::default());
+        assert!(rep.contains("ERRORS 2") && rep.contains("sim fault"), "{rep}");
     }
 }

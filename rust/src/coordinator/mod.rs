@@ -17,5 +17,5 @@ pub mod request;
 pub mod server;
 
 pub use metrics::RunMetrics;
-pub use request::{FrameRequest, FrameResult};
+pub use request::{FrameError, FrameOutput, FrameRequest, FrameResult};
 pub use server::{Coordinator, CoordinatorConfig};

@@ -19,10 +19,9 @@ impl FrameRequest {
     }
 }
 
-/// The inference result for one frame.
+/// Successful inference payload for one frame.
 #[derive(Clone, Debug)]
-pub struct FrameResult {
-    pub id: u64,
+pub struct FrameOutput {
     pub output: Tensor,
     /// Simulator event counts for this frame.
     pub stats: SimStats,
@@ -30,8 +29,34 @@ pub struct FrameResult {
     pub wall_latency_s: f64,
     /// Device latency: cycles / f at the configured operating point.
     pub device_latency_s: f64,
+}
+
+/// Why a frame failed (kept `Clone`-able for fan-out consumers, hence a
+/// message rather than the source `anyhow::Error`).
+#[derive(Clone, Debug, thiserror::Error)]
+#[error("{message}")]
+pub struct FrameError {
+    pub message: String,
+}
+
+/// The result for one frame. A failed frame is *delivered* with its
+/// error — callers never see a bare `RecvError`, and `run_stream`
+/// accounts the failure instead of silently undercounting.
+#[derive(Clone, Debug)]
+pub struct FrameResult {
+    pub id: u64,
     /// Worker that served the frame.
     pub worker: usize,
+    pub result: Result<FrameOutput, FrameError>,
+}
+
+impl FrameResult {
+    /// Unwrap the success payload, converting a frame failure into an
+    /// `anyhow::Error` with the frame id attached.
+    pub fn ok(self) -> anyhow::Result<FrameOutput> {
+        let id = self.id;
+        self.result.map_err(|e| anyhow::anyhow!("frame {id}: {e}"))
+    }
 }
 
 #[cfg(test)]
@@ -43,5 +68,16 @@ mod tests {
         let r = FrameRequest::new(1, Tensor::zeros(2, 2, 1));
         assert!(r.submitted.elapsed().as_secs() < 1);
         assert_eq!(r.id, 1);
+    }
+
+    #[test]
+    fn frame_error_carries_id_through_ok() {
+        let r = FrameResult {
+            id: 7,
+            worker: 0,
+            result: Err(FrameError { message: "boom".into() }),
+        };
+        let err = r.ok().unwrap_err().to_string();
+        assert!(err.contains("frame 7") && err.contains("boom"), "{err}");
     }
 }

@@ -3,7 +3,10 @@
 //! Each worker owns one simulated accelerator (compile-once, run-many);
 //! the dispatcher is a bounded mpsc channel, so a saturated device
 //! back-pressures the camera source instead of buffering unboundedly —
-//! the same control law a real smart-vision pipeline needs.
+//! the same control law a real smart-vision pipeline needs. A frame
+//! that fails still produces a delivered [`FrameResult`] (with the
+//! error inside), so `submit()` callers never see a bare `RecvError`
+//! and `run_stream` accounts every frame.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -12,10 +15,10 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use super::metrics::RunMetrics;
-use super::request::{FrameRequest, FrameResult};
+use super::request::{FrameError, FrameOutput, FrameRequest, FrameResult};
 use crate::compiler::NetRunner;
 use crate::energy::OperatingPoint;
-use crate::model::{NetSpec, Tensor};
+use crate::model::{Graph, NetSpec, Tensor};
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -23,8 +26,8 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Bounded queue depth (frames) — backpressure beyond this.
     pub queue_depth: usize,
-    /// Host-side parallelism *inside* each frame: decomposed
-    /// tiles/feature-groups of a layer execute concurrently
+    /// Host-side parallelism *inside* each frame: the compiled segment
+    /// DAG executes over this many threads
     /// (`NetRunner::run_frame_parallel`). 1 = sequential. Results and
     /// stats are bit-identical either way; only wall latency changes.
     pub tile_workers: usize,
@@ -52,9 +55,15 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Compile `net` once and start the worker pool.
+    /// Compile a linear net once and start the worker pool.
     pub fn start(net: &NetSpec, cfg: CoordinatorConfig) -> anyhow::Result<Self> {
-        let runner = Arc::new(NetRunner::new(net)?);
+        Self::start_graph(&Graph::from_net(net), cfg)
+    }
+
+    /// Compile a graph (branch/residual topologies included) once and
+    /// start the worker pool.
+    pub fn start_graph(graph: &Graph, cfg: CoordinatorConfig) -> anyhow::Result<Self> {
+        let runner = Arc::new(NetRunner::from_graph(graph)?);
         let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
         let rx = Arc::new(std::sync::Mutex::new(rx));
         let mut handles = Vec::new();
@@ -67,24 +76,18 @@ impl Coordinator {
                 let job = { rx.lock().unwrap().recv() };
                 match job {
                     Ok(Job::Frame(req, out)) => {
-                        let t0 = Instant::now();
-                        match runner.run_frame_parallel(&req.frame, tile_workers) {
+                        let result = match runner.run_frame_parallel(&req.frame, tile_workers) {
                             Ok((output, stats)) => {
-                                let _ = t0;
-                                let result = FrameResult {
-                                    id: req.id,
+                                Ok(FrameOutput {
                                     output,
                                     device_latency_s: stats.cycles as f64 * op.cycle_s(),
                                     wall_latency_s: req.submitted.elapsed().as_secs_f64(),
                                     stats,
-                                    worker: w,
-                                };
-                                let _ = out.send(result);
+                                })
                             }
-                            Err(e) => {
-                                eprintln!("worker {w}: frame {} failed: {e}", req.id);
-                            }
-                        }
+                            Err(e) => Err(FrameError { message: format!("{e:#}") }),
+                        };
+                        let _ = out.send(FrameResult { id: req.id, worker: w, result });
                     }
                     Ok(Job::Stop) | Err(_) => break,
                 }
@@ -104,7 +107,8 @@ impl Coordinator {
         orx
     }
 
-    /// Convenience: push a batch of frames through and gather metrics.
+    /// Convenience: push a batch of frames through and gather metrics —
+    /// failures included (`RunMetrics::errors`).
     pub fn run_stream(&self, frames: Vec<Tensor>) -> RunMetrics {
         let mut metrics = RunMetrics::new(self.cfg.op);
         let t0 = Instant::now();
@@ -115,7 +119,7 @@ impl Coordinator {
             while let Some(front) = pending.front() {
                 match front.try_recv() {
                     Ok(r) => {
-                        metrics.record(&r.stats, r.wall_latency_s, r.device_latency_s);
+                        metrics.record_result(&r);
                         pending.pop_front();
                     }
                     Err(_) => break,
@@ -124,7 +128,7 @@ impl Coordinator {
         }
         for rx in pending {
             if let Ok(r) = rx.recv() {
-                metrics.record(&r.stats, r.wall_latency_s, r.device_latency_s);
+                metrics.record_result(&r);
             }
         }
         metrics.wall_s = t0.elapsed().as_secs_f64();
@@ -144,7 +148,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::reference::run_net_ref;
+    use crate::model::reference::{run_graph_ref, run_net_ref};
     use crate::model::zoo;
 
     #[test]
@@ -157,8 +161,9 @@ mod tests {
         for (i, (rx, f)) in rxs.into_iter().zip(&frames).enumerate() {
             let r = rx.recv().unwrap();
             assert_eq!(r.id, i as u64);
-            assert_eq!(r.output, run_net_ref(&net, f), "frame {i} wrong result");
-            assert!(r.device_latency_s > 0.0);
+            let out = r.ok().unwrap();
+            assert_eq!(out.output, run_net_ref(&net, f), "frame {i} wrong result");
+            assert!(out.device_latency_s > 0.0);
         }
         coord.stop();
     }
@@ -172,6 +177,7 @@ mod tests {
             (0..20).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
         let m = coord.run_stream(frames);
         assert_eq!(m.frames, 20);
+        assert_eq!(m.errors, 0);
         assert!(m.device_fps() > 0.0);
         coord.stop();
     }
@@ -183,9 +189,45 @@ mod tests {
         let coord = Coordinator::start(&net, cfg).unwrap();
         for s in 0..3 {
             let f = Tensor::random_image(s, net.in_h, net.in_w, net.in_c);
-            let r = coord.submit(f.clone()).recv().unwrap();
-            assert_eq!(r.output, run_net_ref(&net, &f), "frame {s}");
+            let out = coord.submit(f.clone()).recv().unwrap().ok().unwrap();
+            assert_eq!(out.output, run_net_ref(&net, &f), "frame {s}");
         }
+        coord.stop();
+    }
+
+    #[test]
+    fn graph_net_serving_is_bit_exact() {
+        let graph = zoo::edgenet();
+        let cfg = CoordinatorConfig { tile_workers: 2, ..Default::default() };
+        let coord = Coordinator::start_graph(&graph, cfg).unwrap();
+        for s in 0..2 {
+            let f = Tensor::random_image(s, graph.in_h, graph.in_w, graph.in_c);
+            let out = coord.submit(f.clone()).recv().unwrap().ok().unwrap();
+            assert_eq!(out.output, run_graph_ref(&graph, &f), "frame {s}");
+        }
+        coord.stop();
+    }
+
+    /// A failing frame must be *delivered* as an error, not dropped:
+    /// the submitter sees the message, and run_stream accounts it.
+    #[test]
+    fn failed_frames_are_delivered_and_accounted() {
+        let net = zoo::quicknet();
+        let coord = Coordinator::start(&net, CoordinatorConfig::default()).unwrap();
+        let bad = Tensor::zeros(3, 3, 1); // wrong shape for quicknet
+        let r = coord.submit(bad.clone()).recv().expect("result must arrive");
+        assert!(r.result.is_err());
+        let msg = r.ok().unwrap_err().to_string();
+        assert!(msg.contains("frame") && msg.contains("shape"), "{msg}");
+
+        let mut frames: Vec<Tensor> = (0..4)
+            .map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c))
+            .collect();
+        frames.insert(2, bad);
+        let m = coord.run_stream(frames);
+        assert_eq!(m.frames, 4, "good frames still served");
+        assert_eq!(m.errors, 1, "bad frame accounted as an error");
+        assert!(m.last_error.as_deref().unwrap_or("").contains("shape"));
         coord.stop();
     }
 }

@@ -31,6 +31,8 @@ pub enum Opcode {
     Sync = 0x0007,
     /// DMA: 16 int32 bias words DRAM → ACC BUF bias registers.
     LoadBias = 0x0008,
+    /// Element-wise residual add over two SRAM regions (graph `Add` op).
+    Add = 0x0009,
     /// End of command stream.
     Halt = 0x000F,
 }
@@ -47,6 +49,7 @@ impl Opcode {
             0x0006 => Opcode::Store,
             0x0007 => Opcode::Sync,
             0x0008 => Opcode::LoadBias,
+            0x0009 => Opcode::Add,
             0x000F => Opcode::Halt,
             _ => return None,
         })
@@ -64,6 +67,7 @@ impl Opcode {
             Opcode::LoadBias => 3,
             Opcode::Conv => 15,
             Opcode::Pool => 9,
+            Opcode::Add => 10,
         }
     }
 }
@@ -150,6 +154,22 @@ pub struct BiasLoad {
     pub dram_px: u32,
 }
 
+/// Element-wise residual add (graph `Add` op): reads `n_px` int16
+/// pixels at `src_a_px` and `src_b_px`, writes
+/// `requantize(a + b, shift, relu)` at `dst_px` — the same round-half-
+/// up/saturate/ReLU output stage a conv pass ends with, applied to the
+/// int32 sum. All three regions are SRAM and must be disjoint (the
+/// compiler plans them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AddPass {
+    pub src_a_px: u32,
+    pub src_b_px: u32,
+    pub dst_px: u32,
+    pub n_px: u32,
+    pub shift: u8,
+    pub relu: bool,
+}
+
 /// Pooling pass over an SRAM region (int16 plane, C-interleaved).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PoolPass {
@@ -172,6 +192,7 @@ pub enum Cmd {
     LoadBias(BiasLoad),
     Conv(ConvPass),
     Pool(PoolPass),
+    Add(AddPass),
     Store(DmaDesc),
     Sync,
     Halt,
@@ -249,6 +270,14 @@ impl Cmd {
                 push32(out, p.src_px);
                 push32(out, p.dst_px);
                 out.extend_from_slice(&[p.ih, p.iw, p.c, (p.k as u16) | ((p.stride as u16) << 4)]);
+            }
+            Cmd::Add(p) => {
+                out.push(Opcode::Add as u16);
+                push32(out, p.src_a_px);
+                push32(out, p.src_b_px);
+                push32(out, p.dst_px);
+                push32(out, p.n_px);
+                out.push((p.shift as u16) | ((p.relu as u16) << 8));
             }
         }
     }
@@ -333,6 +362,21 @@ impl Cmd {
                     stride: ((packed >> 4) & 0xF) as u8,
                 })
             }
+            Opcode::Add => {
+                let src_a_px = read32(words, i)?;
+                let src_b_px = read32(words, i)?;
+                let dst_px = read32(words, i)?;
+                let n_px = read32(words, i)?;
+                let packed = read16(words, i)?;
+                Cmd::Add(AddPass {
+                    src_a_px,
+                    src_b_px,
+                    dst_px,
+                    n_px,
+                    shift: (packed & 0xFF) as u8,
+                    relu: (packed >> 8) & 1 == 1,
+                })
+            }
         })
     }
 
@@ -367,9 +411,17 @@ mod tests {
     use crate::util::prop::{check, Gen};
 
     fn arb_cmd(g: &mut Gen) -> Cmd {
-        match g.usize_in(0, 8) {
+        match g.usize_in(0, 9) {
             0 => Cmd::Nop,
             8 => Cmd::LoadBias(BiasLoad { dram_px: g.int(0, i64::from(u32::MAX)) as u32 }),
+            9 => Cmd::Add(AddPass {
+                src_a_px: g.int(0, 65535) as u32,
+                src_b_px: g.int(0, 65535) as u32,
+                dst_px: g.int(0, 65535) as u32,
+                n_px: g.int(1, 65535) as u32,
+                shift: g.usize_in(0, 24) as u8,
+                relu: g.bool(),
+            }),
             1 => Cmd::SetConv(ConvCfg {
                 stride: g.usize_in(1, 4) as u8,
                 shift: g.usize_in(0, 24) as u8,

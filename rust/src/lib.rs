@@ -16,12 +16,14 @@
 //!   the PE chain); cycle/traffic accounting stays in a decoupled
 //!   analytic timing model.
 //! - [`isa`] — the command set streamed over the 16-bit AXI bus.
-//! - [`compiler`] — CNN layer → decomposition plan (image / feature /
-//!   kernel decomposition, paper §5) → command stream, plus the segment
-//!   map that lets `NetRunner` execute a layer's decomposed tiles
-//!   concurrently with bit-identical output and stats.
-//! - [`model`] — network descriptions + the deterministic synthetic zoo
-//!   shared with the Python compile path.
+//! - [`compiler`] — graph IR → decomposition plan (image / feature /
+//!   kernel decomposition, paper §5) → command stream, plus the
+//!   dependency-annotated segment DAG that lets `NetRunner` execute
+//!   decomposed tiles concurrently — across nodes and branches, with no
+//!   layer barriers — with bit-identical output and stats.
+//! - [`model`] — network descriptions (linear `NetSpec` stacks and the
+//!   graph IR with residual Add / channel Concat) + the deterministic
+//!   synthetic zoo shared with the Python compile path.
 //! - [`fixed`] — the 16-bit fixed-point numerics contract (bit-exact with
 //!   the Pallas kernels).
 //! - [`energy`] — area / power / DVFS models reproducing Table 2 & Fig. 7.

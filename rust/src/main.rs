@@ -58,21 +58,29 @@ fn net_arg(name: &str) -> anyhow::Result<kn_stream::model::NetSpec> {
         .ok_or_else(|| anyhow::anyhow!("unknown net '{name}' (have: {})", zoo::ALL.join(", ")))
 }
 
+fn graph_arg(name: &str) -> anyhow::Result<kn_stream::model::Graph> {
+    zoo::graph_by_name(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown net '{name}' (have: {})", zoo::GRAPH_ALL.join(", "))
+    })
+}
+
 fn cmd_run(args: Vec<String>) -> anyhow::Result<()> {
     let mut cli = Cli::new("kn-stream run", "run a net on the simulated accelerator");
-    cli.opt("net", "facenet", "zoo net (quicknet|facenet|alexnet|vgg16)")
+    cli.opt("net", "facenet", "zoo net (quicknet|facenet|alexnet|vgg16|edgenet|widenet)")
         .opt("frames", "1", "number of frames")
         .opt("freq", "500", "clock in MHz (20..500, sets VDD by DVFS law)")
         .opt("seed", "1", "input frame seed");
     let m = cli.parse_from(args)?;
-    let net = net_arg(m.get("net"))?;
+    let net = graph_arg(m.get("net"))?;
     let op = OperatingPoint::for_freq(m.get_f64("freq"));
-    let runner = NetRunner::new(&net)?;
+    let runner = NetRunner::from_graph(&net)?;
     let energy = EnergyModel::default();
+    let ov = &runner.compiled.output;
     println!("net={} in={:?} out={:?}  @ {:.0} MHz / {:.2} V", net.name, net.in_shape(),
-             net.out_shape(), op.freq_mhz, op.vdd);
+             (ov.h, ov.w, ov.c), op.freq_mhz, op.vdd);
     for i in 0..m.get_u64("frames") {
-        let frame = Tensor::random_image(m.get_u64("seed") as u32 + i as u32, net.in_h, net.in_w, net.in_c);
+        let seed = m.get_u64("seed") as u32 + i as u32;
+        let frame = Tensor::random_image(seed, net.in_h, net.in_w, net.in_c);
         let t0 = std::time::Instant::now();
         let (out, stats) = runner.run_frame(&frame)?;
         let dev_ms = stats.cycles as f64 * op.cycle_s() * 1e3;
@@ -95,21 +103,21 @@ fn cmd_run(args: Vec<String>) -> anyhow::Result<()> {
 
 fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
     let mut cli = Cli::new("kn-stream serve", "streaming frame server over synthetic camera");
-    cli.opt("net", "facenet", "zoo net")
+    cli.opt("net", "facenet", "zoo net (incl. graph nets edgenet|widenet)")
         .opt("frames", "64", "frames to stream")
         .opt("workers", "1", "accelerator instances")
         .opt("queue", "4", "bounded queue depth")
-        .opt("tile-workers", "1", "parallel tile threads per frame")
+        .opt("tile-workers", "1", "parallel segment-DAG threads per frame")
         .opt("freq", "500", "clock in MHz");
     let m = cli.parse_from(args)?;
-    let net = net_arg(m.get("net"))?;
+    let net = graph_arg(m.get("net"))?;
     let cfg = CoordinatorConfig {
         workers: m.get_usize("workers"),
         queue_depth: m.get_usize("queue"),
         tile_workers: m.get_usize("tile-workers"),
         op: OperatingPoint::for_freq(m.get_f64("freq")),
     };
-    let coord = Coordinator::start(&net, cfg)?;
+    let coord = Coordinator::start_graph(&net, cfg)?;
     let frames: Vec<Tensor> = (0..m.get_usize("frames"))
         .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))
         .collect();
@@ -153,12 +161,18 @@ fn cmd_verify(args: Vec<String>) -> anyhow::Result<()> {
 
 fn cmd_plan(args: Vec<String>) -> anyhow::Result<()> {
     let mut cli = Cli::new("kn-stream plan", "print decomposition plans");
-    cli.opt("net", "alexnet", "zoo net");
+    cli.opt("net", "alexnet", "zoo net (incl. graph nets edgenet|widenet)");
+    cli.flag("dump-graph", "print the compiled segment DAG as Graphviz DOT and exit");
     let m = cli.parse_from(args)?;
-    let net = net_arg(m.get("net"))?;
-    let runner = NetRunner::new(&net)?;
-    println!("{}: {} commands, DRAM image {:.1} MB", net.name,
-             runner.compiled.program.len(), runner.compiled.dram_px as f64 * 2.0 / 1e6);
+    let net = graph_arg(m.get("net"))?;
+    let runner = NetRunner::from_graph(&net)?;
+    if m.get_flag("dump-graph") {
+        print!("{}", runner.compiled.segments_dot());
+        return Ok(());
+    }
+    println!("{}: {} commands, {} segments, DRAM image {:.1} MB", net.name,
+             runner.compiled.program.len(), runner.compiled.segments.len(),
+             runner.compiled.dram_px as f64 * 2.0 / 1e6);
     println!("{:<10} {:>6} {:>8} {:>8} {:>8} {:>10} {:>10}",
              "layer", "grid", "c-grps", "m-tiles", "tiles", "in-tile", "sram");
     for (name, p) in &runner.compiled.plans {

@@ -1,0 +1,446 @@
+//! Graph IR — the network representation the compiler and runtime
+//! actually consume.
+//!
+//! `NetSpec`'s linear layer stack cannot express the branch/residual
+//! topologies (shortcut adds, multi-path stems, channel concat) that
+//! modern edge workloads need, and it forces the executor into a
+//! layer-at-a-time view. The graph IR replaces it underneath everything:
+//! named nodes with explicit input edges, evaluated/lowered in
+//! topological order (enforced by construction — a node may only
+//! reference earlier nodes or the graph input). Linear nets convert
+//! losslessly via [`Graph::from_net`], so the whole `NetSpec` surface
+//! keeps working.
+//!
+//! Two ops exist only at the graph level:
+//!
+//! * [`AddSpec`] — element-wise residual add with the same
+//!   requantization output stage as a conv (round-half-up shift,
+//!   saturate, optional ReLU); executed on-device by the `Add` ISA
+//!   command through the SRAM adder path.
+//! * [`ConcatSpec`] — channel concatenation; pure data movement, lowered
+//!   to DMA copies into the consumer's canvas.
+//!
+//! [`Graph::validate`] is the single legality gate: it checks arity,
+//! shape agreement and resource-representable configurations up front
+//! and returns real `anyhow` errors — the compiler refuses to lower an
+//! invalid graph instead of panicking mid-emission.
+
+use super::layer::{ConvSpec, LayerSpec, NetSpec, PoolSpec};
+
+/// Element-wise residual add: `out = requantize(a + b, shift, relu)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AddSpec {
+    pub name: String,
+    /// Requantization right-shift applied to the int32 sum.
+    pub shift: u8,
+    pub relu: bool,
+}
+
+/// Channel concatenation of all inputs (H and W must agree).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConcatSpec {
+    pub name: String,
+}
+
+/// One graph node's operation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NodeOp {
+    Conv(ConvSpec),
+    Pool(PoolSpec),
+    Add(AddSpec),
+    Concat(ConcatSpec),
+}
+
+impl NodeOp {
+    pub fn name(&self) -> &str {
+        match self {
+            NodeOp::Conv(c) => &c.name,
+            NodeOp::Pool(p) => &p.name,
+            NodeOp::Add(a) => &a.name,
+            NodeOp::Concat(c) => &c.name,
+        }
+    }
+
+    /// Number of inputs this op requires (`None` = variadic, ≥ 2).
+    fn arity(&self) -> Option<usize> {
+        match self {
+            NodeOp::Conv(_) | NodeOp::Pool(_) => Some(1),
+            NodeOp::Add(_) => Some(2),
+            NodeOp::Concat(_) => None,
+        }
+    }
+}
+
+/// Where a node's input comes from: the graph input or an earlier node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeRef {
+    Input,
+    Node(usize),
+}
+
+/// A named operation with explicit input edges.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub op: NodeOp,
+    pub inputs: Vec<NodeRef>,
+}
+
+impl Node {
+    pub fn name(&self) -> &str {
+        self.op.name()
+    }
+}
+
+/// A whole network as a DAG. Nodes are stored in topological order
+/// (guaranteed by the builder: edges may only point at earlier nodes or
+/// the input); the graph output is `output`'s tensor.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub nodes: Vec<Node>,
+    pub output: NodeRef,
+}
+
+impl Graph {
+    pub fn new(name: &str, in_h: usize, in_w: usize, in_c: usize) -> Self {
+        Self { name: name.into(), in_h, in_w, in_c, nodes: Vec::new(), output: NodeRef::Input }
+    }
+
+    pub fn in_shape(&self) -> (usize, usize, usize) {
+        (self.in_h, self.in_w, self.in_c)
+    }
+
+    /// Resolve a node name to a reference. `"input"` is the graph input.
+    pub fn resolve(&self, name: &str) -> anyhow::Result<NodeRef> {
+        if name == "input" {
+            return Ok(NodeRef::Input);
+        }
+        self.nodes
+            .iter()
+            .position(|n| n.name() == name)
+            .map(NodeRef::Node)
+            .ok_or_else(|| anyhow::anyhow!("graph {}: unknown node '{name}'", self.name))
+    }
+
+    /// Append a node fed by the named producers (`"input"` = the graph
+    /// input). The new node becomes the graph output. Edges can only
+    /// reach already-added nodes, so the node list stays topologically
+    /// ordered by construction.
+    pub fn add_node(&mut self, op: NodeOp, inputs: &[&str]) -> anyhow::Result<usize> {
+        let resolved: Vec<NodeRef> =
+            inputs.iter().map(|n| self.resolve(n)).collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            op.name() != "input" && self.resolve(op.name()).is_err(),
+            "graph {}: duplicate node name '{}'",
+            self.name,
+            op.name()
+        );
+        let idx = self.nodes.len();
+        self.nodes.push(Node { op, inputs: resolved });
+        self.output = NodeRef::Node(idx);
+        Ok(idx)
+    }
+
+    /// Lossless conversion of a linear layer stack: layer *i* feeds
+    /// layer *i+1*, the last layer is the output.
+    pub fn from_net(net: &NetSpec) -> Graph {
+        let mut g = Graph::new(&net.name, net.in_h, net.in_w, net.in_c);
+        let mut prev = NodeRef::Input;
+        for l in &net.layers {
+            let op = match l {
+                LayerSpec::Conv(c) => NodeOp::Conv(c.clone()),
+                LayerSpec::Pool(p) => NodeOp::Pool(p.clone()),
+            };
+            let idx = g.nodes.len();
+            g.nodes.push(Node { op, inputs: vec![prev] });
+            prev = NodeRef::Node(idx);
+        }
+        g.output = prev;
+        g
+    }
+
+    /// Shape of a reference, given the per-node shapes (as returned by
+    /// [`Graph::validate`]).
+    pub(crate) fn shape_of(
+        &self,
+        r: NodeRef,
+        shapes: &[(usize, usize, usize)],
+    ) -> (usize, usize, usize) {
+        match r {
+            NodeRef::Input => self.in_shape(),
+            NodeRef::Node(i) => shapes[i],
+        }
+    }
+
+    /// Validate the whole graph and return every node's output shape
+    /// (indexed like `nodes`). This is the single legality gate the
+    /// compiler and the reference evaluator rely on: after it passes,
+    /// shape math cannot underflow and channel counts line up.
+    pub fn validate(&self) -> anyhow::Result<Vec<(usize, usize, usize)>> {
+        anyhow::ensure!(!self.nodes.is_empty(), "graph {}: no nodes", self.name);
+        anyhow::ensure!(
+            self.in_h > 0 && self.in_w > 0 && self.in_c > 0,
+            "graph {}: degenerate input shape {}x{}x{}",
+            self.name,
+            self.in_h,
+            self.in_w,
+            self.in_c
+        );
+        let mut shapes: Vec<(usize, usize, usize)> = Vec::with_capacity(self.nodes.len());
+        for (i, node) in self.nodes.iter().enumerate() {
+            let name = node.name();
+            anyhow::ensure!(!name.is_empty() && name != "input", "node {i}: reserved/empty name");
+            anyhow::ensure!(
+                !self.nodes[..i].iter().any(|n| n.name() == name),
+                "graph {}: duplicate node name '{name}'",
+                self.name
+            );
+            for r in &node.inputs {
+                if let NodeRef::Node(j) = r {
+                    anyhow::ensure!(
+                        *j < i,
+                        "node {name}: input edge to node {j} is not topological"
+                    );
+                }
+            }
+            if let Some(want) = node.op.arity() {
+                anyhow::ensure!(
+                    node.inputs.len() == want,
+                    "node {name}: needs {want} input(s), has {}",
+                    node.inputs.len()
+                );
+            } else {
+                anyhow::ensure!(
+                    node.inputs.len() >= 2,
+                    "concat {name}: needs >= 2 inputs, has {}",
+                    node.inputs.len()
+                );
+            }
+            let ins: Vec<(usize, usize, usize)> =
+                node.inputs.iter().map(|r| self.shape_of(*r, &shapes)).collect();
+            shapes.push(node_out_shape(&node.op, &ins)?);
+        }
+        if let NodeRef::Node(i) = self.output {
+            anyhow::ensure!(
+                i < self.nodes.len(),
+                "graph {}: output node {i} out of range",
+                self.name
+            );
+        }
+        Ok(shapes)
+    }
+
+    /// Output shape of the whole graph (validated graphs only).
+    pub fn out_shape(&self) -> anyhow::Result<(usize, usize, usize)> {
+        let shapes = self.validate()?;
+        Ok(self.shape_of(self.output, &shapes))
+    }
+}
+
+/// Checked shape inference for one op — real error messages instead of
+/// the historical `assert!`/underflow behaviour.
+pub fn node_out_shape(
+    op: &NodeOp,
+    ins: &[(usize, usize, usize)],
+) -> anyhow::Result<(usize, usize, usize)> {
+    match op {
+        NodeOp::Conv(c) => {
+            let (h, w, cin) = ins[0];
+            anyhow::ensure!(c.k >= 1 && c.stride >= 1, "conv {}: k/stride must be >= 1", c.name);
+            anyhow::ensure!(
+                cin == c.cin,
+                "conv {}: cin {} != producer channels {}",
+                c.name,
+                c.cin,
+                cin
+            );
+            anyhow::ensure!(
+                c.groups >= 1 && c.cin % c.groups == 0 && c.cout % c.groups == 0,
+                "conv {}: groups {} must divide cin {} and cout {}",
+                c.name,
+                c.groups,
+                c.cin,
+                c.cout
+            );
+            anyhow::ensure!(
+                h + 2 * c.pad >= c.k && w + 2 * c.pad >= c.k,
+                "conv {}: kernel {} exceeds padded input {}x{} (pad {})",
+                c.name,
+                c.k,
+                h,
+                w,
+                c.pad
+            );
+            Ok((
+                (h + 2 * c.pad - c.k) / c.stride + 1,
+                (w + 2 * c.pad - c.k) / c.stride + 1,
+                c.cout,
+            ))
+        }
+        NodeOp::Pool(p) => {
+            let (h, w, ch) = ins[0];
+            anyhow::ensure!(
+                p.k == 2 || p.k == 3,
+                "pool {}: window {} unsupported (the pooling module does 2 or 3)",
+                p.name,
+                p.k
+            );
+            anyhow::ensure!(p.stride >= 1, "pool {}: stride must be >= 1", p.name);
+            anyhow::ensure!(
+                h >= p.k && w >= p.k,
+                "pool {}: window {} exceeds input {}x{}",
+                p.name,
+                p.k,
+                h,
+                w
+            );
+            Ok(((h - p.k) / p.stride + 1, (w - p.k) / p.stride + 1, ch))
+        }
+        NodeOp::Add(a) => {
+            anyhow::ensure!(
+                ins[0] == ins[1],
+                "add {}: operand shapes differ: {:?} vs {:?}",
+                a.name,
+                ins[0],
+                ins[1]
+            );
+            anyhow::ensure!(a.shift < 31, "add {}: shift {} out of range", a.name, a.shift);
+            Ok(ins[0])
+        }
+        NodeOp::Concat(c) => {
+            let (h, w, _) = ins[0];
+            for (i, s) in ins.iter().enumerate() {
+                anyhow::ensure!(
+                    (s.0, s.1) == (h, w),
+                    "concat {}: input {i} plane {}x{} != {}x{}",
+                    c.name,
+                    s.0,
+                    s.1,
+                    h,
+                    w
+                );
+            }
+            Ok((h, w, ins.iter().map(|s| s.2).sum()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(name: &str, k: usize, pad: usize, cin: usize, cout: usize) -> NodeOp {
+        NodeOp::Conv(ConvSpec {
+            name: name.into(),
+            k,
+            stride: 1,
+            pad,
+            cin,
+            cout,
+            shift: 9,
+            relu: true,
+            wseed: 1,
+            bseed: 2,
+            groups: 1,
+        })
+    }
+
+    fn residual_graph() -> Graph {
+        let mut g = Graph::new("res", 16, 16, 4);
+        g.add_node(conv("stem", 3, 1, 4, 8), &["input"]).unwrap();
+        g.add_node(conv("b1", 3, 1, 8, 8), &["stem"]).unwrap();
+        g.add_node(
+            NodeOp::Add(AddSpec { name: "add1".into(), shift: 1, relu: true }),
+            &["b1", "stem"],
+        )
+        .unwrap();
+        g
+    }
+
+    #[test]
+    fn residual_graph_validates_and_shapes() {
+        let g = residual_graph();
+        let shapes = g.validate().unwrap();
+        assert_eq!(shapes, vec![(16, 16, 8); 3]);
+        assert_eq!(g.out_shape().unwrap(), (16, 16, 8));
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut g = Graph::new("cat", 16, 16, 4);
+        g.add_node(conv("a", 3, 1, 4, 8), &["input"]).unwrap();
+        g.add_node(conv("b", 5, 2, 4, 16), &["input"]).unwrap();
+        g.add_node(NodeOp::Concat(ConcatSpec { name: "cat".into() }), &["a", "b"]).unwrap();
+        assert_eq!(g.out_shape().unwrap(), (16, 16, 24));
+    }
+
+    #[test]
+    fn from_net_is_a_chain() {
+        let net = crate::model::zoo::facenet();
+        let g = Graph::from_net(&net);
+        assert_eq!(g.nodes.len(), net.layers.len());
+        assert_eq!(g.nodes[0].inputs, vec![NodeRef::Input]);
+        for (i, n) in g.nodes.iter().enumerate().skip(1) {
+            assert_eq!(n.inputs, vec![NodeRef::Node(i - 1)]);
+        }
+        let shapes = g.validate().unwrap();
+        assert_eq!(*shapes.last().unwrap(), net.out_shape());
+    }
+
+    #[test]
+    fn cin_mismatch_is_a_real_error() {
+        let mut g = Graph::new("bad", 16, 16, 4);
+        g.add_node(conv("c1", 3, 1, 8, 8), &["input"]).unwrap();
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("cin 8 != producer channels 4"), "{err}");
+    }
+
+    #[test]
+    fn pool_window_underflow_is_a_real_error() {
+        let mut g = Graph::new("bad", 2, 2, 1);
+        g.add_node(
+            NodeOp::Pool(PoolSpec { name: "p".into(), k: 3, stride: 2 }),
+            &["input"],
+        )
+        .unwrap();
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains("window 3 exceeds input 2x2"), "{err}");
+    }
+
+    #[test]
+    fn add_shape_mismatch_rejected() {
+        let mut g = Graph::new("bad", 16, 16, 4);
+        g.add_node(conv("a", 3, 1, 4, 8), &["input"]).unwrap();
+        g.add_node(conv("b", 3, 0, 4, 8), &["input"]).unwrap();
+        g.add_node(
+            NodeOp::Add(AddSpec { name: "add".into(), shift: 0, relu: false }),
+            &["a", "b"],
+        )
+        .unwrap();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn duplicate_names_and_unknown_edges_rejected() {
+        let mut g = Graph::new("bad", 16, 16, 4);
+        g.add_node(conv("a", 3, 1, 4, 8), &["input"]).unwrap();
+        assert!(g.add_node(conv("a", 3, 1, 8, 8), &["a"]).is_err());
+        assert!(g.add_node(conv("b", 3, 1, 8, 8), &["nope"]).is_err());
+    }
+
+    #[test]
+    fn arity_enforced() {
+        let mut g = Graph::new("bad", 8, 8, 2);
+        g.add_node(conv("a", 3, 1, 2, 4), &["input"]).unwrap();
+        g.add_node(
+            NodeOp::Concat(ConcatSpec { name: "cat".into() }),
+            &["a"],
+        )
+        .unwrap();
+        let err = g.validate().unwrap_err().to_string();
+        assert!(err.contains(">= 2 inputs"), "{err}");
+    }
+}

@@ -122,6 +122,16 @@ impl NetSpec {
         (self.in_h, self.in_w, self.in_c)
     }
 
+    /// Validate the layer stack (shape agreement, pool-window bounds,
+    /// group divisibility) with real error messages — the graph IR's
+    /// checker applied to the linear chain. `compile_net` runs this
+    /// before lowering, so an ill-formed spec errors instead of
+    /// panicking (or underflowing `(h - k)`) mid-emission.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        crate::model::graph::Graph::from_net(self).validate()?;
+        Ok(())
+    }
+
     /// Shapes of every layer output, input first (mirror of
     /// `nets.net_shapes`).
     pub fn shapes(&self) -> Vec<(String, usize, usize, usize)> {
@@ -214,6 +224,28 @@ mod tests {
             assert_eq!(ops, 2 * 55 * 55 * 96 * 11 * 11 * 3);
             assert!((ops as f64 - 211e6).abs() / 211e6 < 0.01, "ops={ops}");
         }
+    }
+
+    #[test]
+    fn netspec_validate_catches_bad_stacks() {
+        let ok = NetSpec {
+            name: "ok".into(),
+            in_h: 8,
+            in_w: 8,
+            in_c: 3,
+            layers: vec![conv(3, 1, 1, 3, 8)],
+        };
+        assert!(ok.validate().is_ok());
+        let cin_mismatch = NetSpec { layers: vec![conv(3, 1, 1, 4, 8)], ..ok.clone() };
+        let err = cin_mismatch.validate().unwrap_err().to_string();
+        assert!(err.contains("cin 4"), "{err}");
+        let pool_underflow = NetSpec {
+            layers: vec![LayerSpec::Pool(PoolSpec { name: "p".into(), k: 3, stride: 2 })],
+            in_h: 2,
+            in_w: 2,
+            ..ok
+        };
+        assert!(pool_underflow.validate().is_err());
     }
 
     #[test]

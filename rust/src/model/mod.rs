@@ -1,11 +1,18 @@
 //! Network descriptions, tensors, the deterministic synthetic model zoo
 //! (shared with `python/compile/nets.py`), and a straightforward scalar
 //! reference implementation used as the in-crate oracle.
+//!
+//! Networks have two surfaces: the historical linear [`NetSpec`] layer
+//! stack, and the [`graph`] IR (named nodes, explicit edges, residual
+//! Add / channel Concat) that the compiler and runtime consume. Linear
+//! nets convert losslessly via [`Graph::from_net`].
 
+pub mod graph;
 pub mod layer;
 pub mod reference;
 pub mod tensor;
 pub mod zoo;
 
+pub use graph::{AddSpec, ConcatSpec, Graph, Node, NodeOp, NodeRef};
 pub use layer::{ConvSpec, LayerSpec, NetSpec, PoolSpec};
 pub use tensor::Tensor;

@@ -6,6 +6,7 @@
 //! this — and this, in turn, matches the Python numpy oracle through the
 //! shared PRNG + fixed-point contract.
 
+use super::graph::{AddSpec, Graph, NodeOp, NodeRef};
 use super::layer::{ConvSpec, LayerSpec, NetSpec, PoolSpec};
 use super::tensor::Tensor;
 use crate::fixed;
@@ -73,6 +74,18 @@ pub fn pool_ref(x: &Tensor, spec: &PoolSpec) -> Tensor {
     out
 }
 
+/// Element-wise residual add oracle: `requantize(a + b, shift, relu)`
+/// per pixel — the same output stage as a conv, applied to the int32
+/// sum (matches the `Add` ISA command bit-for-bit).
+pub fn add_ref(a: &Tensor, b: &Tensor, spec: &AddSpec) -> Tensor {
+    assert_eq!(a.shape(), b.shape(), "add {}: operand shapes", spec.name);
+    let mut out = Tensor::zeros(a.h, a.w, a.c);
+    for (o, (&x, &y)) in out.data.iter_mut().zip(a.data.iter().zip(&b.data)) {
+        *o = fixed::requantize(fixed::acc_add(x as i32, y as i32), spec.shift, spec.relu);
+    }
+    out
+}
+
 /// One layer (applies conv padding).
 pub fn run_layer_ref(x: &Tensor, layer: &LayerSpec) -> Tensor {
     match layer {
@@ -89,6 +102,34 @@ pub fn run_net_ref(net: &NetSpec, input: &Tensor) -> Tensor {
         x = run_layer_ref(&x, l);
     }
     x
+}
+
+/// Whole graph: evaluate nodes in (construction-guaranteed) topological
+/// order, memoizing every node's tensor — branch fan-out reads the same
+/// producer tensor, exactly like consumers reading one DRAM canvas.
+pub fn run_graph_ref(graph: &Graph, input: &Tensor) -> Tensor {
+    assert_eq!(input.shape(), graph.in_shape(), "graph {} input shape", graph.name);
+    let mut outs: Vec<Tensor> = Vec::with_capacity(graph.nodes.len());
+    for node in &graph.nodes {
+        let mut ins: Vec<&Tensor> = Vec::with_capacity(node.inputs.len());
+        for r in &node.inputs {
+            ins.push(match r {
+                NodeRef::Input => input,
+                NodeRef::Node(i) => &outs[*i],
+            });
+        }
+        let out = match &node.op {
+            NodeOp::Conv(c) => conv_ref(&ins[0].pad_hw(c.pad), c),
+            NodeOp::Pool(p) => pool_ref(ins[0], p),
+            NodeOp::Add(a) => add_ref(ins[0], ins[1], a),
+            NodeOp::Concat(_) => Tensor::concat_c(&ins),
+        };
+        outs.push(out);
+    }
+    match graph.output {
+        NodeRef::Input => input.clone(),
+        NodeRef::Node(i) => outs.swap_remove(i),
+    }
 }
 
 #[cfg(test)]
@@ -138,6 +179,39 @@ mod tests {
         assert_eq!(out.shape(), (4, 4, 16));
         let nonzero = out.data.iter().filter(|&&v| v != 0).count();
         assert!(nonzero > 8, "signal died: {nonzero} nonzero of {}", out.data.len());
+    }
+
+    #[test]
+    fn add_ref_requantizes_like_the_conv_output_stage() {
+        let a = Tensor::from_vec(1, 2, 1, vec![100, -100]);
+        let b = Tensor::from_vec(1, 2, 1, vec![3, -3]);
+        let spec = AddSpec { name: "a".into(), shift: 1, relu: false };
+        // round-half-up: (103+1)>>1 = 52, (-103+1)>>1 = -51
+        assert_eq!(add_ref(&a, &b, &spec).data, vec![52, -51]);
+        let relu = AddSpec { name: "r".into(), shift: 0, relu: true };
+        assert_eq!(add_ref(&a, &b, &relu).data, vec![103, 0]);
+    }
+
+    #[test]
+    fn graph_ref_matches_linear_net_ref() {
+        let net = zoo::facenet();
+        let g = crate::model::Graph::from_net(&net);
+        let x = Tensor::random_image(11, 64, 64, 1);
+        assert_eq!(run_graph_ref(&g, &x), run_net_ref(&net, &x));
+    }
+
+    #[test]
+    fn residual_identity_branch() {
+        // add(x, x) with shift 1 and no relu is the identity (round-half-
+        // up of 2v is exactly v): a zero-weight conv branch + shortcut.
+        let mut g = crate::model::Graph::new("idres", 6, 6, 2);
+        g.add_node(
+            crate::model::NodeOp::Add(AddSpec { name: "add".into(), shift: 1, relu: false }),
+            &["input", "input"],
+        )
+        .unwrap();
+        let x = Tensor::random_image(3, 6, 6, 2);
+        assert_eq!(run_graph_ref(&g, &x), x);
     }
 
     #[test]

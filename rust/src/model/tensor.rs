@@ -104,6 +104,24 @@ impl Tensor {
         }
     }
 
+    /// Concatenate tensors along the channel axis (graph `Concat` op).
+    /// All inputs must share H and W.
+    pub fn concat_c(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty(), "concat of nothing");
+        let (h, w) = (parts[0].h, parts[0].w);
+        assert!(
+            parts.iter().all(|p| p.h == h && p.w == w),
+            "concat plane mismatch"
+        );
+        let mut out = Tensor::zeros(h, w, parts.iter().map(|p| p.c).sum());
+        let mut c0 = 0;
+        for p in parts {
+            out.write_channels(c0, p);
+            c0 += p.c;
+        }
+        out
+    }
+
     /// Write `src` into self at spatial offset (y0, x0) (image-
     /// decomposition re-assembly).
     pub fn write_window(&mut self, y0: usize, x0: usize, src: &Tensor) {
@@ -157,6 +175,16 @@ mod tests {
         r.write_channels(0, &a);
         r.write_channels(3, &b);
         assert_eq!(r, t);
+    }
+
+    #[test]
+    fn concat_c_stacks_channels() {
+        let a = Tensor::random_image(1, 4, 4, 2);
+        let b = Tensor::random_image(2, 4, 4, 3);
+        let cat = Tensor::concat_c(&[&a, &b]);
+        assert_eq!(cat.shape(), (4, 4, 5));
+        assert_eq!(cat.channels(0, 2), a);
+        assert_eq!(cat.channels(2, 3), b);
     }
 
     #[test]

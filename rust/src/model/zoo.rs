@@ -3,6 +3,7 @@
 //! cross-language contract; integration tests compare the simulator
 //! against the AOT artifacts bit-for-bit and catch any drift.
 
+use super::graph::{AddSpec, ConcatSpec, Graph, NodeOp};
 use super::layer::{ConvSpec, LayerSpec, NetSpec, PoolSpec};
 
 fn conv(
@@ -153,6 +154,81 @@ pub fn vgg16() -> NetSpec {
     NetSpec { name: "vgg16".into(), in_h: 224, in_w: 224, in_c: 3, layers }
 }
 
+/// Conv node helper for the graph nets (groups = 1).
+#[allow(clippy::too_many_arguments)]
+fn gnode(
+    name: &str,
+    k: usize,
+    pad: usize,
+    cin: usize,
+    cout: usize,
+    shift: u8,
+    relu: bool,
+    seed: u32,
+) -> NodeOp {
+    NodeOp::Conv(ConvSpec {
+        name: name.into(),
+        k,
+        stride: 1,
+        pad,
+        cin,
+        cout,
+        shift,
+        relu,
+        wseed: seed,
+        bseed: seed + 1,
+        groups: 1,
+    })
+}
+
+/// Residual edge net: two shortcut-add blocks around a pooled stem —
+/// the ResNet-style topology the graph IR exists for. Each block's
+/// second conv runs without ReLU; the Add requantizes the sum (shift 1,
+/// ReLU), so the shortcut carries signal the conv path modulates.
+pub fn edgenet() -> Graph {
+    let base = 13000;
+    let mut g = Graph::new("edgenet", 32, 32, 4);
+    let n = |g: &mut Graph, op, ins: &[&str]| {
+        g.add_node(op, ins).expect("edgenet is well-formed");
+    };
+    n(&mut g, gnode("stem", 3, 1, 4, 16, 9, true, base), &["input"]);
+    n(&mut g, gnode("b1a", 3, 1, 16, 16, 10, true, base + 2), &["stem"]);
+    n(&mut g, gnode("b1b", 3, 1, 16, 16, 10, false, base + 4), &["b1a"]);
+    n(
+        &mut g,
+        NodeOp::Add(AddSpec { name: "add1".into(), shift: 1, relu: true }),
+        &["b1b", "stem"],
+    );
+    n(&mut g, NodeOp::Pool(PoolSpec { name: "pool1".into(), k: 2, stride: 2 }), &["add1"]);
+    n(&mut g, gnode("b2a", 3, 1, 16, 16, 10, true, base + 6), &["pool1"]);
+    n(&mut g, gnode("b2b", 3, 1, 16, 16, 10, false, base + 8), &["b2a"]);
+    n(
+        &mut g,
+        NodeOp::Add(AddSpec { name: "add2".into(), shift: 1, relu: true }),
+        &["b2b", "pool1"],
+    );
+    n(&mut g, gnode("head", 3, 0, 16, 16, 10, false, base + 10), &["add2"]);
+    g
+}
+
+/// Branch+concat stem (Inception-style): parallel 3×3 and 5×5 paths
+/// over the input, channel-concatenated, then a pooled trunk. The 5×5
+/// branch exercises kernel decomposition inside a branch.
+pub fn widenet() -> Graph {
+    let base = 15000;
+    let mut g = Graph::new("widenet", 32, 32, 4);
+    let n = |g: &mut Graph, op, ins: &[&str]| {
+        g.add_node(op, ins).expect("widenet is well-formed");
+    };
+    n(&mut g, gnode("wa", 3, 1, 4, 16, 9, true, base), &["input"]);
+    n(&mut g, gnode("wb", 5, 2, 4, 16, 11, true, base + 2), &["input"]);
+    n(&mut g, NodeOp::Concat(ConcatSpec { name: "cat".into() }), &["wa", "wb"]);
+    n(&mut g, NodeOp::Pool(PoolSpec { name: "pool1".into(), k: 2, stride: 2 }), &["cat"]);
+    n(&mut g, gnode("mid", 3, 1, 32, 32, 11, true, base + 4), &["pool1"]);
+    n(&mut g, gnode("head", 3, 0, 32, 16, 11, false, base + 6), &["mid"]);
+    g
+}
+
 /// Look up a net by name.
 pub fn by_name(name: &str) -> Option<NetSpec> {
     match name {
@@ -164,7 +240,21 @@ pub fn by_name(name: &str) -> Option<NetSpec> {
     }
 }
 
+/// Look up any zoo net as a graph — linear nets convert via
+/// [`Graph::from_net`], `edgenet`/`widenet` are graph-native.
+pub fn graph_by_name(name: &str) -> Option<Graph> {
+    match name {
+        "edgenet" => Some(edgenet()),
+        "widenet" => Some(widenet()),
+        _ => by_name(name).map(|n| Graph::from_net(&n)),
+    }
+}
+
 pub const ALL: &[&str] = &["quicknet", "facenet", "alexnet", "vgg16"];
+
+/// Every zoo net, including the graph-native topologies.
+pub const GRAPH_ALL: &[&str] =
+    &["quicknet", "facenet", "alexnet", "vgg16", "edgenet", "widenet"];
 
 #[cfg(test)]
 mod tests {
@@ -214,5 +304,16 @@ mod tests {
             assert!(by_name(n).is_some());
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn graph_zoo_lookup_and_shapes() {
+        for n in GRAPH_ALL {
+            let g = graph_by_name(n).unwrap_or_else(|| panic!("missing {n}"));
+            g.validate().unwrap_or_else(|e| panic!("{n}: {e}"));
+        }
+        assert!(graph_by_name("nope").is_none());
+        assert_eq!(edgenet().out_shape().unwrap(), (14, 14, 16));
+        assert_eq!(widenet().out_shape().unwrap(), (14, 14, 16));
     }
 }

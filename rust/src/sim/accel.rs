@@ -14,13 +14,75 @@ use super::engine::CuEngine;
 use super::fastconv;
 use super::sram::{BufferBank, WORD_PX};
 use super::SimStats;
-use crate::isa::{Cmd, ConvCfg, ConvPass, PoolPass, PASS_FIRST, PASS_LAST};
+use crate::isa::{AddPass, Cmd, ConvCfg, ConvPass, PoolPass, PASS_FIRST, PASS_LAST};
 use crate::{NUM_CU, PES_PER_CU};
 
 /// Deferred DRAM writes produced by [`Accelerator::exec_shared`]:
-/// `(dram_px, row)` pairs the parallel runner applies after the layer
-/// barrier.
+/// `(dram_px, row)` pairs the parallel runner publishes when the
+/// segment completes.
 pub type StoreLog = Vec<(usize, Vec<i16>)>;
+
+/// Shared per-frame DRAM handle for [`Accelerator::exec_shared`].
+///
+/// Every access goes through the raw pointer — no `&[i16]` over the
+/// backing store is ever materialized — so one DAG worker can read
+/// producer canvases while another publishes its completed segment's
+/// stores into a *different* pixel range of the same allocation
+/// without violating Rust's aliasing rules. Data-race freedom is the
+/// caller's contract: conflicting same-pixel accesses must be ordered
+/// externally (the segment DAG's dependency edges, whose completion
+/// counters are updated under the scheduler mutex — its release/
+/// acquire pairs provide the happens-before edge); unordered accesses
+/// must touch disjoint pixels (segments of one node write disjoint
+/// canvas regions; weight/bias blocks are written only at compile
+/// time).
+pub struct SharedDram<'a> {
+    ptr: *mut i16,
+    len: usize,
+    _backing: std::marker::PhantomData<&'a mut [i16]>,
+}
+
+// SAFETY: see the type-level contract — all cross-thread element
+// accesses are either externally ordered or disjoint.
+unsafe impl Sync for SharedDram<'_> {}
+unsafe impl Send for SharedDram<'_> {}
+
+impl<'a> SharedDram<'a> {
+    pub fn new(dram: &'a mut [i16]) -> Self {
+        Self { ptr: dram.as_mut_ptr(), len: dram.len(), _backing: std::marker::PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Read `dst.len()` pixels starting at `at` into `dst`.
+    pub fn read_into(&self, at: usize, dst: &mut [i16]) {
+        assert!(at + dst.len() <= self.len, "DRAM read OOB");
+        // SAFETY: in-bounds; raw-pointer read, and the caller orders
+        // any conflicting write before/after this segment (see above).
+        unsafe { std::ptr::copy_nonoverlapping(self.ptr.add(at), dst.as_mut_ptr(), dst.len()) };
+    }
+
+    /// Read `n` pixels at `at` into a fresh buffer.
+    pub fn read_vec(&self, at: usize, n: usize) -> Vec<i16> {
+        let mut out = vec![0i16; n];
+        self.read_into(at, &mut out);
+        out
+    }
+
+    /// Publish `row` at pixel `at`.
+    pub fn write(&self, at: usize, row: &[i16]) {
+        assert!(at + row.len() <= self.len, "DRAM write OOB");
+        // SAFETY: in-bounds; raw-pointer write to pixels no unordered
+        // concurrent access touches (disjoint-store contract).
+        unsafe { std::ptr::copy_nonoverlapping(row.as_ptr(), self.ptr.add(at), row.len()) };
+    }
+}
 
 /// Simulator knobs (microarchitecture is fixed; timing params vary).
 #[derive(Clone, Debug)]
@@ -59,6 +121,9 @@ pub struct Accelerator {
     wstage: std::collections::VecDeque<(Vec<i16>, u64)>,
     /// Total pooling comparator operations.
     pool_ops_total: u64,
+    /// Reusable DMA row scratch for shared-DRAM loads (capacity only;
+    /// contents never outlive one row copy).
+    row_buf: Vec<i16>,
     pub stats: SimStats,
 }
 
@@ -78,6 +143,7 @@ impl Accelerator {
             conv_cfg: ConvCfg { stride: 1, shift: 0, relu: false },
             wstage: std::collections::VecDeque::new(),
             pool_ops_total: 0,
+            row_buf: Vec::new(),
             stats: SimStats::default(),
         }
     }
@@ -168,8 +234,8 @@ impl Accelerator {
             }
             Cmd::LoadBias(b) => {
                 // 16 int32 = 32 px, little-endian halves.
-                let (data, done) =
-                    self.dma.read(&mut self.dram, b.dram_px as usize, 2 * NUM_CU, self.stats.cycles);
+                let at = b.dram_px as usize;
+                let (data, done) = self.dma.read(&mut self.dram, at, 2 * NUM_CU, self.stats.cycles);
                 let mut bias = [0i32; NUM_CU];
                 for (m, bv) in bias.iter_mut().enumerate() {
                     let lo = data[2 * m] as u16 as u32;
@@ -184,7 +250,36 @@ impl Accelerator {
             }
             Cmd::Conv(p) => self.exec_conv(p),
             Cmd::Pool(p) => self.exec_pool(p),
+            Cmd::Add(p) => self.exec_add(p),
         }
+    }
+
+    /// Element-wise residual add over SRAM-resident operands — the
+    /// graph `Add` op. Functionally `requantize(a + b, shift, relu)`
+    /// per pixel (bit-exact with `model::reference::add_ref`). Timing:
+    /// the adder streams a word per port access, and the single-ported
+    /// bank serializes the two operand reads and the write-back, so the
+    /// pass costs 3 port accesses per 8-pixel word.
+    fn exec_add(&mut self, p: AddPass) {
+        let n = p.n_px as usize;
+        let (a0, b0, d0) = (p.src_a_px as usize, p.src_b_px as usize, p.dst_px as usize);
+        let (shift, relu) = (p.shift, p.relu);
+        for i in 0..n {
+            let a = self.sram.raw()[a0 + i];
+            let b = self.sram.raw()[b0 + i];
+            let v = crate::fixed::requantize(
+                crate::fixed::acc_add(a as i32, b as i32),
+                shift,
+                relu,
+            );
+            self.sram.write_px(d0 + i, v);
+        }
+        self.sram.charge_read_px(n);
+        self.sram.charge_read_px(n);
+        self.sram.charge_write_px(n);
+        self.stats.cycles += 3 * n.div_ceil(WORD_PX) as u64;
+        self.stats.sram_reads = self.sram.reads;
+        self.stats.sram_writes = self.sram.writes;
     }
 
     /// One convolution pass — see `ConvPass` for semantics.
@@ -364,16 +459,17 @@ impl Accelerator {
     }
 
     /// Execute one decoded command in **shared-DRAM** mode: DRAM reads
-    /// come from the caller's image `dram`, and `Store` rows are
-    /// appended to `wlog` instead of written (the parallel runner
-    /// applies them after the layer barrier — the tiles/feature-groups
-    /// of one layer write disjoint canvas regions, so application order
-    /// is irrelevant). Event and cycle accounting is identical to
+    /// come from the caller's [`SharedDram`] image, and `Store` rows
+    /// are appended to `wlog` instead of written (the DAG runner
+    /// publishes them when the segment completes — the decomposed work
+    /// units of one node write disjoint canvas regions, and consumers
+    /// are ordered behind the publish by their dependency edges).
+    /// Event and cycle accounting is identical to
     /// [`Accelerator::exec`]; since every decomposed work unit ends on
     /// a `Sync` barrier, per-segment stat deltas are
     /// translation-invariant and parallel totals match a sequential run
     /// bit-for-bit (tested in `compiler::tests`).
-    pub fn exec_shared(&mut self, cmd: Cmd, dram: &[i16], wlog: &mut StoreLog) {
+    pub fn exec_shared(&mut self, cmd: Cmd, dram: &SharedDram, wlog: &mut StoreLog) {
         self.stats.commands += 1;
         match cmd {
             Cmd::Nop | Cmd::Halt => {}
@@ -385,13 +481,19 @@ impl Accelerator {
             }
             Cmd::SetConv(c) => self.conv_cfg = c,
             Cmd::LoadImage(d) => {
+                // reusable row scratch: no per-row allocation on the
+                // DMA hot path (row_buf keeps its capacity across rows,
+                // segments and frames)
+                let n = d.row_px as usize;
+                let mut row = std::mem::take(&mut self.row_buf);
+                row.resize(n, 0);
                 for r in 0..d.rows as usize {
                     let src = d.dram_px as usize + r * d.dram_pitch as usize;
                     let dst = d.sram_px as usize + r * d.sram_pitch as usize;
-                    let n = d.row_px as usize;
-                    assert!(src + n <= dram.len(), "DRAM read OOB");
-                    self.sram.write_slice(dst, &dram[src..src + n]);
+                    dram.read_into(src, &mut row);
+                    self.sram.write_slice(dst, &row);
                 }
+                self.row_buf = row;
                 self.charge_dma_read(d.total_px() as u64 * 2);
             }
             Cmd::Store(d) => {
@@ -407,9 +509,7 @@ impl Accelerator {
             }
             Cmd::LoadWeights(w) => {
                 let len = w.cn as usize * PES_PER_CU * NUM_CU;
-                let at = w.dram_px as usize;
-                assert!(at + len <= dram.len(), "DRAM read OOB");
-                let data = dram[at..at + len].to_vec();
+                let data = dram.read_vec(w.dram_px as usize, len);
                 let bytes = len as u64 * 2;
                 self.dram.read_bytes += bytes;
                 let done = self.dma.schedule(&self.dram, bytes, self.stats.cycles);
@@ -423,12 +523,11 @@ impl Accelerator {
             }
             Cmd::LoadBias(b) => {
                 let len = 2 * NUM_CU;
-                let at = b.dram_px as usize;
-                assert!(at + len <= dram.len(), "DRAM read OOB");
+                let data = dram.read_vec(b.dram_px as usize, len);
                 let mut bias = [0i32; NUM_CU];
                 for (m, bv) in bias.iter_mut().enumerate() {
-                    let lo = dram[at + 2 * m] as u16 as u32;
-                    let hi = dram[at + 2 * m + 1] as u16 as u32;
+                    let lo = data[2 * m] as u16 as u32;
+                    let hi = data[2 * m + 1] as u16 as u32;
                     *bv = (lo | (hi << 16)) as i32;
                 }
                 self.accbuf.load_bias(&bias);
@@ -442,6 +541,7 @@ impl Accelerator {
             }
             Cmd::Conv(p) => self.exec_conv(p),
             Cmd::Pool(p) => self.exec_pool(p),
+            Cmd::Add(p) => self.exec_add(p),
         }
     }
 
@@ -505,7 +605,8 @@ mod tests {
         own.sync_stats();
 
         let mut shared = Accelerator::new(SimConfig { dram_px: 0, ..SimConfig::default() });
-        let dram = vec![7i16; 8192];
+        let mut backing = vec![7i16; 8192];
+        let dram = SharedDram::new(&mut backing);
         let mut wlog = StoreLog::new();
         for c in [Cmd::LoadImage(desc), Cmd::Store(store), Cmd::Sync] {
             shared.exec_shared(c, &dram, &mut wlog);
@@ -516,6 +617,41 @@ mod tests {
         assert_eq!(wlog.len(), 1);
         assert_eq!(wlog[0].0, 4096);
         assert_eq!(wlog[0].1, vec![7i16; 1024]);
+    }
+
+    /// The Add command must match the reference requantized sum and
+    /// charge the single port for 2 reads + 1 write per word.
+    #[test]
+    fn add_command_requantizes_and_charges() {
+        let mut acc = Accelerator::new(SimConfig::default());
+        let vals_a: Vec<i16> = (0..16).map(|v| (v * 100 - 800) as i16).collect();
+        let vals_b: Vec<i16> = (0..16).map(|v| (v * 7 + 3) as i16).collect();
+        for i in 0..16 {
+            acc.sram.write_px(i, vals_a[i]);
+            acc.sram.write_px(100 + i, vals_b[i]);
+        }
+        acc.reset_counters();
+        acc.exec(Cmd::Add(AddPass {
+            src_a_px: 0,
+            src_b_px: 100,
+            dst_px: 200,
+            n_px: 16,
+            shift: 1,
+            relu: true,
+        }));
+        for i in 0..16 {
+            let want = crate::fixed::requantize(
+                crate::fixed::acc_add(vals_a[i] as i32, vals_b[i] as i32),
+                1,
+                true,
+            );
+            assert_eq!(acc.sram.raw()[200 + i], want, "px {i}");
+        }
+        // 16 px = 2 words: 2+2 read words, 2 write words, 6 port cycles
+        assert_eq!(acc.stats.cycles, 6);
+        assert_eq!(acc.stats.sram_reads, 4);
+        assert_eq!(acc.stats.sram_writes, 2);
+        assert_eq!(acc.stats.commands, 1);
     }
 
     #[test]

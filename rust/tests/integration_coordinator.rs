@@ -21,8 +21,8 @@ fn results_correct_under_concurrency() {
             (0..12).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
         let rxs: Vec<_> = frames.iter().map(|f| coord.submit(f.clone())).collect();
         for (rx, f) in rxs.into_iter().zip(&frames) {
-            let r = rx.recv().expect("result");
-            assert_eq!(r.output, run_net_ref(&net, f), "workers={workers}");
+            let out = rx.recv().expect("result").ok().expect("frame served");
+            assert_eq!(out.output, run_net_ref(&net, f), "workers={workers}");
         }
         coord.stop();
     }
@@ -62,6 +62,7 @@ fn run_stream_accounts_every_frame() {
         (0..n).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
     let m = coord.run_stream(frames);
     assert_eq!(m.frames, n as u64);
+    assert_eq!(m.errors, 0);
     assert!(m.totals.macs > 0);
     assert!(m.device_fps() > 0.0);
     assert!(m.dev_lat_us.quantile(0.99) >= m.dev_lat_us.quantile(0.5));
