@@ -61,14 +61,20 @@ fn main() -> anyhow::Result<()> {
     let net = zoo::facenet();
     let coord = Coordinator::start(
         &net,
-        CoordinatorConfig { workers: 1, queue_depth: 4, tile_workers: 2, op: dvfs::PEAK },
+        CoordinatorConfig {
+            workers: 1,
+            queue_depth: 4,
+            tile_workers: 2,
+            op: dvfs::PEAK,
+            ..Default::default()
+        },
     )?;
 
     // calibrate a decision threshold on blank frames
     println!("calibrating on 8 blank frames…");
     let mut blank_max: f64 = 0.0;
     for s in 0..8 {
-        let r = coord.submit(synth_frame(9000 + s, false)).recv()?.ok()?;
+        let r = coord.submit(synth_frame(9000 + s, false))?.recv()?.ok()?;
         blank_max = blank_max.max(score(&r.output));
     }
     let threshold = blank_max * 1.25;
@@ -79,7 +85,7 @@ fn main() -> anyhow::Result<()> {
     let mut correct = 0;
     let mut total_cycles = 0u64;
     for &(seed, has_face) in &cases {
-        let r = coord.submit(synth_frame(seed, has_face)).recv()?.ok()?;
+        let r = coord.submit(synth_frame(seed, has_face))?.recv()?.ok()?;
         let s = score(&r.output);
         let detected = s > threshold;
         let ok = detected == has_face;

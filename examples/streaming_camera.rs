@@ -38,12 +38,13 @@ fn main() -> anyhow::Result<()> {
                 queue_depth: 4,
                 tile_workers: m.get_usize("tile-workers"),
                 op,
+                ..Default::default()
             },
         )?;
         let frames: Vec<Tensor> = (0..frames_n)
             .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))
             .collect();
-        let metrics = coord.run_stream(frames);
+        let metrics = coord.run_stream(frames)?;
         let e = energy.energy(&metrics.totals, op);
         let dev_s = metrics.totals.cycles as f64 * op.cycle_s();
         t.row(&[

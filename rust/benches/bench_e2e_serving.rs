@@ -4,7 +4,7 @@
 //!
 //! `cargo bench --bench bench_e2e_serving`
 
-use kn_stream::coordinator::{Coordinator, CoordinatorConfig};
+use kn_stream::coordinator::{AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig};
 use kn_stream::energy::{dvfs, EnergyModel, OperatingPoint};
 use kn_stream::model::{zoo, Tensor};
 use kn_stream::runtime::Golden;
@@ -31,13 +31,19 @@ fn main() {
             let op = OperatingPoint::for_freq(freq);
             let coord = Coordinator::start_graph(
                 &net,
-                CoordinatorConfig { workers, queue_depth: 4, tile_workers, op },
+                CoordinatorConfig {
+                    workers,
+                    queue_depth: 4,
+                    tile_workers,
+                    op,
+                    ..Default::default()
+                },
             )
             .unwrap();
             let frames: Vec<Tensor> = (0..frames_n)
                 .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))
                 .collect();
-            let m = coord.run_stream(frames);
+            let m = coord.run_stream(frames).expect("coordinator running");
             let e = energy.energy(&m.totals, op);
             t.row(&[
                 net_name.into(),
@@ -68,6 +74,72 @@ fn main() {
         }
     }
     t.print();
+
+    // ---- Mixed-traffic registry: one worker pool, heterogeneous nets ------
+    // The paper's target deployment: several smart-vision workloads
+    // sharing one accelerator. 4:2:1 mix over three different
+    // topologies (residual / branch+concat / linear), pooled simulators
+    // shared across runners, admission policy on (generous budget —
+    // the interesting number here is throughput under mixing).
+    let nets = zoo::graphs_by_names("edgenet,widenet,facenet").unwrap();
+    let mixed_n = 56usize;
+    let tagged = zoo::mix_stream(&nets, &[4, 2, 1], mixed_n);
+    let op = OperatingPoint::for_freq(500.0);
+    let coord = Coordinator::start_registry(
+        nets,
+        CoordinatorConfig {
+            workers: 4,
+            queue_depth: 8,
+            tile_workers: 1,
+            op,
+            admission: AdmissionPolicy {
+                max_dram_bytes: 64 << 20,
+                mode: AdmissionMode::Block,
+            },
+        },
+    )
+    .unwrap();
+    let rep = coord.run_mix(tagged).expect("coordinator running");
+    let mut mt = Table::new(
+        "Mixed traffic: 3-net registry, shared 4-worker pool (mix 4:2:1)",
+        &["net", "frames", "errors", "device fps", "p99", "q-wait mean", "host share fps"],
+    );
+    for (name, nm) in &rep.per_net {
+        mt.row(&[
+            name.to_string(),
+            format!("{}", nm.frames),
+            format!("{}", nm.errors),
+            format!("{:.1}", nm.device_fps()),
+            format!("{:.2}ms", nm.dev_lat_us.quantile(0.99) / 1e3),
+            format!("{:.0}µs", nm.queue_wait_us.mean()),
+            format!("{:.1}", nm.wall_fps()),
+        ]);
+        report.push_row(
+            "mixed",
+            obj(vec![
+                ("net", s(name)),
+                ("frames", num(nm.frames as f64)),
+                ("errors", num(nm.errors as f64)),
+                ("device_fps", num(nm.device_fps())),
+                ("p99_device_ms", num(nm.dev_lat_us.quantile(0.99) / 1e3)),
+                ("queue_wait_mean_us", num(nm.queue_wait_us.mean())),
+                ("queue_wait_max_us", num(nm.queue_wait_us.max())),
+            ]),
+        );
+    }
+    mt.print();
+    report
+        .num("mixed_frames_total", rep.aggregate.frames as f64)
+        .num("mixed_errors_total", rep.aggregate.errors as f64)
+        .num("mixed_wall_fps", rep.aggregate.wall_fps())
+        .num("mixed_queue_wait_mean_us", rep.aggregate.queue_wait_us.mean());
+    assert_eq!(
+        rep.accounted(),
+        mixed_n as u64,
+        "every mixed-traffic frame must be accounted"
+    );
+    coord.stop();
+
     report.write().expect("write BENCH_e2e.json");
 
     // ---- PJRT CPU baseline (the "reference platform") -----------------------

@@ -7,7 +7,9 @@
 //!   DAG (independently executable work units annotated with their
 //!   producer→consumer dependencies).
 //! * [`NetRunner`] — compile-once / run-many harness: pooled, reusable
-//!   simulator instances (no per-frame SRAM/DRAM reallocation), a
+//!   simulator instances (no per-frame SRAM/DRAM reallocation; the
+//!   [`AccelPool`] can be shared across runners so one serving registry
+//!   of heterogeneous nets recycles a single instance pool), a
 //!   sequential path ([`NetRunner::run_frame`]) and a parallel path
 //!   ([`NetRunner::run_frame_parallel`]) that executes the segment DAG
 //!   over a worker pool with a ready-queue — a segment becomes runnable
@@ -23,7 +25,7 @@ pub use codegen::{compile_graph, compile_net, CompiledNet, Segment};
 pub use decompose::{plan_conv, Plan, PlanError};
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::model::{Graph, NetSpec, Tensor};
 use crate::sim::accel::{SharedDram, StoreLog};
@@ -75,6 +77,62 @@ impl Drop for PoisonGuard<'_> {
     }
 }
 
+/// Reusable simulator state: DRAM-less [`Accelerator`] instances plus
+/// frame DRAM images, recycled across frames. Every [`NetRunner`] owns
+/// one by default; a serving registry hands the *same* `Arc<AccelPool>`
+/// to all its runners ([`NetRunner::share_pool`]) so heterogeneous nets
+/// recycle one set of simulator instances instead of each net holding
+/// a private idle pool — the instances are net-agnostic because the
+/// frame image is attached only for the duration of one run.
+#[derive(Default)]
+pub struct AccelPool {
+    /// DRAM-less instances (`cfg.dram_px == 0`), reusable by any runner
+    /// whose timing knobs match.
+    accels: Mutex<Vec<Accelerator>>,
+    /// Frame DRAM images; handed out zeroed and exactly sized.
+    drams: Mutex<Vec<Vec<i16>>>,
+}
+
+impl AccelPool {
+    /// Pop a pooled instance whose timing config matches `cfg`, or
+    /// build a fresh DRAM-less one. `dram_px` is ignored in the match:
+    /// pooled instances never own DRAM — the runner attaches a frame
+    /// image per run.
+    fn take_accel(&self, cfg: &SimConfig) -> Accelerator {
+        let mut pool = self.accels.lock().unwrap();
+        let found = pool.iter().position(|a| {
+            a.cfg.dram_latency == cfg.dram_latency
+                && a.cfg.dram_bytes_per_cycle.to_bits() == cfg.dram_bytes_per_cycle.to_bits()
+                && a.cfg.overlap_dma == cfg.overlap_dma
+        });
+        match found {
+            Some(i) => pool.swap_remove(i),
+            None => {
+                drop(pool);
+                Accelerator::new(SimConfig { dram_px: 0, ..cfg.clone() })
+            }
+        }
+    }
+
+    fn put_accel(&self, a: Accelerator) {
+        self.accels.lock().unwrap().push(a);
+    }
+
+    /// A zero-filled DRAM image of exactly `px` pixels. Zeroing (not
+    /// just resizing) is what makes cross-net reuse safe: another net's
+    /// canvas layout must not leak into this frame's image.
+    fn take_dram(&self, px: usize) -> Vec<i16> {
+        let mut d = self.drams.lock().unwrap().pop().unwrap_or_default();
+        d.clear();
+        d.resize(px, 0);
+        d
+    }
+
+    fn put_dram(&self, d: Vec<i16>) {
+        self.drams.lock().unwrap().push(d);
+    }
+}
+
 /// Compile-once / run-many harness around the simulator.
 pub struct NetRunner {
     pub compiled: CompiledNet,
@@ -87,13 +145,9 @@ pub struct NetRunner {
     /// Total commands covered by segments (the rest — `SetConv`s and
     /// the `Halt` — are accounted to the parallel totals directly).
     covered: usize,
-    /// Reusable full simulators (sequential path).
-    pool: Mutex<Vec<Accelerator>>,
-    /// Reusable DRAM-less simulators: parallel workers execute against
-    /// a shared frame DRAM image instead of owning one.
-    worker_pool: Mutex<Vec<Accelerator>>,
-    /// Reusable shared frame DRAM images (parallel path).
-    dram_pool: Mutex<Vec<Vec<i16>>>,
+    /// Reusable simulator instances + frame DRAM images — private by
+    /// default, shared across runners in a registry.
+    pool: Arc<AccelPool>,
 }
 
 impl NetRunner {
@@ -128,24 +182,23 @@ impl NetRunner {
             dependents,
             indeg,
             covered,
-            pool: Mutex::new(Vec::new()),
-            worker_pool: Mutex::new(Vec::new()),
-            dram_pool: Mutex::new(Vec::new()),
+            pool: Arc::new(AccelPool::default()),
         })
     }
 
-    fn take_full(&self) -> Accelerator {
-        match self.pool.lock().unwrap().pop() {
-            Some(a) => a,
-            None => Accelerator::new(self.cfg.clone()),
-        }
+    /// Replace this runner's private [`AccelPool`] with a shared one.
+    /// A registry calls this on every runner it compiles, before any
+    /// frame runs, so heterogeneous nets draw simulator instances and
+    /// DRAM images from one pool.
+    pub fn share_pool(&mut self, pool: Arc<AccelPool>) {
+        self.pool = pool;
     }
 
-    fn take_worker(&self) -> Accelerator {
-        match self.worker_pool.lock().unwrap().pop() {
-            Some(a) => a,
-            None => Accelerator::new(SimConfig { dram_px: 0, ..self.cfg.clone() }),
-        }
+    /// Bytes of DRAM image one in-flight frame of this net occupies
+    /// (weights + all canvases) — the unit the serving registry's
+    /// admission policy budgets.
+    pub fn dram_frame_bytes(&self) -> usize {
+        self.compiled.dram_px * std::mem::size_of::<i16>()
     }
 
     /// Write the frame and initial image into a DRAM backing store.
@@ -190,15 +243,22 @@ impl NetRunner {
     /// output tensor and the run's statistics.
     pub fn run_frame(&self, frame: &Tensor) -> anyhow::Result<(Tensor, SimStats)> {
         self.check_frame(frame)?;
-        let mut accel = self.take_full();
+        let mut accel = self.pool.take_accel(&self.cfg);
         accel.reset_counters();
-        self.init_dram(&mut accel.dram.data, frame);
+        let mut dram = self.pool.take_dram(self.compiled.dram_px);
+        self.init_dram(&mut dram, frame);
+        // Attach the frame image as the instance's DRAM for this run —
+        // pooled instances are DRAM-less, which is what lets runners of
+        // different nets (different DRAM footprints) share one pool.
+        std::mem::swap(&mut accel.dram.data, &mut dram);
         // On error the instance is dropped (mid-program state is not
         // worth recycling); on success it returns to the pool.
         accel.run_program(&self.compiled.program)?;
-        let out = self.extract_output(&accel.dram.data);
+        std::mem::swap(&mut accel.dram.data, &mut dram);
+        let out = self.extract_output(&dram);
         let stats = accel.stats.clone();
-        self.pool.lock().unwrap().push(accel);
+        self.pool.put_accel(accel);
+        self.pool.put_dram(dram);
         Ok((out, stats))
     }
 
@@ -243,8 +303,7 @@ impl NetRunner {
             return self.run_frame(frame);
         }
         self.check_frame(frame)?;
-        let mut dram = self.dram_pool.lock().unwrap().pop().unwrap_or_default();
-        dram.resize(self.compiled.dram_px, 0);
+        let mut dram = self.pool.take_dram(self.compiled.dram_px);
         self.init_dram(&mut dram, frame);
 
         let segments = &self.compiled.segments;
@@ -252,7 +311,7 @@ impl NetRunner {
         let nworkers = workers.min(segments.len());
         let mut accels: Vec<Accelerator> = (0..nworkers)
             .map(|_| {
-                let mut a = self.take_worker();
+                let mut a = self.pool.take_accel(&self.cfg);
                 a.reset_counters();
                 a
             })
@@ -359,11 +418,11 @@ impl NetRunner {
             a.sync_stats();
             totals.add(&a.stats);
             a.reset_counters();
-            self.worker_pool.lock().unwrap().push(a);
+            self.pool.put_accel(a);
         }
 
         let out = self.extract_output(&dram);
-        self.dram_pool.lock().unwrap().push(dram);
+        self.pool.put_dram(dram);
         Ok((out, totals))
     }
 }
@@ -434,6 +493,34 @@ mod tests {
         assert_eq!(o1a, o1b, "reused instance changed the result");
         assert_eq!(s1a, s1b, "reused instance changed the stats");
         assert_eq!(o2, run_net_ref(&net, &f2));
+    }
+
+    /// Sharing one [`AccelPool`] across heterogeneous runners must not
+    /// change results: pooled instances are DRAM-less and frame images
+    /// are handed out zeroed, so nothing of one net's layout can leak
+    /// into another's frame. Interleaves nets so instances and images
+    /// actually hop between them.
+    #[test]
+    fn shared_pool_across_nets_is_bit_exact() {
+        let pool = Arc::new(AccelPool::default());
+        let mut runners = Vec::new();
+        for name in ["quicknet", "edgenet", "widenet"] {
+            let g = zoo::graph_by_name(name).unwrap();
+            let mut r = NetRunner::from_graph(&g).unwrap();
+            r.share_pool(Arc::clone(&pool));
+            assert!(r.dram_frame_bytes() > 0);
+            runners.push((g, r));
+        }
+        for s in 0..2u32 {
+            for (g, r) in &runners {
+                let f = Tensor::random_image(s, g.in_h, g.in_w, g.in_c);
+                let want = run_graph_ref(g, &f);
+                let (seq, _) = r.run_frame(&f).unwrap();
+                assert_eq!(seq, want, "{} seed {s} sequential", g.name);
+                let (par, _) = r.run_frame_parallel(&f, 3).unwrap();
+                assert_eq!(par, want, "{} seed {s} parallel", g.name);
+            }
+        }
     }
 
     /// The tentpole invariant: DAG-parallel execution is bit-identical

@@ -1,4 +1,5 @@
-//! Serving metrics: latency histograms + throughput + energy rollup.
+//! Serving metrics: latency histograms + throughput + energy rollup,
+//! aggregate and per registered net.
 
 use super::request::FrameResult;
 use crate::energy::{EnergyModel, OperatingPoint};
@@ -12,7 +13,9 @@ use crate::util::stats::{eng, Histogram, Running};
 pub struct RunMetrics {
     /// Successfully served frames.
     pub frames: u64,
-    /// Frames that failed (delivered as `Err` results).
+    /// Frames that failed (delivered as `Err` results), plus frames
+    /// lost to a dead worker or a failed submission — every frame that
+    /// entered `run_stream` lands in exactly one of `frames`/`errors`.
     pub errors: u64,
     /// Most recent failure message, if any.
     pub last_error: Option<String>,
@@ -21,6 +24,7 @@ pub struct RunMetrics {
     pub wall_lat_us: Histogram,
     /// Device latency histogram (µs at the DVFS point).
     pub dev_lat_us: Histogram,
+    /// Queue wait (submit → worker dequeue) per served frame, in µs.
     pub queue_wait_us: Running,
     pub totals: SimStats,
     pub op: OperatingPoint,
@@ -41,10 +45,17 @@ impl RunMetrics {
         }
     }
 
-    pub fn record(&mut self, stats: &SimStats, wall_latency_s: f64, device_latency_s: f64) {
+    pub fn record(
+        &mut self,
+        stats: &SimStats,
+        wall_latency_s: f64,
+        device_latency_s: f64,
+        queue_wait_s: f64,
+    ) {
         self.frames += 1;
         self.wall_lat_us.record(wall_latency_s * 1e6);
         self.dev_lat_us.record(device_latency_s * 1e6);
+        self.queue_wait_us.push(queue_wait_s * 1e6);
         self.totals.add(stats);
     }
 
@@ -56,7 +67,7 @@ impl RunMetrics {
     /// Fold one delivered [`FrameResult`] into the rollup.
     pub fn record_result(&mut self, r: &FrameResult) {
         match &r.result {
-            Ok(o) => self.record(&o.stats, o.wall_latency_s, o.device_latency_s),
+            Ok(o) => self.record(&o.stats, o.wall_latency_s, o.device_latency_s, o.queue_wait_s),
             Err(e) => self.record_error(&e.message),
         }
     }
@@ -95,7 +106,8 @@ impl RunMetrics {
         };
         format!(
             "frames={}{errs} | device: {:.1} fps, {}OPS eff, util {:.2} | dev-lat p50/p95/p99 = \
-             {:.1}/{:.1}/{:.1} ms | energy/frame {:.2} mJ (on-chip {:.2} mJ) | host {:.1} fps",
+             {:.1}/{:.1}/{:.1} ms | q-wait mean/max {:.0}/{:.0} µs | energy/frame {:.2} mJ \
+             (on-chip {:.2} mJ) | host {:.1} fps",
             self.frames,
             self.device_fps(),
             eng(self.device_ops_per_s()),
@@ -103,6 +115,8 @@ impl RunMetrics {
             self.dev_lat_us.quantile(0.50) / 1e3,
             self.dev_lat_us.quantile(0.95) / 1e3,
             self.dev_lat_us.quantile(0.99) / 1e3,
+            self.queue_wait_us.mean(),
+            self.queue_wait_us.max(),
             e.total_j() / self.frames.max(1) as f64 * 1e3,
             e.onchip_j() / self.frames.max(1) as f64 * 1e3,
             self.wall_fps(),
@@ -110,9 +124,70 @@ impl RunMetrics {
     }
 }
 
+/// Rollup of a mixed-traffic serving run: the aggregate [`RunMetrics`]
+/// plus one per registered net (registry order). Results for net names
+/// that were never registered (a delivered "unknown net" error) count
+/// in the aggregate only.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub aggregate: RunMetrics,
+    pub per_net: Vec<(String, RunMetrics)>,
+}
+
+impl ServeReport {
+    pub fn new(op: OperatingPoint, nets: &[String]) -> Self {
+        Self {
+            aggregate: RunMetrics::new(op),
+            per_net: nets.iter().map(|n| (n.clone(), RunMetrics::new(op))).collect(),
+        }
+    }
+
+    /// Metrics for one registered net.
+    pub fn net(&self, name: &str) -> Option<&RunMetrics> {
+        self.per_net.iter().find(|(n, _)| n == name).map(|(_, m)| m)
+    }
+
+    fn net_mut(&mut self, name: &str) -> Option<&mut RunMetrics> {
+        self.per_net.iter_mut().find(|(n, _)| n == name).map(|(_, m)| m)
+    }
+
+    /// Fold one delivered result into the aggregate and its net's row.
+    pub fn record_result(&mut self, r: &FrameResult) {
+        self.aggregate.record_result(r);
+        if let Some(m) = self.net_mut(&r.net) {
+            m.record_result(r);
+        }
+    }
+
+    /// Account a frame that produced no delivered result (dead worker,
+    /// failed submission) as an error on the aggregate and its net.
+    pub fn record_error_for(&mut self, net: &str, message: &str) {
+        self.aggregate.record_error(message);
+        if let Some(m) = self.net_mut(net) {
+            m.record_error(message);
+        }
+    }
+
+    /// Stamp the run's wall-clock on the aggregate and every per-net
+    /// row (the rows share the run's wall, so per-net `wall_fps` is the
+    /// net's share of throughput over the whole run).
+    pub fn set_wall(&mut self, wall_s: f64) {
+        self.aggregate.wall_s = wall_s;
+        for (_, m) in &mut self.per_net {
+            m.wall_s = wall_s;
+        }
+    }
+
+    /// Every frame accounted: served + errored, across the aggregate.
+    pub fn accounted(&self) -> u64 {
+        self.aggregate.frames + self.aggregate.errors
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::{FrameError, FrameOutput, NO_WORKER};
     use crate::energy::dvfs::PEAK;
 
     #[test]
@@ -120,7 +195,7 @@ mod tests {
         let mut m = RunMetrics::new(PEAK);
         let stats = SimStats { cycles: 500_000, macs: 50_000_000, ..Default::default() };
         for _ in 0..10 {
-            m.record(&stats, 0.01, 0.001);
+            m.record(&stats, 0.01, 0.001, 0.0005);
         }
         m.wall_s = 0.1;
         assert_eq!(m.frames, 10);
@@ -129,13 +204,58 @@ mod tests {
         assert!((m.device_fps() - 1000.0).abs() < 1.0, "{}", m.device_fps());
         assert!((m.wall_fps() - 100.0).abs() < 1.0);
         assert!(m.device_ops_per_s() > 0.0);
+        assert_eq!(m.queue_wait_us.count(), 10);
+        assert!((m.queue_wait_us.mean() - 500.0).abs() < 1e-6);
         let rep = m.report(&EnergyModel::default());
         assert!(rep.contains("frames=10"));
+        assert!(rep.contains("q-wait"));
         assert!(!rep.contains("ERRORS"));
         m.record_error("shape mismatch");
         m.record_error("sim fault");
         assert_eq!(m.errors, 2);
         let rep = m.report(&EnergyModel::default());
         assert!(rep.contains("ERRORS 2") && rep.contains("sim fault"), "{rep}");
+    }
+
+    #[test]
+    fn serve_report_routes_per_net() {
+        let nets = vec!["a".to_string(), "b".to_string()];
+        let mut rep = ServeReport::new(PEAK, &nets);
+        let ok = FrameResult {
+            id: 0,
+            net: "a".into(),
+            worker: 0,
+            result: Ok(FrameOutput {
+                output: crate::model::Tensor::zeros(1, 1, 1),
+                stats: SimStats { cycles: 1000, ..Default::default() },
+                wall_latency_s: 0.001,
+                device_latency_s: 0.0005,
+                queue_wait_s: 0.0001,
+            }),
+        };
+        rep.record_result(&ok);
+        let bad = FrameResult {
+            id: 1,
+            net: "b".into(),
+            worker: NO_WORKER,
+            result: Err(FrameError { message: "nope".into() }),
+        };
+        rep.record_result(&bad);
+        rep.record_error_for("b", "worker died: frame 2 undelivered");
+        // unknown net lands in the aggregate only
+        let unk = FrameResult {
+            id: 3,
+            net: "ghost".into(),
+            worker: NO_WORKER,
+            result: Err(FrameError { message: "unknown net 'ghost'".into() }),
+        };
+        rep.record_result(&unk);
+        assert_eq!(rep.aggregate.frames, 1);
+        assert_eq!(rep.aggregate.errors, 3);
+        assert_eq!(rep.net("a").unwrap().frames, 1);
+        assert_eq!(rep.net("a").unwrap().errors, 0);
+        assert_eq!(rep.net("b").unwrap().errors, 2);
+        assert!(rep.net("ghost").is_none());
+        assert_eq!(rep.accounted(), 4);
     }
 }

@@ -2,12 +2,16 @@
 //! (simulated) accelerator — the system the paper's FPGA demo (Fig. 8)
 //! sketches, built out as a deployable component.
 //!
-//! A smart-vision device streams camera frames; the coordinator owns the
-//! request queue, dispatches frames to accelerator workers (one chip =
-//! one worker; multi-chip setups just add workers), applies
-//! backpressure when the queue fills, and reports latency/throughput
-//! both in wall time and in *simulated device time* (cycles at the
-//! configured DVFS point).
+//! A smart-vision device streams camera frames; the coordinator owns a
+//! **multi-net serving registry** (`name → Arc<NetRunner>`) and one
+//! shared worker pool: any worker serves any registered net, frames are
+//! tagged with the net they target, backpressure applies when the
+//! bounded queue fills, and an admission policy budgets the DRAM-image
+//! bytes of in-flight frames across the heterogeneous runners. Metrics
+//! are kept per net and in aggregate, in wall time and in *simulated
+//! device time* (cycles at the configured DVFS point) — and every
+//! frame is accounted: failures are delivered results or counted
+//! errors, never silent drops.
 //!
 //! Threads + bounded channels (tokio is not vendorable offline — see
 //! DESIGN.md §Deviations); the dataflow is the same reactor shape.
@@ -16,6 +20,6 @@ pub mod metrics;
 pub mod request;
 pub mod server;
 
-pub use metrics::RunMetrics;
-pub use request::{FrameError, FrameOutput, FrameRequest, FrameResult};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use metrics::{RunMetrics, ServeReport};
+pub use request::{FrameError, FrameOutput, FrameRequest, FrameResult, SubmitError, NO_WORKER};
+pub use server::{AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig, Pending};

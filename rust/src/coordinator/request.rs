@@ -5,17 +5,25 @@ use std::time::Instant;
 use crate::model::Tensor;
 use crate::sim::SimStats;
 
-/// One camera frame submitted for inference.
+/// `FrameResult::worker` value for results the coordinator front-end
+/// synthesizes without dispatching to a worker (unknown net name,
+/// admission rejection).
+pub const NO_WORKER: usize = usize::MAX;
+
+/// One camera frame submitted for inference, tagged with the registered
+/// net that should serve it.
 #[derive(Clone, Debug)]
 pub struct FrameRequest {
     pub id: u64,
+    /// Registry name of the net this frame is routed to.
+    pub net: String,
     pub frame: Tensor,
     pub submitted: Instant,
 }
 
 impl FrameRequest {
-    pub fn new(id: u64, frame: Tensor) -> Self {
-        Self { id, frame, submitted: Instant::now() }
+    pub fn new(id: u64, net: &str, frame: Tensor) -> Self {
+        Self { id, net: net.to_string(), frame, submitted: Instant::now() }
     }
 }
 
@@ -29,6 +37,8 @@ pub struct FrameOutput {
     pub wall_latency_s: f64,
     /// Device latency: cycles / f at the configured operating point.
     pub device_latency_s: f64,
+    /// Time the frame sat in the bounded queue: submit → worker dequeue.
+    pub queue_wait_s: f64,
 }
 
 /// Why a frame failed (kept `Clone`-able for fan-out consumers, hence a
@@ -39,13 +49,32 @@ pub struct FrameError {
     pub message: String,
 }
 
+/// Why a submission could not be accepted at all. Unlike [`FrameError`]
+/// (which is *delivered* on the result channel and accounted per
+/// frame), a `SubmitError` means no frame entered the system — the old
+/// code path panicked here (`expect("coordinator stopped")`).
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum SubmitError {
+    /// `stop()` has already run; the worker pool is shut down.
+    #[error("coordinator is stopped")]
+    Stopped,
+    /// Every worker thread has exited (e.g. after a panic), so the job
+    /// queue has no consumer left.
+    #[error("worker pool disconnected")]
+    Disconnected,
+}
+
 /// The result for one frame. A failed frame is *delivered* with its
-/// error — callers never see a bare `RecvError`, and `run_stream`
-/// accounts the failure instead of silently undercounting.
+/// error — callers never see a bare `RecvError` for an accepted frame,
+/// and `run_stream` accounts the failure instead of silently
+/// undercounting.
 #[derive(Clone, Debug)]
 pub struct FrameResult {
     pub id: u64,
-    /// Worker that served the frame.
+    /// Net name the frame was routed to (as requested, even if unknown).
+    pub net: String,
+    /// Worker that served the frame, or [`NO_WORKER`] for results the
+    /// front-end synthesized (unknown net, admission rejection).
     pub worker: usize,
     pub result: Result<FrameOutput, FrameError>,
 }
@@ -65,19 +94,27 @@ mod tests {
 
     #[test]
     fn request_timestamps() {
-        let r = FrameRequest::new(1, Tensor::zeros(2, 2, 1));
+        let r = FrameRequest::new(1, "quicknet", Tensor::zeros(2, 2, 1));
         assert!(r.submitted.elapsed().as_secs() < 1);
         assert_eq!(r.id, 1);
+        assert_eq!(r.net, "quicknet");
     }
 
     #[test]
     fn frame_error_carries_id_through_ok() {
         let r = FrameResult {
             id: 7,
+            net: "quicknet".into(),
             worker: 0,
             result: Err(FrameError { message: "boom".into() }),
         };
         let err = r.ok().unwrap_err().to_string();
         assert!(err.contains("frame 7") && err.contains("boom"), "{err}");
+    }
+
+    #[test]
+    fn submit_error_messages() {
+        assert_eq!(SubmitError::Stopped.to_string(), "coordinator is stopped");
+        assert!(SubmitError::Disconnected.to_string().contains("disconnected"));
     }
 }

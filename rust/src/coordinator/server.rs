@@ -1,24 +1,65 @@
-//! The streaming frame server: bounded queue → worker pool → results.
+//! The streaming frame server: a multi-net serving registry in front
+//! of one shared worker pool.
 //!
-//! Each worker owns one simulated accelerator (compile-once, run-many);
-//! the dispatcher is a bounded mpsc channel, so a saturated device
-//! back-pressures the camera source instead of buffering unboundedly —
-//! the same control law a real smart-vision pipeline needs. A frame
-//! that fails still produces a delivered [`FrameResult`] (with the
-//! error inside), so `submit()` callers never see a bare `RecvError`
-//! and `run_stream` accounts every frame.
+//! `Coordinator::start_registry` compiles each named graph once into
+//! `name → Arc<NetRunner>`; every worker can serve every net, so a
+//! burst on one workload soaks up whatever capacity the others leave
+//! idle — the "one accelerator, many smart-vision apps" deployment the
+//! paper targets. The dispatcher is a bounded mpsc channel, so a
+//! saturated device back-pressures the camera sources instead of
+//! buffering unboundedly, and an [`AdmissionPolicy`] bounds the total
+//! DRAM-image bytes of in-flight frames across the heterogeneous
+//! runners (the pooled simulators share one [`AccelPool`]).
+//!
+//! **Every frame is accounted.** A frame that fails produces a
+//! *delivered* [`FrameResult`] with the error inside (bad input,
+//! unknown net name, admission rejection); a frame lost to a dead
+//! worker is folded into [`RunMetrics`] as an error by `run_stream` /
+//! `run_mix`; and submitting to a stopped coordinator is a clean
+//! [`SubmitError`], not a panic.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvError, SyncSender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use super::metrics::RunMetrics;
-use super::request::{FrameError, FrameOutput, FrameRequest, FrameResult};
-use crate::compiler::NetRunner;
+use super::metrics::{RunMetrics, ServeReport};
+use super::request::{FrameError, FrameOutput, FrameRequest, FrameResult, SubmitError, NO_WORKER};
+use crate::compiler::{AccelPool, NetRunner};
 use crate::energy::OperatingPoint;
 use crate::model::{Graph, NetSpec, Tensor};
+
+/// What to do when admitting a frame would exceed the DRAM budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Block the submitter until in-flight frames release enough bytes
+    /// (backpressure — the default).
+    Block,
+    /// Deliver the frame immediately as a [`FrameError`] (load
+    /// shedding); the rejection is accounted like any other error.
+    Reject,
+}
+
+/// Bounds the total DRAM-image bytes of in-flight frames across all
+/// registered nets: a frame is admitted only when its runner's
+/// footprint ([`NetRunner::dram_frame_bytes`]) fits in the remaining
+/// budget. Heterogeneous nets compete for the same budget, so a few
+/// big-canvas frames can't starve the pool unnoticed.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionPolicy {
+    /// Total in-flight DRAM-image budget in bytes (`usize::MAX` =
+    /// unbounded, the default).
+    pub max_dram_bytes: usize,
+    pub mode: AdmissionMode,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        Self { max_dram_bytes: usize::MAX, mode: AdmissionMode::Block }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct CoordinatorConfig {
@@ -33,25 +74,132 @@ pub struct CoordinatorConfig {
     pub tile_workers: usize,
     /// DVFS point the devices run at.
     pub op: OperatingPoint,
+    /// DRAM-image budget for in-flight frames.
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { workers: 1, queue_depth: 4, tile_workers: 1, op: crate::energy::dvfs::PEAK }
+        Self {
+            workers: 1,
+            queue_depth: 4,
+            tile_workers: 1,
+            op: crate::energy::dvfs::PEAK,
+            admission: AdmissionPolicy::default(),
+        }
+    }
+}
+
+/// In-flight DRAM-byte ledger behind the admission policy.
+struct Admission {
+    policy: AdmissionPolicy,
+    in_flight: Mutex<usize>,
+    freed: Condvar,
+}
+
+impl Admission {
+    /// Reserve `bytes` for one frame, or explain why it can't run.
+    fn admit(&self, bytes: usize) -> Result<(), String> {
+        if bytes > self.policy.max_dram_bytes {
+            return Err(format!(
+                "admission: frame needs {bytes} B of DRAM image, budget is {} B",
+                self.policy.max_dram_bytes
+            ));
+        }
+        let mut used = self.in_flight.lock().unwrap();
+        match self.policy.mode {
+            AdmissionMode::Block => {
+                while *used + bytes > self.policy.max_dram_bytes {
+                    used = self.freed.wait(used).unwrap();
+                }
+            }
+            AdmissionMode::Reject => {
+                if *used + bytes > self.policy.max_dram_bytes {
+                    return Err(format!(
+                        "admission: rejected — {bytes} B needed, {} B of {} B already in flight",
+                        *used, self.policy.max_dram_bytes
+                    ));
+                }
+            }
+        }
+        *used += bytes;
+        Ok(())
+    }
+
+    fn release(&self, bytes: usize) {
+        let mut used = self.in_flight.lock().unwrap();
+        *used -= bytes;
+        drop(used);
+        self.freed.notify_all();
+    }
+}
+
+/// An owned admission reservation, released exactly once — on drop.
+/// It rides inside the [`Job`], so the bytes come back whether the
+/// frame was served, its worker panicked mid-run, the send to a dead
+/// pool failed, or the job was dropped *unserved inside the queue*
+/// (all workers gone, or enqueued behind `Stop` at shutdown). Without
+/// that last case a blocked submitter would wait forever on bytes no
+/// one can ever release.
+struct Reservation {
+    admission: Arc<Admission>,
+    bytes: usize,
+}
+
+impl Drop for Reservation {
+    fn drop(&mut self) {
+        self.admission.release(self.bytes);
     }
 }
 
 enum Job {
-    Frame(FrameRequest, SyncSender<FrameResult>),
+    Frame {
+        req: FrameRequest,
+        runner: Arc<NetRunner>,
+        /// Admission hold for this frame; dropping the job releases it.
+        reservation: Reservation,
+        out: SyncSender<FrameResult>,
+    },
     Stop,
+    /// Test/chaos hook: panic the receiving worker (see
+    /// [`Coordinator::inject_worker_panic`]).
+    #[doc(hidden)]
+    Poison,
+}
+
+/// Handle to one in-flight frame: the id the coordinator assigned and
+/// the channel its delivered [`FrameResult`] arrives on. A `recv` error
+/// means the serving worker died before delivering — `run_stream` /
+/// `run_mix` fold that into the metrics instead of dropping the frame.
+#[derive(Debug)]
+pub struct Pending {
+    pub id: u64,
+    pub net: String,
+    rx: Receiver<FrameResult>,
+}
+
+impl Pending {
+    pub fn recv(&self) -> Result<FrameResult, RecvError> {
+        self.rx.recv()
+    }
+
+    pub fn try_recv(&self) -> Result<FrameResult, TryRecvError> {
+        self.rx.try_recv()
+    }
 }
 
 /// The serving front-end.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
+    /// Registry order; the first entry is the default net for untagged
+    /// [`Coordinator::submit`].
+    nets: Vec<(String, Arc<NetRunner>)>,
+    by_name: HashMap<String, usize>,
     tx: SyncSender<Job>,
-    handles: Vec<JoinHandle<()>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    stopped: AtomicBool,
     next_id: AtomicU64,
+    admission: Arc<Admission>,
 }
 
 impl Coordinator {
@@ -63,85 +211,249 @@ impl Coordinator {
     /// Compile a graph (branch/residual topologies included) once and
     /// start the worker pool.
     pub fn start_graph(graph: &Graph, cfg: CoordinatorConfig) -> anyhow::Result<Self> {
-        let runner = Arc::new(NetRunner::from_graph(graph)?);
+        Self::start_registry(vec![(graph.name.clone(), graph.clone())], cfg)
+    }
+
+    /// Compile every named graph once and start one worker pool that
+    /// serves them all: any worker runs any net, the pooled simulator
+    /// instances are shared across runners, and the admission policy
+    /// bounds the total in-flight DRAM-image bytes.
+    pub fn start_registry(
+        nets: Vec<(String, Graph)>,
+        cfg: CoordinatorConfig,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(!nets.is_empty(), "serving registry needs at least one net");
+        let pool = Arc::new(AccelPool::default());
+        let mut registry: Vec<(String, Arc<NetRunner>)> = Vec::with_capacity(nets.len());
+        let mut by_name = HashMap::new();
+        for (name, graph) in &nets {
+            anyhow::ensure!(
+                by_name.insert(name.clone(), registry.len()).is_none(),
+                "duplicate net name '{name}' in registry"
+            );
+            let mut runner = NetRunner::from_graph(graph)
+                .map_err(|e| anyhow::anyhow!("compiling net '{name}': {e:#}"))?;
+            runner.share_pool(Arc::clone(&pool));
+            registry.push((name.clone(), Arc::new(runner)));
+        }
+        let admission = Arc::new(Admission {
+            policy: cfg.admission,
+            in_flight: Mutex::new(0),
+            freed: Condvar::new(),
+        });
         let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
-        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::new();
         for w in 0..cfg.workers.max(1) {
             let rx = Arc::clone(&rx);
-            let runner = Arc::clone(&runner);
             let op = cfg.op;
             let tile_workers = cfg.tile_workers.max(1);
             handles.push(std::thread::spawn(move || loop {
                 let job = { rx.lock().unwrap().recv() };
                 match job {
-                    Ok(Job::Frame(req, out)) => {
+                    Ok(Job::Frame { req, runner, reservation, out }) => {
+                        // Held until the end of this arm — released on
+                        // completion or during a panic unwind alike.
+                        let _admit = reservation;
+                        let queue_wait_s = req.submitted.elapsed().as_secs_f64();
                         let result = match runner.run_frame_parallel(&req.frame, tile_workers) {
-                            Ok((output, stats)) => {
-                                Ok(FrameOutput {
-                                    output,
-                                    device_latency_s: stats.cycles as f64 * op.cycle_s(),
-                                    wall_latency_s: req.submitted.elapsed().as_secs_f64(),
-                                    stats,
-                                })
-                            }
+                            Ok((output, stats)) => Ok(FrameOutput {
+                                output,
+                                device_latency_s: stats.cycles as f64 * op.cycle_s(),
+                                wall_latency_s: req.submitted.elapsed().as_secs_f64(),
+                                queue_wait_s,
+                                stats,
+                            }),
                             Err(e) => Err(FrameError { message: format!("{e:#}") }),
                         };
-                        let _ = out.send(FrameResult { id: req.id, worker: w, result });
+                        let _ = out.send(FrameResult {
+                            id: req.id,
+                            net: req.net,
+                            worker: w,
+                            result,
+                        });
                     }
+                    Ok(Job::Poison) => panic!("injected worker panic (chaos hook)"),
                     Ok(Job::Stop) | Err(_) => break,
                 }
             }));
         }
-        Ok(Self { cfg, tx, handles, next_id: AtomicU64::new(0) })
+        Ok(Self {
+            cfg,
+            nets: registry,
+            by_name,
+            tx,
+            handles: Mutex::new(handles),
+            stopped: AtomicBool::new(false),
+            next_id: AtomicU64::new(0),
+            admission,
+        })
     }
 
-    /// Submit one frame; blocks when the queue is full (backpressure).
-    /// Returns the receiver for this frame's result.
-    pub fn submit(&self, frame: Tensor) -> Receiver<FrameResult> {
+    /// Names of the registered nets, registry order.
+    pub fn net_names(&self) -> Vec<String> {
+        self.nets.iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    /// DRAM-image footprint of one in-flight frame of `net`.
+    pub fn dram_frame_bytes(&self, net: &str) -> Option<usize> {
+        self.by_name.get(net).map(|&i| self.nets[i].1.dram_frame_bytes())
+    }
+
+    /// Synthesize a result the front-end delivers without dispatching
+    /// (unknown net, admission rejection) — the frame is still
+    /// *delivered and accounted*, never silently dropped.
+    fn deliver_front_end_error(id: u64, net: &str, message: String) -> Pending {
         let (otx, orx) = sync_channel(1);
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .send(Job::Frame(FrameRequest::new(id, frame), otx))
-            .expect("coordinator stopped");
-        orx
+        let _ = otx.send(FrameResult {
+            id,
+            net: net.to_string(),
+            worker: NO_WORKER,
+            result: Err(FrameError { message }),
+        });
+        Pending { id, net: net.to_string(), rx: orx }
     }
 
-    /// Convenience: push a batch of frames through and gather metrics —
-    /// failures included (`RunMetrics::errors`).
-    pub fn run_stream(&self, frames: Vec<Tensor>) -> RunMetrics {
-        let mut metrics = RunMetrics::new(self.cfg.op);
+    /// Submit one frame to the default (first-registered) net; blocks
+    /// when the queue is full (backpressure).
+    pub fn submit(&self, frame: Tensor) -> Result<Pending, SubmitError> {
+        let net = self.nets[0].0.clone();
+        self.submit_to(&net, frame)
+    }
+
+    /// Submit one frame to a named net. Unknown names and admission
+    /// rejections come back as *delivered* [`FrameError`] results on
+    /// the returned [`Pending`]; only a stopped coordinator or a dead
+    /// worker pool is a [`SubmitError`].
+    pub fn submit_to(&self, net: &str, frame: Tensor) -> Result<Pending, SubmitError> {
+        if self.stopped.load(Ordering::SeqCst) {
+            return Err(SubmitError::Stopped);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let Some(&idx) = self.by_name.get(net) else {
+            let have = self.net_names().join(", ");
+            return Ok(Self::deliver_front_end_error(
+                id,
+                net,
+                format!("unknown net '{net}' (registered: {have})"),
+            ));
+        };
+        let runner = Arc::clone(&self.nets[idx].1);
+        let reserved = runner.dram_frame_bytes();
+        if let Err(why) = self.admission.admit(reserved) {
+            return Ok(Self::deliver_front_end_error(id, net, why));
+        }
+        let reservation = Reservation { admission: Arc::clone(&self.admission), bytes: reserved };
+        let (otx, orx) = sync_channel(1);
+        let job = Job::Frame {
+            req: FrameRequest::new(id, net, frame),
+            runner,
+            reservation,
+            out: otx,
+        };
+        if self.tx.send(job).is_err() {
+            // Every worker is gone; the failed send hands the job back
+            // and dropping it releases the reservation.
+            return Err(SubmitError::Disconnected);
+        }
+        Ok(Pending { id, net: net.to_string(), rx: orx })
+    }
+
+    /// Convenience: push a batch of frames through the default net and
+    /// gather metrics — failures included (`RunMetrics::errors`).
+    pub fn run_stream(&self, frames: Vec<Tensor>) -> Result<RunMetrics, SubmitError> {
+        let net = self.nets[0].0.clone();
+        let tagged = frames.into_iter().map(|f| (net.clone(), f)).collect();
+        Ok(self.run_mix(tagged)?.aggregate)
+    }
+
+    /// Push a mixed-traffic batch (`(net, frame)` pairs) through the
+    /// registry and gather aggregate + per-net metrics. Every frame is
+    /// accounted exactly once: served frames in `frames`, everything
+    /// else — bad input, unknown net, admission rejection, a worker
+    /// that died mid-frame, a submission the dead pool refused — in
+    /// `errors`. Returns `Err` only when the coordinator was stopped
+    /// before any frame entered.
+    pub fn run_mix(&self, frames: Vec<(String, Tensor)>) -> Result<ServeReport, SubmitError> {
+        if self.stopped.load(Ordering::SeqCst) {
+            return Err(SubmitError::Stopped);
+        }
+        let names = self.net_names();
+        let mut report = ServeReport::new(self.cfg.op, &names);
         let t0 = Instant::now();
-        let mut pending = std::collections::VecDeque::new();
-        for f in frames {
-            pending.push_back(self.submit(f));
-            // drain opportunistically to keep the pipe moving
+        let mut pending: VecDeque<Pending> = VecDeque::new();
+        for (net, f) in frames {
+            match self.submit_to(&net, f) {
+                Ok(p) => pending.push_back(p),
+                Err(e) => report.record_error_for(&net, &format!("submit failed: {e}")),
+            }
+            // Drain opportunistically to keep the pipe moving. `Empty`
+            // just means the front frame is still in flight;
+            // `Disconnected` means its worker died before delivering —
+            // an accounted error, not a silent drop.
             while let Some(front) = pending.front() {
                 match front.try_recv() {
                     Ok(r) => {
-                        metrics.record_result(&r);
+                        report.record_result(&r);
                         pending.pop_front();
                     }
-                    Err(_) => break,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        let p = pending.pop_front().expect("front exists");
+                        report.record_error_for(
+                            &p.net,
+                            &format!("worker died: frame {} undelivered", p.id),
+                        );
+                    }
                 }
             }
         }
-        for rx in pending {
-            if let Ok(r) = rx.recv() {
-                metrics.record_result(&r);
+        for p in pending {
+            match p.recv() {
+                Ok(r) => report.record_result(&r),
+                Err(RecvError) => report.record_error_for(
+                    &p.net,
+                    &format!("worker died: frame {} undelivered", p.id),
+                ),
             }
         }
-        metrics.wall_s = t0.elapsed().as_secs_f64();
-        metrics
+        report.set_wall(t0.elapsed().as_secs_f64());
+        Ok(report)
     }
 
-    pub fn stop(mut self) {
-        for _ in 0..self.handles.len() {
-            let _ = self.tx.send(Job::Stop);
+    /// Shut the worker pool down and join it. Idempotent; afterwards
+    /// `submit` returns [`SubmitError::Stopped`] instead of panicking.
+    pub fn stop(&self) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
+            return;
         }
-        for h in self.handles.drain(..) {
+        let n = self.handles.lock().unwrap().len();
+        for _ in 0..n {
+            if self.tx.send(Job::Stop).is_err() {
+                break; // workers already gone
+            }
+        }
+        for h in self.handles.lock().unwrap().drain(..) {
             let _ = h.join();
         }
+    }
+
+    /// Chaos/test hook: panic one worker thread (it dies without
+    /// delivering anything, like a real crashed process). Used to prove
+    /// the lossy paths are gone: frames queued behind the poison come
+    /// back as accounted "worker died" errors, never silent drops.
+    #[doc(hidden)]
+    pub fn inject_worker_panic(&self) -> Result<(), SubmitError> {
+        if self.stopped.load(Ordering::SeqCst) {
+            return Err(SubmitError::Stopped);
+        }
+        self.tx.send(Job::Poison).map_err(|_| SubmitError::Disconnected)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop();
     }
 }
 
@@ -157,13 +469,15 @@ mod tests {
         let coord = Coordinator::start(&net, CoordinatorConfig::default()).unwrap();
         let frames: Vec<Tensor> =
             (0..6).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
-        let rxs: Vec<_> = frames.iter().map(|f| coord.submit(f.clone())).collect();
+        let rxs: Vec<_> = frames.iter().map(|f| coord.submit(f.clone()).unwrap()).collect();
         for (i, (rx, f)) in rxs.into_iter().zip(&frames).enumerate() {
             let r = rx.recv().unwrap();
             assert_eq!(r.id, i as u64);
+            assert_eq!(r.net, "quicknet");
             let out = r.ok().unwrap();
             assert_eq!(out.output, run_net_ref(&net, f), "frame {i} wrong result");
             assert!(out.device_latency_s > 0.0);
+            assert!(out.queue_wait_s >= 0.0);
         }
         coord.stop();
     }
@@ -175,10 +489,11 @@ mod tests {
         let coord = Coordinator::start(&net, cfg).unwrap();
         let frames: Vec<Tensor> =
             (0..20).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
-        let m = coord.run_stream(frames);
+        let m = coord.run_stream(frames).unwrap();
         assert_eq!(m.frames, 20);
         assert_eq!(m.errors, 0);
         assert!(m.device_fps() > 0.0);
+        assert_eq!(m.queue_wait_us.count(), 20, "queue wait recorded per served frame");
         coord.stop();
     }
 
@@ -189,7 +504,7 @@ mod tests {
         let coord = Coordinator::start(&net, cfg).unwrap();
         for s in 0..3 {
             let f = Tensor::random_image(s, net.in_h, net.in_w, net.in_c);
-            let out = coord.submit(f.clone()).recv().unwrap().ok().unwrap();
+            let out = coord.submit(f.clone()).unwrap().recv().unwrap().ok().unwrap();
             assert_eq!(out.output, run_net_ref(&net, &f), "frame {s}");
         }
         coord.stop();
@@ -202,7 +517,7 @@ mod tests {
         let coord = Coordinator::start_graph(&graph, cfg).unwrap();
         for s in 0..2 {
             let f = Tensor::random_image(s, graph.in_h, graph.in_w, graph.in_c);
-            let out = coord.submit(f.clone()).recv().unwrap().ok().unwrap();
+            let out = coord.submit(f.clone()).unwrap().recv().unwrap().ok().unwrap();
             assert_eq!(out.output, run_graph_ref(&graph, &f), "frame {s}");
         }
         coord.stop();
@@ -215,7 +530,7 @@ mod tests {
         let net = zoo::quicknet();
         let coord = Coordinator::start(&net, CoordinatorConfig::default()).unwrap();
         let bad = Tensor::zeros(3, 3, 1); // wrong shape for quicknet
-        let r = coord.submit(bad.clone()).recv().expect("result must arrive");
+        let r = coord.submit(bad.clone()).unwrap().recv().expect("result must arrive");
         assert!(r.result.is_err());
         let msg = r.ok().unwrap_err().to_string();
         assert!(msg.contains("frame") && msg.contains("shape"), "{msg}");
@@ -224,10 +539,37 @@ mod tests {
             .map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c))
             .collect();
         frames.insert(2, bad);
-        let m = coord.run_stream(frames);
+        let m = coord.run_stream(frames).unwrap();
         assert_eq!(m.frames, 4, "good frames still served");
         assert_eq!(m.errors, 1, "bad frame accounted as an error");
         assert!(m.last_error.as_deref().unwrap_or("").contains("shape"));
+        coord.stop();
+    }
+
+    /// The old `submit` panicked with `expect("coordinator stopped")`;
+    /// now it is a typed, matchable error — and `stop` is idempotent.
+    #[test]
+    fn submit_after_stop_is_clean_error() {
+        let net = zoo::quicknet();
+        let coord = Coordinator::start(&net, CoordinatorConfig::default()).unwrap();
+        let f = Tensor::random_image(0, net.in_h, net.in_w, net.in_c);
+        assert!(coord.submit(f.clone()).is_ok());
+        coord.stop();
+        coord.stop(); // idempotent
+        assert_eq!(coord.submit(f.clone()).unwrap_err(), SubmitError::Stopped);
+        assert_eq!(coord.run_stream(vec![f]).unwrap_err(), SubmitError::Stopped);
+    }
+
+    /// Unknown net names come back as delivered, accounted errors.
+    #[test]
+    fn unknown_net_is_delivered_error() {
+        let net = zoo::quicknet();
+        let coord = Coordinator::start(&net, CoordinatorConfig::default()).unwrap();
+        let f = Tensor::random_image(0, net.in_h, net.in_w, net.in_c);
+        let r = coord.submit_to("nope", f).unwrap().recv().expect("delivered");
+        assert_eq!(r.worker, NO_WORKER);
+        let msg = r.result.unwrap_err().to_string();
+        assert!(msg.contains("unknown net 'nope'") && msg.contains("quicknet"), "{msg}");
         coord.stop();
     }
 }

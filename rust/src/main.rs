@@ -9,10 +9,11 @@
 //!   info     chip configuration, area and DVFS summary
 
 use kn_stream::compiler::NetRunner;
-use kn_stream::coordinator::{Coordinator, CoordinatorConfig};
+use kn_stream::coordinator::{AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig};
 use kn_stream::energy::{AreaModel, EnergyModel, OperatingPoint};
 use kn_stream::model::{zoo, Tensor};
 use kn_stream::runtime::Golden;
+use kn_stream::util::bench::Table;
 use kn_stream::util::cli::Cli;
 use kn_stream::util::stats::eng;
 
@@ -101,28 +102,82 @@ fn cmd_run(args: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse a `--mix` ratio string like `4:2:1` into per-net weights.
+fn parse_mix(mix: &str, nets: usize) -> anyhow::Result<Vec<usize>> {
+    if mix.is_empty() {
+        return Ok(vec![1; nets]);
+    }
+    let weights: Vec<usize> = mix
+        .split(':')
+        .map(|w| w.trim().parse::<usize>().map_err(|_| anyhow::anyhow!("bad mix weight '{w}'")))
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(
+        weights.len() == nets,
+        "--mix has {} weights but --nets has {} nets",
+        weights.len(),
+        nets
+    );
+    anyhow::ensure!(weights.iter().sum::<usize>() > 0, "--mix weights sum to zero");
+    Ok(weights)
+}
+
 fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
     let mut cli = Cli::new("kn-stream serve", "streaming frame server over synthetic camera");
     cli.opt("net", "facenet", "zoo net (incl. graph nets edgenet|widenet)")
+        .opt("nets", "", "serving registry: comma-separated nets (overrides --net)")
+        .opt("mix", "", "traffic mix over --nets as ratios, e.g. 4:2:1 (default uniform)")
         .opt("frames", "64", "frames to stream")
         .opt("workers", "1", "accelerator instances")
         .opt("queue", "4", "bounded queue depth")
         .opt("tile-workers", "1", "parallel segment-DAG threads per frame")
+        .opt("admit-mb", "0", "in-flight DRAM-image budget in MB (0 = unbounded)")
+        .opt("admit-mode", "block", "over-budget behavior: block|reject")
         .opt("freq", "500", "clock in MHz");
     let m = cli.parse_from(args)?;
-    let net = graph_arg(m.get("net"))?;
+    let list = if m.get("nets").is_empty() { m.get("net") } else { m.get("nets") };
+    let nets = zoo::graphs_by_names(list)?;
+    let weights = parse_mix(m.get("mix"), nets.len())?;
+    let admit_mb = m.get_f64("admit-mb");
+    let admission = AdmissionPolicy {
+        max_dram_bytes: if admit_mb > 0.0 { (admit_mb * 1e6) as usize } else { usize::MAX },
+        mode: match m.get("admit-mode") {
+            "block" => AdmissionMode::Block,
+            "reject" => AdmissionMode::Reject,
+            other => anyhow::bail!("unknown --admit-mode '{other}' (block|reject)"),
+        },
+    };
+    let op = OperatingPoint::for_freq(m.get_f64("freq"));
     let cfg = CoordinatorConfig {
         workers: m.get_usize("workers"),
         queue_depth: m.get_usize("queue"),
         tile_workers: m.get_usize("tile-workers"),
-        op: OperatingPoint::for_freq(m.get_f64("freq")),
+        op,
+        admission,
     };
-    let coord = Coordinator::start_graph(&net, cfg)?;
-    let frames: Vec<Tensor> = (0..m.get_usize("frames"))
-        .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))
-        .collect();
-    let metrics = coord.run_stream(frames);
-    println!("{}", metrics.report(&EnergyModel::default()));
+
+    let tagged = zoo::mix_stream(&nets, &weights, m.get_usize("frames"));
+    let coord = Coordinator::start_registry(nets, cfg)?;
+    let rep = coord.run_mix(tagged)?;
+    let energy = EnergyModel::default();
+    let mut t = Table::new(
+        "per-net serving report",
+        &["net", "frames", "errors", "device fps", "p50 ms", "p99 ms", "q-wait µs", "mJ/frame"],
+    );
+    for (name, nm) in &rep.per_net {
+        let e = energy.energy(&nm.totals, op);
+        t.row(&[
+            name.clone(),
+            format!("{}", nm.frames),
+            format!("{}", nm.errors),
+            format!("{:.1}", nm.device_fps()),
+            format!("{:.2}", nm.dev_lat_us.quantile(0.5) / 1e3),
+            format!("{:.2}", nm.dev_lat_us.quantile(0.99) / 1e3),
+            format!("{:.0}", nm.queue_wait_us.mean()),
+            format!("{:.3}", e.total_j() / nm.frames.max(1) as f64 * 1e3),
+        ]);
+    }
+    t.print();
+    println!("aggregate: {}", rep.aggregate.report(&energy));
     coord.stop();
     Ok(())
 }

@@ -5,6 +5,7 @@
 
 use super::graph::{AddSpec, ConcatSpec, Graph, NodeOp};
 use super::layer::{ConvSpec, LayerSpec, NetSpec, PoolSpec};
+use super::tensor::Tensor;
 
 fn conv(
     name: &str,
@@ -250,6 +251,51 @@ pub fn graph_by_name(name: &str) -> Option<Graph> {
     }
 }
 
+/// Resolve a comma-separated list of zoo net names (e.g.
+/// `"edgenet,widenet,facenet"`) into named graphs — the input format of
+/// the serving registry (`kn-stream serve --nets …`).
+pub fn graphs_by_names(names: &str) -> anyhow::Result<Vec<(String, Graph)>> {
+    let nets: Vec<(String, Graph)> = names
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|n| {
+            graph_by_name(n).map(|g| (n.to_string(), g)).ok_or_else(|| {
+                anyhow::anyhow!("unknown net '{n}' (have: {})", GRAPH_ALL.join(", "))
+            })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    anyhow::ensure!(!nets.is_empty(), "no net names in '{names}'");
+    Ok(nets)
+}
+
+/// Deterministic weighted round-robin traffic over named graphs: the
+/// weights expand into a repeating slot pattern (`4:2:1` → AAAABBC…),
+/// frame `i` takes slot `i % Σw` with a seed-`i` random image of that
+/// net's input shape. The synthetic "mixed camera sources" stream
+/// behind `kn-stream serve --mix` and the mixed-traffic serving bench —
+/// one definition so the two can't drift apart.
+pub fn mix_stream(
+    nets: &[(String, Graph)],
+    weights: &[usize],
+    frames: usize,
+) -> Vec<(String, Tensor)> {
+    assert_eq!(nets.len(), weights.len(), "one mix weight per net");
+    let mut pattern = Vec::new();
+    for (i, &w) in weights.iter().enumerate() {
+        for _ in 0..w {
+            pattern.push(i);
+        }
+    }
+    assert!(!pattern.is_empty(), "mix weights sum to zero");
+    (0..frames)
+        .map(|i| {
+            let (name, g) = &nets[pattern[i % pattern.len()]];
+            (name.clone(), Tensor::random_image(i as u32, g.in_h, g.in_w, g.in_c))
+        })
+        .collect()
+}
+
 pub const ALL: &[&str] = &["quicknet", "facenet", "alexnet", "vgg16"];
 
 /// Every zoo net, including the graph-native topologies.
@@ -304,6 +350,29 @@ mod tests {
             assert!(by_name(n).is_some());
         }
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn graphs_by_names_parses_lists() {
+        let nets = graphs_by_names("edgenet, widenet,facenet").unwrap();
+        let names: Vec<&str> = nets.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["edgenet", "widenet", "facenet"]);
+        assert!(graphs_by_names("edgenet,nope").is_err());
+        assert!(graphs_by_names("").is_err());
+    }
+
+    #[test]
+    fn mix_stream_is_weighted_round_robin() {
+        let nets = graphs_by_names("quicknet,edgenet").unwrap();
+        let tagged = mix_stream(&nets, &[2, 1], 7);
+        let names: Vec<&str> = tagged.iter().map(|(n, _)| n.as_str()).collect();
+        let want =
+            ["quicknet", "quicknet", "edgenet", "quicknet", "quicknet", "edgenet", "quicknet"];
+        assert_eq!(names, want);
+        for (n, f) in &tagged {
+            let g = graph_by_name(n).unwrap();
+            assert_eq!(f.shape(), g.in_shape(), "{n} frame shape");
+        }
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Coordinator invariants: result integrity under concurrency,
-//! backpressure, id assignment, multi-worker equivalence.
+//! backpressure, id assignment, multi-worker equivalence — and the
+//! "no lossy paths" guarantees (submit-after-stop, dead workers,
+//! queue-wait accounting).
 
 use std::collections::HashSet;
 
-use kn_stream::coordinator::{Coordinator, CoordinatorConfig};
+use kn_stream::coordinator::{Coordinator, CoordinatorConfig, SubmitError};
 use kn_stream::energy::dvfs;
 use kn_stream::model::reference::run_net_ref;
 use kn_stream::model::{zoo, Tensor};
@@ -14,12 +16,12 @@ fn results_correct_under_concurrency() {
     for workers in [1usize, 2, 4] {
         let coord = Coordinator::start(
             &net,
-            CoordinatorConfig { workers, queue_depth: 2, tile_workers: 1, op: dvfs::PEAK },
+            CoordinatorConfig { workers, queue_depth: 2, ..Default::default() },
         )
         .unwrap();
         let frames: Vec<Tensor> =
             (0..12).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
-        let rxs: Vec<_> = frames.iter().map(|f| coord.submit(f.clone())).collect();
+        let rxs: Vec<_> = frames.iter().map(|f| coord.submit(f.clone()).unwrap()).collect();
         for (rx, f) in rxs.into_iter().zip(&frames) {
             let out = rx.recv().expect("result").ok().expect("frame served");
             assert_eq!(out.output, run_net_ref(&net, f), "workers={workers}");
@@ -31,11 +33,10 @@ fn results_correct_under_concurrency() {
 #[test]
 fn ids_unique_and_monotonic_per_submit_order() {
     let net = zoo::quicknet();
-    let coord =
-        Coordinator::start(&net, CoordinatorConfig::default()).unwrap();
+    let coord = Coordinator::start(&net, CoordinatorConfig::default()).unwrap();
     let mut ids = HashSet::new();
     let rxs: Vec<_> = (0..8)
-        .map(|s| coord.submit(Tensor::random_image(s, net.in_h, net.in_w, net.in_c)))
+        .map(|s| coord.submit(Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).unwrap())
         .collect();
     let mut last = None;
     for rx in rxs {
@@ -54,18 +55,27 @@ fn run_stream_accounts_every_frame() {
     let net = zoo::quicknet();
     let coord = Coordinator::start(
         &net,
-        CoordinatorConfig { workers: 2, queue_depth: 3, tile_workers: 2, op: dvfs::EFFICIENT },
+        CoordinatorConfig {
+            workers: 2,
+            queue_depth: 3,
+            tile_workers: 2,
+            op: dvfs::EFFICIENT,
+            ..Default::default()
+        },
     )
     .unwrap();
     let n = 30;
     let frames: Vec<Tensor> =
         (0..n).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
-    let m = coord.run_stream(frames);
+    let m = coord.run_stream(frames).unwrap();
     assert_eq!(m.frames, n as u64);
     assert_eq!(m.errors, 0);
     assert!(m.totals.macs > 0);
     assert!(m.device_fps() > 0.0);
     assert!(m.dev_lat_us.quantile(0.99) >= m.dev_lat_us.quantile(0.5));
+    // the queue-wait metric is really recorded, once per served frame
+    assert_eq!(m.queue_wait_us.count(), n as u64);
+    assert!(m.queue_wait_us.max() >= m.queue_wait_us.mean());
     coord.stop();
 }
 
@@ -77,14 +87,23 @@ fn metrics_use_operating_point() {
     for freq in [dvfs::EFFICIENT, dvfs::PEAK] {
         let coord = Coordinator::start(
             &net,
-            CoordinatorConfig { workers: 1, queue_depth: 2, tile_workers: 1, op: freq },
+            CoordinatorConfig { workers: 1, queue_depth: 2, op: freq, ..Default::default() },
         )
         .unwrap();
         let frames: Vec<Tensor> =
             (0..6).map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c)).collect();
-        fps.push(coord.run_stream(frames).device_fps());
+        fps.push(coord.run_stream(frames).unwrap().device_fps());
         coord.stop();
     }
     let ratio = fps[1] / fps[0];
     assert!((ratio - 25.0).abs() < 0.5, "fps ratio {ratio} != f ratio 25");
+}
+
+#[test]
+fn submit_after_stop_is_error_not_panic() {
+    let net = zoo::quicknet();
+    let coord = Coordinator::start(&net, CoordinatorConfig::default()).unwrap();
+    coord.stop();
+    let f = Tensor::random_image(0, net.in_h, net.in_w, net.in_c);
+    assert_eq!(coord.submit(f).unwrap_err(), SubmitError::Stopped);
 }

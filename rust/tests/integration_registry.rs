@@ -1,0 +1,236 @@
+//! Multi-net serving registry invariants: one worker pool serving
+//! heterogeneous graphs bit-exactly, per-net metrics, admission
+//! policy, and the "no frame is ever dropped, double-counted, or
+//! panics the coordinator" guarantee on every failure path.
+
+use kn_stream::compiler::NetRunner;
+use kn_stream::coordinator::{
+    AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig, SubmitError, NO_WORKER,
+};
+use kn_stream::model::reference::run_graph_ref;
+use kn_stream::model::{zoo, Graph, Tensor};
+
+const NETS: &[&str] = &["quicknet", "edgenet", "widenet"];
+
+fn registry() -> Vec<(String, Graph)> {
+    zoo::graphs_by_names("quicknet,edgenet,widenet").unwrap()
+}
+
+/// One coordinator, three different topologies (linear, residual,
+/// branch+concat), one shared worker pool: every result is bit-exact
+/// against that net's reference, with frames interleaved so workers
+/// and pooled simulators keep switching nets.
+#[test]
+fn registry_serves_three_nets_bit_exact() {
+    let coord = Coordinator::start_registry(
+        registry(),
+        CoordinatorConfig { workers: 3, queue_depth: 4, ..Default::default() },
+    )
+    .unwrap();
+    let graphs: Vec<Graph> = NETS.iter().map(|n| zoo::graph_by_name(n).unwrap()).collect();
+    let mut pending = Vec::new();
+    for s in 0..3u32 {
+        for (name, g) in NETS.iter().zip(&graphs) {
+            let f = Tensor::random_image(s, g.in_h, g.in_w, g.in_c);
+            pending.push((name, f.clone(), coord.submit_to(name, f).unwrap()));
+        }
+    }
+    for (name, f, p) in pending {
+        let r = p.recv().expect("delivered");
+        assert_eq!(&r.net, name);
+        let out = r.ok().unwrap();
+        let g = zoo::graph_by_name(name).unwrap();
+        assert_eq!(out.output, run_graph_ref(&g, &f), "{name} not bit-exact");
+    }
+    coord.stop();
+}
+
+/// `run_mix` splits metrics per net and the aggregate equals the sum;
+/// the queue-wait metric is recorded for every served frame.
+#[test]
+fn per_net_metrics_split_and_sum() {
+    let coord = Coordinator::start_registry(
+        registry(),
+        CoordinatorConfig { workers: 2, queue_depth: 4, ..Default::default() },
+    )
+    .unwrap();
+    // 4 quicknet, 2 edgenet, 1 widenet
+    let counts: &[(&str, usize)] = &[("quicknet", 4), ("edgenet", 2), ("widenet", 1)];
+    let mut tagged = Vec::new();
+    for (name, n) in counts {
+        let g = zoo::graph_by_name(name).unwrap();
+        for s in 0..*n {
+            tagged.push((
+                name.to_string(),
+                Tensor::random_image(s as u32, g.in_h, g.in_w, g.in_c),
+            ));
+        }
+    }
+    let rep = coord.run_mix(tagged).unwrap();
+    for (name, n) in counts {
+        let nm = rep.net(name).unwrap();
+        assert_eq!(nm.frames, *n as u64, "{name} frames");
+        assert_eq!(nm.errors, 0, "{name} errors");
+        assert_eq!(nm.queue_wait_us.count(), *n as u64, "{name} queue wait samples");
+        assert!(nm.totals.macs > 0);
+    }
+    assert_eq!(rep.aggregate.frames, 7);
+    assert_eq!(rep.aggregate.errors, 0);
+    assert_eq!(rep.accounted(), 7);
+    assert_eq!(rep.aggregate.queue_wait_us.count(), 7);
+    let per_net_macs: u64 = rep.per_net.iter().map(|(_, m)| m.totals.macs).sum();
+    assert_eq!(rep.aggregate.totals.macs, per_net_macs, "aggregate = sum of per-net");
+    coord.stop();
+}
+
+/// An unknown net name is a *delivered* error: the submitter gets a
+/// FrameResult (not a panic or a hang), and `run_mix` accounts it.
+#[test]
+fn unknown_net_is_delivered_and_accounted() {
+    let coord = Coordinator::start_registry(registry(), CoordinatorConfig::default()).unwrap();
+    let q = zoo::graph_by_name("quicknet").unwrap();
+    let f = Tensor::random_image(0, q.in_h, q.in_w, q.in_c);
+
+    let r = coord.submit_to("mobilenet", f.clone()).unwrap().recv().expect("delivered");
+    assert_eq!(r.worker, NO_WORKER);
+    let msg = r.result.unwrap_err().to_string();
+    assert!(msg.contains("unknown net 'mobilenet'"), "{msg}");
+
+    let tagged = vec![
+        ("quicknet".to_string(), f.clone()),
+        ("mobilenet".to_string(), f.clone()),
+        ("quicknet".to_string(), f),
+    ];
+    let rep = coord.run_mix(tagged).unwrap();
+    assert_eq!(rep.aggregate.frames, 2);
+    assert_eq!(rep.aggregate.errors, 1);
+    assert_eq!(rep.accounted(), 3);
+    assert!(rep.aggregate.last_error.as_deref().unwrap().contains("unknown net"));
+    // the unregistered name has no per-net row; registered rows are clean
+    assert!(rep.net("mobilenet").is_none());
+    assert_eq!(rep.net("quicknet").unwrap().frames, 2);
+    coord.stop();
+}
+
+/// Reject-mode admission with an impossible budget: every frame is
+/// delivered as an accounted admission error — nothing is dropped and
+/// nothing blocks.
+#[test]
+fn admission_reject_is_delivered_and_accounted() {
+    let cfg = CoordinatorConfig {
+        admission: AdmissionPolicy { max_dram_bytes: 2, mode: AdmissionMode::Reject },
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(registry(), cfg).unwrap();
+    let q = zoo::graph_by_name("quicknet").unwrap();
+
+    let r = coord
+        .submit_to("quicknet", Tensor::random_image(0, q.in_h, q.in_w, q.in_c))
+        .unwrap()
+        .recv()
+        .expect("delivered");
+    assert_eq!(r.worker, NO_WORKER);
+    assert!(r.result.unwrap_err().to_string().contains("admission"));
+
+    let frames: Vec<Tensor> =
+        (0..4).map(|s| Tensor::random_image(s, q.in_h, q.in_w, q.in_c)).collect();
+    let m = coord.run_stream(frames).unwrap();
+    assert_eq!(m.frames, 0);
+    assert_eq!(m.errors, 4);
+    assert!(m.last_error.as_deref().unwrap().contains("admission"), "{:?}", m.last_error);
+    coord.stop();
+}
+
+/// Block-mode admission sized for exactly one in-flight frame: the
+/// stream serializes through the budget but every frame serves.
+#[test]
+fn admission_block_serializes_but_loses_nothing() {
+    let g = zoo::graph_by_name("quicknet").unwrap();
+    let one_frame = NetRunner::from_graph(&g).unwrap().dram_frame_bytes();
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        queue_depth: 2,
+        admission: AdmissionPolicy { max_dram_bytes: one_frame, mode: AdmissionMode::Block },
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg).unwrap();
+    assert_eq!(coord.dram_frame_bytes("quicknet"), Some(one_frame));
+    let frames: Vec<Tensor> =
+        (0..6).map(|s| Tensor::random_image(s, g.in_h, g.in_w, g.in_c)).collect();
+    let m = coord.run_stream(frames).unwrap();
+    assert_eq!(m.frames, 6, "blocking admission must not lose frames");
+    assert_eq!(m.errors, 0);
+    coord.stop();
+}
+
+/// Regression: admission bytes held by a frame that dies *in the
+/// queue* (its worker panicked before dequeuing it) must be released
+/// when the job is dropped — otherwise a Block-mode submitter waits
+/// forever on a budget nobody can return and `run_stream` hangs
+/// instead of accounting the loss.
+#[test]
+fn dead_worker_releases_admission_budget() {
+    let g = zoo::graph_by_name("quicknet").unwrap();
+    let one_frame = NetRunner::from_graph(&g).unwrap().dram_frame_bytes();
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        queue_depth: 4,
+        admission: AdmissionPolicy { max_dram_bytes: one_frame, mode: AdmissionMode::Block },
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg).unwrap();
+    coord.inject_worker_panic().unwrap();
+    let frames: Vec<Tensor> =
+        (0..2).map(|s| Tensor::random_image(s, g.in_h, g.in_w, g.in_c)).collect();
+    // Without the Reservation-in-Job release, the second submit blocks
+    // forever on the first frame's leaked bytes.
+    let m = coord.run_stream(frames).unwrap();
+    assert_eq!(m.frames, 0);
+    assert_eq!(m.errors, 2, "both frames accounted, none stuck on leaked budget");
+    coord.stop();
+}
+
+/// A worker that dies mid-stream (injected panic — the "poisoned
+/// worker" scenario) must not silently drop frames: every frame comes
+/// back as a served result or an accounted error.
+#[test]
+fn dead_worker_frames_are_accounted_not_dropped() {
+    let coord = Coordinator::start_registry(
+        registry(),
+        CoordinatorConfig { workers: 1, queue_depth: 4, ..Default::default() },
+    )
+    .unwrap();
+    let q = zoo::graph_by_name("quicknet").unwrap();
+    coord.inject_worker_panic().unwrap();
+    let frames: Vec<Tensor> =
+        (0..3).map(|s| Tensor::random_image(s, q.in_h, q.in_w, q.in_c)).collect();
+    let m = coord.run_stream(frames).unwrap();
+    assert_eq!(m.frames, 0, "the only worker is dead");
+    assert_eq!(m.errors, 3, "every frame accounted as an error");
+    let msg = m.last_error.as_deref().unwrap();
+    assert!(
+        msg.contains("worker died") || msg.contains("submit failed"),
+        "unexpected error message: {msg}"
+    );
+    // the pool is gone: direct submission surfaces it (or the stopped
+    // state after stop()) rather than panicking
+    match coord.submit(Tensor::random_image(9, q.in_h, q.in_w, q.in_c)) {
+        Err(SubmitError::Disconnected) => {}
+        Ok(p) => assert!(p.recv().is_err(), "no worker can deliver"),
+        Err(e) => panic!("unexpected {e}"),
+    }
+    coord.stop();
+}
+
+/// Duplicate names are a registry-construction error, not a silent
+/// shadowing.
+#[test]
+fn duplicate_net_names_rejected() {
+    let g = zoo::graph_by_name("quicknet").unwrap();
+    let err = Coordinator::start_registry(
+        vec![("a".into(), g.clone()), ("a".into(), g)],
+        CoordinatorConfig::default(),
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("duplicate net name"), "{err}");
+}
