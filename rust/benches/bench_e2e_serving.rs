@@ -96,6 +96,7 @@ fn main() {
                 max_dram_bytes: 64 << 20,
                 mode: AdmissionMode::Block,
             },
+            ..Default::default()
         },
     )
     .unwrap();
@@ -139,6 +140,64 @@ fn main() {
         "every mixed-traffic frame must be accounted"
     );
     coord.stop();
+
+    // ---- Cross-frame pipelining: depth sweep (latency vs throughput) -----
+    // One worker, 4 tile threads, rolling window of `depth` frames: the
+    // frame-boundary idle gap the per-frame DAG left on the tile
+    // workers closes as depth grows, so host throughput (wall fps)
+    // rises while per-frame wall latency rises with it (a frame shares
+    // its tile workers with its window). Per-frame outputs and
+    // SimStats are bit-identical at every depth (the pipeline test
+    // battery proves it); this sweep records the latency/throughput
+    // trade the knob buys.
+    let net = zoo::graph_by_name("facenet").unwrap();
+    let mut pt = Table::new(
+        "Cross-frame pipelining depth sweep (facenet, 1 worker, 4 tile threads)",
+        &["depth", "host fps", "wall p50", "wall p99", "window mean/max", "q-wait mean"],
+    );
+    for depth in [1usize, 2, 4] {
+        let coord = Coordinator::start_graph(
+            &net,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 8,
+                tile_workers: 4,
+                pipeline_depth: depth,
+                op: OperatingPoint::for_freq(500.0),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let frames: Vec<Tensor> = (0..frames_n)
+            .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))
+            .collect();
+        let m = coord.run_stream(frames).expect("coordinator running");
+        assert_eq!(m.frames + m.errors, frames_n as u64, "depth {depth}: all accounted");
+        pt.row(&[
+            format!("{depth}"),
+            format!("{:.1}", m.wall_fps()),
+            format!("{:.2}ms", m.wall_lat_us.quantile(0.5) / 1e3),
+            format!("{:.2}ms", m.wall_lat_us.quantile(0.99) / 1e3),
+            format!("{:.1}/{:.0}", m.window.mean(), m.window.max()),
+            format!("{:.0}µs", m.queue_wait_us.mean()),
+        ]);
+        report.push_row(
+            "pipeline",
+            obj(vec![
+                ("net", s("facenet")),
+                ("depth", num(depth as f64)),
+                ("wall_fps", num(m.wall_fps())),
+                ("wall_p50_ms", num(m.wall_lat_us.quantile(0.5) / 1e3)),
+                ("wall_p99_ms", num(m.wall_lat_us.quantile(0.99) / 1e3)),
+                ("window_mean", num(m.window.mean())),
+                ("window_max", num(m.window.max())),
+                ("frames", num(m.frames as f64)),
+                ("errors", num(m.errors as f64)),
+            ]),
+        );
+        coord.stop();
+    }
+    pt.print();
 
     report.write().expect("write BENCH_e2e.json");
 

@@ -32,25 +32,59 @@ use crate::sim::accel::{SharedDram, StoreLog};
 use crate::sim::{Accelerator, SimConfig, SimStats};
 
 /// One scheduler event of a traced parallel run: a worker entered
-/// (`enter == true`) or finished a segment. Events are globally ordered
-/// (the trace lock serializes them), so "segment A started before
-/// segment B finished" is a positional check — the overlap property the
-/// DAG scheduler exists to create.
+/// (`enter == true`) or finished a segment of frame `frame` (index
+/// into the submitted window; always 0 for single-frame runs). Events
+/// are globally ordered (the trace lock serializes them), so "segment
+/// A started before segment B finished" is a positional check — within
+/// one frame that is the branch-overlap property of the DAG scheduler,
+/// across frames it is the cross-frame overlap the pipelined window
+/// exists to create.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SegTrace {
+    pub frame: usize,
     pub seg: usize,
     pub node: usize,
     pub enter: bool,
 }
 
-/// Ready-queue state shared by the DAG workers.
-struct Sched {
-    queue: VecDeque<usize>,
+/// Scheduler state of one in-flight frame — one slot of the rolling
+/// pipeline window. The slot owns a full per-frame DRAM image
+/// (weights + canvases); when its frame drains, the worker that
+/// completed the last segment extracts the output and re-arms the
+/// slot with the next admitted frame.
+struct SlotState {
+    /// Index (into the submitted window) of the frame this slot runs.
+    frame: usize,
+    /// Remaining-dependency count per segment, this frame's DAG copy.
     indeg: Vec<usize>,
+    /// Segments of this frame not yet completed.
     remaining: usize,
+    /// Sum of this frame's completed segment deltas. Every segment
+    /// ends on `Sync`, so deltas are translation-invariant and the
+    /// per-frame sum reproduces the sequential frame bit-for-bit.
+    stats: SimStats,
+}
+
+/// Ready-queue state shared by the DAG workers: a rolling window of up
+/// to `depth` in-flight frames, each with its own DAG copy, keyed into
+/// one FIFO as `(slot, segment)`. Frame N+1's zero-indegree segments
+/// sit in the queue the moment slot N+1 is armed, so they start on
+/// idle workers while frame N's tail segments drain — the cross-frame
+/// pipelining the paper's streaming design uses to keep the datapath
+/// fed across frame boundaries.
+struct Sched {
+    queue: VecDeque<(usize, usize)>,
+    /// One entry per window slot; `None` while the completing worker
+    /// holds the slot outside the lock (extract + re-arm).
+    slots: Vec<Option<SlotState>>,
+    /// Next frame of the window not yet admitted to a slot.
+    next_frame: usize,
+    /// Frames fully completed (output extracted by their last worker).
+    done: usize,
+    total: usize,
     /// Set when a worker panicked mid-segment: siblings must exit so
     /// the thread scope can join them and propagate the panic instead
-    /// of deadlocking on a `remaining` count that will never drain.
+    /// of deadlocking on counts that will never drain.
     poisoned: bool,
 }
 
@@ -203,33 +237,59 @@ impl NetRunner {
 
     /// Write the frame and initial image into a DRAM backing store.
     fn init_dram(&self, dram: &mut [i16], frame: &Tensor) {
-        dram[..self.compiled.dram_init.len()].copy_from_slice(&self.compiled.dram_init);
-        // frame into the input canvas (HWC -> padded planar)
+        self.init_dram_shared(&SharedDram::new(dram), frame);
+    }
+
+    /// Extract the output canvas (planar -> HWC).
+    fn extract_output(&self, dram: &mut [i16]) -> Tensor {
+        self.extract_output_shared(&SharedDram::new(dram))
+    }
+
+    /// The one implementation of "frame image → DRAM" (full-image
+    /// rewrite + HWC → padded-planar input), through a [`SharedDram`]
+    /// handle so the pipelined scheduler can re-arm a drained slot in
+    /// place. Caller must hold exclusive logical ownership of the
+    /// backing store (for a slot: previous frame fully completed,
+    /// nothing enqueued); the full-image rewrite also re-zeroes the
+    /// activation canvases, so nothing of the previous frame can leak
+    /// into this one.
+    fn init_dram_shared(&self, dram: &SharedDram, frame: &Tensor) {
+        dram.write(0, &self.compiled.dram_init);
         let cv = &self.compiled.input;
+        let mut row = vec![0i16; frame.w];
         for ch in 0..frame.c {
             for y in 0..frame.h {
-                for x in 0..frame.w {
-                    dram[cv.px(ch, y, x)] = frame.at(y, x, ch);
+                for (x, px) in row.iter_mut().enumerate() {
+                    *px = frame.at(y, x, ch);
                 }
+                dram.write(cv.px(ch, y, 0), &row);
             }
         }
     }
 
-    /// Extract the output canvas (planar -> HWC).
-    fn extract_output(&self, dram: &[i16]) -> Tensor {
+    /// The one implementation of "DRAM → output tensor" (padded planar
+    /// → HWC), same exclusive-ownership contract as
+    /// [`Self::init_dram_shared`].
+    fn extract_output_shared(&self, dram: &SharedDram) -> Tensor {
         let ov = &self.compiled.output;
         let mut out = Tensor::zeros(ov.h, ov.w, ov.c);
+        let mut row = vec![0i16; ov.w];
         for ch in 0..ov.c {
             for y in 0..ov.h {
-                for x in 0..ov.w {
-                    out.set(y, x, ch, dram[ov.px(ch, y, x)]);
+                dram.read_into(ov.px(ch, y, 0), &mut row);
+                for (x, px) in row.iter().enumerate() {
+                    out.set(y, x, ch, *px);
                 }
             }
         }
         out
     }
 
-    fn check_frame(&self, frame: &Tensor) -> anyhow::Result<()> {
+    /// Check that `frame` matches this net's input shape. Public so the
+    /// coordinator can pre-validate a pipelined window: one malformed
+    /// frame gets its own delivered error instead of poisoning the
+    /// window it rode in with.
+    pub fn check_frame(&self, frame: &Tensor) -> anyhow::Result<()> {
         anyhow::ensure!(
             frame.shape() == self.compiled.graph.in_shape(),
             "frame shape {:?} != net input {:?}",
@@ -255,7 +315,7 @@ impl NetRunner {
         // worth recycling); on success it returns to the pool.
         accel.run_program(&self.compiled.program)?;
         std::mem::swap(&mut accel.dram.data, &mut dram);
-        let out = self.extract_output(&dram);
+        let out = self.extract_output(&mut dram);
         let stats = accel.stats.clone();
         self.pool.put_accel(accel);
         self.pool.put_dram(dram);
@@ -270,45 +330,131 @@ impl NetRunner {
     /// concurrently. Output **and** aggregated [`SimStats`] are
     /// bit-identical to [`run_frame`]: every counter delta is
     /// translation-invariant across the per-segment `Sync` barriers, so
-    /// summing per-worker stats reproduces the sequential totals
+    /// summing per-segment stats reproduces the sequential totals
     /// exactly, in any execution order the DAG admits.
+    ///
+    /// This is [`NetRunner::run_frames_pipelined`] with a window of one.
     pub fn run_frame_parallel(
         &self,
         frame: &Tensor,
         workers: usize,
     ) -> anyhow::Result<(Tensor, SimStats)> {
-        self.run_frame_dag(frame, workers, None)
+        let mut v = self.run_window(&[frame], workers, 1, None)?;
+        Ok(v.pop().expect("one frame in, one result out"))
     }
 
     /// [`NetRunner::run_frame_parallel`] with a scheduler trace — used
     /// by tests to prove cross-node overlap and by `--dump-graph`
-    /// debugging.
+    /// debugging. Trace events carry `frame == 0`.
     pub fn run_frame_parallel_traced(
         &self,
         frame: &Tensor,
         workers: usize,
     ) -> anyhow::Result<(Tensor, SimStats, Vec<SegTrace>)> {
         let trace = Mutex::new(Vec::new());
-        let (out, stats) = self.run_frame_dag(frame, workers, Some(&trace))?;
+        let mut v = self.run_window(&[frame], workers, 1, Some(&trace))?;
+        let (out, stats) = v.pop().expect("one frame in, one result out");
         Ok((out, stats, trace.into_inner().unwrap()))
     }
 
-    fn run_frame_dag(
+    /// Run a stream of frames through the **cross-frame pipelined**
+    /// scheduler: a rolling window of up to `depth` in-flight frames,
+    /// each owning a private DRAM image (weights + canvases), all
+    /// feeding one `(frame, segment)` ready-queue executed by up to
+    /// `workers` simulator instances. Frame N+1's early segments start
+    /// on idle workers as soon as slot N+1 is armed, while frame N's
+    /// tail segments drain — the frame-boundary stall of the per-frame
+    /// DAG disappears, which is exactly the streaming behaviour the
+    /// paper's image/feature decomposition exists to sustain.
+    ///
+    /// Results come back in submission order. Per-frame output **and**
+    /// per-frame [`SimStats`] are bit-identical to running each frame
+    /// through [`run_frame`](Self::run_frame) alone: segment stat
+    /// deltas are translation-invariant (every segment ends on `Sync`)
+    /// and are attributed to the frame that ran them, so neither
+    /// pipelining depth, worker count, nor completion interleaving can
+    /// perturb a frame's numbers.
+    pub fn run_frames_pipelined(
         &self,
-        frame: &Tensor,
+        frames: &[Tensor],
         workers: usize,
+        depth: usize,
+    ) -> anyhow::Result<Vec<(Tensor, SimStats)>> {
+        let refs: Vec<&Tensor> = frames.iter().collect();
+        self.run_window(&refs, workers, depth, None)
+    }
+
+    /// Refs-taking variant of [`Self::run_frames_pipelined`] for
+    /// callers that already own the frames scattered across other
+    /// structures (the coordinator's window jobs) and must not
+    /// deep-copy every image per window.
+    pub fn run_frames_pipelined_ref(
+        &self,
+        frames: &[&Tensor],
+        workers: usize,
+        depth: usize,
+    ) -> anyhow::Result<Vec<(Tensor, SimStats)>> {
+        self.run_window(frames, workers, depth, None)
+    }
+
+    /// [`NetRunner::run_frames_pipelined`] with a scheduler trace whose
+    /// events carry the frame index — the instrument that proves
+    /// cross-frame segment overlap (a frame-N+1 `enter` positioned
+    /// before frame-N's last exit).
+    pub fn run_frames_pipelined_traced(
+        &self,
+        frames: &[Tensor],
+        workers: usize,
+        depth: usize,
+    ) -> anyhow::Result<(Vec<(Tensor, SimStats)>, Vec<SegTrace>)> {
+        let trace = Mutex::new(Vec::new());
+        let refs: Vec<&Tensor> = frames.iter().collect();
+        let outs = self.run_window(&refs, workers, depth, Some(&trace))?;
+        Ok((outs, trace.into_inner().unwrap()))
+    }
+
+    /// The scheduler core: execute a rolling window of per-frame
+    /// segment DAGs. `depth` bounds the in-flight frames (window
+    /// slots); each slot owns one pooled DRAM image, re-armed in place
+    /// when its frame completes. With `workers <= 1` (or a single
+    /// segment) the window degenerates to the sequential per-frame
+    /// path, which is the reference behaviour by definition.
+    fn run_window(
+        &self,
+        frames: &[&Tensor],
+        workers: usize,
+        depth: usize,
         trace: Option<&Mutex<Vec<SegTrace>>>,
-    ) -> anyhow::Result<(Tensor, SimStats)> {
-        if workers <= 1 || self.compiled.segments.len() <= 1 {
-            return self.run_frame(frame);
+    ) -> anyhow::Result<Vec<(Tensor, SimStats)>> {
+        for f in frames {
+            self.check_frame(f)?;
         }
-        self.check_frame(frame)?;
-        let mut dram = self.pool.take_dram(self.compiled.dram_px);
-        self.init_dram(&mut dram, frame);
+        if frames.is_empty() {
+            return Ok(Vec::new());
+        }
+        let nseg = self.compiled.segments.len();
+        if workers <= 1 || nseg <= 1 {
+            return frames.iter().map(|f| self.run_frame(f)).collect();
+        }
 
         let segments = &self.compiled.segments;
         let program = &self.compiled.program;
-        let nworkers = workers.min(segments.len());
+        // SetConv/Halt live outside the segments; the sequential stream
+        // counts them once per frame, so each frame's stats do too.
+        let uncovered = (program.len() - self.covered) as u64;
+
+        // One DRAM image per window slot, pre-armed with the first
+        // `nslots` frames of the window.
+        let nslots = depth.clamp(1, frames.len());
+        let mut slot_drams: Vec<Vec<i16>> = (0..nslots)
+            .map(|s| {
+                let mut d = self.pool.take_dram(self.compiled.dram_px);
+                self.init_dram(&mut d, frames[s]);
+                d
+            })
+            .collect();
+
+        let nworkers = workers.min(nseg * nslots);
         let mut accels: Vec<Accelerator> = (0..nworkers)
             .map(|_| {
                 let mut a = self.pool.take_accel(&self.cfg);
@@ -318,28 +464,44 @@ impl NetRunner {
             .collect();
 
         let mut queue = VecDeque::new();
-        for (i, &d) in self.indeg.iter().enumerate() {
-            if d == 0 {
-                queue.push_back(i);
+        let mut slots = Vec::with_capacity(nslots);
+        for s in 0..nslots {
+            for (i, &d) in self.indeg.iter().enumerate() {
+                if d == 0 {
+                    queue.push_back((s, i));
+                }
             }
+            slots.push(Some(SlotState {
+                frame: s,
+                indeg: self.indeg.clone(),
+                remaining: nseg,
+                stats: SimStats::default(),
+            }));
         }
         let sched = Mutex::new(Sched {
             queue,
-            indeg: self.indeg.clone(),
-            remaining: segments.len(),
+            slots,
+            next_frame: nslots,
+            done: 0,
+            total: frames.len(),
             poisoned: false,
         });
         let cv = Condvar::new();
-        // All conflicting pixel accesses through this handle are ordered
-        // by the segment DAG: a consumer is enqueued only after its
-        // producers published, under the scheduler mutex (release/
-        // acquire = happens-before); unordered accesses are disjoint.
-        let dram_cell = SharedDram::new(&mut dram);
+        // All conflicting pixel accesses through these handles are
+        // ordered by the per-frame segment DAG: a consumer is enqueued
+        // only after its producers published, under the scheduler mutex
+        // (release/acquire = happens-before); unordered accesses are
+        // disjoint, and distinct slots are distinct allocations.
+        let dram_cells: Vec<SharedDram> =
+            slot_drams.iter_mut().map(|d| SharedDram::new(d)).collect();
+        let results: Mutex<Vec<Option<(Tensor, SimStats)>>> =
+            Mutex::new((0..frames.len()).map(|_| None).collect());
 
         std::thread::scope(|scope| {
             let sched = &sched;
             let cv = &cv;
-            let dram_cell = &dram_cell;
+            let dram_cells = &dram_cells;
+            let results = &results;
             let dependents = &self.dependents;
             let handles: Vec<_> = accels
                 .iter_mut()
@@ -347,16 +509,20 @@ impl NetRunner {
                     scope.spawn(move || {
                         let mut wlog = StoreLog::new();
                         loop {
-                            let idx = {
+                            let (slot, idx, frame_id) = {
                                 let mut st = sched.lock().unwrap();
                                 loop {
                                     if st.poisoned {
                                         return;
                                     }
-                                    if let Some(i) = st.queue.pop_front() {
-                                        break i;
+                                    if let Some((s, i)) = st.queue.pop_front() {
+                                        let f = st.slots[s]
+                                            .as_ref()
+                                            .expect("queued slot is armed")
+                                            .frame;
+                                        break (s, i, f);
                                     }
-                                    if st.remaining == 0 {
+                                    if st.done == st.total {
                                         return;
                                     }
                                     st = cv.wait(st).unwrap();
@@ -364,13 +530,20 @@ impl NetRunner {
                             };
                             let mut guard = PoisonGuard { sched, cv, armed: true };
                             let seg = &segments[idx];
+                            let dram_cell = &dram_cells[slot];
                             if let Some(t) = trace {
                                 t.lock().unwrap().push(SegTrace {
+                                    frame: frame_id,
                                     seg: idx,
                                     node: seg.node,
                                     enter: true,
                                 });
                             }
+                            // Per-segment counter reset: the delta this
+                            // segment charges is attributed to *its*
+                            // frame, which is what keeps per-frame stats
+                            // exact under any cross-frame interleaving.
+                            accel.reset_counters();
                             if let Some(cfg) = seg.cfg {
                                 accel.set_conv_cfg(cfg);
                             }
@@ -380,22 +553,74 @@ impl NetRunner {
                             for (dst, row) in wlog.drain(..) {
                                 dram_cell.write(dst, &row);
                             }
+                            accel.sync_stats();
+                            let delta = accel.stats.clone();
                             if let Some(t) = trace {
                                 t.lock().unwrap().push(SegTrace {
+                                    frame: frame_id,
                                     seg: idx,
                                     node: seg.node,
                                     enter: false,
                                 });
                             }
+
                             let mut st = sched.lock().unwrap();
-                            st.remaining -= 1;
-                            for &d in &dependents[idx] {
-                                st.indeg[d] -= 1;
-                                if st.indeg[d] == 0 {
-                                    st.queue.push_back(d);
+                            let mut ready: Vec<usize> = Vec::new();
+                            let slot_done = {
+                                let s = st.slots[slot]
+                                    .as_mut()
+                                    .expect("slot stays armed while its segment runs");
+                                s.stats.add(&delta);
+                                for &d in &dependents[idx] {
+                                    s.indeg[d] -= 1;
+                                    if s.indeg[d] == 0 {
+                                        ready.push(d);
+                                    }
                                 }
+                                s.remaining -= 1;
+                                s.remaining == 0
+                            };
+                            for d in ready {
+                                st.queue.push_back((slot, d));
                             }
-                            drop(st);
+                            if slot_done {
+                                // This worker drains the slot outside the
+                                // lock (it owns the slot exclusively: the
+                                // frame has no segments left anywhere),
+                                // then re-arms it with the next frame.
+                                let fin =
+                                    st.slots[slot].take().expect("completing slot is armed");
+                                let next = (st.next_frame < st.total).then(|| {
+                                    st.next_frame += 1;
+                                    st.next_frame - 1
+                                });
+                                drop(st);
+                                let mut stats = fin.stats;
+                                stats.commands += uncovered;
+                                let out = self.extract_output_shared(dram_cell);
+                                results.lock().unwrap()[fin.frame] = Some((out, stats));
+                                if let Some(f) = next {
+                                    self.init_dram_shared(dram_cell, frames[f]);
+                                }
+                                let mut st = sched.lock().unwrap();
+                                if let Some(f) = next {
+                                    for (i, &d) in self.indeg.iter().enumerate() {
+                                        if d == 0 {
+                                            st.queue.push_back((slot, i));
+                                        }
+                                    }
+                                    st.slots[slot] = Some(SlotState {
+                                        frame: f,
+                                        indeg: self.indeg.clone(),
+                                        remaining: nseg,
+                                        stats: SimStats::default(),
+                                    });
+                                }
+                                st.done += 1;
+                                drop(st);
+                            } else {
+                                drop(st);
+                            }
                             guard.armed = false;
                             cv.notify_all();
                         }
@@ -407,23 +632,19 @@ impl NetRunner {
             }
         });
 
-        // Merge per-worker stats; the SetConv/Halt commands living
-        // outside the segments cost no cycles but are counted by the
-        // sequential stream, so count them here too.
-        let mut totals = SimStats {
-            commands: (program.len() - self.covered) as u64,
-            ..SimStats::default()
-        };
+        drop(dram_cells);
         for mut a in accels {
-            a.sync_stats();
-            totals.add(&a.stats);
             a.reset_counters();
             self.pool.put_accel(a);
         }
-
-        let out = self.extract_output(&dram);
-        self.pool.put_dram(dram);
-        Ok((out, totals))
+        for d in slot_drams {
+            self.pool.put_dram(d);
+        }
+        let results = results.into_inner().unwrap();
+        Ok(results
+            .into_iter()
+            .map(|r| r.expect("every frame of the window completed"))
+            .collect())
     }
 }
 
@@ -539,5 +760,71 @@ mod tests {
                 assert_eq!(par_stats, seq_stats, "{name} workers={workers} stats");
             }
         }
+    }
+
+    /// The pipelined window must be a per-frame no-op: every frame's
+    /// output AND SimStats equal its own sequential run, for any depth
+    /// and worker count, with per-frame slot images recycled in place.
+    #[test]
+    fn pipelined_window_is_bit_exact_per_frame() {
+        for name in ["quicknet", "edgenet", "widenet"] {
+            let graph = zoo::graph_by_name(name).unwrap();
+            let runner = NetRunner::from_graph(&graph).unwrap();
+            let frames: Vec<Tensor> = (0..4)
+                .map(|s| Tensor::random_image(s, graph.in_h, graph.in_w, graph.in_c))
+                .collect();
+            let seq: Vec<(Tensor, SimStats)> =
+                frames.iter().map(|f| runner.run_frame(f).unwrap()).collect();
+            for (workers, depth) in [(2usize, 2usize), (4, 3), (3, 8)] {
+                let got = runner.run_frames_pipelined(&frames, workers, depth).unwrap();
+                assert_eq!(got.len(), frames.len());
+                for (i, ((go, gs), (so, ss))) in got.iter().zip(&seq).enumerate() {
+                    assert_eq!(go, so, "{name} frame {i} w={workers} d={depth} output");
+                    assert_eq!(gs, ss, "{name} frame {i} w={workers} d={depth} stats");
+                }
+            }
+        }
+    }
+
+    /// Trace events carry the frame index: a single-frame traced run is
+    /// all frame 0; a depth-2 window sees both frames, each segment
+    /// entered and exited exactly once per frame.
+    #[test]
+    fn traces_carry_frame_ids() {
+        let graph = zoo::graph_by_name("widenet").unwrap();
+        let runner = NetRunner::from_graph(&graph).unwrap();
+        let frames: Vec<Tensor> = (0..2)
+            .map(|s| Tensor::random_image(s, graph.in_h, graph.in_w, graph.in_c))
+            .collect();
+        let (_, _, t1) = runner.run_frame_parallel_traced(&frames[0], 2).unwrap();
+        assert!(!t1.is_empty() && t1.iter().all(|e| e.frame == 0));
+        let (_, t2) = runner.run_frames_pipelined_traced(&frames, 2, 2).unwrap();
+        let nseg = runner.compiled.segments.len();
+        assert_eq!(t2.len(), 2 * 2 * nseg);
+        for f in 0..2 {
+            for s in 0..nseg {
+                let enters =
+                    t2.iter().filter(|e| e.frame == f && e.seg == s && e.enter).count();
+                let exits =
+                    t2.iter().filter(|e| e.frame == f && e.seg == s && !e.enter).count();
+                assert_eq!((enters, exits), (1, 1), "frame {f} seg {s}");
+            }
+        }
+    }
+
+    /// An empty window and an oversized depth are both fine; a bad
+    /// frame anywhere in the window is rejected up front.
+    #[test]
+    fn pipelined_window_edge_cases() {
+        let graph = zoo::graph_by_name("quicknet").unwrap();
+        let runner = NetRunner::from_graph(&graph).unwrap();
+        assert!(runner.run_frames_pipelined(&[], 4, 2).unwrap().is_empty());
+        let good = Tensor::random_image(0, graph.in_h, graph.in_w, graph.in_c);
+        let bad = Tensor::zeros(3, 3, 1);
+        assert!(runner
+            .run_frames_pipelined(&[good, bad], 4, 2)
+            .unwrap_err()
+            .to_string()
+            .contains("shape"));
     }
 }

@@ -26,6 +26,14 @@ pub struct RunMetrics {
     pub dev_lat_us: Histogram,
     /// Queue wait (submit → worker dequeue) per served frame, in µs.
     pub queue_wait_us: Running,
+    /// Pipelined-window size each served frame ran in (1 =
+    /// unpipelined). Mean > 1 means cross-frame windows actually
+    /// formed; the latency/throughput split of a depth sweep reads as:
+    /// per-frame latency from `wall_lat_us` (grows with depth — a
+    /// frame shares its tile workers with its window), throughput from
+    /// `wall_fps` (grows with depth — the frame-boundary idle gap is
+    /// gone).
+    pub window: Running,
     pub totals: SimStats,
     pub op: OperatingPoint,
 }
@@ -40,6 +48,7 @@ impl RunMetrics {
             wall_lat_us: Histogram::new(),
             dev_lat_us: Histogram::new(),
             queue_wait_us: Running::new(),
+            window: Running::new(),
             totals: SimStats::default(),
             op,
         }
@@ -51,11 +60,13 @@ impl RunMetrics {
         wall_latency_s: f64,
         device_latency_s: f64,
         queue_wait_s: f64,
+        window: usize,
     ) {
         self.frames += 1;
         self.wall_lat_us.record(wall_latency_s * 1e6);
         self.dev_lat_us.record(device_latency_s * 1e6);
         self.queue_wait_us.push(queue_wait_s * 1e6);
+        self.window.push(window as f64);
         self.totals.add(stats);
     }
 
@@ -67,7 +78,13 @@ impl RunMetrics {
     /// Fold one delivered [`FrameResult`] into the rollup.
     pub fn record_result(&mut self, r: &FrameResult) {
         match &r.result {
-            Ok(o) => self.record(&o.stats, o.wall_latency_s, o.device_latency_s, o.queue_wait_s),
+            Ok(o) => self.record(
+                &o.stats,
+                o.wall_latency_s,
+                o.device_latency_s,
+                o.queue_wait_s,
+                o.window,
+            ),
             Err(e) => self.record_error(&e.message),
         }
     }
@@ -104,9 +121,14 @@ impl RunMetrics {
             (Some(msg), n) if n > 0 => format!(" | ERRORS {n} (last: {msg})"),
             _ => String::new(),
         };
+        let pipe = if self.window.max() > 1.0 {
+            format!(" | pipe window mean/max {:.1}/{:.0}", self.window.mean(), self.window.max())
+        } else {
+            String::new()
+        };
         format!(
             "frames={}{errs} | device: {:.1} fps, {}OPS eff, util {:.2} | dev-lat p50/p95/p99 = \
-             {:.1}/{:.1}/{:.1} ms | q-wait mean/max {:.0}/{:.0} µs | energy/frame {:.2} mJ \
+             {:.1}/{:.1}/{:.1} ms | q-wait mean/max {:.0}/{:.0} µs{pipe} | energy/frame {:.2} mJ \
              (on-chip {:.2} mJ) | host {:.1} fps",
             self.frames,
             self.device_fps(),
@@ -194,8 +216,8 @@ mod tests {
     fn record_and_rates() {
         let mut m = RunMetrics::new(PEAK);
         let stats = SimStats { cycles: 500_000, macs: 50_000_000, ..Default::default() };
-        for _ in 0..10 {
-            m.record(&stats, 0.01, 0.001, 0.0005);
+        for i in 0..10 {
+            m.record(&stats, 0.01, 0.001, 0.0005, if i < 5 { 1 } else { 3 });
         }
         m.wall_s = 0.1;
         assert_eq!(m.frames, 10);
@@ -206,9 +228,12 @@ mod tests {
         assert!(m.device_ops_per_s() > 0.0);
         assert_eq!(m.queue_wait_us.count(), 10);
         assert!((m.queue_wait_us.mean() - 500.0).abs() < 1e-6);
+        assert_eq!(m.window.count(), 10);
+        assert!((m.window.mean() - 2.0).abs() < 1e-9);
         let rep = m.report(&EnergyModel::default());
         assert!(rep.contains("frames=10"));
         assert!(rep.contains("q-wait"));
+        assert!(rep.contains("pipe window"), "windows > 1 must surface: {rep}");
         assert!(!rep.contains("ERRORS"));
         m.record_error("shape mismatch");
         m.record_error("sim fault");
@@ -231,6 +256,7 @@ mod tests {
                 wall_latency_s: 0.001,
                 device_latency_s: 0.0005,
                 queue_wait_s: 0.0001,
+                window: 1,
             }),
         };
         rep.record_result(&ok);

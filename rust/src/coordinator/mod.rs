@@ -13,6 +13,12 @@
 //! frame is accounted: failures are delivered results or counted
 //! errors, never silent drops.
 //!
+//! With `CoordinatorConfig::pipeline_depth > 1`, workers dequeue
+//! contiguous same-net *windows* of frames and run them through the
+//! cross-frame pipelined scheduler: frame N+1's early segments overlap
+//! frame N's tail on the tile workers, per-frame results and stats
+//! staying bit-identical to unpipelined serving.
+//!
 //! Threads + bounded channels (tokio is not vendorable offline — see
 //! DESIGN.md §Deviations); the dataflow is the same reactor shape.
 

@@ -39,6 +39,12 @@ pub struct FrameOutput {
     pub device_latency_s: f64,
     /// Time the frame sat in the bounded queue: submit → worker dequeue.
     pub queue_wait_s: f64,
+    /// Number of frames in the pipelined window this frame was served
+    /// in (1 = unpipelined single-frame execution). A worker running
+    /// with `pipeline_depth = N` dequeues up to `N` consecutive
+    /// same-net frames and executes them as one rolling window with
+    /// cross-frame segment overlap.
+    pub window: usize,
 }
 
 /// Why a frame failed (kept `Clone`-able for fan-out consumers, hence a

@@ -5,11 +5,19 @@
 //! `name → Arc<NetRunner>`; every worker can serve every net, so a
 //! burst on one workload soaks up whatever capacity the others leave
 //! idle — the "one accelerator, many smart-vision apps" deployment the
-//! paper targets. The dispatcher is a bounded mpsc channel, so a
+//! paper targets. The dispatcher is a bounded FIFO job queue, so a
 //! saturated device back-pressures the camera sources instead of
 //! buffering unboundedly, and an [`AdmissionPolicy`] bounds the total
 //! DRAM-image bytes of in-flight frames across the heterogeneous
 //! runners (the pooled simulators share one [`AccelPool`]).
+//!
+//! With `pipeline_depth > 1` a worker dequeues a contiguous same-net
+//! *window* of frames and executes it through the cross-frame
+//! pipelined scheduler (`NetRunner::run_frames_pipelined`): frame
+//! N+1's early segments run on tile workers that would otherwise idle
+//! at the frame boundary. Windows are opportunistic (never waited
+//! for), FIFO order is preserved, and per-frame results/stats remain
+//! bit-identical to unpipelined serving.
 //!
 //! **Every frame is accounted.** A frame that fails produces a
 //! *delivered* [`FrameResult`] with the error inside (bad input,
@@ -72,6 +80,20 @@ pub struct CoordinatorConfig {
     /// (`NetRunner::run_frame_parallel`). 1 = sequential. Results and
     /// stats are bit-identical either way; only wall latency changes.
     pub tile_workers: usize,
+    /// Cross-frame pipelining: a worker dequeues up to this many
+    /// consecutive same-net frames in one go and runs them as a
+    /// rolling window (`NetRunner::run_frames_pipelined`), so frame
+    /// N+1's early segments start on tile workers that would otherwise
+    /// idle while frame N's tail drains. 1 (the default) = one frame
+    /// per dequeue, the pre-pipelining behaviour. Batching is
+    /// opportunistic — a worker never *waits* for a window to fill, so
+    /// depth > 1 cannot deadlock a trickling source — and engages only
+    /// when `tile_workers ≥ 2` (with one tile thread a window would
+    /// just serialize frames on one pool worker). Note each in-flight
+    /// frame still holds its own admission reservation: a Block-mode
+    /// budget below `depth × dram_frame_bytes` simply caps the
+    /// achievable window, it does not wedge.
+    pub pipeline_depth: usize,
     /// DVFS point the devices run at.
     pub op: OperatingPoint,
     /// DRAM-image budget for in-flight frames.
@@ -84,6 +106,7 @@ impl Default for CoordinatorConfig {
             workers: 1,
             queue_depth: 4,
             tile_workers: 1,
+            pipeline_depth: 1,
             op: crate::energy::dvfs::PEAK,
             admission: AdmissionPolicy::default(),
         }
@@ -152,19 +175,160 @@ impl Drop for Reservation {
     }
 }
 
+/// One accepted frame riding the dispatcher queue.
+struct FrameJob {
+    req: FrameRequest,
+    runner: Arc<NetRunner>,
+    /// Admission hold for this frame; dropping the job releases it.
+    reservation: Reservation,
+    out: SyncSender<FrameResult>,
+}
+
 enum Job {
-    Frame {
-        req: FrameRequest,
-        runner: Arc<NetRunner>,
-        /// Admission hold for this frame; dropping the job releases it.
-        reservation: Reservation,
-        out: SyncSender<FrameResult>,
-    },
+    Frame(Box<FrameJob>),
     Stop,
     /// Test/chaos hook: panic the receiving worker (see
     /// [`Coordinator::inject_worker_panic`]).
     #[doc(hidden)]
     Poison,
+}
+
+/// What one dequeue hands a worker.
+enum Dequeued {
+    /// Up to `pipeline_depth` *consecutive same-net* frames, popped as
+    /// one window. FIFO order is preserved: the window is a contiguous
+    /// prefix of the queue, never a reordering.
+    Window(Vec<FrameJob>),
+    Stop,
+    Poison,
+}
+
+/// Bounded MPMC dispatcher replacing the old mpsc `sync_channel`: the
+/// pipelined workers need to *peek and batch* — pop a contiguous
+/// same-net run of frames in one dequeue — which an opaque channel
+/// cannot express. Channel semantics are preserved: bounded `push`
+/// blocks (backpressure), pops are FIFO, `Stop`/`Poison` reach exactly
+/// one consumer each, and when the last consumer dies the queue closes
+/// — pending jobs are dropped (delivering `Disconnected` to their
+/// submitters and releasing their admission reservations) and blocked
+/// pushers get their job handed back instead of waiting forever.
+struct JobQueue {
+    state: Mutex<JobQueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct JobQueueState {
+    jobs: VecDeque<Job>,
+    cap: usize,
+    /// Live consumer (worker) threads; 0 = closed.
+    consumers: usize,
+    /// Consumers currently parked in `pop_window` waiting for work —
+    /// while any sibling is idle, window formation stops at 1 frame so
+    /// a burst spreads across the pool instead of piling onto one
+    /// worker's pipeline.
+    idle: usize,
+}
+
+impl JobQueue {
+    fn new(cap: usize, consumers: usize) -> Self {
+        Self {
+            state: Mutex::new(JobQueueState {
+                jobs: VecDeque::new(),
+                cap: cap.max(1),
+                consumers,
+                idle: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Blocking bounded push. `Err` hands the job back: every consumer
+    /// is gone, so nothing could ever serve it.
+    fn push(&self, job: Job) -> Result<(), Job> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.consumers == 0 {
+                return Err(job);
+            }
+            if st.jobs.len() < st.cap {
+                break;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop of the queue head; a `Frame` head extends into a
+    /// window of consecutive same-net frames, up to `depth`, but only
+    /// while (a) no sibling consumer sits idle (an idle sibling should
+    /// take the next frame itself — batching it away halves the pool's
+    /// parallelism on a burst) and (b) the net's DAG is actually
+    /// pipelinable (more than one segment; otherwise the window would
+    /// serialize frame-by-frame on this worker while claiming overlap).
+    /// `Stop`/`Poison` never ride inside a window — they stay queued
+    /// for the next dequeue.
+    fn pop_window(&self, depth: usize) -> Dequeued {
+        let mut st = self.state.lock().unwrap();
+        let first = loop {
+            if let Some(j) = st.jobs.pop_front() {
+                break j;
+            }
+            st.idle += 1;
+            st = self.not_empty.wait(st).unwrap();
+            st.idle -= 1;
+        };
+        let out = match first {
+            Job::Stop => Dequeued::Stop,
+            Job::Poison => Dequeued::Poison,
+            Job::Frame(f) => {
+                let net = f.req.net.clone();
+                let pipelinable = f.runner.compiled.segments.len() > 1;
+                let mut window = vec![*f];
+                while pipelinable
+                    && st.idle == 0
+                    && window.len() < depth
+                    && matches!(st.jobs.front(), Some(Job::Frame(n)) if n.req.net == net)
+                {
+                    match st.jobs.pop_front() {
+                        Some(Job::Frame(n)) => window.push(*n),
+                        _ => unreachable!("front was checked to be a same-net frame"),
+                    }
+                }
+                Dequeued::Window(window)
+            }
+        };
+        drop(st);
+        self.not_full.notify_all();
+        out
+    }
+}
+
+/// Registers a worker thread's death — panic or clean exit alike. The
+/// last consumer out closes the queue: pending jobs are dropped (their
+/// submitters see `Disconnected`, their reservations release) and
+/// blocked pushers/admission waiters are woken instead of deadlocking.
+struct ConsumerGuard {
+    queue: Arc<JobQueue>,
+}
+
+impl Drop for ConsumerGuard {
+    fn drop(&mut self) {
+        // Avoid unwrap inside Drop: a poisoned mutex means a pusher
+        // panicked mid-push, and its own unwind already propagates.
+        if let Ok(mut st) = self.queue.state.lock() {
+            st.consumers -= 1;
+            if st.consumers == 0 {
+                st.jobs.clear();
+            }
+        }
+        self.queue.not_full.notify_all();
+        self.queue.not_empty.notify_all();
+    }
 }
 
 /// Handle to one in-flight frame: the id the coordinator assigned and
@@ -195,7 +359,7 @@ pub struct Coordinator {
     /// [`Coordinator::submit`].
     nets: Vec<(String, Arc<NetRunner>)>,
     by_name: HashMap<String, usize>,
-    tx: SyncSender<Job>,
+    queue: Arc<JobQueue>,
     handles: Mutex<Vec<JoinHandle<()>>>,
     stopped: AtomicBool,
     next_id: AtomicU64,
@@ -241,40 +405,26 @@ impl Coordinator {
             in_flight: Mutex::new(0),
             freed: Condvar::new(),
         });
-        let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
+        let nworkers = cfg.workers.max(1);
+        let queue = Arc::new(JobQueue::new(cfg.queue_depth, nworkers));
         let mut handles = Vec::new();
-        for w in 0..cfg.workers.max(1) {
-            let rx = Arc::clone(&rx);
+        for w in 0..nworkers {
+            let queue = Arc::clone(&queue);
             let op = cfg.op;
             let tile_workers = cfg.tile_workers.max(1);
-            handles.push(std::thread::spawn(move || loop {
-                let job = { rx.lock().unwrap().recv() };
-                match job {
-                    Ok(Job::Frame { req, runner, reservation, out }) => {
-                        // Held until the end of this arm — released on
-                        // completion or during a panic unwind alike.
-                        let _admit = reservation;
-                        let queue_wait_s = req.submitted.elapsed().as_secs_f64();
-                        let result = match runner.run_frame_parallel(&req.frame, tile_workers) {
-                            Ok((output, stats)) => Ok(FrameOutput {
-                                output,
-                                device_latency_s: stats.cycles as f64 * op.cycle_s(),
-                                wall_latency_s: req.submitted.elapsed().as_secs_f64(),
-                                queue_wait_s,
-                                stats,
-                            }),
-                            Err(e) => Err(FrameError { message: format!("{e:#}") }),
-                        };
-                        let _ = out.send(FrameResult {
-                            id: req.id,
-                            net: req.net,
-                            worker: w,
-                            result,
-                        });
+            // Cross-frame overlap happens *among tile workers*; with one
+            // tile thread a window would serialize whole frames on this
+            // pool worker while its siblings idle — strictly worse than
+            // depth 1. So pipelining engages only with tile_workers ≥ 2.
+            let depth = if tile_workers > 1 { cfg.pipeline_depth.max(1) } else { 1 };
+            handles.push(std::thread::spawn(move || {
+                let _consumer = ConsumerGuard { queue: Arc::clone(&queue) };
+                loop {
+                    match queue.pop_window(depth) {
+                        Dequeued::Stop => break,
+                        Dequeued::Poison => panic!("injected worker panic (chaos hook)"),
+                        Dequeued::Window(jobs) => serve_window(jobs, w, op, tile_workers),
                     }
-                    Ok(Job::Poison) => panic!("injected worker panic (chaos hook)"),
-                    Ok(Job::Stop) | Err(_) => break,
                 }
             }));
         }
@@ -282,7 +432,7 @@ impl Coordinator {
             cfg,
             nets: registry,
             by_name,
-            tx,
+            queue,
             handles: Mutex::new(handles),
             stopped: AtomicBool::new(false),
             next_id: AtomicU64::new(0),
@@ -345,14 +495,14 @@ impl Coordinator {
         }
         let reservation = Reservation { admission: Arc::clone(&self.admission), bytes: reserved };
         let (otx, orx) = sync_channel(1);
-        let job = Job::Frame {
+        let job = Job::Frame(Box::new(FrameJob {
             req: FrameRequest::new(id, net, frame),
             runner,
             reservation,
             out: otx,
-        };
-        if self.tx.send(job).is_err() {
-            // Every worker is gone; the failed send hands the job back
+        }));
+        if self.queue.push(job).is_err() {
+            // Every worker is gone; the failed push hands the job back
             // and dropping it releases the reservation.
             return Err(SubmitError::Disconnected);
         }
@@ -429,7 +579,7 @@ impl Coordinator {
         }
         let n = self.handles.lock().unwrap().len();
         for _ in 0..n {
-            if self.tx.send(Job::Stop).is_err() {
+            if self.queue.push(Job::Stop).is_err() {
                 break; // workers already gone
             }
         }
@@ -447,7 +597,76 @@ impl Coordinator {
         if self.stopped.load(Ordering::SeqCst) {
             return Err(SubmitError::Stopped);
         }
-        self.tx.send(Job::Poison).map_err(|_| SubmitError::Disconnected)
+        self.queue.push(Job::Poison).map_err(|_| SubmitError::Disconnected)
+    }
+}
+
+/// Serve one dequeued same-net window through the runner's cross-frame
+/// pipelined scheduler. Every job is answered exactly once and its
+/// admission reservation is released only after its result is sent (or
+/// during unwind, if this worker panics mid-window): a malformed frame
+/// gets its own delivered error up front and leaves the window, and a
+/// window-level failure is delivered to every remaining frame — no
+/// silent drops on any path.
+fn serve_window(jobs: Vec<FrameJob>, worker: usize, op: OperatingPoint, tile_workers: usize) {
+    let runner = Arc::clone(&jobs[0].runner);
+    // queue wait = submit → this dequeue, measured per frame
+    let mut window: Vec<(FrameJob, f64)> = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        let queue_wait_s = job.req.submitted.elapsed().as_secs_f64();
+        match runner.check_frame(&job.req.frame) {
+            Ok(()) => window.push((job, queue_wait_s)),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let _ = job.out.send(FrameResult {
+                    id: job.req.id,
+                    net: job.req.net.clone(),
+                    worker,
+                    result: Err(FrameError { message: msg }),
+                });
+                // `job` drops here → its reservation releases.
+            }
+        }
+    }
+    if window.is_empty() {
+        return;
+    }
+    let depth = window.len();
+    let outs = {
+        // borrow the frames in place — no per-window image copies
+        let frames: Vec<&Tensor> = window.iter().map(|(j, _)| &j.req.frame).collect();
+        runner.run_frames_pipelined_ref(&frames, tile_workers, depth)
+    };
+    match outs {
+        Ok(outs) => {
+            for ((job, queue_wait_s), (output, stats)) in window.into_iter().zip(outs) {
+                let result = Ok(FrameOutput {
+                    output,
+                    device_latency_s: stats.cycles as f64 * op.cycle_s(),
+                    wall_latency_s: job.req.submitted.elapsed().as_secs_f64(),
+                    queue_wait_s,
+                    window: depth,
+                    stats,
+                });
+                let _ = job.out.send(FrameResult {
+                    id: job.req.id,
+                    net: job.req.net.clone(),
+                    worker,
+                    result,
+                });
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for (job, _) in window {
+                let _ = job.out.send(FrameResult {
+                    id: job.req.id,
+                    net: job.req.net.clone(),
+                    worker,
+                    result: Err(FrameError { message: msg.clone() }),
+                });
+            }
+        }
     }
 }
 

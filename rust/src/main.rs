@@ -130,6 +130,7 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         .opt("workers", "1", "accelerator instances")
         .opt("queue", "4", "bounded queue depth")
         .opt("tile-workers", "1", "parallel segment-DAG threads per frame")
+        .opt("pipeline-depth", "1", "same-net frames per worker window (cross-frame pipelining)")
         .opt("admit-mb", "0", "in-flight DRAM-image budget in MB (0 = unbounded)")
         .opt("admit-mode", "block", "over-budget behavior: block|reject")
         .opt("freq", "500", "clock in MHz");
@@ -151,6 +152,7 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         workers: m.get_usize("workers"),
         queue_depth: m.get_usize("queue"),
         tile_workers: m.get_usize("tile-workers"),
+        pipeline_depth: m.get_usize("pipeline-depth"),
         op,
         admission,
     };

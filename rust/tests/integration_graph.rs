@@ -114,9 +114,11 @@ fn diamond_branches_overlap_without_barriers() {
         assert_eq!(out, want, "traced run still bit-exact (attempt {attempt})");
 
         // sanity on the trace itself: every segment enters exactly once
-        // and exits exactly once, after its enter
+        // and exits exactly once, after its enter — and a single-frame
+        // run attributes every event to frame 0
         let n_segs = runner.compiled.segments.len();
         assert_eq!(trace.len(), 2 * n_segs);
+        assert!(trace.iter().all(|e| e.frame == 0), "single-frame trace is all frame 0");
         for s in 0..n_segs {
             let enter = trace.iter().position(|e| e.seg == s && e.enter).unwrap();
             let exit = trace.iter().position(|e| e.seg == s && !e.enter).unwrap();
@@ -131,6 +133,62 @@ fn diamond_branches_overlap_without_barriers() {
         }
     }
     assert!(overlapped, "consumer `d` never started before the deep branch finished");
+}
+
+/// The cross-frame extension of the overlap proof: with a depth-2
+/// pipelined window, at least one frame-1 segment must *enter* before
+/// frame-0's last exit. The overlap is structural under the FIFO
+/// queue — frame 1's zero-indegree segments sit in the ready-queue
+/// from t=0, while frame 0's final `add` cannot even be *enqueued*
+/// until both branches finish — but trace events are recorded outside
+/// the scheduler lock, so (as in the sibling single-frame test) a
+/// pathologically descheduled worker gets a few attempts before we
+/// call it a failure. Outputs and per-frame stats stay bit-identical
+/// to sequential runs on every attempt.
+#[test]
+fn pipelined_frames_overlap_across_the_frame_boundary() {
+    let graph = diamond();
+    let runner = NetRunner::from_graph(&graph).unwrap();
+    let frames: Vec<Tensor> = (0..2).map(|s| Tensor::random_image(40 + s, 40, 40, 4)).collect();
+    let seq: Vec<_> = frames.iter().map(|f| runner.run_frame(f).unwrap()).collect();
+    let n_segs = runner.compiled.segments.len();
+
+    let mut overlapped = false;
+    for attempt in 0..3 {
+        let (results, trace) = runner.run_frames_pipelined_traced(&frames, 2, 2).unwrap();
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(
+                results[i].0,
+                run_graph_ref(&graph, f),
+                "frame {i} output vs reference (attempt {attempt})"
+            );
+            assert_eq!(results[i].1, seq[i].1, "frame {i} stats vs its own sequential run");
+        }
+
+        // every (frame, segment) pair enters and exits exactly once
+        assert_eq!(trace.len(), 2 * 2 * n_segs);
+        for fr in 0..2 {
+            for s in 0..n_segs {
+                let enter = trace
+                    .iter()
+                    .position(|e| e.frame == fr && e.seg == s && e.enter)
+                    .unwrap_or_else(|| panic!("frame {fr} seg {s} never entered"));
+                let exit = trace
+                    .iter()
+                    .position(|e| e.frame == fr && e.seg == s && !e.enter)
+                    .unwrap_or_else(|| panic!("frame {fr} seg {s} never exited"));
+                assert!(enter < exit, "frame {fr} seg {s} exited before entering");
+            }
+        }
+
+        let first_f1_enter = trace.iter().position(|e| e.frame == 1 && e.enter).unwrap();
+        let last_f0_exit = trace.iter().rposition(|e| e.frame == 0 && !e.enter).unwrap();
+        if first_f1_enter < last_f0_exit {
+            overlapped = true;
+            break;
+        }
+    }
+    assert!(overlapped, "no frame-1 segment ever entered before frame-0's last exit");
 }
 
 /// Compile-time validation surfaces real errors (no panics, no

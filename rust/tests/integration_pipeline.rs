@@ -1,0 +1,365 @@
+//! Adversarial battery for the cross-frame pipelined scheduler.
+//!
+//! The pipeline's contract is that it is *invisible* except in wall
+//! time: per-frame outputs and per-frame `SimStats` are bit-identical
+//! to running each frame alone, for any topology, any worker count,
+//! any depth, and any completion interleaving — and the coordinator
+//! on top of it keeps the "every frame delivered and accounted"
+//! guarantee through mid-pipeline worker death, admission pressure,
+//! and scrambled mixed-net completion order.
+
+use kn_stream::compiler::NetRunner;
+use kn_stream::coordinator::{
+    AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig, SubmitError,
+};
+use kn_stream::model::reference::run_graph_ref;
+use kn_stream::model::{zoo, AddSpec, ConcatSpec, ConvSpec, Graph, NodeOp, PoolSpec, Tensor};
+use kn_stream::prop_assert;
+use kn_stream::sim::SimStats;
+use kn_stream::util::prop::{check, Gen};
+
+fn conv(name: &str, k: usize, pad: usize, cin: usize, cout: usize, seed: u32) -> NodeOp {
+    NodeOp::Conv(ConvSpec {
+        name: name.into(),
+        k,
+        stride: 1,
+        pad,
+        cin,
+        cout,
+        shift: 10,
+        relu: true,
+        wseed: seed,
+        bseed: seed + 1,
+        groups: 1,
+    })
+}
+
+/// A random small-but-gnarly topology: a conv stem, then 1..=3 random
+/// blocks drawn from {plain conv (1×1/3×3/5×5), 2×2 pool, residual
+/// diamond → Add, two-branch → Concat}. Shapes stay legal by
+/// construction: branch convs are stride-1 same-pad, pools fire only
+/// while the plane is even and ≥ 8 px. The shrinker's shrinking size
+/// budget only narrows the random ranges, so every shrunk case is
+/// still a valid graph.
+fn random_graph(g: &mut Gen) -> Graph {
+    let h = 8 + 2 * g.usize_in(0, 5);
+    let w = 8 + 2 * g.usize_in(0, 5);
+    let cin = g.usize_in(1, 3);
+    let mut gr = Graph::new("propnet", h, w, cin);
+    let mut c = *g.choose(&[4usize, 8, 16]);
+    let seed = g.rng.next_u32() & 0xFFFF;
+    gr.add_node(conv("stem", 3, 1, cin, c, seed), &["input"]).unwrap();
+    let mut cur = "stem".to_string();
+    let (mut ph, mut pw) = (h, w);
+    for b in 0..g.usize_in(1, 3) {
+        let seed = g.rng.next_u32() & 0xFFFF;
+        match g.usize_in(0, 3) {
+            0 => {
+                let k = *g.choose(&[1usize, 3, 5]);
+                let cout = *g.choose(&[4usize, 8, 16]);
+                let name = format!("c{b}");
+                gr.add_node(conv(&name, k, k / 2, c, cout, seed), &[&cur]).unwrap();
+                cur = name;
+                c = cout;
+            }
+            1 if ph >= 8 && pw >= 8 && ph % 2 == 0 && pw % 2 == 0 => {
+                let name = format!("p{b}");
+                let pool = NodeOp::Pool(PoolSpec { name: name.clone(), k: 2, stride: 2 });
+                gr.add_node(pool, &[&cur]).unwrap();
+                cur = name;
+                ph /= 2;
+                pw /= 2;
+            }
+            2 => {
+                // residual diamond: deep 3×3 branch vs shallow 1×1,
+                // merged by a requantizing Add
+                let (ba, bb, name) = (format!("ra{b}"), format!("rb{b}"), format!("radd{b}"));
+                gr.add_node(conv(&ba, 3, 1, c, c, seed), &[&cur]).unwrap();
+                gr.add_node(conv(&bb, 1, 0, c, c, seed ^ 0x5555), &[&cur]).unwrap();
+                let add = NodeOp::Add(AddSpec { name: name.clone(), shift: 1, relu: g.bool() });
+                gr.add_node(add, &[&ba, &bb]).unwrap();
+                cur = name;
+            }
+            _ => {
+                // two branches of different widths, channel-concatenated
+                let (ca, cb) = (*g.choose(&[4usize, 8]), *g.choose(&[4usize, 8]));
+                let (ba, bb, name) = (format!("wa{b}"), format!("wb{b}"), format!("wcat{b}"));
+                gr.add_node(conv(&ba, 3, 1, c, ca, seed), &[&cur]).unwrap();
+                gr.add_node(conv(&bb, 1, 0, c, cb, seed ^ 0x3333), &[&cur]).unwrap();
+                let cat = NodeOp::Concat(ConcatSpec { name: name.clone() });
+                gr.add_node(cat, &[&ba, &bb]).unwrap();
+                cur = name;
+                c = ca + cb;
+            }
+        }
+    }
+    gr
+}
+
+/// The tentpole property: over random topologies × random pipeline
+/// depths × workers ∈ {1, 2, 4, 8}, every frame of a pipelined window
+/// is bit-identical — output AND `SimStats` — to its own sequential
+/// `run_frame`, and the per-frame stats sum to the sequential
+/// aggregate.
+#[test]
+fn prop_pipelined_equals_sequential_per_frame() {
+    check("pipelined == sequential per frame", 6, |g| {
+        let graph = random_graph(g);
+        let runner = NetRunner::from_graph(&graph)
+            .map_err(|e| format!("generated graph failed to compile: {e:#}"))?;
+        let nframes = g.usize_in(2, 4);
+        let frames: Vec<Tensor> = (0..nframes)
+            .map(|i| Tensor::random_image(i as u32, graph.in_h, graph.in_w, graph.in_c))
+            .collect();
+        let seq: Vec<(Tensor, SimStats)> = frames
+            .iter()
+            .map(|f| runner.run_frame(f).map_err(|e| format!("sequential run: {e:#}")))
+            .collect::<Result<_, _>>()?;
+        // anchor the sequential sim itself to the scalar oracle
+        prop_assert!(
+            seq[0].0 == run_graph_ref(&graph, &frames[0]),
+            "sequential sim != scalar reference on the generated graph"
+        );
+        let depth = g.usize_in(1, 4);
+        for workers in [1usize, 2, 4, 8] {
+            let got = runner
+                .run_frames_pipelined(&frames, workers, depth)
+                .map_err(|e| format!("pipelined run: {e:#}"))?;
+            prop_assert!(got.len() == nframes, "result count {} != {nframes}", got.len());
+            let mut agg_got = SimStats::default();
+            let mut agg_seq = SimStats::default();
+            for (i, ((go, gs), (so, ss))) in got.iter().zip(&seq).enumerate() {
+                prop_assert!(
+                    go == so,
+                    "frame {i} output diverged (workers {workers}, depth {depth}, \
+                     graph {}x{}x{}, {} nodes)",
+                    graph.in_h,
+                    graph.in_w,
+                    graph.in_c,
+                    graph.nodes.len()
+                );
+                prop_assert!(
+                    gs == ss,
+                    "frame {i} stats diverged (workers {workers}, depth {depth}): \
+                     got {gs:?} want {ss:?}"
+                );
+                agg_got.add(gs);
+                agg_seq.add(ss);
+            }
+            prop_assert!(
+                agg_got == agg_seq,
+                "per-frame stats do not sum to the sequential aggregate \
+                 (workers {workers}, depth {depth})"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance matrix on the real zoo graphs: depth ≥ 2 windows over
+/// edgenet (residual), widenet (branch+concat) and facenet (deep
+/// linear) are per-frame bit-identical to sequential across worker
+/// counts.
+#[test]
+fn zoo_graphs_pipelined_bit_exact() {
+    for name in ["edgenet", "widenet", "facenet"] {
+        let graph = zoo::graph_by_name(name).unwrap();
+        let runner = NetRunner::from_graph(&graph).unwrap();
+        let frames: Vec<Tensor> = (0..3)
+            .map(|s| Tensor::random_image(s, graph.in_h, graph.in_w, graph.in_c))
+            .collect();
+        let seq: Vec<_> = frames.iter().map(|f| runner.run_frame(f).unwrap()).collect();
+        for (workers, depth) in [(2usize, 2usize), (4, 3), (8, 2)] {
+            let got = runner.run_frames_pipelined(&frames, workers, depth).unwrap();
+            for (i, ((go, gs), (so, ss))) in got.iter().zip(&seq).enumerate() {
+                assert_eq!(go, so, "{name} frame {i} w={workers} d={depth} output");
+                assert_eq!(gs, ss, "{name} frame {i} w={workers} d={depth} stats");
+            }
+        }
+    }
+}
+
+/// Chaos: the injected panic fires *before* any frame is served, with
+/// a Block-mode admission budget smaller than the backlog. Every
+/// in-flight frame must come back as an accounted error — none served,
+/// none silently dropped — and every reservation must be released so
+/// no Block-mode submitter deadlocks on bytes nobody can return. The
+/// test terminating at all IS the deadlock assertion.
+#[test]
+fn mid_pipeline_worker_death_delivers_every_frame() {
+    let g = zoo::graph_by_name("quicknet").unwrap();
+    let one = NetRunner::from_graph(&g).unwrap().dram_frame_bytes();
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        queue_depth: 8,
+        tile_workers: 2,
+        pipeline_depth: 3,
+        admission: AdmissionPolicy { max_dram_bytes: 2 * one, mode: AdmissionMode::Block },
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg).unwrap();
+    coord.inject_worker_panic().unwrap();
+    let frames: Vec<Tensor> =
+        (0..5).map(|s| Tensor::random_image(s, g.in_h, g.in_w, g.in_c)).collect();
+    let m = coord.run_stream(frames).unwrap();
+    assert_eq!(m.frames, 0, "the only worker died before serving anything");
+    assert_eq!(m.errors, 5, "every in-flight frame accounted as an error");
+    assert_eq!(m.frames + m.errors, 5);
+    coord.stop();
+}
+
+/// Chaos: the panic lands *between* pipelined windows of a 2-worker
+/// pool. Whatever the surviving worker serves must be bit-exact;
+/// whatever died with the poisoned worker must surface as a
+/// `Disconnected` recv or submit error — exactly one outcome per
+/// frame, nothing lost, and `stop()` still joins cleanly.
+#[test]
+fn poison_between_pipelined_windows_keeps_accounting_exact() {
+    let g = zoo::graph_by_name("quicknet").unwrap();
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        queue_depth: 8,
+        tile_workers: 2,
+        pipeline_depth: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg).unwrap();
+    let frames: Vec<Tensor> =
+        (0..8).map(|s| Tensor::random_image(s, g.in_h, g.in_w, g.in_c)).collect();
+    let mut outcomes = 0usize;
+    let mut pendings = Vec::new();
+    for (i, f) in frames.iter().enumerate() {
+        if i == 4 {
+            // the poison may race the drain; both outcomes are legal
+            let _ = coord.inject_worker_panic();
+        }
+        match coord.submit(f.clone()) {
+            Ok(p) => pendings.push((i, p)),
+            Err(SubmitError::Disconnected) => outcomes += 1, // accounted at submit
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    for (i, p) in pendings {
+        match p.recv() {
+            Ok(r) => {
+                assert_eq!(r.id, i as u64, "frame identity survives the chaos");
+                let out = r.ok().unwrap_or_else(|e| panic!("frame {i} errored: {e}"));
+                assert_eq!(out.output, run_graph_ref(&g, &frames[i]), "frame {i} bit-exact");
+                outcomes += 1;
+            }
+            Err(_) => outcomes += 1, // died with its worker — observed, not silent
+        }
+    }
+    assert_eq!(outcomes, 8, "exactly one outcome per submitted frame");
+    coord.stop();
+}
+
+/// Ordering: frames 0..N submitted to a pipelined registry under a
+/// mixed-net stream come back with the id and net of *their*
+/// submission and the bit-exact output for *that* frame, even though
+/// three workers complete windows out of submission order.
+#[test]
+fn pipelined_mixed_stream_preserves_frame_identity() {
+    let nets = zoo::graphs_by_names("quicknet,edgenet").unwrap();
+    let cfg = CoordinatorConfig {
+        workers: 3,
+        queue_depth: 6,
+        tile_workers: 2,
+        pipeline_depth: 3,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(nets.clone(), cfg).unwrap();
+    let tagged = zoo::mix_stream(&nets, &[2, 1], 18);
+    let mut pendings = Vec::new();
+    for (i, (net, f)) in tagged.iter().enumerate() {
+        let p = coord.submit_to(net, f.clone()).unwrap();
+        assert_eq!(p.id, i as u64, "ids assigned in submission order");
+        pendings.push(p);
+    }
+    for (i, ((net, f), p)) in tagged.iter().zip(&pendings).enumerate() {
+        let r = p.recv().expect("every frame delivered");
+        assert_eq!(r.id, i as u64, "frame {i} id");
+        assert_eq!(&r.net, net, "frame {i} net tag");
+        let out = r.ok().unwrap_or_else(|e| panic!("frame {i} errored: {e}"));
+        let g = &nets.iter().find(|(n, _)| n == net).unwrap().1;
+        assert_eq!(out.output, run_graph_ref(g, f), "frame {i} ({net}) output");
+        assert!(out.window >= 1 && out.window <= 3, "window size {} out of range", out.window);
+    }
+    coord.stop();
+}
+
+/// Windows must actually form under sustained load (the throughput
+/// side of the knob), the metrics must record them, and a malformed
+/// frame inside the stream must fail alone — its window neighbours
+/// still serve bit-exactly.
+#[test]
+fn windows_form_and_bad_frames_fail_alone() {
+    let g = zoo::graph_by_name("quicknet").unwrap();
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        queue_depth: 8,
+        tile_workers: 2,
+        pipeline_depth: 4,
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg).unwrap();
+    let mut frames: Vec<Tensor> =
+        (0..16).map(|s| Tensor::random_image(s, g.in_h, g.in_w, g.in_c)).collect();
+    frames.insert(7, Tensor::zeros(2, 2, 1)); // wrong shape mid-stream
+    let m = coord.run_stream(frames).unwrap();
+    assert_eq!(m.frames, 16, "good frames all served");
+    assert_eq!(m.errors, 1, "the malformed frame fails alone");
+    assert!(m.last_error.as_deref().unwrap_or("").contains("shape"));
+    assert_eq!(m.window.count(), 16, "window size recorded per served frame");
+    assert!(
+        m.window.max() >= 2.0,
+        "a 1-worker depth-4 pipeline under a 16-frame backlog must form real windows \
+         (max window {})",
+        m.window.max()
+    );
+    coord.stop();
+}
+
+/// Admission pressure under pipelining: a Block-mode budget of exactly
+/// one frame caps the window at 1 (reservations are per-frame) but
+/// must neither deadlock nor lose frames; a Reject-mode budget sheds
+/// load as delivered, accounted errors while admitted frames still
+/// pipeline correctly.
+#[test]
+fn admission_budget_caps_the_pipeline_without_wedging() {
+    let g = zoo::graph_by_name("quicknet").unwrap();
+    let one = NetRunner::from_graph(&g).unwrap().dram_frame_bytes();
+
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        queue_depth: 4,
+        tile_workers: 2,
+        pipeline_depth: 3,
+        admission: AdmissionPolicy { max_dram_bytes: one, mode: AdmissionMode::Block },
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg).unwrap();
+    let frames: Vec<Tensor> =
+        (0..6).map(|s| Tensor::random_image(s, g.in_h, g.in_w, g.in_c)).collect();
+    let m = coord.run_stream(frames).unwrap();
+    assert_eq!(m.frames, 6, "blocking admission must not lose pipelined frames");
+    assert_eq!(m.errors, 0);
+    assert!(m.window.max() <= 1.0 + 1e-9, "a one-frame budget cannot form multi-frame windows");
+    coord.stop();
+
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        queue_depth: 8,
+        tile_workers: 2,
+        pipeline_depth: 3,
+        admission: AdmissionPolicy { max_dram_bytes: 3 * one, mode: AdmissionMode::Reject },
+        ..Default::default()
+    };
+    let frames: Vec<Tensor> =
+        (0..12).map(|s| Tensor::random_image(s, g.in_h, g.in_w, g.in_c)).collect();
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g)], cfg).unwrap();
+    let m = coord.run_stream(frames).unwrap();
+    assert_eq!(m.frames + m.errors, 12, "served + shed = submitted");
+    assert!(m.frames >= 3, "at least the first budgeted window serves");
+    coord.stop();
+}
