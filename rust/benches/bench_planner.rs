@@ -1,0 +1,178 @@
+//! Decomposition-planner bench: predicted DRAM traffic, cross-tile
+//! dependency counts and tile-granular overlap for every plan policy,
+//! across the zoo at several SRAM budgets (the paper's Fig. 6 trade,
+//! produced by the analytic planner instead of a fixed heuristic) —
+//! plus the parallel weight-emission compile-time sweep.
+//!
+//! `cargo bench --bench bench_planner` → `BENCH_planner.json`
+//!
+//! The acceptance row: on at least one zoo graph, `dag-aware` must
+//! reduce predicted DRAM traffic or cross-tile dependency count vs
+//! `heuristic` (it does, massively, wherever feature decomposition
+//! forces channel re-streaming); outputs stay bit-identical, which the
+//! measured section re-verifies against the heuristic compile.
+
+use kn_stream::compiler::{compile_graph_threads, NetRunner};
+use kn_stream::model::{zoo, Tensor};
+use kn_stream::planner::{plan_graph_budget, PlanPolicy};
+use kn_stream::util::bench::{bench_once, JsonReport, Table};
+use kn_stream::util::json::{obj, s, Json};
+use kn_stream::SRAM_BYTES;
+
+/// Nets whose planning analytics we sweep (everything), and the subset
+/// small enough to execute per policy in a bench run.
+const ANALYTIC_NETS: &[&str] =
+    &["quicknet", "facenet", "edgenet", "widenet", "gapnet", "alexnet", "vgg16"];
+const EXEC_NETS: &[&str] = &["facenet", "edgenet", "widenet", "gapnet"];
+const BUDGETS: &[usize] = &[64 * 1024, 128 * 1024, 256 * 1024];
+
+fn main() {
+    let mut report = JsonReport::new("planner");
+    report.text("bench", "planner");
+
+    // ---- analytic sweep: traffic + deps per net × budget × policy --------
+    let mut t = Table::new(
+        "planner sweep — predicted DRAM MB / dep edges (per policy)",
+        &["net", "SRAM", "heuristic", "min-traffic", "dag-aware"],
+    );
+    let mut dag_beats_heuristic = 0u32;
+    for name in ANALYTIC_NETS {
+        let graph = zoo::graph_by_name(name).unwrap();
+        for &budget in BUDGETS {
+            let mut cells: Vec<String> = vec![name.to_string(), format!("{}K", budget / 1024)];
+            let mut heur: Option<(u64, u64)> = None;
+            for policy in PlanPolicy::ALL {
+                match plan_graph_budget(&graph, policy, budget) {
+                    Ok(gp) => {
+                        let tt = gp.total_traffic();
+                        let total = tt.read_bytes + tt.write_bytes;
+                        cells.push(format!("{:.2}MB/{}e", total as f64 / 1e6, gp.dep_edges));
+                        if policy == PlanPolicy::Heuristic {
+                            heur = Some((total, gp.dep_edges));
+                        }
+                        if policy == PlanPolicy::DagAware && budget == SRAM_BYTES {
+                            if let Some((ht, hd)) = heur {
+                                if total < ht || gp.dep_edges < hd {
+                                    dag_beats_heuristic += 1;
+                                }
+                            }
+                        }
+                        report.push_row(
+                            "plans",
+                            obj(vec![
+                                ("net", s(name)),
+                                ("budget_kb", Json::Num((budget / 1024) as f64)),
+                                ("policy", s(policy.name())),
+                                ("pred_read_bytes", Json::Num(tt.read_bytes as f64)),
+                                ("pred_write_bytes", Json::Num(tt.write_bytes as f64)),
+                                ("dep_edges", Json::Num(gp.dep_edges as f64)),
+                                (
+                                    "est_critical_path_cycles",
+                                    Json::Num(gp.est_critical_path_cycles as f64),
+                                ),
+                            ]),
+                        );
+                    }
+                    Err(_) => cells.push("infeasible".into()),
+                }
+            }
+            t.row(&cells);
+        }
+    }
+    t.print();
+    report.num("dag_beats_heuristic_nets", dag_beats_heuristic as f64);
+
+    // ---- measured: execute each policy, verify bit-exactness -------------
+    let mut t = Table::new(
+        "measured at 128K — DRAM MB (predicted == measured), cycles, overlap",
+        &["net", "policy", "DRAM MB", "cycles", "overlap enters", "bit-exact"],
+    );
+    for name in EXEC_NETS {
+        let graph = zoo::graph_by_name(name).unwrap();
+        let frame = Tensor::random_image(7, graph.in_h, graph.in_w, graph.in_c);
+        let mut baseline: Option<Tensor> = None;
+        for policy in PlanPolicy::ALL {
+            let runner = NetRunner::from_graph_with_policy(&graph, policy).unwrap();
+            let (out, stats) = runner.run_frame(&frame).unwrap();
+            let exact = match &baseline {
+                None => {
+                    baseline = Some(out);
+                    true
+                }
+                Some(b) => *b == out,
+            };
+            assert!(exact, "{name}/{}: outputs diverged across policies", policy.name());
+            // tile-granular overlap: segment enters while a segment of a
+            // *different* node is still in flight (4 tile workers)
+            let (_, _, trace) = runner.run_frame_parallel_traced(&frame, 4).unwrap();
+            let mut in_flight: Vec<(usize, usize)> = Vec::new(); // (seg, node)
+            let mut overlap_enters = 0u64;
+            for ev in &trace {
+                if ev.enter {
+                    if in_flight.iter().any(|&(_, n)| n != ev.node) {
+                        overlap_enters += 1;
+                    }
+                    in_flight.push((ev.seg, ev.node));
+                } else {
+                    in_flight.retain(|&(sg, _)| sg != ev.seg);
+                }
+            }
+            let dram_mb = (stats.dram_read_bytes + stats.dram_write_bytes) as f64 / 1e6;
+            t.row(&[
+                name.to_string(),
+                policy.name().to_string(),
+                format!("{dram_mb:.3}"),
+                format!("{}", stats.cycles),
+                format!("{overlap_enters}"),
+                "yes".into(),
+            ]);
+            report.push_row(
+                "measured",
+                obj(vec![
+                    ("net", s(name)),
+                    ("policy", s(policy.name())),
+                    ("dram_read_bytes", Json::Num(stats.dram_read_bytes as f64)),
+                    ("dram_write_bytes", Json::Num(stats.dram_write_bytes as f64)),
+                    ("cycles", Json::Num(stats.cycles as f64)),
+                    ("overlap_enters", Json::Num(overlap_enters as f64)),
+                ]),
+            );
+        }
+    }
+    t.print();
+
+    // ---- compile-time: parallel weight-image emission --------------------
+    let mut t = Table::new(
+        "vgg16 compile time — weight-image emission threads",
+        &["threads", "wall"],
+    );
+    let vgg = zoo::graph_by_name("vgg16").unwrap();
+    for threads in [1usize, 2, 4, 8] {
+        let r = bench_once(&format!("compile_vgg16_t{threads}"), || {
+            compile_graph_threads(&vgg, threads).unwrap().dram_px
+        });
+        t.row(&[format!("{threads}"), format!("{:.0}ms", r.mean.as_secs_f64() * 1e3)]);
+        report.push_row(
+            "compile",
+            obj(vec![
+                ("threads", Json::Num(threads as f64)),
+                ("wall_ms", Json::Num(r.mean.as_secs_f64() * 1e3)),
+            ]),
+        );
+    }
+    t.print();
+
+    assert!(
+        dag_beats_heuristic >= 1,
+        "acceptance: dag-aware must reduce traffic or dep edges on >= 1 zoo graph"
+    );
+    report.write().expect("write BENCH_planner.json");
+    println!(
+        "\nTakeaway: the analytic planner turns the fixed \"fewest tiles\" heuristic into a\n\
+         measured trade — min-traffic plans cut DRAM re-streaming wherever feature\n\
+         decomposition forced channel reloads, and the DAG-aware pass aligns producer/\n\
+         consumer split axes so consumer tiles wait on fewer producer tiles ({} nets\n\
+         improved at the chip budget).",
+        dag_beats_heuristic
+    );
+}

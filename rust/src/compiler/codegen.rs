@@ -33,13 +33,14 @@
 use std::collections::HashMap;
 
 use super::decompose::{plan_conv, Plan};
-use super::kernel_decomp::{tap_weights, taps};
+use super::kernel_decomp::{tap_weights, taps, Tap};
 use crate::isa::{
     AddPass, BiasLoad, Cmd, ConvCfg, ConvPass, DmaDesc, PoolPass, WeightLoad, PASS_FIRST,
     PASS_LAST,
 };
 use crate::model::graph::{Graph, NodeOp, NodeRef};
 use crate::model::{AddSpec, ConcatSpec, ConvSpec, NetSpec, PoolSpec};
+use crate::sim::accbuf::ACC_TILE_PX;
 use crate::{NUM_CU, SRAM_BYTES};
 
 /// A padded planar activation canvas in DRAM.
@@ -226,8 +227,104 @@ pub fn compile_net(net: &NetSpec) -> anyhow::Result<CompiledNet> {
     compile_graph(&Graph::from_net(net))
 }
 
-/// Compile a graph into a command program + DRAM image + segment DAG.
+/// Compile a graph into a command program + DRAM image + segment DAG,
+/// with the historical per-node heuristic decomposition.
 pub fn compile_graph(graph: &Graph) -> anyhow::Result<CompiledNet> {
+    compile_graph_opts(graph, None, default_emit_threads())
+}
+
+/// [`compile_graph`] with per-conv-node decomposition plans chosen by
+/// the planner (`planner::plan_graph`). `plans` is indexed like
+/// `graph.nodes`; a `None` entry for a conv node falls back to the
+/// heuristic solver. Every supplied plan is re-checked against the
+/// ACC-BUF/SRAM contracts before emission.
+pub fn compile_graph_with_plans(
+    graph: &Graph,
+    plans: &[Option<Plan>],
+) -> anyhow::Result<CompiledNet> {
+    compile_graph_opts(graph, Some(plans), default_emit_threads())
+}
+
+/// [`compile_graph`] with an explicit weight-emission thread count
+/// (1 = fully sequential). The emitted program AND DRAM image are
+/// byte-identical at any thread count — block offsets are assigned
+/// sequentially and block contents depend only on the layer weights.
+pub fn compile_graph_threads(graph: &Graph, emit_threads: usize) -> anyhow::Result<CompiledNet> {
+    compile_graph_opts(graph, None, emit_threads)
+}
+
+/// Default weight-emission parallelism: the host's cores, capped —
+/// the fill is memory-bound beyond a few threads.
+pub fn default_emit_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// A plan arriving from outside the heuristic solver must still honor
+/// the emitter's resource contracts; checked here with real errors so
+/// a planner bug cannot surface as a mid-emission debug panic.
+fn check_plan(c: &ConvSpec, h: usize, w: usize, plan: &Plan) -> anyhow::Result<()> {
+    let oh = (h + 2 * c.pad - c.k) / c.stride + 1;
+    let ow = (w + 2 * c.pad - c.k) / c.stride + 1;
+    anyhow::ensure!(!plan.tiles.is_empty(), "conv {}: plan has no tiles", c.name);
+    // exact disjoint cover of the output plane (a pixel-count check
+    // alone would let overlapping tiles double-write one region and
+    // silently leave another unwritten)
+    let mut cover = vec![false; oh * ow];
+    for t in &plan.tiles {
+        anyhow::ensure!(
+            t.oh >= 1 && t.ow >= 1 && t.oy0 + t.oh <= oh && t.ox0 + t.ow <= ow,
+            "conv {}: tile {t:?} outside the {oh}x{ow} output plane",
+            c.name
+        );
+        for y in t.oy0..t.oy0 + t.oh {
+            for x in t.ox0..t.ox0 + t.ow {
+                anyhow::ensure!(
+                    !std::mem::replace(&mut cover[y * ow + x], true),
+                    "conv {}: plan tiles overlap at ({y}, {x})",
+                    c.name
+                );
+            }
+        }
+    }
+    anyhow::ensure!(
+        cover.iter().all(|&px| px),
+        "conv {}: plan tiles do not cover the whole output plane",
+        c.name
+    );
+    let max_out = plan.tiles.iter().map(|t| t.oh * t.ow).max().unwrap();
+    anyhow::ensure!(
+        max_out <= ACC_TILE_PX,
+        "conv {}: tile of {max_out} px exceeds the {ACC_TILE_PX}-px ACC BUF",
+        c.name
+    );
+    let cg = c.cin / c.groups;
+    anyhow::ensure!(
+        plan.c_per_group >= 1 && plan.c_per_group <= cg,
+        "conv {}: c_per_group {} outside 1..={cg}",
+        c.name,
+        plan.c_per_group
+    );
+    anyhow::ensure!(
+        plan.c_groups == cg.div_ceil(plan.c_per_group)
+            && plan.m_tiles == (c.cout / c.groups).div_ceil(NUM_CU),
+        "conv {}: inconsistent channel/feature grouping",
+        c.name
+    );
+    let in_max = plan.tiles.iter().map(|t| t.ih * t.iw).max().unwrap() * plan.c_per_group;
+    anyhow::ensure!(
+        (in_max + max_out * NUM_CU) * 2 <= SRAM_BYTES,
+        "conv {}: SRAM staging {} B exceeds the bank",
+        c.name,
+        (in_max + max_out * NUM_CU) * 2
+    );
+    Ok(())
+}
+
+fn compile_graph_opts(
+    graph: &Graph,
+    plans_in: Option<&[Option<Plan>]>,
+    emit_threads: usize,
+) -> anyhow::Result<CompiledNet> {
     let shapes = graph.validate()?;
     let n_canvas = graph.nodes.len() + 1;
 
@@ -276,9 +373,24 @@ pub fn compile_graph(graph: &Graph) -> anyhow::Result<CompiledNet> {
         match &node.op {
             NodeOp::Conv(c) => {
                 let (h, w, _) = graph.shape_of(node.inputs[0], &shapes);
-                let plan = plan_conv(c, h, w)
-                    .map_err(|e| anyhow::anyhow!("conv {}: {e}", c.name))?;
-                emit_conv(&mut em, ni, c, &plan, srcs[0].0, &srcs[0].1, (ni + 1, &dst));
+                let plan = match plans_in.and_then(|p| p.get(ni).cloned().flatten()) {
+                    Some(p) => {
+                        check_plan(c, h, w, &p)?;
+                        p
+                    }
+                    None => plan_conv(c, h, w)
+                        .map_err(|e| anyhow::anyhow!("conv {}: {e}", c.name))?,
+                };
+                emit_conv(
+                    &mut em,
+                    ni,
+                    c,
+                    &plan,
+                    srcs[0].0,
+                    &srcs[0].1,
+                    (ni + 1, &dst),
+                    emit_threads,
+                );
                 plans.push((c.name.clone(), plan));
             }
             NodeOp::Pool(p) => emit_pool(&mut em, ni, p, srcs[0].0, &srcs[0].1, (ni + 1, &dst))?,
@@ -321,8 +433,82 @@ pub fn compile_graph(graph: &Graph) -> anyhow::Result<CompiledNet> {
     })
 }
 
+/// Fill the weight/bias image blocks of one conv node. Offsets are
+/// allocated sequentially in the historical lazy order — (group,
+/// feature-tile): bias, then (channel-group, tap) weights — so the
+/// DRAM layout is identical to what on-demand emission produced;
+/// block *contents* are then computed in parallel across the
+/// independent `(node, tap, cgroup)` blocks (the vgg16-scale compile-
+/// time item) and are a pure function of the layer weights, so the
+/// image is byte-identical at any `emit_threads`.
+#[allow(clippy::too_many_arguments)]
+fn prefill_conv_blocks(em: &mut Emitter, ni: usize, c: &ConvSpec, plan: &Plan, threads: usize) {
+    struct WJob {
+        off: usize,
+        tap: Tap,
+        c0: usize,
+        cn: usize,
+        m0: usize,
+    }
+    let weights = c.weights();
+    let biases = c.biases();
+    let cg = c.cin / c.groups;
+    let mg = c.cout / c.groups;
+    let tap_list = taps(c.k);
+    let mut wjobs: Vec<WJob> = Vec::new();
+    // Every (g, mt, ti, cgi) key is visited exactly once per node, so
+    // each block is allocated fresh, in the historical order.
+    for g in 0..c.groups {
+        for mt in 0..plan.m_tiles {
+            let o = em.alloc_dram(2 * NUM_CU);
+            for f in 0..NUM_CU {
+                let m = mt * NUM_CU + f;
+                let v = if m < mg { biases[g * mg + m] } else { 0 };
+                em.dram[o + 2 * f] = (v as u32 & 0xFFFF) as u16 as i16;
+                em.dram[o + 2 * f + 1] = ((v as u32) >> 16) as u16 as i16;
+            }
+            em.bcache.insert((ni, g, mt), o);
+            for cgi in 0..plan.c_groups {
+                let c0 = cgi * plan.c_per_group;
+                let cn = plan.c_per_group.min(cg - c0);
+                for (ti, tp) in tap_list.iter().enumerate() {
+                    let len = cn * 9 * NUM_CU;
+                    let off = em.alloc_dram(len);
+                    em.wcache.insert((ni, g, mt, ti, cgi), (off, len));
+                    wjobs.push(WJob { off, tap: *tp, c0, cn, m0: g * mg + mt * NUM_CU });
+                }
+            }
+        }
+    }
+    let fill = |j: &WJob| tap_weights(&weights, c.k, cg, c.cout, j.tap, j.c0, j.cn, j.m0);
+    if threads <= 1 || wjobs.len() < 4 {
+        for job in &wjobs {
+            let blk = fill(job);
+            em.dram[job.off..job.off + blk.len()].copy_from_slice(&blk);
+        }
+        return;
+    }
+    let chunk = wjobs.len().div_ceil(threads.min(wjobs.len()));
+    let parts: Vec<Vec<(usize, Vec<i16>)>> = std::thread::scope(|scope| {
+        let fill = &fill;
+        let handles: Vec<_> = wjobs
+            .chunks(chunk)
+            .map(|jobs| {
+                scope.spawn(move || jobs.iter().map(|j| (j.off, fill(j))).collect::<Vec<_>>())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("weight emitter panicked")).collect()
+    });
+    for part in parts {
+        for (off, blk) in part {
+            em.dram[off..off + blk.len()].copy_from_slice(&blk);
+        }
+    }
+}
+
 /// Emit one conv node. `src.pad` may exceed the conv's own pad when a
 /// sibling consumer needs a wider apron; reads shift by the difference.
+#[allow(clippy::too_many_arguments)]
 fn emit_conv(
     em: &mut Emitter,
     ni: usize,
@@ -331,9 +517,9 @@ fn emit_conv(
     src_idx: usize,
     src: &Canvas,
     (dst_idx, dst): (usize, &Canvas),
+    emit_threads: usize,
 ) {
-    let weights = c.weights();
-    let biases = c.biases();
+    prefill_conv_blocks(em, ni, c, plan, emit_threads);
     let cg = c.cin / c.groups; // channels per conv group
     let mg = c.cout / c.groups; // features per conv group
     let tap_list = taps(c.k);
@@ -362,22 +548,8 @@ fn emit_conv(
         let mut loaded: Option<(usize, usize)> = None; // (group, cgroup)
         for g in 0..c.groups {
             for mt in 0..plan.m_tiles {
-                // bias block
-                let bkey = (ni, g, mt);
-                let boff = match em.bcache.get(&bkey) {
-                    Some(&o) => o,
-                    None => {
-                        let o = em.alloc_dram(2 * NUM_CU);
-                        for f in 0..NUM_CU {
-                            let m = mt * NUM_CU + f;
-                            let v = if m < mg { biases[g * mg + m] } else { 0 };
-                            em.dram[o + 2 * f] = (v as u32 & 0xFFFF) as u16 as i16;
-                            em.dram[o + 2 * f + 1] = ((v as u32) >> 16) as u16 as i16;
-                        }
-                        em.bcache.insert(bkey, o);
-                        o
-                    }
-                };
+                // bias block (prefilled)
+                let boff = em.bcache[&(ni, g, mt)];
                 em.push(Cmd::LoadBias(BiasLoad { dram_px: boff as u32 }));
 
                 // Collect this feature-group's pass list, then emit it
@@ -397,26 +569,8 @@ fn emit_conv(
                     let c0 = cgi * plan.c_per_group;
                     let cn = plan.c_per_group.min(cg - c0);
                     for (ti, tp) in tap_list.iter().enumerate() {
-                        let wkey = (ni, g, mt, ti, cgi);
-                        let (woff, _wlen) = match em.wcache.get(&wkey) {
-                            Some(&v) => v,
-                            None => {
-                                let blk = tap_weights(
-                                    &weights,
-                                    c.k,
-                                    cg,
-                                    c.cout,
-                                    *tp,
-                                    c0,
-                                    cn,
-                                    g * mg + mt * NUM_CU,
-                                );
-                                let o = em.alloc_dram(blk.len());
-                                em.dram[o..o + blk.len()].copy_from_slice(&blk);
-                                em.wcache.insert(wkey, (o, blk.len()));
-                                (o, blk.len())
-                            }
-                        };
+                        // prefilled by prefill_conv_blocks
+                        let (woff, _wlen) = em.wcache[&(ni, g, mt, ti, cgi)];
                         passes.push(PassDesc { cgi, cn, woff, dy: tp.dy, dx: tp.dx });
                     }
                 }
@@ -566,6 +720,7 @@ fn emit_pool(
             c: cc as u16,
             k: p.k as u8,
             stride: p.stride as u8,
+            avg: p.kind == crate::model::PoolKind::Avg,
         }));
         for ci in 0..cc {
             em.push(Cmd::Store(DmaDesc {
@@ -785,7 +940,7 @@ mod tests {
     #[test]
     fn segments_partition_the_program() {
         // (vgg16 omitted: compiling its full weight image is bench-scale)
-        for name in ["quicknet", "facenet", "alexnet", "edgenet", "widenet"] {
+        for name in ["quicknet", "facenet", "alexnet", "edgenet", "widenet", "gapnet"] {
             let graph = zoo::graph_by_name(name).unwrap();
             let compiled = compile_graph(&graph).unwrap();
             let mut covered = 0usize;
@@ -854,6 +1009,47 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Parallel weight-image emission must be byte-identical to
+    /// sequential emission: same program, same DRAM image, same
+    /// segments — offsets are allocated before the parallel fill and
+    /// block contents are emission-order-independent.
+    #[test]
+    fn parallel_weight_emission_is_byte_identical() {
+        for name in ["alexnet", "widenet", "gapnet"] {
+            let graph = zoo::graph_by_name(name).unwrap();
+            let seq = compile_graph_threads(&graph, 1).unwrap();
+            for threads in [2usize, 8] {
+                let par = compile_graph_threads(&graph, threads).unwrap();
+                assert_eq!(par.program, seq.program, "{name} t={threads} program");
+                assert_eq!(par.dram_init, seq.dram_init, "{name} t={threads} DRAM image");
+                assert_eq!(par.segments, seq.segments, "{name} t={threads} segments");
+                assert_eq!(par.dram_px, seq.dram_px, "{name} t={threads}");
+            }
+        }
+    }
+
+    /// compile_graph_with_plans must accept planner-chosen plans and
+    /// reject plans violating the emitter's resource contracts.
+    #[test]
+    fn external_plans_are_checked() {
+        use crate::compiler::decompose::plan_with_grid;
+        let graph = zoo::graph_by_name("quicknet").unwrap();
+        let crate::model::NodeOp::Conv(c) = graph.nodes[0].op.clone() else { panic!() };
+        let (h, w) = (graph.in_h, graph.in_w);
+        // a finer-than-heuristic grid compiles fine
+        let fine = plan_with_grid(&c, h, w, 2, 2, c.cin);
+        let plans = vec![Some(fine), None];
+        let compiled = compile_graph_with_plans(&graph, &plans).unwrap();
+        assert!(compiled.segments.iter().filter(|s| s.node == 0).count() >= 4);
+        // an ACC-BUF-violating single tile is rejected with a real error
+        let mut bad = graph.clone();
+        bad.in_h = 64;
+        bad.in_w = 64;
+        let huge = plan_with_grid(&c, 64, 64, 1, 1, c.cin);
+        let err = compile_graph_with_plans(&bad, &[Some(huge), None]).unwrap_err().to_string();
+        assert!(err.contains("ACC BUF"), "{err}");
     }
 
     /// facenet's early layers exceed the 1024-px ACC BUF tile, so the

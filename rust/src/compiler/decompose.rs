@@ -90,7 +90,7 @@ pub fn split_even(n: usize, parts: usize) -> Vec<(usize, usize)> {
 /// Build the tile list for a given grid over the output plane.
 /// `kp` = padded kernel span (3·⌈K/3⌉), `canvas` dims are the padded
 /// input canvas (H + 2·pad).
-fn tiles_for_grid(
+pub(crate) fn tiles_for_grid(
     (oh, ow): (usize, usize),
     (gy, gx): (usize, usize),
     stride: usize,
@@ -123,8 +123,56 @@ fn candidate_sram(tile: &Tile, c_per_group: usize) -> (usize, usize, usize) {
     (in_bytes, out_bytes, w_bytes)
 }
 
-/// Solve the decomposition for `spec` with input plane (h, w) (pre-pad).
+/// Materialize the full [`Plan`] for an explicitly chosen grid and
+/// channel grouping — the planner's candidate enumerator picks
+/// `(gy, gx, c_per_group)` analytically and builds the executable plan
+/// through this. No feasibility is enforced here; the enumerator (and
+/// `codegen`'s emission-time checks) gate that.
+pub fn plan_with_grid(
+    spec: &ConvSpec,
+    h: usize,
+    w: usize,
+    gy: usize,
+    gx: usize,
+    c_per_group: usize,
+) -> Plan {
+    let (oh, ow) = (
+        (h + 2 * spec.pad - spec.k) / spec.stride + 1,
+        (w + 2 * spec.pad - spec.k) / spec.stride + 1,
+    );
+    let kp = 3 * ceil_div(spec.k, 3);
+    let cg_in = spec.cin / spec.groups;
+    let tiles = tiles_for_grid((oh, ow), (gy, gx), spec.stride, kp);
+    let worst = tiles.iter().max_by_key(|t| t.ih * t.iw).expect("grid produces tiles").clone();
+    let (ib, ob, wb) = candidate_sram(&worst, c_per_group);
+    Plan {
+        gy,
+        gx,
+        tiles,
+        c_per_group,
+        c_groups: ceil_div(cg_in, c_per_group),
+        m_tiles: ceil_div(spec.cout / spec.groups, NUM_CU),
+        sram_bytes: ib + ob + wb,
+        in_tile_bytes: ib,
+        out_tile_bytes: ob,
+    }
+}
+
+/// Solve the decomposition for `spec` with input plane (h, w) (pre-pad)
+/// against the chip's 128 KB buffer bank.
 pub fn plan_conv(spec: &ConvSpec, h: usize, w: usize) -> Result<Plan, PlanError> {
+    plan_conv_budget(spec, h, w, SRAM_BYTES)
+}
+
+/// [`plan_conv`] against an explicit SRAM budget — the planner's
+/// what-if sweeps (Fig. 6 at 64/256 KB) go through this; the chip
+/// itself always plans at [`SRAM_BYTES`].
+pub fn plan_conv_budget(
+    spec: &ConvSpec,
+    h: usize,
+    w: usize,
+    sram_budget: usize,
+) -> Result<Plan, PlanError> {
     let (oh, ow) = (
         (h + 2 * spec.pad - spec.k) / spec.stride + 1,
         (w + 2 * spec.pad - spec.k) / spec.stride + 1,
@@ -163,7 +211,7 @@ pub fn plan_conv(spec: &ConvSpec, h: usize, w: usize) -> Result<Plan, PlanError>
             let mut c_per_group = cg_in;
             loop {
                 let (ib, ob, wb) = candidate_sram(&worst, c_per_group);
-                if ib + ob + wb <= SRAM_BYTES {
+                if ib + ob + wb <= sram_budget {
                     let plan = Plan {
                         gy,
                         gx,
@@ -320,6 +368,30 @@ mod tests {
                 shape = l.out_shape(shape);
             }
         }
+    }
+
+    #[test]
+    fn plan_with_grid_reproduces_solver_choice() {
+        let (c1, h, w) = conv_of("alexnet", "conv1");
+        let plan = plan_conv(&c1, h, w).unwrap();
+        let again = plan_with_grid(&c1, h, w, plan.gy, plan.gx, plan.c_per_group);
+        assert_eq!(again.tiles, plan.tiles);
+        assert_eq!(again.sram_bytes, plan.sram_bytes);
+        assert_eq!((again.c_groups, again.m_tiles), (plan.c_groups, plan.m_tiles));
+    }
+
+    #[test]
+    fn smaller_budget_forces_finer_plans() {
+        let (c1, h, w) = conv_of("alexnet", "conv1");
+        let full = plan_conv_budget(&c1, h, w, SRAM_BYTES).unwrap();
+        let half = plan_conv_budget(&c1, h, w, SRAM_BYTES / 2).unwrap();
+        assert!(half.sram_bytes <= SRAM_BYTES / 2);
+        assert!(
+            half.tiles.len() >= full.tiles.len(),
+            "tighter budget cannot coarsen the grid: {} < {}",
+            half.tiles.len(),
+            full.tiles.len()
+        );
     }
 
     #[test]

@@ -21,8 +21,11 @@ pub mod codegen;
 pub mod decompose;
 pub mod kernel_decomp;
 
-pub use codegen::{compile_graph, compile_net, CompiledNet, Segment};
-pub use decompose::{plan_conv, Plan, PlanError};
+pub use codegen::{
+    compile_graph, compile_graph_threads, compile_graph_with_plans, compile_net, CompiledNet,
+    Segment,
+};
+pub use decompose::{plan_conv, plan_conv_budget, plan_with_grid, Plan, PlanError};
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -197,8 +200,40 @@ impl NetRunner {
         Self::from_graph_with_config(graph, SimConfig::default())
     }
 
-    pub fn from_graph_with_config(graph: &Graph, mut cfg: SimConfig) -> anyhow::Result<Self> {
-        let compiled = compile_graph(graph)?;
+    pub fn from_graph_with_config(graph: &Graph, cfg: SimConfig) -> anyhow::Result<Self> {
+        Self::from_compiled(compile_graph(graph)?, cfg)
+    }
+
+    /// Compile with a planner policy (`planner::PlanPolicy`): the
+    /// decomposition plans come from `planner::plan_graph` instead of
+    /// the per-node heuristic. `Heuristic` is byte-identical to
+    /// [`NetRunner::from_graph`].
+    pub fn from_graph_with_policy(
+        graph: &Graph,
+        policy: crate::planner::PlanPolicy,
+    ) -> anyhow::Result<Self> {
+        Self::from_graph_with_config_policy(graph, SimConfig::default(), policy)
+    }
+
+    /// [`NetRunner::from_graph_with_policy`] with explicit sim config.
+    pub fn from_graph_with_config_policy(
+        graph: &Graph,
+        cfg: SimConfig,
+        policy: crate::planner::PlanPolicy,
+    ) -> anyhow::Result<Self> {
+        let compiled = match policy {
+            crate::planner::PlanPolicy::Heuristic => compile_graph(graph)?,
+            _ => {
+                let gp = crate::planner::plan_graph(graph, policy)?;
+                codegen::compile_graph_with_plans(graph, &gp.plans)?
+            }
+        };
+        Self::from_compiled(compiled, cfg)
+    }
+
+    /// Build a runner around an already-compiled net (e.g. one produced
+    /// by [`compile_graph_with_plans`] with planner-chosen plans).
+    pub fn from_compiled(compiled: CompiledNet, mut cfg: SimConfig) -> anyhow::Result<Self> {
         cfg.dram_px = compiled.dram_px;
         let n = compiled.segments.len();
         let mut dependents = vec![Vec::new(); n];
@@ -320,6 +355,45 @@ impl NetRunner {
         self.pool.put_accel(accel);
         self.pool.put_dram(dram);
         Ok((out, stats))
+    }
+
+    /// Run one frame sequentially, attributing [`SimStats`] deltas to
+    /// the graph node whose segment produced them — the measured side
+    /// of the planner's predicted-vs-measured tables. Executes the
+    /// segments in emission (topological) order through the shared-DRAM
+    /// path, exactly like a one-worker DAG run: output and summed stats
+    /// match [`NetRunner::run_frame`] (per-segment deltas are
+    /// translation-invariant across the `Sync` barriers); only the
+    /// `SetConv`/`Halt` command count lives outside any node.
+    pub fn run_frame_node_stats(&self, frame: &Tensor) -> anyhow::Result<(Tensor, Vec<SimStats>)> {
+        self.check_frame(frame)?;
+        let mut accel = self.pool.take_accel(&self.cfg);
+        let mut dram = self.pool.take_dram(self.compiled.dram_px);
+        self.init_dram(&mut dram, frame);
+        let mut per_node = vec![SimStats::default(); self.compiled.graph.nodes.len()];
+        {
+            let cell = SharedDram::new(&mut dram);
+            let mut wlog = StoreLog::new();
+            for seg in &self.compiled.segments {
+                accel.reset_counters();
+                if let Some(cfg) = seg.cfg {
+                    accel.set_conv_cfg(cfg);
+                }
+                for cmd in &self.compiled.program[seg.start..seg.end] {
+                    accel.exec_shared(*cmd, &cell, &mut wlog);
+                }
+                for (dst, row) in wlog.drain(..) {
+                    cell.write(dst, &row);
+                }
+                accel.sync_stats();
+                per_node[seg.node].add(&accel.stats);
+            }
+        }
+        let out = self.extract_output(&mut dram);
+        accel.reset_counters();
+        self.pool.put_accel(accel);
+        self.pool.put_dram(dram);
+        Ok((out, per_node))
     }
 
     /// Run one frame with the segment DAG executed by up to `workers`
@@ -682,7 +756,7 @@ mod tests {
 
     #[test]
     fn graph_nets_match_reference_bit_exactly() {
-        for name in ["edgenet", "widenet"] {
+        for name in ["edgenet", "widenet", "gapnet"] {
             let graph = zoo::graph_by_name(name).unwrap();
             let runner = NetRunner::from_graph(&graph).unwrap();
             let frame = Tensor::random_image(3, graph.in_h, graph.in_w, graph.in_c);
@@ -744,12 +818,38 @@ mod tests {
         }
     }
 
+    /// Per-node stat attribution must reconstruct the frame run
+    /// exactly: same output, and counters summing to the aggregate
+    /// (minus the SetConv/Halt commands that live outside segments).
+    #[test]
+    fn node_stats_sum_to_frame_stats() {
+        for name in ["quicknet", "edgenet", "widenet", "gapnet"] {
+            let graph = zoo::graph_by_name(name).unwrap();
+            let runner = NetRunner::from_graph(&graph).unwrap();
+            let frame = Tensor::random_image(5, graph.in_h, graph.in_w, graph.in_c);
+            let (seq, stats) = runner.run_frame(&frame).unwrap();
+            let (out, per_node) = runner.run_frame_node_stats(&frame).unwrap();
+            assert_eq!(out, seq, "{name} output");
+            assert_eq!(per_node.len(), graph.nodes.len());
+            let mut sum = SimStats::default();
+            for s in &per_node {
+                sum.add(s);
+            }
+            assert_eq!(sum.dram_read_bytes, stats.dram_read_bytes, "{name} reads");
+            assert_eq!(sum.dram_write_bytes, stats.dram_write_bytes, "{name} writes");
+            assert_eq!(sum.macs, stats.macs, "{name} macs");
+            assert_eq!(sum.cycles, stats.cycles, "{name} cycles");
+            assert_eq!(sum.sram_reads, stats.sram_reads, "{name} sram reads");
+            assert_eq!(sum.sram_writes, stats.sram_writes, "{name} sram writes");
+        }
+    }
+
     /// The tentpole invariant: DAG-parallel execution is bit-identical
     /// to the sequential run — output AND aggregated SimStats — for
     /// linear and graph topologies alike.
     #[test]
     fn parallel_dag_matches_sequential_bit_exactly() {
-        for name in ["quicknet", "facenet", "edgenet", "widenet"] {
+        for name in ["quicknet", "facenet", "edgenet", "widenet", "gapnet"] {
             let graph = zoo::graph_by_name(name).unwrap();
             let runner = NetRunner::from_graph(&graph).unwrap();
             let frame = Tensor::random_image(9, graph.in_h, graph.in_w, graph.in_c);

@@ -38,6 +38,7 @@ use super::request::{FrameError, FrameOutput, FrameRequest, FrameResult, SubmitE
 use crate::compiler::{AccelPool, NetRunner};
 use crate::energy::OperatingPoint;
 use crate::model::{Graph, NetSpec, Tensor};
+use crate::planner::PlanPolicy;
 
 /// What to do when admitting a frame would exceed the DRAM budget.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -98,6 +99,12 @@ pub struct CoordinatorConfig {
     pub op: OperatingPoint,
     /// DRAM-image budget for in-flight frames.
     pub admission: AdmissionPolicy,
+    /// Decomposition planner every registered net compiles with
+    /// (`planner::PlanPolicy`): `Heuristic` is the historical solver,
+    /// `MinTraffic`/`DagAware` run the optimization planner. Frame
+    /// outputs are bit-identical under every policy; only DRAM traffic
+    /// and tile-level parallelism change.
+    pub plan_policy: PlanPolicy,
 }
 
 impl Default for CoordinatorConfig {
@@ -109,6 +116,7 @@ impl Default for CoordinatorConfig {
             pipeline_depth: 1,
             op: crate::energy::dvfs::PEAK,
             admission: AdmissionPolicy::default(),
+            plan_policy: PlanPolicy::Heuristic,
         }
     }
 }
@@ -395,7 +403,7 @@ impl Coordinator {
                 by_name.insert(name.clone(), registry.len()).is_none(),
                 "duplicate net name '{name}' in registry"
             );
-            let mut runner = NetRunner::from_graph(graph)
+            let mut runner = NetRunner::from_graph_with_policy(graph, cfg.plan_policy)
                 .map_err(|e| anyhow::anyhow!("compiling net '{name}': {e:#}"))?;
             runner.share_pool(Arc::clone(&pool));
             registry.push((name.clone(), Arc::new(runner)));
@@ -733,6 +741,26 @@ mod tests {
     fn graph_net_serving_is_bit_exact() {
         let graph = zoo::edgenet();
         let cfg = CoordinatorConfig { tile_workers: 2, ..Default::default() };
+        let coord = Coordinator::start_graph(&graph, cfg).unwrap();
+        for s in 0..2 {
+            let f = Tensor::random_image(s, graph.in_h, graph.in_w, graph.in_c);
+            let out = coord.submit(f.clone()).unwrap().recv().unwrap().ok().unwrap();
+            assert_eq!(out.output, run_graph_ref(&graph, &f), "frame {s}");
+        }
+        coord.stop();
+    }
+
+    /// Serving through the optimization planner must stay bit-exact
+    /// with the oracle — the planner only changes decomposition, never
+    /// results.
+    #[test]
+    fn optimized_plan_serving_is_bit_exact() {
+        let graph = zoo::edgenet();
+        let cfg = CoordinatorConfig {
+            tile_workers: 2,
+            plan_policy: PlanPolicy::DagAware,
+            ..Default::default()
+        };
         let coord = Coordinator::start_graph(&graph, cfg).unwrap();
         for s in 0..2 {
             let f = Tensor::random_image(s, graph.in_h, graph.in_w, graph.in_c);

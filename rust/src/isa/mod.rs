@@ -171,6 +171,11 @@ pub struct AddPass {
 }
 
 /// Pooling pass over an SRAM region (int16 plane, C-interleaved).
+///
+/// `k` and `stride` are 6-bit fields (≤ 63) packed with the `avg` mode
+/// bit into one word: max pooling drives the §4.3 comparator (window 2
+/// or 3), average pooling swaps it for the accumulate-and-divide path,
+/// whose serial adder also covers global-average-pool windows.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PoolPass {
     pub src_px: u32,
@@ -180,6 +185,7 @@ pub struct PoolPass {
     pub c: u16,
     pub k: u8,
     pub stride: u8,
+    pub avg: bool,
 }
 
 /// Decoded command.
@@ -269,7 +275,9 @@ impl Cmd {
                 out.push(Opcode::Pool as u16);
                 push32(out, p.src_px);
                 push32(out, p.dst_px);
-                out.extend_from_slice(&[p.ih, p.iw, p.c, (p.k as u16) | ((p.stride as u16) << 4)]);
+                let packed =
+                    (p.k as u16 & 0x3F) | ((p.stride as u16 & 0x3F) << 6) | ((p.avg as u16) << 12);
+                out.extend_from_slice(&[p.ih, p.iw, p.c, packed]);
             }
             Cmd::Add(p) => {
                 out.push(Opcode::Add as u16);
@@ -358,8 +366,9 @@ impl Cmd {
                     ih,
                     iw,
                     c,
-                    k: (packed & 0xF) as u8,
-                    stride: ((packed >> 4) & 0xF) as u8,
+                    k: (packed & 0x3F) as u8,
+                    stride: ((packed >> 6) & 0x3F) as u8,
+                    avg: (packed >> 12) & 1 == 1,
                 })
             }
             Opcode::Add => {
@@ -454,15 +463,19 @@ mod tests {
                 dx: g.usize_in(0, 9) as u8,
                 flags: g.usize_in(0, 3) as u8,
             }),
-            5 => Cmd::Pool(PoolPass {
-                src_px: g.int(0, 65535) as u32,
-                dst_px: g.int(0, 65535) as u32,
-                ih: g.usize_in(2, 256) as u16,
-                iw: g.usize_in(2, 256) as u16,
-                c: g.usize_in(1, 64) as u16,
-                k: if g.bool() { 2 } else { 3 },
-                stride: g.usize_in(1, 3) as u8,
-            }),
+            5 => {
+                let avg = g.bool();
+                Cmd::Pool(PoolPass {
+                    src_px: g.int(0, 65535) as u32,
+                    dst_px: g.int(0, 65535) as u32,
+                    ih: g.usize_in(2, 256) as u16,
+                    iw: g.usize_in(2, 256) as u16,
+                    c: g.usize_in(1, 64) as u16,
+                    k: if avg { g.usize_in(2, 63) as u8 } else { *g.choose(&[2u8, 3]) },
+                    stride: g.usize_in(1, 63) as u8,
+                    avg,
+                })
+            }
             6 => Cmd::Store(DmaDesc {
                 dram_px: g.int(0, i64::from(u32::MAX)) as u32,
                 sram_px: g.int(0, 65535) as u32,

@@ -21,6 +21,11 @@
 //!   dependency-annotated segment DAG that lets `NetRunner` execute
 //!   decomposed tiles concurrently — across nodes and branches, with no
 //!   layer barriers — with bit-identical output and stats.
+//! - [`planner`] — the optimization layer above the emitter: candidate
+//!   enumeration over all feasible decompositions, an analytic DRAM/
+//!   SRAM/energy cost model validated against measured `SimStats`, and
+//!   a DAG-aware search that co-optimizes split axes across
+//!   producer→consumer edges (`PlanPolicy`).
 //! - [`model`] — network descriptions (linear `NetSpec` stacks and the
 //!   graph IR with residual Add / channel Concat) + the deterministic
 //!   synthetic zoo shared with the Python compile path.
@@ -40,6 +45,7 @@ pub mod energy;
 pub mod fixed;
 pub mod isa;
 pub mod model;
+pub mod planner;
 pub mod runtime;
 pub mod sim;
 pub mod util;

@@ -12,6 +12,7 @@ use kn_stream::compiler::NetRunner;
 use kn_stream::coordinator::{AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig};
 use kn_stream::energy::{AreaModel, EnergyModel, OperatingPoint};
 use kn_stream::model::{zoo, Tensor};
+use kn_stream::planner::{plan_graph, PlanPolicy};
 use kn_stream::runtime::Golden;
 use kn_stream::util::bench::Table;
 use kn_stream::util::cli::Cli;
@@ -67,14 +68,16 @@ fn graph_arg(name: &str) -> anyhow::Result<kn_stream::model::Graph> {
 
 fn cmd_run(args: Vec<String>) -> anyhow::Result<()> {
     let mut cli = Cli::new("kn-stream run", "run a net on the simulated accelerator");
-    cli.opt("net", "facenet", "zoo net (quicknet|facenet|alexnet|vgg16|edgenet|widenet)")
+    cli.opt("net", "facenet", "zoo net (quicknet|facenet|alexnet|vgg16|edgenet|widenet|gapnet)")
         .opt("frames", "1", "number of frames")
         .opt("freq", "500", "clock in MHz (20..500, sets VDD by DVFS law)")
-        .opt("seed", "1", "input frame seed");
+        .opt("seed", "1", "input frame seed")
+        .opt("plan-policy", "heuristic", "decomposition planner (heuristic|min-traffic|dag-aware)");
     let m = cli.parse_from(args)?;
     let net = graph_arg(m.get("net"))?;
     let op = OperatingPoint::for_freq(m.get_f64("freq"));
-    let runner = NetRunner::from_graph(&net)?;
+    let policy = PlanPolicy::parse(m.get("plan-policy"))?;
+    let runner = NetRunner::from_graph_with_policy(&net, policy)?;
     let energy = EnergyModel::default();
     let ov = &runner.compiled.output;
     println!("net={} in={:?} out={:?}  @ {:.0} MHz / {:.2} V", net.name, net.in_shape(),
@@ -133,6 +136,7 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         .opt("pipeline-depth", "1", "same-net frames per worker window (cross-frame pipelining)")
         .opt("admit-mb", "0", "in-flight DRAM-image budget in MB (0 = unbounded)")
         .opt("admit-mode", "block", "over-budget behavior: block|reject")
+        .opt("plan-policy", "heuristic", "decomposition planner (heuristic|min-traffic|dag-aware)")
         .opt("freq", "500", "clock in MHz");
     let m = cli.parse_from(args)?;
     let list = if m.get("nets").is_empty() { m.get("net") } else { m.get("nets") };
@@ -155,6 +159,7 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         pipeline_depth: m.get_usize("pipeline-depth"),
         op,
         admission,
+        plan_policy: PlanPolicy::parse(m.get("plan-policy"))?,
     };
 
     let tagged = zoo::mix_stream(&nets, &weights, m.get_usize("frames"));
@@ -218,10 +223,20 @@ fn cmd_verify(args: Vec<String>) -> anyhow::Result<()> {
 
 fn cmd_plan(args: Vec<String>) -> anyhow::Result<()> {
     let mut cli = Cli::new("kn-stream plan", "print decomposition plans");
-    cli.opt("net", "alexnet", "zoo net (incl. graph nets edgenet|widenet)");
+    cli.opt("net", "alexnet", "zoo net (incl. graph nets edgenet|widenet|gapnet)")
+        .opt("policy", "dag-aware", "planner for --optimize (heuristic|min-traffic|dag-aware)")
+        .opt("seed", "1", "frame seed for the --optimize measurement run");
     cli.flag("dump-graph", "print the compiled segment DAG as Graphviz DOT and exit");
+    cli.flag(
+        "optimize",
+        "run the decomposition planner: per-node predicted vs measured DRAM bytes + policy diff",
+    );
     let m = cli.parse_from(args)?;
     let net = graph_arg(m.get("net"))?;
+    if m.get_flag("optimize") {
+        let policy = PlanPolicy::parse(m.get("policy"))?;
+        return cmd_plan_optimize(&net, policy, m.get_u64("seed") as u32);
+    }
     let runner = NetRunner::from_graph(&net)?;
     if m.get_flag("dump-graph") {
         print!("{}", runner.compiled.segments_dot());
@@ -244,6 +259,93 @@ fn cmd_plan(args: Vec<String>) -> anyhow::Result<()> {
             p.sram_bytes as f64 / 1000.0,
         );
     }
+    Ok(())
+}
+
+/// `plan --optimize`: per-node plan table with predicted vs measured
+/// DRAM bytes under the chosen policy, then a whole-graph policy diff.
+fn cmd_plan_optimize(
+    net: &kn_stream::model::Graph,
+    policy: PlanPolicy,
+    seed: u32,
+) -> anyhow::Result<()> {
+    let gp = plan_graph(net, policy)?;
+    // reuse the computed plans — don't run the planner again inside
+    // NetRunner::from_graph_with_policy
+    let compiled = kn_stream::compiler::compile_graph_with_plans(net, &gp.plans)?;
+    let runner = NetRunner::from_compiled(compiled, kn_stream::sim::SimConfig::default())?;
+    let frame = Tensor::random_image(seed, net.in_h, net.in_w, net.in_c);
+    let (_, measured) = runner.run_frame_node_stats(&frame)?;
+
+    let kb = |b: u64| format!("{:.1}", b as f64 / 1e3);
+    let mut t = Table::new(
+        &format!("{} decomposition plan — policy {}", net.name, policy.name()),
+        &["node", "grid", "c-grps", "tiles", "sram KB", "prd rd", "mea rd", "prd wr", "mea wr"],
+    );
+    for (i, node) in net.nodes.iter().enumerate() {
+        let pred = &gp.node_traffic[i];
+        let (grid, cgrps, tiles, sram) = match gp.reports.iter().find(|r| r.node == i) {
+            Some(r) => (
+                format!("{}x{}", r.grid.0, r.grid.1),
+                format!("{}", r.c_groups),
+                format!("{}", r.ntiles),
+                format!("{:.1}", r.sram_bytes as f64 / 1e3),
+            ),
+            None => ("-".into(), "-".into(), "-".into(), "-".into()),
+        };
+        t.row(&[
+            node.name().to_string(),
+            grid,
+            cgrps,
+            tiles,
+            sram,
+            kb(pred.read_bytes),
+            kb(measured[i].dram_read_bytes),
+            kb(pred.write_bytes),
+            kb(measured[i].dram_write_bytes),
+        ]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "policy comparison (predicted)",
+        &["policy", "DRAM rd MB", "DRAM wr MB", "dep edges", "crit.path Mcy", "est mJ/frame"],
+    );
+    for p in PlanPolicy::ALL {
+        // the chosen policy's plan is already computed; plan the others
+        let fresh;
+        let g = if p == policy {
+            &gp
+        } else {
+            fresh = plan_graph(net, p)?;
+            &fresh
+        };
+        let tt = g.total_traffic();
+        t.row(&[
+            p.name().to_string(),
+            format!("{:.3}", tt.read_bytes as f64 / 1e6),
+            format!("{:.3}", tt.write_bytes as f64 / 1e6),
+            format!("{}", g.dep_edges),
+            format!("{:.3}", g.est_critical_path_cycles as f64 / 1e6),
+            format!("{:.3}", g.energy_j(kn_stream::energy::dvfs::PEAK) * 1e3),
+        ]);
+    }
+    t.print();
+    let mism = net
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| {
+            gp.node_traffic[*i].read_bytes != measured[*i].dram_read_bytes
+                || gp.node_traffic[*i].write_bytes != measured[*i].dram_write_bytes
+        })
+        .count();
+    anyhow::ensure!(
+        mism == 0,
+        "cost model drifted from the emitter on {mism} node(s) — see table above"
+    );
+    println!("cost model check: predicted DRAM bytes == measured for all {} nodes",
+             net.nodes.len());
     Ok(())
 }
 

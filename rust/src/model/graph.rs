@@ -282,13 +282,26 @@ pub fn node_out_shape(
         }
         NodeOp::Pool(p) => {
             let (h, w, ch) = ins[0];
+            match p.kind {
+                crate::model::PoolKind::Max => anyhow::ensure!(
+                    p.k == 2 || p.k == 3,
+                    "pool {}: max window {} unsupported (the comparator does 2 or 3)",
+                    p.name,
+                    p.k
+                ),
+                crate::model::PoolKind::Avg => anyhow::ensure!(
+                    (2..=63).contains(&p.k),
+                    "pool {}: avg window {} outside 2..=63 (ISA 6-bit field)",
+                    p.name,
+                    p.k
+                ),
+            }
             anyhow::ensure!(
-                p.k == 2 || p.k == 3,
-                "pool {}: window {} unsupported (the pooling module does 2 or 3)",
+                (1..=63).contains(&p.stride),
+                "pool {}: stride {} outside 1..=63 (ISA 6-bit field)",
                 p.name,
-                p.k
+                p.stride
             );
-            anyhow::ensure!(p.stride >= 1, "pool {}: stride must be >= 1", p.name);
             anyhow::ensure!(
                 h >= p.k && w >= p.k,
                 "pool {}: window {} exceeds input {}x{}",
@@ -401,13 +414,27 @@ mod tests {
     #[test]
     fn pool_window_underflow_is_a_real_error() {
         let mut g = Graph::new("bad", 2, 2, 1);
-        g.add_node(
-            NodeOp::Pool(PoolSpec { name: "p".into(), k: 3, stride: 2 }),
-            &["input"],
-        )
-        .unwrap();
+        g.add_node(NodeOp::Pool(PoolSpec::max("p", 3, 2)), &["input"]).unwrap();
         let err = g.validate().unwrap_err().to_string();
         assert!(err.contains("window 3 exceeds input 2x2"), "{err}");
+    }
+
+    #[test]
+    fn avg_pool_windows_validate() {
+        // global average pool over the whole 8x8 plane is legal...
+        let mut g = Graph::new("gap", 8, 8, 4);
+        g.add_node(NodeOp::Pool(PoolSpec::global_avg("gap", 8)), &["input"]).unwrap();
+        assert_eq!(g.out_shape().unwrap(), (1, 1, 4));
+        // ...a max pool of the same window is not (comparator does 2/3)
+        let mut bad = Graph::new("bad", 8, 8, 4);
+        bad.add_node(NodeOp::Pool(PoolSpec::max("p", 8, 8)), &["input"]).unwrap();
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("max window 8"), "{err}");
+        // and an avg window beyond the 6-bit ISA field is rejected
+        let mut wide = Graph::new("wide", 80, 80, 1);
+        wide.add_node(NodeOp::Pool(PoolSpec::avg("p", 64, 64)), &["input"]).unwrap();
+        let err = wide.validate().unwrap_err().to_string();
+        assert!(err.contains("outside 2..=63"), "{err}");
     }
 
     #[test]

@@ -23,12 +23,45 @@ pub struct ConvSpec {
     pub groups: usize,
 }
 
-/// Pooling layer spec (max pooling, window 2 or 3).
+/// Which reduction the pooling module performs over each window.
+///
+/// * `Max` — the paper's §4.3 comparator path (window 2 or 3).
+/// * `Avg` — accumulate-and-divide: the comparator is swapped for an
+///   adder with the same feedback register, and the emit stage divides
+///   by the window area with round-half-up (the same rounding
+///   convention as the conv requantizer). Because the adder serializes
+///   arbitrary window sizes, `Avg` also covers the global-average-pool
+///   head (`k == plane size`, one output pixel per channel).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+}
+
+/// Pooling layer spec (max window 2/3, avg window up to the ISA's
+/// 6-bit field — including a whole-plane global average pool).
 #[derive(Clone, Debug, PartialEq)]
 pub struct PoolSpec {
     pub name: String,
     pub k: usize,
     pub stride: usize,
+    pub kind: PoolKind,
+}
+
+impl PoolSpec {
+    pub fn max(name: &str, k: usize, stride: usize) -> Self {
+        Self { name: name.into(), k, stride, kind: PoolKind::Max }
+    }
+
+    pub fn avg(name: &str, k: usize, stride: usize) -> Self {
+        Self { name: name.into(), k, stride, kind: PoolKind::Avg }
+    }
+
+    /// Global average pool over an `n × n` plane: one output pixel per
+    /// channel (MobileNet-style classification heads).
+    pub fn global_avg(name: &str, n: usize) -> Self {
+        Self::avg(name, n, n)
+    }
 }
 
 #[derive(Clone, Debug, PartialEq)]
@@ -211,9 +244,14 @@ mod tests {
 
     #[test]
     fn pool_shapes() {
-        let p = LayerSpec::Pool(PoolSpec { name: "p".into(), k: 3, stride: 2 });
+        let p = LayerSpec::Pool(PoolSpec::max("p", 3, 2));
         assert_eq!(p.out_shape((55, 55, 96)), (27, 27, 96));
         assert_eq!(p.out_shape((13, 13, 256)), (6, 6, 256));
+        // avg pooling has the same shape law, incl. the global head
+        let a = LayerSpec::Pool(PoolSpec::avg("a", 2, 2));
+        assert_eq!(a.out_shape((8, 8, 16)), (4, 4, 16));
+        let g = LayerSpec::Pool(PoolSpec::global_avg("g", 7));
+        assert_eq!(g.out_shape((7, 7, 512)), (1, 1, 512));
     }
 
     #[test]
@@ -240,7 +278,7 @@ mod tests {
         let err = cin_mismatch.validate().unwrap_err().to_string();
         assert!(err.contains("cin 4"), "{err}");
         let pool_underflow = NetSpec {
-            layers: vec![LayerSpec::Pool(PoolSpec { name: "p".into(), k: 3, stride: 2 })],
+            layers: vec![LayerSpec::Pool(PoolSpec::max("p", 3, 2))],
             in_h: 2,
             in_w: 2,
             ..ok

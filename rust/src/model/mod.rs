@@ -14,5 +14,5 @@ pub mod tensor;
 pub mod zoo;
 
 pub use graph::{AddSpec, ConcatSpec, Graph, Node, NodeOp, NodeRef};
-pub use layer::{ConvSpec, LayerSpec, NetSpec, PoolSpec};
+pub use layer::{ConvSpec, LayerSpec, NetSpec, PoolKind, PoolSpec};
 pub use tensor::Tensor;

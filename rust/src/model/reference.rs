@@ -53,6 +53,41 @@ pub fn conv_ref_with(x: &Tensor, spec: &ConvSpec, w: &[i16], b: &[i32]) -> Tenso
     out
 }
 
+/// Average pooling oracle: int32 window sum, then round-half-up
+/// division by the window area — the same rounding convention as the
+/// conv requantizer (`fixed::requantize`), so `k = 2` (÷4) is exactly a
+/// shift and odd areas round to nearest. Covers the global-average-pool
+/// head (`k` = plane size, one output pixel per channel).
+pub fn avgpool_ref(x: &Tensor, spec: &PoolSpec) -> Tensor {
+    let ho = (x.h - spec.k) / spec.stride + 1;
+    let wo = (x.w - spec.k) / spec.stride + 1;
+    let area = (spec.k * spec.k) as i32;
+    let mut out = Tensor::zeros(ho, wo, x.c);
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for ch in 0..x.c {
+                let mut sum = 0i32;
+                for i in 0..spec.k {
+                    for j in 0..spec.k {
+                        sum += x.at(oy * spec.stride + i, ox * spec.stride + j, ch) as i32;
+                    }
+                }
+                // round-half-up mean; always representable in i16
+                out.set(oy, ox, ch, (sum + area / 2).div_euclid(area) as i16);
+            }
+        }
+    }
+    out
+}
+
+/// Pooling oracle dispatching on the window kind.
+pub fn pool_kind_ref(x: &Tensor, spec: &PoolSpec) -> Tensor {
+    match spec.kind {
+        crate::model::PoolKind::Max => pool_ref(x, spec),
+        crate::model::PoolKind::Avg => avgpool_ref(x, spec),
+    }
+}
+
 /// Max pooling oracle.
 pub fn pool_ref(x: &Tensor, spec: &PoolSpec) -> Tensor {
     let ho = (x.h - spec.k) / spec.stride + 1;
@@ -90,7 +125,7 @@ pub fn add_ref(a: &Tensor, b: &Tensor, spec: &AddSpec) -> Tensor {
 pub fn run_layer_ref(x: &Tensor, layer: &LayerSpec) -> Tensor {
     match layer {
         LayerSpec::Conv(c) => conv_ref(&x.pad_hw(c.pad), c),
-        LayerSpec::Pool(p) => pool_ref(x, p),
+        LayerSpec::Pool(p) => pool_kind_ref(x, p),
     }
 }
 
@@ -120,7 +155,7 @@ pub fn run_graph_ref(graph: &Graph, input: &Tensor) -> Tensor {
         }
         let out = match &node.op {
             NodeOp::Conv(c) => conv_ref(&ins[0].pad_hw(c.pad), c),
-            NodeOp::Pool(p) => pool_ref(ins[0], p),
+            NodeOp::Pool(p) => pool_kind_ref(ins[0], p),
             NodeOp::Add(a) => add_ref(ins[0], ins[1], a),
             NodeOp::Concat(_) => Tensor::concat_c(&ins),
         };
@@ -167,8 +202,29 @@ mod tests {
     #[test]
     fn pool_known_values() {
         let x = Tensor::from_vec(4, 4, 1, (0..16).map(|v| v as i16).collect());
-        let out = pool_ref(&x, &PoolSpec { name: "p".into(), k: 2, stride: 2 });
+        let out = pool_ref(&x, &PoolSpec::max("p", 2, 2));
         assert_eq!(out.data, vec![5, 7, 13, 15]);
+    }
+
+    #[test]
+    fn avgpool_known_values_round_half_up() {
+        let x = Tensor::from_vec(4, 4, 1, (0..16).map(|v| v as i16).collect());
+        // windows sum to 10, 18, 42, 50; (sum + 2) / 4
+        let out = avgpool_ref(&x, &PoolSpec::avg("a", 2, 2));
+        assert_eq!(out.data, vec![3, 5, 11, 13]);
+        // negative values: (-10 + 2).div_euclid(4) = -2 (round half up)
+        let n = Tensor::from_vec(2, 2, 1, vec![-1, -2, -3, -4]);
+        let out = avgpool_ref(&n, &PoolSpec::avg("n", 2, 1));
+        assert_eq!(out.data, vec![-2]);
+    }
+
+    #[test]
+    fn global_avg_pool_is_plane_mean() {
+        let x = Tensor::from_vec(3, 3, 2, (0..18).map(|v| v as i16).collect());
+        let out = avgpool_ref(&x, &PoolSpec::global_avg("g", 3));
+        assert_eq!(out.shape(), (1, 1, 2));
+        // channel 0 holds evens 0..=16 (mean 8), channel 1 odds (mean 9)
+        assert_eq!(out.data, vec![8, 9]);
     }
 
     #[test]

@@ -64,7 +64,7 @@ fn gconv(
 }
 
 fn pool(name: &str, k: usize, stride: usize) -> LayerSpec {
-    LayerSpec::Pool(PoolSpec { name: name.into(), k, stride })
+    LayerSpec::Pool(PoolSpec::max(name, k, stride))
 }
 
 /// Tiny net for the quickstart example: one conv + one pool.
@@ -200,7 +200,7 @@ pub fn edgenet() -> Graph {
         NodeOp::Add(AddSpec { name: "add1".into(), shift: 1, relu: true }),
         &["b1b", "stem"],
     );
-    n(&mut g, NodeOp::Pool(PoolSpec { name: "pool1".into(), k: 2, stride: 2 }), &["add1"]);
+    n(&mut g, NodeOp::Pool(PoolSpec::max("pool1", 2, 2)), &["add1"]);
     n(&mut g, gnode("b2a", 3, 1, 16, 16, 10, true, base + 6), &["pool1"]);
     n(&mut g, gnode("b2b", 3, 1, 16, 16, 10, false, base + 8), &["b2a"]);
     n(
@@ -224,9 +224,28 @@ pub fn widenet() -> Graph {
     n(&mut g, gnode("wa", 3, 1, 4, 16, 9, true, base), &["input"]);
     n(&mut g, gnode("wb", 5, 2, 4, 16, 11, true, base + 2), &["input"]);
     n(&mut g, NodeOp::Concat(ConcatSpec { name: "cat".into() }), &["wa", "wb"]);
-    n(&mut g, NodeOp::Pool(PoolSpec { name: "pool1".into(), k: 2, stride: 2 }), &["cat"]);
+    n(&mut g, NodeOp::Pool(PoolSpec::max("pool1", 2, 2)), &["cat"]);
     n(&mut g, gnode("mid", 3, 1, 32, 32, 11, true, base + 4), &["pool1"]);
     n(&mut g, gnode("head", 3, 0, 32, 16, 11, false, base + 6), &["mid"]);
+    g
+}
+
+/// MobileNet-style head exerciser: conv trunk downsampled by *average*
+/// pooling, finished by a global-average-pool head and a 1×1 scorer —
+/// the avg/GAP coverage the decomposition planner benches need.
+pub fn gapnet() -> Graph {
+    let base = 17000;
+    let mut g = Graph::new("gapnet", 32, 32, 4);
+    let n = |g: &mut Graph, op, ins: &[&str]| {
+        g.add_node(op, ins).expect("gapnet is well-formed");
+    };
+    n(&mut g, gnode("stem", 3, 1, 4, 16, 9, true, base), &["input"]);
+    n(&mut g, NodeOp::Pool(PoolSpec::avg("apool1", 2, 2)), &["stem"]);
+    n(&mut g, gnode("mid", 3, 1, 16, 32, 10, true, base + 2), &["apool1"]);
+    n(&mut g, NodeOp::Pool(PoolSpec::avg("apool2", 2, 2)), &["mid"]);
+    n(&mut g, gnode("deep", 3, 1, 32, 32, 11, true, base + 4), &["apool2"]);
+    n(&mut g, NodeOp::Pool(PoolSpec::global_avg("gap", 8)), &["deep"]);
+    n(&mut g, gnode("score", 1, 0, 32, 16, 11, false, base + 6), &["gap"]);
     g
 }
 
@@ -247,6 +266,7 @@ pub fn graph_by_name(name: &str) -> Option<Graph> {
     match name {
         "edgenet" => Some(edgenet()),
         "widenet" => Some(widenet()),
+        "gapnet" => Some(gapnet()),
         _ => by_name(name).map(|n| Graph::from_net(&n)),
     }
 }
@@ -300,7 +320,7 @@ pub const ALL: &[&str] = &["quicknet", "facenet", "alexnet", "vgg16"];
 
 /// Every zoo net, including the graph-native topologies.
 pub const GRAPH_ALL: &[&str] =
-    &["quicknet", "facenet", "alexnet", "vgg16", "edgenet", "widenet"];
+    &["quicknet", "facenet", "alexnet", "vgg16", "edgenet", "widenet", "gapnet"];
 
 #[cfg(test)]
 mod tests {
@@ -384,5 +404,6 @@ mod tests {
         assert!(graph_by_name("nope").is_none());
         assert_eq!(edgenet().out_shape().unwrap(), (14, 14, 16));
         assert_eq!(widenet().out_shape().unwrap(), (14, 14, 16));
+        assert_eq!(gapnet().out_shape().unwrap(), (1, 1, 16));
     }
 }

@@ -1,0 +1,90 @@
+//! Decomposition planner — the optimization layer between the graph IR
+//! and `compiler::codegen`.
+//!
+//! The paper (§5, Fig. 6) chooses image/feature/channel decomposition
+//! to fit the 128 KB buffer bank while minimizing off-chip traffic;
+//! `compiler::decompose::plan_conv` hard-codes one point of that trade
+//! ("fewest tiles, then fewest channel groups"). This module models
+//! the choice instead, in the style related accelerators justify their
+//! dataflows (Ahmadi et al. 2020's serial-accumulation traffic model,
+//! Origami's energy-per-access analysis):
+//!
+//! * [`enumerate`] — all feasible `(gy, gx, c_per_group)` plans per
+//!   conv node, not one heuristic winner;
+//! * [`cost`] — an analytic model predicting per-plan DRAM bytes
+//!   (input reload with halo, weight re-streaming, bias, output
+//!   writeback), SRAM footprint, MACs and cycle estimates — pinned to
+//!   measured `SimStats` counters by property test;
+//! * [`search`] — graph-level selection: the per-node traffic optimum
+//!   ([`PlanPolicy::MinTraffic`]) and a DAG-aware coordinate descent
+//!   ([`PlanPolicy::DagAware`]) that co-optimizes split axes across
+//!   producer→consumer edges, scored by predicted traffic plus a
+//!   cross-tile dependency-edge count (an exact mirror of codegen's
+//!   region-intersection pass) and a critical-path/parallelism term.
+//!
+//! All policies produce plans the unchanged emitter executes; frame
+//! outputs are bit-identical across policies (the decomposition only
+//! reorders wrapping-int32 accumulation and disjoint DMA traffic),
+//! which `tests/integration_planner.rs` enforces against the scalar
+//! oracle.
+
+pub mod cost;
+pub mod enumerate;
+pub mod search;
+
+pub use cost::{ConvCandidate, NodeTraffic};
+pub use enumerate::enumerate_conv;
+pub use search::{plan_graph, plan_graph_budget, GraphPlan, NodePlanReport};
+
+/// Which decomposition planner the compiler runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlanPolicy {
+    /// The historical per-node heuristic (`plan_conv`): fewest image
+    /// tiles, then fewest channel groups. The compile default.
+    #[default]
+    Heuristic,
+    /// Per-node DRAM-traffic optimum from the candidate enumeration.
+    MinTraffic,
+    /// Graph-level search: traffic + cross-edge dependency count +
+    /// critical-path term, co-optimized across producer→consumer pairs.
+    DagAware,
+}
+
+impl PlanPolicy {
+    pub const ALL: [PlanPolicy; 3] =
+        [PlanPolicy::Heuristic, PlanPolicy::MinTraffic, PlanPolicy::DagAware];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlanPolicy::Heuristic => "heuristic",
+            PlanPolicy::MinTraffic => "min-traffic",
+            PlanPolicy::DagAware => "dag-aware",
+        }
+    }
+
+    /// Parse a CLI spelling (`--plan-policy heuristic|min-traffic|dag-aware`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "heuristic" => Ok(PlanPolicy::Heuristic),
+            "min-traffic" => Ok(PlanPolicy::MinTraffic),
+            "dag-aware" => Ok(PlanPolicy::DagAware),
+            other => anyhow::bail!(
+                "unknown plan policy '{other}' (have: heuristic, min-traffic, dag-aware)"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in PlanPolicy::ALL {
+            assert_eq!(PlanPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(PlanPolicy::parse("optimal").is_err());
+        assert_eq!(PlanPolicy::default(), PlanPolicy::Heuristic);
+    }
+}

@@ -391,6 +391,7 @@ impl Accelerator {
             p.c as usize,
             p.k as usize,
             p.stride as usize,
+            p.avg,
             &mut self.pool_ops_total,
         );
         self.stats.cycles += cy;

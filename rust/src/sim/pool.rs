@@ -11,6 +11,13 @@
 //! register — exactly the §4.3 procedure. Cycle cost: `oh*ow*k` per
 //! channel plane, overlappable with the next conv's streaming (the
 //! scheduler decides; the accelerator charges it serially by default).
+//!
+//! **Average pooling** reuses the same streaming datapath with the
+//! comparator swapped for a 4-input *adder* feeding an int32 feedback
+//! accumulator; the emit stage divides by the window area with
+//! round-half-up (the conv requantizer's rounding convention). Because
+//! the adder serializes columns, windows are not limited to 2/3 — a
+//! whole-plane window implements the global-average-pool head.
 
 use super::sram::BufferBank;
 
@@ -48,16 +55,50 @@ impl MaxPoolUnit {
     }
 }
 
+/// One average-pool unit: 4-input adder + int32 feedback accumulator.
+/// The emit stage performs the round-half-up division by the window
+/// area (`k²`), mirroring the conv requantizer's rounding.
+#[derive(Default)]
+pub struct AvgPoolUnit {
+    acc: i32,
+    pub add_ops: u64,
+}
+
+impl AvgPoolUnit {
+    /// One cycle: accumulate up to three incoming row values.
+    #[inline]
+    pub fn step(&mut self, inputs: &[i16]) -> i32 {
+        debug_assert!(inputs.len() <= 3, "adder has 4 inputs incl. feedback");
+        for &v in inputs {
+            self.acc += v as i32;
+        }
+        self.add_ops += inputs.len() as u64;
+        self.acc
+    }
+
+    /// Window boundary: divide by the window area (round half up),
+    /// emit, and clear the accumulator.
+    #[inline]
+    pub fn emit(&mut self, area: i32) -> i16 {
+        let mean = (self.acc + area / 2).div_euclid(area) as i16;
+        self.acc = 0;
+        self.add_ops += 1; // the rounding add of the divide stage
+        mean
+    }
+}
+
 /// Pooling pass over a planar (C, H, W) int16 region in the buffer bank.
 /// Returns cycles consumed.
 ///
-/// Functional fast path: row-sliced max over the raw plane — max is
-/// associative and commutative, so the result is bit-identical to the
-/// streaming comparator procedure ([`MaxPoolUnit`], kept validated by
-/// the unit tests below). Counters are charged analytically, matching
-/// the comparator exactly: `k` columns per window → `oh·ow·k` cycles
-/// per channel plane, and the 4-input comparator performs
-/// `k + (k−1)·(k+1) = k² + k − 1` compares per window.
+/// Functional fast path: row-sliced reduction over the raw plane — max
+/// is associative/commutative and the avg accumulation is exact int32,
+/// so the results are bit-identical to the streaming unit procedures
+/// ([`MaxPoolUnit`] / [`AvgPoolUnit`], kept validated by the unit tests
+/// below). Counters are charged analytically, matching the streaming
+/// units exactly: `k` columns per window → `oh·ow·k` cycles per channel
+/// plane. Per window the 4-input comparator performs
+/// `k + (k−1)·(k+1) = k² + k − 1` compares; the avg path performs `k²`
+/// adds (window accumulation) plus the divide stage's rounding add.
 #[allow(clippy::too_many_arguments)]
 pub fn pool_pass(
     sram: &mut BufferBank,
@@ -68,13 +109,20 @@ pub fn pool_pass(
     c: usize,
     k: usize,
     stride: usize,
+    avg: bool,
     compare_ops: &mut u64,
 ) -> u64 {
-    assert!(k == 2 || k == 3, "pool window must be 2 or 3 (paper §4.3)");
+    if avg {
+        assert!(k >= 2 && k <= ih.min(iw), "avg window must fit the plane");
+    } else {
+        assert!(k == 2 || k == 3, "max window must be 2 or 3 (paper §4.3)");
+    }
     assert!(stride >= 1);
     let oh = (ih - k) / stride + 1;
     let ow = (iw - k) / stride + 1;
-    let mut out_plane = vec![i16::MIN; oh * ow];
+    let area = (k * k) as i32;
+    let mut max_plane = vec![i16::MIN; oh * ow];
+    let mut sum_plane = vec![0i32; oh * ow];
     let mut cycles = 0u64;
     for ch in 0..c {
         let splane = src_px + ch * ih * iw;
@@ -82,19 +130,34 @@ pub fn pool_pass(
         {
             let data = sram.raw();
             for oy in 0..oh {
-                let orow = &mut out_plane[oy * ow..(oy + 1) * ow];
-                orow.fill(i16::MIN);
+                let mrow = &mut max_plane[oy * ow..(oy + 1) * ow];
+                let srow = &mut sum_plane[oy * ow..(oy + 1) * ow];
+                mrow.fill(i16::MIN);
+                srow.fill(0);
                 for i in 0..k {
                     let row = &data[splane + (oy * stride + i) * iw..][..iw];
-                    for (ox, o) in orow.iter_mut().enumerate() {
-                        for &v in &row[ox * stride..ox * stride + k] {
-                            *o = (*o).max(v);
+                    if avg {
+                        for (ox, o) in srow.iter_mut().enumerate() {
+                            for &v in &row[ox * stride..ox * stride + k] {
+                                *o += v as i32;
+                            }
+                        }
+                    } else {
+                        for (ox, o) in mrow.iter_mut().enumerate() {
+                            for &v in &row[ox * stride..ox * stride + k] {
+                                *o = (*o).max(v);
+                            }
                         }
                     }
                 }
             }
         }
-        for (px, &v) in out_plane.iter().enumerate() {
+        for px in 0..oh * ow {
+            let v = if avg {
+                ((sum_plane[px] + area / 2).div_euclid(area)) as i16
+            } else {
+                max_plane[px]
+            };
             sram.write_px(dplane + px, v);
         }
         // port traffic: the scratchpad serves row-parallel reads, the
@@ -104,14 +167,15 @@ pub fn pool_pass(
         sram.charge_read_px(ih * iw);
         sram.charge_write_px(oh * ow);
     }
-    *compare_ops += (c * oh * ow * (k * k + k - 1)) as u64;
+    let ops_per_window = if avg { k * k + 1 } else { k * k + k - 1 };
+    *compare_ops += (c * oh * ow * ops_per_window) as u64;
     cycles
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::reference::pool_ref;
+    use crate::model::reference::{avgpool_ref, pool_ref};
     use crate::model::{PoolSpec, Tensor};
     use crate::util::prop::check;
 
@@ -152,6 +216,20 @@ mod tests {
     }
 
     #[test]
+    fn adder_feedback_procedure() {
+        let mut u = AvgPoolUnit::default();
+        // 2x2 window as 2 columns of 2: (1 + 2 + 3 + 4 + 2) / 4 = 3 (half up)
+        u.step(&[1, 2]);
+        u.step(&[3, 4]);
+        assert_eq!(u.emit(4), 3);
+        // accumulator cleared; negative mean rounds half up too
+        u.step(&[-1, -2]);
+        u.step(&[-3, -4]);
+        assert_eq!(u.emit(4), -2);
+        assert!(u.add_ops > 0);
+    }
+
+    #[test]
     fn pool_pass_matches_oracle_property() {
         check("pool_pass == pool_ref", 40, |g| {
             let k = if g.bool() { 2 } else { 3 };
@@ -161,12 +239,12 @@ mod tests {
             let c = g.usize_in(1, 5);
             let data = g.vec_i16(ih * iw * c, -3000, 3000);
             let t = Tensor::from_vec(ih, iw, c, data);
-            let want = pool_ref(&t, &PoolSpec { name: "p".into(), k, stride });
+            let want = pool_ref(&t, &PoolSpec::max("p", k, stride));
             let mut sram = BufferBank::new();
             load_planar(&mut sram, 0, &t);
             let mut ops = 0;
             let dst = (ih * iw * c).next_multiple_of(8);
-            pool_pass(&mut sram, 0, dst, ih, iw, c, k, stride, &mut ops);
+            pool_pass(&mut sram, 0, dst, ih, iw, c, k, stride, false, &mut ops);
             let got = read_planar(&mut sram, dst, want.h, want.w, c);
             if got == want {
                 Ok(())
@@ -177,13 +255,54 @@ mod tests {
     }
 
     #[test]
+    fn avg_pool_pass_matches_oracle_property() {
+        check("pool_pass(avg) == avgpool_ref", 40, |g| {
+            let k = g.usize_in(2, 8);
+            let stride = g.usize_in(1, 3);
+            let ih = g.usize_in(k, 24);
+            let iw = g.usize_in(k, 24);
+            let c = g.usize_in(1, 5);
+            let data = g.vec_i16(ih * iw * c, -3000, 3000);
+            let t = Tensor::from_vec(ih, iw, c, data);
+            let want = avgpool_ref(&t, &PoolSpec::avg("a", k, stride));
+            let mut sram = BufferBank::new();
+            load_planar(&mut sram, 0, &t);
+            let mut ops = 0;
+            let dst = (ih * iw * c).next_multiple_of(8);
+            pool_pass(&mut sram, 0, dst, ih, iw, c, k, stride, true, &mut ops);
+            let got = read_planar(&mut sram, dst, want.h, want.w, c);
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("avg pool {k}x{k}/s{stride} {ih}x{iw}x{c} mismatch"))
+            }
+        });
+    }
+
+    #[test]
+    fn global_avg_pool_pass_is_plane_mean() {
+        let t = Tensor::from_vec(3, 3, 2, (0..18).map(|v| v as i16).collect());
+        let want = avgpool_ref(&t, &PoolSpec::global_avg("g", 3));
+        let mut sram = BufferBank::new();
+        load_planar(&mut sram, 0, &t);
+        let mut ops = 0;
+        pool_pass(&mut sram, 0, 64, 3, 3, 2, 3, 3, true, &mut ops);
+        assert_eq!(read_planar(&mut sram, 64, 1, 1, 2), want);
+    }
+
+    #[test]
     fn cycle_count_is_k_per_output() {
         let mut sram = BufferBank::new();
         let t = Tensor::random_image(5, 8, 8, 2);
         load_planar(&mut sram, 0, &t);
         let mut ops = 0;
-        let cy = pool_pass(&mut sram, 0, 256, 8, 8, 2, 2, 2, &mut ops);
+        let cy = pool_pass(&mut sram, 0, 256, 8, 8, 2, 2, 2, false, &mut ops);
         assert_eq!(cy, (4 * 4 * 2 * 2) as u64); // oh*ow*k per channel
         assert!(ops > 0);
+        // avg charges the same streaming cycles for the same window
+        let mut ops_a = 0;
+        let cy_a = pool_pass(&mut sram, 0, 256, 8, 8, 2, 2, 2, true, &mut ops_a);
+        assert_eq!(cy_a, cy);
+        assert_eq!(ops_a, (2 * 4 * 4 * 5) as u64); // k² + 1 per window
     }
 }

@@ -95,7 +95,7 @@ fn random_conv_pool_stacks_bit_exact() {
                     bseed: g.int(1, 1 << 30) as u32,
                     groups: 1,
                 }),
-                LayerSpec::Pool(PoolSpec { name: "p1".into(), k: pk, stride: 2 }),
+                LayerSpec::Pool(PoolSpec::max("p1", pk, 2)),
             ],
         };
         if (h < pk) || (w < pk) {

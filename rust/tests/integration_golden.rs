@@ -111,7 +111,7 @@ fn pool_tiles_match_oracle() {
         let got = g.run(&art.name, &input).unwrap();
         let want = kn_stream::model::reference::pool_ref(
             &input,
-            &kn_stream::model::PoolSpec { name: art.name.clone(), k: art.k, stride: art.stride },
+            &kn_stream::model::PoolSpec::max(&art.name, art.k, art.stride),
         );
         assert_eq!(got, want, "{}", art.name);
     }

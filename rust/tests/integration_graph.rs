@@ -204,7 +204,7 @@ fn invalid_graphs_fail_compilation_with_real_errors() {
     // pool window larger than the plane used to underflow (h - k)
     let mut g = Graph::new("bad-pool", 2, 2, 1);
     g.add_node(
-        NodeOp::Pool(kn_stream::model::PoolSpec { name: "p".into(), k: 3, stride: 2 }),
+        NodeOp::Pool(kn_stream::model::PoolSpec::max("p", 3, 2)),
         &["input"],
     )
     .unwrap();

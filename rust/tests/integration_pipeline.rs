@@ -64,7 +64,7 @@ fn random_graph(g: &mut Gen) -> Graph {
             }
             1 if ph >= 8 && pw >= 8 && ph % 2 == 0 && pw % 2 == 0 => {
                 let name = format!("p{b}");
-                let pool = NodeOp::Pool(PoolSpec { name: name.clone(), k: 2, stride: 2 });
+                let pool = NodeOp::Pool(PoolSpec::max(&name, 2, 2));
                 gr.add_node(pool, &[&cur]).unwrap();
                 cur = name;
                 ph /= 2;

@@ -1,0 +1,284 @@
+//! Planner battery: the analytic cost model must predict the emitter's
+//! DRAM traffic *exactly*, every enumerated candidate must be
+//! executable within the chip's resource contracts, the dependency-edge
+//! mirror must agree with the compiled segment DAG edge-for-edge, and
+//! every plan policy must be output-invisible — bit-identical frames
+//! against the scalar oracle and against the heuristic compile, under
+//! sequential, DAG-parallel and cross-frame-pipelined execution alike.
+
+use kn_stream::compiler::{
+    compile_graph, compile_graph_with_plans, plan_with_grid, NetRunner,
+};
+use kn_stream::model::reference::run_graph_ref;
+use kn_stream::model::{zoo, ConvSpec, Graph, NodeOp, Tensor};
+use kn_stream::planner::cost::conv_candidate;
+use kn_stream::planner::enumerate::enumerate_conv;
+use kn_stream::planner::{plan_graph, PlanPolicy};
+use kn_stream::sim::accbuf::ACC_TILE_PX;
+use kn_stream::sim::SimConfig;
+use kn_stream::util::prop::{check, Gen};
+use kn_stream::SRAM_BYTES;
+
+/// A random legal conv spec plus an input plane it accepts.
+fn random_conv(g: &mut Gen) -> (ConvSpec, usize, usize) {
+    let k = *g.choose(&[1usize, 3, 5]);
+    let stride = *g.choose(&[1usize, 2]);
+    let pad = g.usize_in(0, k / 2);
+    let groups = if g.bool() { 1 } else { 2 };
+    let cin = groups * g.usize_in(1, 6);
+    let cout = groups * g.usize_in(1, 12);
+    // plane sized so at least one output pixel exists at this stride
+    let h = k + stride * g.usize_in(0, 14);
+    let w = k + stride * g.usize_in(0, 14);
+    let spec = ConvSpec {
+        name: "c".into(),
+        k,
+        stride,
+        pad,
+        cin,
+        cout,
+        shift: 9,
+        relu: g.bool(),
+        wseed: g.int(1, 1 << 30) as u32,
+        bseed: g.int(1, 1 << 30) as u32,
+        groups,
+    };
+    (spec, h, w)
+}
+
+/// The cost model's DRAM predictions must equal the measured SimStats
+/// counters EXACTLY (no slack), for random specs × random feasible
+/// candidates — not just the candidates a policy would pick.
+#[test]
+fn cost_model_matches_measured_dram_bytes_exactly() {
+    check("predicted DRAM == measured", 25, |g| {
+        let (spec, h, w) = random_conv(g);
+        let cands = enumerate_conv(&spec, h, w, SRAM_BYTES);
+        if cands.is_empty() {
+            return Ok(()); // degenerate spec; nothing to execute
+        }
+        let cand = cands[g.usize_in(0, cands.len() - 1)];
+        let plan = plan_with_grid(&spec, h, w, cand.gy, cand.gx, cand.c_per_group);
+
+        let mut graph = Graph::new("prop", h, w, spec.cin);
+        graph.add_node(NodeOp::Conv(spec.clone()), &["input"]).unwrap();
+        let compiled = compile_graph_with_plans(&graph, &[Some(plan)])
+            .map_err(|e| format!("compile: {e:#}"))?;
+        let runner = NetRunner::from_compiled(compiled, SimConfig::default())
+            .map_err(|e| format!("runner: {e:#}"))?;
+        let frame = Tensor::random_image(g.int(0, 1 << 30) as u32, h, w, spec.cin);
+        let (out, per_node) =
+            runner.run_frame_node_stats(&frame).map_err(|e| format!("run: {e:#}"))?;
+
+        // correctness first: arbitrary plans must not change the math
+        let want = run_graph_ref(&graph, &frame);
+        if out != want {
+            return Err(format!("output mismatch under plan {cand:?}"));
+        }
+        let m = &per_node[0];
+        if m.dram_read_bytes != cand.traffic.read_bytes {
+            return Err(format!(
+                "read bytes: predicted {} != measured {} ({spec:?} {h}x{w} {cand:?})",
+                cand.traffic.read_bytes, m.dram_read_bytes
+            ));
+        }
+        if m.dram_write_bytes != cand.traffic.write_bytes {
+            return Err(format!(
+                "write bytes: predicted {} != measured {} ({cand:?})",
+                cand.traffic.write_bytes, m.dram_write_bytes
+            ));
+        }
+        if m.macs != cand.traffic.macs {
+            return Err(format!(
+                "macs: predicted {} != measured {} ({cand:?})",
+                cand.traffic.macs, m.macs
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Every enumerated candidate must satisfy the SRAM/ACC-BUF contracts,
+/// and its O(1) aggregates must agree with the materialized tile list.
+#[test]
+fn enumerated_candidates_are_feasible_and_consistent() {
+    check("candidates feasible", 40, |g| {
+        let (spec, h, w) = random_conv(g);
+        let budget = *g.choose(&[SRAM_BYTES / 2, SRAM_BYTES]);
+        for cand in enumerate_conv(&spec, h, w, budget) {
+            let plan = plan_with_grid(&spec, h, w, cand.gy, cand.gx, cand.c_per_group);
+            if plan.tiles.len() != cand.ntiles {
+                return Err(format!("ntiles {} != {}", plan.tiles.len(), cand.ntiles));
+            }
+            let max_out = plan.tiles.iter().map(|t| t.oh * t.ow).max().unwrap();
+            if max_out != cand.max_out_px || max_out > ACC_TILE_PX {
+                return Err(format!("ACC: {max_out} vs {} ({cand:?})", cand.max_out_px));
+            }
+            if plan.sram_bytes != cand.sram_bytes || plan.sram_bytes > budget {
+                return Err(format!(
+                    "SRAM: plan {} cand {} budget {budget}",
+                    plan.sram_bytes, cand.sram_bytes
+                ));
+            }
+            let re = conv_candidate(&spec, h, w, cand.gy, cand.gx, cand.c_per_group);
+            if re.traffic != cand.traffic {
+                return Err("candidate evaluation is not deterministic".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The planner's dependency-edge mirror must agree with the compiled
+/// segment DAG edge-for-edge, for every policy and topology kind
+/// (linear, residual Add, branch+Concat, avg/GAP pooling, groups).
+#[test]
+fn dep_edge_mirror_matches_compiled_segments() {
+    for name in ["quicknet", "facenet", "edgenet", "widenet", "gapnet", "alexnet"] {
+        let graph = zoo::graph_by_name(name).unwrap();
+        for policy in PlanPolicy::ALL {
+            let gp = plan_graph(&graph, policy).unwrap();
+            let compiled = compile_graph_with_plans(&graph, &gp.plans).unwrap();
+            let actual: u64 = compiled.segments.iter().map(|s| s.deps.len() as u64).sum();
+            assert_eq!(
+                gp.dep_edges,
+                actual,
+                "{name}/{}: planner mirror vs compiled DAG",
+                policy.name()
+            );
+        }
+    }
+}
+
+/// Whole-frame predicted traffic must equal measured frame stats under
+/// every policy (the per-node conv model plus the fixed pool/add/
+/// concat terms, summed).
+#[test]
+fn graph_traffic_predictions_are_exact_per_frame() {
+    for name in ["quicknet", "edgenet", "widenet", "gapnet"] {
+        let graph = zoo::graph_by_name(name).unwrap();
+        let frame = Tensor::random_image(11, graph.in_h, graph.in_w, graph.in_c);
+        for policy in PlanPolicy::ALL {
+            let gp = plan_graph(&graph, policy).unwrap();
+            let compiled = compile_graph_with_plans(&graph, &gp.plans).unwrap();
+            let runner = NetRunner::from_compiled(compiled, SimConfig::default()).unwrap();
+            let (_, stats) = runner.run_frame(&frame).unwrap();
+            let t = gp.total_traffic();
+            assert_eq!(t.read_bytes, stats.dram_read_bytes, "{name}/{} read", policy.name());
+            assert_eq!(t.write_bytes, stats.dram_write_bytes, "{name}/{} write", policy.name());
+            assert_eq!(t.macs, stats.macs, "{name}/{} macs", policy.name());
+        }
+    }
+}
+
+/// Plan policies must be output-invisible: bit-identical to the scalar
+/// oracle AND to the heuristic compile, across workers {1, 4} and
+/// pipeline depths {1, 3}.
+#[test]
+fn all_policies_are_bit_exact_under_parallel_and_pipelined_execution() {
+    for name in ["quicknet", "facenet", "edgenet", "widenet", "gapnet"] {
+        let graph = zoo::graph_by_name(name).unwrap();
+        let frames: Vec<Tensor> = (0..3)
+            .map(|s| Tensor::random_image(s, graph.in_h, graph.in_w, graph.in_c))
+            .collect();
+        let oracle: Vec<Tensor> = frames.iter().map(|f| run_graph_ref(&graph, f)).collect();
+        for policy in PlanPolicy::ALL {
+            let runner = NetRunner::from_graph_with_policy(&graph, policy).unwrap();
+            for workers in [1usize, 4] {
+                for depth in [1usize, 3] {
+                    let got = runner.run_frames_pipelined(&frames, workers, depth).unwrap();
+                    for (i, (out, _)) in got.iter().enumerate() {
+                        assert_eq!(
+                            out,
+                            &oracle[i],
+                            "{name}/{} frame {i} w={workers} d={depth}",
+                            policy.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `Heuristic` through the planner entry points must be byte-identical
+/// to the historical direct compile — program, DRAM image, segments.
+#[test]
+fn heuristic_policy_is_byte_identical_to_direct_compile() {
+    for name in ["quicknet", "facenet", "edgenet", "widenet", "gapnet"] {
+        let graph = zoo::graph_by_name(name).unwrap();
+        let direct = compile_graph(&graph).unwrap();
+        let gp = plan_graph(&graph, PlanPolicy::Heuristic).unwrap();
+        let via_planner = compile_graph_with_plans(&graph, &gp.plans).unwrap();
+        assert_eq!(direct.program, via_planner.program, "{name} program");
+        assert_eq!(direct.dram_init, via_planner.dram_init, "{name} DRAM image");
+        assert_eq!(direct.segments, via_planner.segments, "{name} segments");
+    }
+}
+
+/// The acceptance criterion, measured end-to-end: on a channel-heavy
+/// layer (the alexnet-conv3 shape class, shrunk to test scale) the
+/// heuristic's "fewest tiles first" forces `c_groups > 1` and
+/// re-streams the whole input once per 16-feature round; the planner
+/// must find a finer image split whose single channel group strictly
+/// reduces *measured* DRAM traffic — outputs bit-identical. On the
+/// small zoo nets, where one tile is genuinely optimal, the policies
+/// must coincide in traffic (no regression).
+#[test]
+fn dag_aware_measurably_beats_heuristic_on_channel_heavy_layers() {
+    // stem: 4 → 64 channels; heavy: 30×30×64 → 64. The heavy layer's
+    // single 30×30 tile fits the ACC BUF but not SRAM at full channel
+    // depth, so the heuristic picks c_groups = 2 and re-streams the
+    // whole input once per 16-feature round (m_tiles = 4); a 2×1 image
+    // split keeps all 64 channels resident (one load per tile) and
+    // wins decisively even after re-streaming weights per tile.
+    let mut g = Graph::new("chanheavy", 30, 30, 4);
+    let conv = |name: &str, cin: usize, cout: usize, seed: u32| {
+        NodeOp::Conv(ConvSpec {
+            name: name.into(),
+            k: 3,
+            stride: 1,
+            pad: 1,
+            cin,
+            cout,
+            shift: 10,
+            relu: true,
+            wseed: seed,
+            bseed: seed + 1,
+            groups: 1,
+        })
+    };
+    g.add_node(conv("stem", 4, 64, 901), &["input"]).unwrap();
+    g.add_node(conv("heavy", 64, 64, 903), &["stem"]).unwrap();
+
+    let frame = Tensor::random_image(3, 30, 30, 4);
+    let heur = NetRunner::from_graph_with_policy(&g, PlanPolicy::Heuristic).unwrap();
+    let dag = NetRunner::from_graph_with_policy(&g, PlanPolicy::DagAware).unwrap();
+    let (ho, hs) = heur.run_frame(&frame).unwrap();
+    let (po, ps) = dag.run_frame(&frame).unwrap();
+    assert_eq!(ho, po, "policies must agree bit-for-bit");
+    let htr = hs.dram_read_bytes + hs.dram_write_bytes;
+    let ptr = ps.dram_read_bytes + ps.dram_write_bytes;
+    assert!(
+        ptr < htr,
+        "dag-aware measured traffic {ptr} must beat heuristic {htr} on the channel-heavy net"
+    );
+
+    // zoo small nets: single-tile plans are already optimal — the
+    // planner must not regress them (bounded by the search slack).
+    for name in ["quicknet", "edgenet", "widenet", "gapnet"] {
+        let graph = zoo::graph_by_name(name).unwrap();
+        let frame = Tensor::random_image(3, graph.in_h, graph.in_w, graph.in_c);
+        let heur = NetRunner::from_graph_with_policy(&graph, PlanPolicy::Heuristic).unwrap();
+        let dag = NetRunner::from_graph_with_policy(&graph, PlanPolicy::DagAware).unwrap();
+        let (ho, hs) = heur.run_frame(&frame).unwrap();
+        let (po, ps) = dag.run_frame(&frame).unwrap();
+        assert_eq!(ho, po, "{name}: policies must agree bit-for-bit");
+        let htr = hs.dram_read_bytes + hs.dram_write_bytes;
+        let ptr = ps.dram_read_bytes + ps.dram_write_bytes;
+        assert!(
+            ptr <= htr * 13 / 10,
+            "{name}: dag-aware traffic {ptr} blew past heuristic {htr} + slack"
+        );
+    }
+}
