@@ -199,6 +199,150 @@ fn main() {
     }
     pt.print();
 
+    // ---- Chip-sharded fleet: data-parallel scaling sweep ------------------
+    // N chip fault domains, each a private pool + queue + worker,
+    // frames routed least-loaded. Host throughput should scale with
+    // chips until the submitter becomes the bottleneck; outputs stay
+    // bit-exact per the fault battery, so the interesting numbers are
+    // wall fps and the accounting columns staying clean.
+    let net = zoo::graph_by_name("edgenet").unwrap();
+    let mut ct = Table::new(
+        "Chip-sharded serving sweep (edgenet, 1 worker/chip)",
+        &["chips", "host fps", "device fps/chip", "frames", "errors", "retries"],
+    );
+    for chips in [1usize, 2, 4, 8] {
+        let coord = Coordinator::start_graph(
+            &net,
+            CoordinatorConfig {
+                workers: 1,
+                chips,
+                queue_depth: 4,
+                op: OperatingPoint::for_freq(500.0),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let frames: Vec<Tensor> = (0..frames_n)
+            .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))
+            .collect();
+        let m = coord.run_stream(frames).expect("coordinator running");
+        assert_eq!(m.frames + m.errors, frames_n as u64, "chips {chips}: all accounted");
+        ct.row(&[
+            format!("{chips}"),
+            format!("{:.1}", m.wall_fps()),
+            format!("{:.1}", m.device_fps()),
+            format!("{}", m.frames),
+            format!("{}", m.errors),
+            format!("{}", m.retries),
+        ]);
+        report.push_row(
+            "chips",
+            obj(vec![
+                ("net", s("edgenet")),
+                ("chips", num(chips as f64)),
+                ("wall_fps", num(m.wall_fps())),
+                ("device_fps", num(m.device_fps())),
+                ("frames", num(m.frames as f64)),
+                ("errors", num(m.errors as f64)),
+                ("retries", num(m.retries as f64)),
+            ]),
+        );
+        coord.stop();
+    }
+    ct.print();
+
+    // ---- Chip-kill recovery: throughput before / during / after ----------
+    // One 4-chip coordinator serving three consecutive batches; chip 1
+    // is killed between batch 1 and 2. The fleet must keep serving on
+    // 3 chips (shrunken but nonzero fps, zero errors), and the plan-
+    // driven run records the failovers the mid-stream death forced.
+    let mut kt = Table::new(
+        "Chip-kill recovery (edgenet, 4 chips, kill chip 1 after batch 1)",
+        &["phase", "chips alive", "host fps", "frames", "errors", "failovers"],
+    );
+    let coord = Coordinator::start_graph(
+        &net,
+        CoordinatorConfig {
+            workers: 1,
+            chips: 4,
+            queue_depth: 4,
+            op: OperatingPoint::for_freq(500.0),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for (phase, kill_before) in [("before", false), ("during", true), ("after", false)] {
+        if kill_before {
+            coord.kill_chip(1).expect("fleet running");
+        }
+        let frames: Vec<Tensor> = (0..frames_n)
+            .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))
+            .collect();
+        let m = coord.run_stream(frames).expect("fleet keeps serving");
+        let alive = coord.chip_health().iter().filter(|h| !h.is_dead()).count();
+        assert_eq!(m.frames + m.errors, frames_n as u64, "{phase}: all accounted");
+        kt.row(&[
+            phase.into(),
+            format!("{alive}"),
+            format!("{:.1}", m.wall_fps()),
+            format!("{}", m.frames),
+            format!("{}", m.errors),
+            format!("{}", m.failovers),
+        ]);
+        report.push_row(
+            "chip_kill",
+            obj(vec![
+                ("phase", s(phase)),
+                ("chips_alive", num(alive as f64)),
+                ("wall_fps", num(m.wall_fps())),
+                ("frames", num(m.frames as f64)),
+                ("errors", num(m.errors as f64)),
+                ("failovers", num(m.failovers as f64)),
+            ]),
+        );
+    }
+    coord.stop();
+    // plan-driven mid-stream death: chip 0 dies at its 4th dequeue
+    let coord = Coordinator::start_graph(
+        &net,
+        CoordinatorConfig {
+            workers: 1,
+            chips: 4,
+            queue_depth: 4,
+            op: OperatingPoint::for_freq(500.0),
+            fault_plan: kn_stream::coordinator::FaultPlan::none()
+                .with(0, 3, kn_stream::coordinator::FaultKind::ChipDeath),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let frames: Vec<Tensor> = (0..frames_n)
+        .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))
+        .collect();
+    let m = coord.run_stream(frames).expect("fleet keeps serving");
+    assert_eq!(m.frames + m.errors, frames_n as u64, "planned death: all accounted");
+    kt.row(&[
+        "planned-death".into(),
+        format!("{}", coord.chip_health().iter().filter(|h| !h.is_dead()).count()),
+        format!("{:.1}", m.wall_fps()),
+        format!("{}", m.frames),
+        format!("{}", m.errors),
+        format!("{}", m.failovers),
+    ]);
+    report.push_row(
+        "chip_kill",
+        obj(vec![
+            ("phase", s("planned-death")),
+            ("chips_alive", num(3.0)),
+            ("wall_fps", num(m.wall_fps())),
+            ("frames", num(m.frames as f64)),
+            ("errors", num(m.errors as f64)),
+            ("failovers", num(m.failovers as f64)),
+        ]),
+    );
+    coord.stop();
+    kt.print();
+
     report.write().expect("write BENCH_e2e.json");
 
     // ---- PJRT CPU baseline (the "reference platform") -----------------------

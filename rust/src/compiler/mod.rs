@@ -337,10 +337,23 @@ impl NetRunner {
     /// Run one frame through a pooled simulator instance; returns the
     /// output tensor and the run's statistics.
     pub fn run_frame(&self, frame: &Tensor) -> anyhow::Result<(Tensor, SimStats)> {
+        self.run_frame_on(&self.pool, frame)
+    }
+
+    /// [`Self::run_frame`] drawing instances and DRAM images from an
+    /// explicit pool instead of the runner's own. The chip-sharded
+    /// coordinator compiles each net once and serves it on every chip's
+    /// *private* pool — a chip is a fault domain precisely because no
+    /// simulator state crosses this argument.
+    pub fn run_frame_on(
+        &self,
+        pool: &AccelPool,
+        frame: &Tensor,
+    ) -> anyhow::Result<(Tensor, SimStats)> {
         self.check_frame(frame)?;
-        let mut accel = self.pool.take_accel(&self.cfg);
+        let mut accel = pool.take_accel(&self.cfg);
         accel.reset_counters();
-        let mut dram = self.pool.take_dram(self.compiled.dram_px);
+        let mut dram = pool.take_dram(self.compiled.dram_px);
         self.init_dram(&mut dram, frame);
         // Attach the frame image as the instance's DRAM for this run —
         // pooled instances are DRAM-less, which is what lets runners of
@@ -352,8 +365,8 @@ impl NetRunner {
         std::mem::swap(&mut accel.dram.data, &mut dram);
         let out = self.extract_output(&mut dram);
         let stats = accel.stats.clone();
-        self.pool.put_accel(accel);
-        self.pool.put_dram(dram);
+        pool.put_accel(accel);
+        pool.put_dram(dram);
         Ok((out, stats))
     }
 
@@ -413,7 +426,7 @@ impl NetRunner {
         frame: &Tensor,
         workers: usize,
     ) -> anyhow::Result<(Tensor, SimStats)> {
-        let mut v = self.run_window(&[frame], workers, 1, None)?;
+        let mut v = self.run_window(&self.pool, &[frame], workers, 1, None)?;
         Ok(v.pop().expect("one frame in, one result out"))
     }
 
@@ -426,7 +439,7 @@ impl NetRunner {
         workers: usize,
     ) -> anyhow::Result<(Tensor, SimStats, Vec<SegTrace>)> {
         let trace = Mutex::new(Vec::new());
-        let mut v = self.run_window(&[frame], workers, 1, Some(&trace))?;
+        let mut v = self.run_window(&self.pool, &[frame], workers, 1, Some(&trace))?;
         let (out, stats) = v.pop().expect("one frame in, one result out");
         Ok((out, stats, trace.into_inner().unwrap()))
     }
@@ -455,7 +468,7 @@ impl NetRunner {
         depth: usize,
     ) -> anyhow::Result<Vec<(Tensor, SimStats)>> {
         let refs: Vec<&Tensor> = frames.iter().collect();
-        self.run_window(&refs, workers, depth, None)
+        self.run_window(&self.pool, &refs, workers, depth, None)
     }
 
     /// Refs-taking variant of [`Self::run_frames_pipelined`] for
@@ -468,7 +481,20 @@ impl NetRunner {
         workers: usize,
         depth: usize,
     ) -> anyhow::Result<Vec<(Tensor, SimStats)>> {
-        self.run_window(frames, workers, depth, None)
+        self.run_window(&self.pool, frames, workers, depth, None)
+    }
+
+    /// [`Self::run_frames_pipelined_ref`] on an explicit pool — the
+    /// window-serving path of the chip-sharded coordinator, where each
+    /// chip executes windows against its own [`AccelPool`].
+    pub fn run_frames_pipelined_ref_on(
+        &self,
+        pool: &AccelPool,
+        frames: &[&Tensor],
+        workers: usize,
+        depth: usize,
+    ) -> anyhow::Result<Vec<(Tensor, SimStats)>> {
+        self.run_window(pool, frames, workers, depth, None)
     }
 
     /// [`NetRunner::run_frames_pipelined`] with a scheduler trace whose
@@ -483,7 +509,7 @@ impl NetRunner {
     ) -> anyhow::Result<(Vec<(Tensor, SimStats)>, Vec<SegTrace>)> {
         let trace = Mutex::new(Vec::new());
         let refs: Vec<&Tensor> = frames.iter().collect();
-        let outs = self.run_window(&refs, workers, depth, Some(&trace))?;
+        let outs = self.run_window(&self.pool, &refs, workers, depth, Some(&trace))?;
         Ok((outs, trace.into_inner().unwrap()))
     }
 
@@ -495,6 +521,7 @@ impl NetRunner {
     /// path, which is the reference behaviour by definition.
     fn run_window(
         &self,
+        pool: &AccelPool,
         frames: &[&Tensor],
         workers: usize,
         depth: usize,
@@ -508,7 +535,7 @@ impl NetRunner {
         }
         let nseg = self.compiled.segments.len();
         if workers <= 1 || nseg <= 1 {
-            return frames.iter().map(|f| self.run_frame(f)).collect();
+            return frames.iter().map(|f| self.run_frame_on(pool, f)).collect();
         }
 
         let segments = &self.compiled.segments;
@@ -522,7 +549,7 @@ impl NetRunner {
         let nslots = depth.clamp(1, frames.len());
         let mut slot_drams: Vec<Vec<i16>> = (0..nslots)
             .map(|s| {
-                let mut d = self.pool.take_dram(self.compiled.dram_px);
+                let mut d = pool.take_dram(self.compiled.dram_px);
                 self.init_dram(&mut d, frames[s]);
                 d
             })
@@ -531,7 +558,7 @@ impl NetRunner {
         let nworkers = workers.min(nseg * nslots);
         let mut accels: Vec<Accelerator> = (0..nworkers)
             .map(|_| {
-                let mut a = self.pool.take_accel(&self.cfg);
+                let mut a = pool.take_accel(&self.cfg);
                 a.reset_counters();
                 a
             })
@@ -709,10 +736,10 @@ impl NetRunner {
         drop(dram_cells);
         for mut a in accels {
             a.reset_counters();
-            self.pool.put_accel(a);
+            pool.put_accel(a);
         }
         for d in slot_drams {
-            self.pool.put_dram(d);
+            pool.put_dram(d);
         }
         let results = results.into_inner().unwrap();
         Ok(results
@@ -814,6 +841,35 @@ mod tests {
                 assert_eq!(seq, want, "{} seed {s} sequential", g.name);
                 let (par, _) = r.run_frame_parallel(&f, 3).unwrap();
                 assert_eq!(par, want, "{} seed {s} parallel", g.name);
+            }
+        }
+    }
+
+    /// The chip-sharded serving contract: one compiled runner executed
+    /// against several *distinct* pools (one per chip) yields
+    /// bit-identical outputs and stats on every pool, sequential and
+    /// pipelined alike — a chip is a pure fault domain, not a source of
+    /// numerical divergence.
+    #[test]
+    fn distinct_pools_are_bit_exact_fault_domains() {
+        let net = zoo::quicknet();
+        let runner = NetRunner::new(&net).unwrap();
+        let frames: Vec<Tensor> = (0..3)
+            .map(|s| Tensor::random_image(s, net.in_h, net.in_w, net.in_c))
+            .collect();
+        let refs: Vec<&Tensor> = frames.iter().collect();
+        let want: Vec<_> = frames.iter().map(|f| runner.run_frame(f).unwrap()).collect();
+        for chip in 0..2 {
+            let pool = AccelPool::default();
+            for (f, (wo, ws)) in frames.iter().zip(&want) {
+                let (o, s) = runner.run_frame_on(&pool, f).unwrap();
+                assert_eq!(&o, wo, "chip {chip} sequential output");
+                assert_eq!(&s, ws, "chip {chip} sequential stats");
+            }
+            let piped = runner.run_frames_pipelined_ref_on(&pool, &refs, 3, 2).unwrap();
+            for (i, ((o, s), (wo, ws))) in piped.iter().zip(&want).enumerate() {
+                assert_eq!(o, wo, "chip {chip} pipelined frame {i} output");
+                assert_eq!(s, ws, "chip {chip} pipelined frame {i} stats");
             }
         }
     }

@@ -1,0 +1,226 @@
+//! Deterministic fault injection for chip-sharded serving.
+//!
+//! A [`FaultPlan`] is a seeded, fully reproducible schedule of faults:
+//! each [`FaultEvent`] names a chip, a chip-local dequeue index, and a
+//! [`FaultKind`]. Workers consult the plan at every frame dequeue, so a
+//! given `(seed, chips)` pair replays the exact same failure trajectory
+//! on every run — the chaos tests assert lossless accounting without
+//! racing on thread scheduling. This generalizes the old ad-hoc
+//! `inject_worker_panic` hook (still available, now targetable) into
+//! the four failure modes a resource-limited multi-chip deployment
+//! actually sees: a worker thread dying, a whole chip dying, a
+//! transient per-frame fault, and a compute stall (slow chip).
+
+use crate::util::rng::XorShift32;
+use std::collections::VecDeque;
+
+/// Health of one chip-level fault domain.
+///
+/// Transitions: `Healthy → Degraded` on a fault, `Degraded →
+/// Quarantined` after `quarantine_after` consecutive failures,
+/// `Quarantined → Degraded` lazily once the cooldown expires (recovery
+/// re-admits the chip to routing and grows the admission budget back),
+/// any state `→ Dead` on chip death (terminal). Successes walk
+/// `Degraded → Healthy`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChipHealth {
+    Healthy,
+    Degraded,
+    Quarantined,
+    Dead,
+}
+
+impl ChipHealth {
+    pub fn name(self) -> &'static str {
+        match self {
+            ChipHealth::Healthy => "healthy",
+            ChipHealth::Degraded => "degraded",
+            ChipHealth::Quarantined => "quarantined",
+            ChipHealth::Dead => "dead",
+        }
+    }
+    /// Dead chips never come back; everything else can serve again.
+    pub fn is_dead(self) -> bool {
+        self == ChipHealth::Dead
+    }
+}
+
+/// What goes wrong when a fault event fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The dequeuing worker thread panics. The in-hand frame fails over
+    /// to another chip first, so the panic costs a thread, not a frame.
+    WorkerPanic,
+    /// The whole chip dies: its queue is closed and drained (every
+    /// queued frame fails over), its workers exit, health goes `Dead`.
+    ChipDeath,
+    /// The attempt fails without executing — a retryable per-frame
+    /// fault (ECC hit, bus error, watchdog reset).
+    TransientFail,
+    /// The chip stalls for `ms` milliseconds before serving. With a
+    /// deadline configured, a stalled-past-deadline frame fails over.
+    Stall { ms: u64 },
+}
+
+impl FaultKind {
+    pub fn describe(self) -> &'static str {
+        match self {
+            FaultKind::WorkerPanic => "worker panic",
+            FaultKind::ChipDeath => "chip death",
+            FaultKind::TransientFail => "transient fault",
+            FaultKind::Stall { .. } => "compute stall",
+        }
+    }
+}
+
+/// One scheduled fault: fires on `chip` when its cumulative frame
+/// dequeue counter reaches `frame` (0 = the first frame that chip ever
+/// dequeues). Chip-local indices keep the plan deterministic no matter
+/// how routing interleaves nets and submitters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub chip: usize,
+    pub frame: u64,
+    pub kind: FaultKind,
+}
+
+/// A reproducible schedule of [`FaultEvent`]s.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no injected faults (production default).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Builder for hand-written plans (tests, benches). Later events at
+    /// the same `(chip, frame)` slot are dropped — one fault per
+    /// dequeue, first writer wins — so plans compose predictably.
+    pub fn with(mut self, chip: usize, frame: u64, kind: FaultKind) -> Self {
+        if !self.events.iter().any(|e| e.chip == chip && e.frame == frame) {
+            self.events.push(FaultEvent { chip, frame, kind });
+        }
+        self
+    }
+
+    /// Deterministic pseudo-random plan for `chips` chips over a run of
+    /// roughly `frames` frames. Same `(seed, chips, frames)` → same
+    /// plan, always. Shape choices keep the fleet serviceable:
+    /// - at most one `ChipDeath`, and none at all when `chips == 1`
+    ///   (a dead only-chip would turn every case into "all frames
+    ///   error", which tests nothing about failover);
+    /// - event frame indices are spread over the first `frames`
+    ///   chip-local dequeues so they actually fire;
+    /// - stalls are 5–50 ms — long enough to blow a tight deadline,
+    ///   short enough for tests.
+    pub fn seeded(seed: u32, chips: usize, frames: usize) -> Self {
+        let chips = chips.max(1);
+        let horizon = frames.max(1) as u32;
+        let mut rng = XorShift32::new(seed ^ 0xFA17_0000);
+        let n_events = 2 + rng.next_usize(2 + chips);
+        let mut plan = FaultPlan::none();
+        let mut death_used = false;
+        for _ in 0..n_events {
+            let chip = rng.next_usize(chips);
+            let frame = u64::from(rng.next_u32() % horizon);
+            let roll = rng.next_u32() % 100;
+            let kind = if roll < 40 {
+                FaultKind::TransientFail
+            } else if roll < 70 {
+                FaultKind::Stall { ms: 5 + u64::from(rng.next_u32() % 46) }
+            } else if roll < 85 || chips == 1 || death_used {
+                FaultKind::WorkerPanic
+            } else {
+                death_used = true;
+                FaultKind::ChipDeath
+            };
+            plan = plan.with(chip, frame, kind);
+        }
+        plan
+    }
+
+    /// The events scheduled for one chip, sorted by frame index —
+    /// handed to that chip's fault ledger at startup.
+    pub(crate) fn events_for(&self, chip: usize) -> VecDeque<FaultEvent> {
+        let mut evs: Vec<FaultEvent> =
+            self.events.iter().copied().filter(|e| e.chip == chip).collect();
+        evs.sort_by_key(|e| e.frame);
+        evs.into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_bounded() {
+        for seed in [0u32, 1, 7, 0xDEAD_BEEF] {
+            let a = FaultPlan::seeded(seed, 4, 32);
+            let b = FaultPlan::seeded(seed, 4, 32);
+            assert_eq!(a, b, "seed {seed} not reproducible");
+            assert!(!a.is_empty());
+            let deaths = a.events().iter().filter(|e| e.kind == FaultKind::ChipDeath).count();
+            assert!(deaths <= 1, "seed {seed}: {deaths} chip deaths");
+            for e in a.events() {
+                assert!(e.chip < 4);
+                assert!(e.frame < 32);
+                if let FaultKind::Stall { ms } = e.kind {
+                    assert!((5..=50).contains(&ms));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_chip_plans_never_kill_the_only_chip() {
+        for seed in 0..64u32 {
+            let p = FaultPlan::seeded(seed, 1, 16);
+            assert!(
+                p.events().iter().all(|e| e.kind != FaultKind::ChipDeath),
+                "seed {seed} kills the only chip"
+            );
+        }
+    }
+
+    #[test]
+    fn builder_dedups_same_slot_first_wins() {
+        let p = FaultPlan::none()
+            .with(0, 3, FaultKind::TransientFail)
+            .with(0, 3, FaultKind::ChipDeath)
+            .with(1, 3, FaultKind::WorkerPanic);
+        assert_eq!(p.events().len(), 2);
+        assert_eq!(p.events()[0].kind, FaultKind::TransientFail);
+    }
+
+    #[test]
+    fn events_for_filters_and_sorts() {
+        let p = FaultPlan::none()
+            .with(1, 9, FaultKind::TransientFail)
+            .with(0, 5, FaultKind::WorkerPanic)
+            .with(1, 2, FaultKind::Stall { ms: 10 });
+        let c1 = p.events_for(1);
+        assert_eq!(c1.len(), 2);
+        assert_eq!(c1[0].frame, 2);
+        assert_eq!(c1[1].frame, 9);
+        assert!(p.events_for(2).is_empty());
+    }
+
+    #[test]
+    fn health_names_and_terminality() {
+        assert_eq!(ChipHealth::Quarantined.name(), "quarantined");
+        assert!(ChipHealth::Dead.is_dead());
+        assert!(!ChipHealth::Degraded.is_dead());
+    }
+}

@@ -1,6 +1,7 @@
 //! Serving metrics: latency histograms + throughput + energy rollup,
-//! aggregate and per registered net.
+//! aggregate, per registered net, and per chip.
 
+use super::fault::ChipHealth;
 use super::request::FrameResult;
 use crate::energy::{EnergyModel, OperatingPoint};
 use crate::sim::SimStats;
@@ -19,6 +20,14 @@ pub struct RunMetrics {
     pub errors: u64,
     /// Most recent failure message, if any.
     pub last_error: Option<String>,
+    /// Re-dispatches: dispatch attempts beyond each frame's first
+    /// (served-first-try frames contribute 0).
+    pub retries: u64,
+    /// Re-dispatches that moved a frame to a *different* chip than the
+    /// one that failed it.
+    pub failovers: u64,
+    /// Attempts abandoned because the per-attempt deadline had passed.
+    pub deadline_misses: u64,
     pub wall_s: f64,
     /// Wall-clock latency histogram (µs buckets).
     pub wall_lat_us: Histogram,
@@ -44,6 +53,9 @@ impl RunMetrics {
             frames: 0,
             errors: 0,
             last_error: None,
+            retries: 0,
+            failovers: 0,
+            deadline_misses: 0,
             wall_s: 0.0,
             wall_lat_us: Histogram::new(),
             dev_lat_us: Histogram::new(),
@@ -75,8 +87,13 @@ impl RunMetrics {
         self.last_error = Some(message.to_string());
     }
 
-    /// Fold one delivered [`FrameResult`] into the rollup.
+    /// Fold one delivered [`FrameResult`] into the rollup. Attempt
+    /// accounting rides the envelope, so retries spent on a frame count
+    /// whether it ultimately served or errored.
     pub fn record_result(&mut self, r: &FrameResult) {
+        self.retries += u64::from(r.attempts.attempts.saturating_sub(1));
+        self.failovers += u64::from(r.attempts.failovers);
+        self.deadline_misses += u64::from(r.attempts.deadline_misses);
         match &r.result {
             Ok(o) => self.record(
                 &o.stats,
@@ -126,10 +143,18 @@ impl RunMetrics {
         } else {
             String::new()
         };
+        let robust = if self.retries + self.failovers + self.deadline_misses > 0 {
+            format!(
+                " | retries {} / failovers {} / deadline-miss {}",
+                self.retries, self.failovers, self.deadline_misses
+            )
+        } else {
+            String::new()
+        };
         format!(
             "frames={}{errs} | device: {:.1} fps, {}OPS eff, util {:.2} | dev-lat p50/p95/p99 = \
-             {:.1}/{:.1}/{:.1} ms | q-wait mean/max {:.0}/{:.0} µs{pipe} | energy/frame {:.2} mJ \
-             (on-chip {:.2} mJ) | host {:.1} fps",
+             {:.1}/{:.1}/{:.1} ms | q-wait mean/max {:.0}/{:.0} µs{pipe}{robust} | energy/frame \
+             {:.2} mJ (on-chip {:.2} mJ) | host {:.1} fps",
             self.frames,
             self.device_fps(),
             eng(self.device_ops_per_s()),
@@ -147,13 +172,23 @@ impl RunMetrics {
 }
 
 /// Rollup of a mixed-traffic serving run: the aggregate [`RunMetrics`]
-/// plus one per registered net (registry order). Results for net names
-/// that were never registered (a delivered "unknown net" error) count
-/// in the aggregate only.
+/// plus one per registered net (registry order) and — when the
+/// coordinator runs chip-sharded — one per chip, at that chip's own
+/// DVFS point. Results for net names that were never registered (a
+/// delivered "unknown net" error) count in the aggregate only.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub aggregate: RunMetrics,
     pub per_net: Vec<(String, RunMetrics)>,
+    /// Per-chip rows, indexed by chip id. Empty when the report was
+    /// built without chip topology ([`ServeReport::new`]). A frame's
+    /// row is the chip that *delivered* it; front-end synthesized
+    /// results and frames that died off-chip land in the aggregate
+    /// only.
+    pub per_chip: Vec<RunMetrics>,
+    /// Final health of each chip at the end of the run (parallel to
+    /// `per_chip`; empty for non-sharded reports).
+    pub chip_health: Vec<ChipHealth>,
 }
 
 impl ServeReport {
@@ -161,7 +196,18 @@ impl ServeReport {
         Self {
             aggregate: RunMetrics::new(op),
             per_net: nets.iter().map(|n| (n.clone(), RunMetrics::new(op))).collect(),
+            per_chip: Vec::new(),
+            chip_health: Vec::new(),
         }
+    }
+
+    /// Like [`ServeReport::new`], plus a per-chip row at each chip's
+    /// operating point.
+    pub fn with_chips(op: OperatingPoint, nets: &[String], chip_ops: &[OperatingPoint]) -> Self {
+        let mut rep = Self::new(op, nets);
+        rep.per_chip = chip_ops.iter().map(|&c| RunMetrics::new(c)).collect();
+        rep.chip_health = vec![ChipHealth::Healthy; chip_ops.len()];
+        rep
     }
 
     /// Metrics for one registered net.
@@ -173,10 +219,14 @@ impl ServeReport {
         self.per_net.iter_mut().find(|(n, _)| n == name).map(|(_, m)| m)
     }
 
-    /// Fold one delivered result into the aggregate and its net's row.
+    /// Fold one delivered result into the aggregate, its net's row, and
+    /// (when chip topology is known) the delivering chip's row.
     pub fn record_result(&mut self, r: &FrameResult) {
         self.aggregate.record_result(r);
         if let Some(m) = self.net_mut(&r.net) {
+            m.record_result(r);
+        }
+        if let Some(m) = self.per_chip.get_mut(r.chip) {
             m.record_result(r);
         }
     }
@@ -190,12 +240,15 @@ impl ServeReport {
         }
     }
 
-    /// Stamp the run's wall-clock on the aggregate and every per-net
-    /// row (the rows share the run's wall, so per-net `wall_fps` is the
-    /// net's share of throughput over the whole run).
+    /// Stamp the run's wall-clock on the aggregate and every per-net /
+    /// per-chip row (the rows share the run's wall, so each row's
+    /// `wall_fps` is its share of throughput over the whole run).
     pub fn set_wall(&mut self, wall_s: f64) {
         self.aggregate.wall_s = wall_s;
         for (_, m) in &mut self.per_net {
+            m.wall_s = wall_s;
+        }
+        for m in &mut self.per_chip {
             m.wall_s = wall_s;
         }
     }
@@ -209,8 +262,28 @@ impl ServeReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{FrameError, FrameOutput, NO_WORKER};
+    use crate::coordinator::request::{
+        Attempts, FrameError, FrameErrorKind, FrameOutput, NO_CHIP, NO_WORKER,
+    };
     use crate::energy::dvfs::PEAK;
+
+    fn ok_result(id: u64, net: &str, chip: usize, attempts: Attempts) -> FrameResult {
+        FrameResult {
+            id,
+            net: net.into(),
+            worker: 0,
+            chip,
+            attempts,
+            result: Ok(FrameOutput {
+                output: crate::model::Tensor::zeros(1, 1, 1),
+                stats: SimStats { cycles: 1000, ..Default::default() },
+                wall_latency_s: 0.001,
+                device_latency_s: 0.0005,
+                queue_wait_s: 0.0001,
+                window: 1,
+            }),
+        }
+    }
 
     #[test]
     fn record_and_rates() {
@@ -235,6 +308,7 @@ mod tests {
         assert!(rep.contains("q-wait"));
         assert!(rep.contains("pipe window"), "windows > 1 must surface: {rep}");
         assert!(!rep.contains("ERRORS"));
+        assert!(!rep.contains("retries"), "clean run must not print robustness counters: {rep}");
         m.record_error("shape mismatch");
         m.record_error("sim fault");
         assert_eq!(m.errors, 2);
@@ -243,28 +317,45 @@ mod tests {
     }
 
     #[test]
+    fn attempts_fold_into_retry_counters() {
+        let mut m = RunMetrics::new(PEAK);
+        // served on the 3rd attempt, 2 failovers, 1 deadline miss
+        m.record_result(&ok_result(
+            0,
+            "a",
+            2,
+            Attempts { attempts: 3, failovers: 2, deadline_misses: 1 },
+        ));
+        // retry-exhausted error still contributes its spent attempts
+        m.record_result(&FrameResult {
+            id: 1,
+            net: "a".into(),
+            worker: NO_WORKER,
+            chip: 1,
+            attempts: Attempts { attempts: 2, failovers: 1, deadline_misses: 0 },
+            result: Err(FrameError::new(FrameErrorKind::RetriesExhausted, "gone")),
+        });
+        assert_eq!(m.frames, 1);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.retries, 3, "(3-1) + (2-1)");
+        assert_eq!(m.failovers, 3);
+        assert_eq!(m.deadline_misses, 1);
+        let rep = m.report(&EnergyModel::default());
+        assert!(rep.contains("retries 3 / failovers 3 / deadline-miss 1"), "{rep}");
+    }
+
+    #[test]
     fn serve_report_routes_per_net() {
         let nets = vec!["a".to_string(), "b".to_string()];
         let mut rep = ServeReport::new(PEAK, &nets);
-        let ok = FrameResult {
-            id: 0,
-            net: "a".into(),
-            worker: 0,
-            result: Ok(FrameOutput {
-                output: crate::model::Tensor::zeros(1, 1, 1),
-                stats: SimStats { cycles: 1000, ..Default::default() },
-                wall_latency_s: 0.001,
-                device_latency_s: 0.0005,
-                queue_wait_s: 0.0001,
-                window: 1,
-            }),
-        };
-        rep.record_result(&ok);
+        rep.record_result(&ok_result(0, "a", 0, Attempts { attempts: 1, ..Default::default() }));
         let bad = FrameResult {
             id: 1,
             net: "b".into(),
             worker: NO_WORKER,
-            result: Err(FrameError { message: "nope".into() }),
+            chip: NO_CHIP,
+            attempts: Attempts::default(),
+            result: Err(FrameError::new(FrameErrorKind::Internal, "nope")),
         };
         rep.record_result(&bad);
         rep.record_error_for("b", "worker died: frame 2 undelivered");
@@ -273,7 +364,9 @@ mod tests {
             id: 3,
             net: "ghost".into(),
             worker: NO_WORKER,
-            result: Err(FrameError { message: "unknown net 'ghost'".into() }),
+            chip: NO_CHIP,
+            attempts: Attempts::default(),
+            result: Err(FrameError::new(FrameErrorKind::UnknownNet, "unknown net 'ghost'")),
         };
         rep.record_result(&unk);
         assert_eq!(rep.aggregate.frames, 1);
@@ -283,5 +376,34 @@ mod tests {
         assert_eq!(rep.net("b").unwrap().errors, 2);
         assert!(rep.net("ghost").is_none());
         assert_eq!(rep.accounted(), 4);
+        assert!(rep.per_chip.is_empty(), "plain reports carry no chip rows");
+    }
+
+    #[test]
+    fn serve_report_routes_per_chip() {
+        let nets = vec!["a".to_string()];
+        let mut rep = ServeReport::with_chips(PEAK, &nets, &[PEAK, PEAK]);
+        rep.record_result(&ok_result(0, "a", 0, Attempts { attempts: 1, ..Default::default() }));
+        let retried = Attempts { attempts: 2, failovers: 1, deadline_misses: 0 };
+        rep.record_result(&ok_result(1, "a", 1, retried));
+        // NO_CHIP results must not panic or land on a chip row
+        rep.record_result(&FrameResult {
+            id: 2,
+            net: "a".into(),
+            worker: NO_WORKER,
+            chip: NO_CHIP,
+            attempts: Attempts::default(),
+            result: Err(FrameError::new(FrameErrorKind::ChipsUnavailable, "no chips")),
+        });
+        rep.set_wall(0.5);
+        assert_eq!(rep.per_chip.len(), 2);
+        assert_eq!(rep.per_chip[0].frames, 1);
+        assert_eq!(rep.per_chip[1].frames, 1);
+        assert_eq!(rep.per_chip[1].failovers, 1);
+        assert_eq!(rep.aggregate.frames, 2);
+        assert_eq!(rep.aggregate.errors, 1);
+        assert!((rep.per_chip[0].wall_s - 0.5).abs() < 1e-12);
+        assert_eq!(rep.chip_health, vec![ChipHealth::Healthy, ChipHealth::Healthy]);
+        assert_eq!(rep.accounted(), 3);
     }
 }

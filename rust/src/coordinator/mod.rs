@@ -3,15 +3,23 @@
 //! sketches, built out as a deployable component.
 //!
 //! A smart-vision device streams camera frames; the coordinator owns a
-//! **multi-net serving registry** (`name → Arc<NetRunner>`) and one
-//! shared worker pool: any worker serves any registered net, frames are
-//! tagged with the net they target, backpressure applies when the
-//! bounded queue fills, and an admission policy budgets the DRAM-image
-//! bytes of in-flight frames across the heterogeneous runners. Metrics
-//! are kept per net and in aggregate, in wall time and in *simulated
-//! device time* (cycles at the configured DVFS point) — and every
-//! frame is accounted: failures are delivered results or counted
-//! errors, never silent drops.
+//! **multi-net serving registry** (`name → Arc<NetRunner>`) in front of
+//! a fleet of **chip-level fault domains**: each chip has a private
+//! accelerator pool, queue, workers, DVFS point, and health state, and
+//! frames route data-parallel (least-loaded) across the healthy chips.
+//! Backpressure applies when a chip's bounded queue fills, and an
+//! admission policy budgets the DRAM-image bytes of in-flight frames —
+//! scaled down pro rata when chips die or are quarantined, so
+//! degradation sheds load instead of deadlocking. Metrics are kept per
+//! net, per chip, and in aggregate, in wall time and in *simulated
+//! device time* (cycles at each chip's DVFS point) — and every frame
+//! is accounted: failures are delivered results or counted errors,
+//! never silent drops.
+//!
+//! The `fault` module adds deterministic seeded fault injection
+//! (worker panics, chip deaths, transient faults, compute stalls),
+//! per-attempt deadlines, and bounded retry/failover — the lossless
+//! accounting invariant holds under every seeded fault plan.
 //!
 //! With `CoordinatorConfig::pipeline_depth > 1`, workers dequeue
 //! contiguous same-net *windows* of frames and run them through the
@@ -22,10 +30,15 @@
 //! Threads + bounded channels (tokio is not vendorable offline — see
 //! DESIGN.md §Deviations); the dataflow is the same reactor shape.
 
+pub mod fault;
 pub mod metrics;
 pub mod request;
 pub mod server;
 
+pub use fault::{ChipHealth, FaultEvent, FaultKind, FaultPlan};
 pub use metrics::{RunMetrics, ServeReport};
-pub use request::{FrameError, FrameOutput, FrameRequest, FrameResult, SubmitError, NO_WORKER};
+pub use request::{
+    Attempts, FrameError, FrameErrorKind, FrameOutput, FrameRequest, FrameResult, SubmitError,
+    NO_CHIP, NO_WORKER,
+};
 pub use server::{AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig, Pending};

@@ -1,6 +1,6 @@
 //! Request/response types of the frame-serving API.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::model::Tensor;
 use crate::sim::SimStats;
@@ -9,6 +9,10 @@ use crate::sim::SimStats;
 /// synthesizes without dispatching to a worker (unknown net name,
 /// admission rejection).
 pub const NO_WORKER: usize = usize::MAX;
+
+/// `FrameResult::chip` value for results not served by any chip
+/// (front-end synthesized, or failed after exhausting every chip).
+pub const NO_CHIP: usize = usize::MAX;
 
 /// One camera frame submitted for inference, tagged with the registered
 /// net that should serve it.
@@ -19,11 +23,22 @@ pub struct FrameRequest {
     pub net: String,
     pub frame: Tensor,
     pub submitted: Instant,
+    /// Per-*attempt* service deadline, measured from each dispatch to a
+    /// chip (not from submission), so a failover retry onto a healthy
+    /// chip gets a fresh budget. `None` = no deadline (legacy
+    /// behavior). A frame found past-due at dequeue, or stalled past it
+    /// by a slow chip, is re-routed and the miss is accounted.
+    pub deadline: Option<Duration>,
 }
 
 impl FrameRequest {
     pub fn new(id: u64, net: &str, frame: Tensor) -> Self {
-        Self { id, net: net.to_string(), frame, submitted: Instant::now() }
+        Self { id, net: net.to_string(), frame, submitted: Instant::now(), deadline: None }
+    }
+
+    pub fn with_deadline(mut self, deadline: Option<Duration>) -> Self {
+        self.deadline = deadline;
+        self
     }
 }
 
@@ -35,7 +50,8 @@ pub struct FrameOutput {
     pub stats: SimStats,
     /// Wall-clock latency through the coordinator (queue + sim).
     pub wall_latency_s: f64,
-    /// Device latency: cycles / f at the configured operating point.
+    /// Device latency: cycles / f at the operating point of the chip
+    /// that served the frame.
     pub device_latency_s: f64,
     /// Time the frame sat in the bounded queue: submit → worker dequeue.
     pub queue_wait_s: f64,
@@ -47,12 +63,53 @@ pub struct FrameOutput {
     pub window: usize,
 }
 
+/// Classification of a delivered frame failure — lets callers and
+/// metrics distinguish "your input was bad" from "the fleet degraded
+/// under you" without parsing message strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameErrorKind {
+    /// The requested net name is not in the registry.
+    UnknownNet,
+    /// The admission policy rejected the frame (over budget in Reject
+    /// mode, or larger than the degraded fleet can ever hold).
+    Admission,
+    /// The frame itself failed validation against the net.
+    BadFrame,
+    /// The frame was dispatched `1 + max_retries` times and every
+    /// attempt failed (chip faults, stalls, deadline misses).
+    RetriesExhausted,
+    /// No live chip remained to serve or retry the frame.
+    ChipsUnavailable,
+    /// Simulator/scheduler error while executing the frame.
+    Internal,
+}
+
+impl FrameErrorKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameErrorKind::UnknownNet => "unknown-net",
+            FrameErrorKind::Admission => "admission",
+            FrameErrorKind::BadFrame => "bad-frame",
+            FrameErrorKind::RetriesExhausted => "retries-exhausted",
+            FrameErrorKind::ChipsUnavailable => "chips-unavailable",
+            FrameErrorKind::Internal => "internal",
+        }
+    }
+}
+
 /// Why a frame failed (kept `Clone`-able for fan-out consumers, hence a
 /// message rather than the source `anyhow::Error`).
 #[derive(Clone, Debug, thiserror::Error)]
 #[error("{message}")]
 pub struct FrameError {
+    pub kind: FrameErrorKind,
     pub message: String,
+}
+
+impl FrameError {
+    pub fn new(kind: FrameErrorKind, message: impl Into<String>) -> Self {
+        Self { kind, message: message.into() }
+    }
 }
 
 /// Why a submission could not be accepted at all. Unlike [`FrameError`]
@@ -64,10 +121,25 @@ pub enum SubmitError {
     /// `stop()` has already run; the worker pool is shut down.
     #[error("coordinator is stopped")]
     Stopped,
-    /// Every worker thread has exited (e.g. after a panic), so the job
-    /// queue has no consumer left.
+    /// Every chip is dead (or every worker thread has exited), so the
+    /// job queue has no consumer left.
     #[error("worker pool disconnected")]
     Disconnected,
+}
+
+/// Attempt accounting for one frame, carried on the result envelope so
+/// both successes and delivered errors feed the retry/failover/deadline
+/// counters in `RunMetrics`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Attempts {
+    /// Dispatches to a chip (1 = served first try; 0 = never
+    /// dispatched, i.e. a front-end synthesized result).
+    pub attempts: u32,
+    /// Re-dispatches that landed on a *different* chip than the one
+    /// that failed.
+    pub failovers: u32,
+    /// Attempts abandoned because the per-attempt deadline had passed.
+    pub deadline_misses: u32,
 }
 
 /// The result for one frame. A failed frame is *delivered* with its
@@ -79,9 +151,14 @@ pub struct FrameResult {
     pub id: u64,
     /// Net name the frame was routed to (as requested, even if unknown).
     pub net: String,
-    /// Worker that served the frame, or [`NO_WORKER`] for results the
-    /// front-end synthesized (unknown net, admission rejection).
+    /// Worker that served the frame (chip-local index), or
+    /// [`NO_WORKER`] for results the front-end synthesized (unknown
+    /// net, admission rejection) or that failed off-chip.
     pub worker: usize,
+    /// Chip that delivered the frame, or [`NO_CHIP`] when no chip did.
+    pub chip: usize,
+    /// Retry/failover/deadline accounting for this frame.
+    pub attempts: Attempts,
     pub result: Result<FrameOutput, FrameError>,
 }
 
@@ -104,6 +181,9 @@ mod tests {
         assert!(r.submitted.elapsed().as_secs() < 1);
         assert_eq!(r.id, 1);
         assert_eq!(r.net, "quicknet");
+        assert_eq!(r.deadline, None);
+        let d = Duration::from_millis(50);
+        assert_eq!(r.with_deadline(Some(d)).deadline, Some(d));
     }
 
     #[test]
@@ -112,10 +192,21 @@ mod tests {
             id: 7,
             net: "quicknet".into(),
             worker: 0,
-            result: Err(FrameError { message: "boom".into() }),
+            chip: 0,
+            attempts: Attempts { attempts: 1, ..Default::default() },
+            result: Err(FrameError::new(FrameErrorKind::Internal, "boom")),
         };
         let err = r.ok().unwrap_err().to_string();
         assert!(err.contains("frame 7") && err.contains("boom"), "{err}");
+    }
+
+    #[test]
+    fn error_kind_names_are_stable() {
+        assert_eq!(FrameErrorKind::RetriesExhausted.name(), "retries-exhausted");
+        assert_eq!(FrameErrorKind::Admission.name(), "admission");
+        let e = FrameError::new(FrameErrorKind::BadFrame, "h != 8");
+        assert_eq!(e.kind, FrameErrorKind::BadFrame);
+        assert_eq!(e.to_string(), "h != 8");
     }
 
     #[test]

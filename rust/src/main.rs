@@ -9,7 +9,9 @@
 //!   info     chip configuration, area and DVFS summary
 
 use kn_stream::compiler::NetRunner;
-use kn_stream::coordinator::{AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig};
+use kn_stream::coordinator::{
+    AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig, FaultPlan,
+};
 use kn_stream::energy::{AreaModel, EnergyModel, OperatingPoint};
 use kn_stream::model::{zoo, Tensor};
 use kn_stream::planner::{plan_graph, PlanPolicy};
@@ -137,7 +139,12 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         .opt("admit-mb", "0", "in-flight DRAM-image budget in MB (0 = unbounded)")
         .opt("admit-mode", "block", "over-budget behavior: block|reject")
         .opt("plan-policy", "heuristic", "decomposition planner (heuristic|min-traffic|dag-aware)")
-        .opt("freq", "500", "clock in MHz");
+        .opt("freq", "500", "clock in MHz")
+        .opt("chips", "1", "independent chip fault domains (frames route least-loaded)")
+        .opt("chip-freqs", "", "per-chip MHz overrides, comma-separated (default: --freq)")
+        .opt("deadline-ms", "0", "per-attempt service deadline in ms (0 = none)")
+        .opt("max-retries", "2", "re-dispatches per frame before retries-exhausted")
+        .opt("chaos-seed", "", "deterministic fault-injection seed (empty = no faults)");
     let m = cli.parse_from(args)?;
     let list = if m.get("nets").is_empty() { m.get("net") } else { m.get("nets") };
     let nets = zoo::graphs_by_names(list)?;
@@ -152,17 +159,45 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         },
     };
     let op = OperatingPoint::for_freq(m.get_f64("freq"));
+    let chips = m.get_usize("chips").max(1);
+    let chip_ops: Vec<OperatingPoint> =
+        m.get_f64_list("chip-freqs").iter().map(|&f| OperatingPoint::for_freq(f)).collect();
+    anyhow::ensure!(
+        chip_ops.len() <= chips,
+        "--chip-freqs lists {} points for {chips} chip(s)",
+        chip_ops.len()
+    );
+    let frames = m.get_usize("frames");
+    let fault_plan = match m.get("chaos-seed") {
+        "" => FaultPlan::none(),
+        s => {
+            let seed: u32 = s.parse().map_err(|_| anyhow::anyhow!("bad --chaos-seed '{s}'"))?;
+            let plan = FaultPlan::seeded(seed, chips, frames);
+            for e in plan.events() {
+                println!("chaos: chip {} frame {} — {}", e.chip, e.frame, e.kind.describe());
+            }
+            plan
+        }
+    };
+    let deadline_ms = m.get_f64("deadline-ms");
     let cfg = CoordinatorConfig {
         workers: m.get_usize("workers"),
+        chips,
         queue_depth: m.get_usize("queue"),
         tile_workers: m.get_usize("tile-workers"),
         pipeline_depth: m.get_usize("pipeline-depth"),
         op,
+        chip_ops,
         admission,
         plan_policy: PlanPolicy::parse(m.get("plan-policy"))?,
+        deadline: (deadline_ms > 0.0)
+            .then(|| std::time::Duration::from_micros((deadline_ms * 1e3) as u64)),
+        max_retries: m.get_usize("max-retries") as u32,
+        fault_plan,
+        ..CoordinatorConfig::default()
     };
 
-    let tagged = zoo::mix_stream(&nets, &weights, m.get_usize("frames"));
+    let tagged = zoo::mix_stream(&nets, &weights, frames);
     let coord = Coordinator::start_registry(nets, cfg)?;
     let rep = coord.run_mix(tagged)?;
     let energy = EnergyModel::default();
@@ -184,6 +219,29 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    if !rep.per_chip.is_empty() {
+        let mut t = Table::new(
+            "per-chip fault-domain report",
+            &["chip", "health", "MHz", "frames", "errors", "retries", "failovers",
+              "ddl-miss", "device fps"],
+        );
+        for (c, cm) in rep.per_chip.iter().enumerate() {
+            let health =
+                rep.chip_health.get(c).map_or("?", |h| h.name());
+            t.row(&[
+                format!("{c}"),
+                health.to_string(),
+                format!("{:.0}", cm.op.freq_mhz),
+                format!("{}", cm.frames),
+                format!("{}", cm.errors),
+                format!("{}", cm.retries),
+                format!("{}", cm.failovers),
+                format!("{}", cm.deadline_misses),
+                format!("{:.1}", cm.device_fps()),
+            ]);
+        }
+        t.print();
+    }
     println!("aggregate: {}", rep.aggregate.report(&energy));
     coord.stop();
     Ok(())

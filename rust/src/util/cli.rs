@@ -160,6 +160,21 @@ impl Matches {
     pub fn get_flag(&self, key: &str) -> bool {
         self.flags.get(key).copied().unwrap_or(false)
     }
+    /// Comma-separated list of numbers (`--chip-freqs 500,250`); an
+    /// empty or absent value parses to an empty list.
+    pub fn get_f64_list(&self, key: &str) -> Vec<f64> {
+        let raw = self.get(key);
+        if raw.trim().is_empty() {
+            return Vec::new();
+        }
+        raw.split(',')
+            .map(|v| {
+                v.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{key} must be comma-separated numbers"))
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -194,6 +209,16 @@ mod tests {
     fn positionals_collected() {
         let m = cli().parse_from(vec!["a".into(), "--n".into(), "2".into(), "b".into()]).unwrap();
         assert_eq!(m.positionals, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn f64_lists_parse_with_spaces_and_default_empty() {
+        let mut c = Cli::new("t", "test");
+        c.opt("chip-freqs", "", "per-chip MHz");
+        let m = c.parse_from(vec!["--chip-freqs".into(), "500, 250,125".into()]).unwrap();
+        assert_eq!(m.get_f64_list("chip-freqs"), vec![500.0, 250.0, 125.0]);
+        let m = c.parse_from(vec![]).unwrap();
+        assert!(m.get_f64_list("chip-freqs").is_empty());
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! Fault-tolerance battery for chip-sharded serving.
+//!
+//! The contract under test: **every submitted frame is delivered
+//! exactly once** — a bit-exact output or a typed error — and its
+//! admission reservation is fully released, under *any* seeded fault
+//! plan, across chip counts, admission modes, and pipeline depths.
+//! Deterministic single-fault tests then pin each failure mode's
+//! mechanism: chip-death failover, stall-past-deadline re-route,
+//! transient-fault retry, retry exhaustion, and quarantine recovery.
+
+use std::time::Duration;
+
+use kn_stream::compiler::NetRunner;
+use kn_stream::coordinator::{
+    AdmissionMode, AdmissionPolicy, ChipHealth, Coordinator, CoordinatorConfig, FaultKind,
+    FaultPlan, FrameErrorKind, SubmitError,
+};
+use kn_stream::model::reference::run_graph_ref;
+use kn_stream::model::{zoo, Graph, Tensor};
+use kn_stream::prop_assert;
+use kn_stream::util::prop::check;
+
+fn quicknet() -> (Graph, usize) {
+    let g = zoo::graph_by_name("quicknet").unwrap();
+    let one = NetRunner::from_graph(&g).unwrap().dram_frame_bytes();
+    (g, one)
+}
+
+/// Spin until every reservation is back (results are sent a hair
+/// before the job drop that releases the bytes).
+fn assert_budget_drains(coord: &Coordinator) -> Result<(), String> {
+    for _ in 0..400 {
+        if coord.in_flight_bytes() == 0 {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    Err(format!("admission ledger stuck at {} B after the run", coord.in_flight_bytes()))
+}
+
+/// The tentpole invariant as a property: random seeded fault plans ×
+/// chips {1,2,4} × admission {Block,Reject} × pipeline depth {1,3},
+/// with and without deadlines. Delivered-exactly-once, budget fully
+/// released, and every *served* output bit-identical to the scalar
+/// oracle no matter which chip survived to serve it.
+#[test]
+fn prop_lossless_accounting_under_seeded_fault_plans() {
+    let (g, one) = quicknet();
+    check("lossless accounting under seeded fault plans", 6, |gen| {
+        let chips = *gen.choose(&[1usize, 2, 4]);
+        let mode =
+            if gen.bool() { AdmissionMode::Block } else { AdmissionMode::Reject };
+        let depth = *gen.choose(&[1usize, 3]);
+        let deadline =
+            if gen.bool() { Some(Duration::from_millis(30)) } else { None };
+        let nframes = gen.usize_in(6, 10);
+        let seed = gen.int(0, i64::from(u32::MAX)) as u32;
+        let cfg = CoordinatorConfig {
+            workers: gen.usize_in(1, 2),
+            chips,
+            queue_depth: 4,
+            tile_workers: if depth > 1 { 2 } else { 1 },
+            pipeline_depth: depth,
+            admission: AdmissionPolicy { max_dram_bytes: 3 * one, mode },
+            deadline,
+            quarantine_cooldown: Duration::from_millis(30),
+            fault_plan: FaultPlan::seeded(seed, chips, nframes),
+            ..Default::default()
+        };
+        let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg)
+            .map_err(|e| format!("start: {e:#}"))?;
+        let frames: Vec<Tensor> = (0..nframes)
+            .map(|s| Tensor::random_image(s as u32, g.in_h, g.in_w, g.in_c))
+            .collect();
+        let mut outcomes = 0usize;
+        let mut served = 0usize;
+        let mut pendings = Vec::new();
+        for f in &frames {
+            match coord.submit(f.clone()) {
+                Ok(p) => pendings.push(p),
+                // dead fleet refused it — accounted at the front door
+                Err(SubmitError::Disconnected) => outcomes += 1,
+                Err(e) => return Err(format!("unexpected submit error: {e}")),
+            }
+        }
+        for p in pendings {
+            let r = p.recv().map_err(|_| {
+                format!("frame {} vanished: accepted but never delivered", p.id)
+            })?;
+            let id = r.id as usize;
+            match r.result {
+                Ok(out) => {
+                    prop_assert!(
+                        out.output == run_graph_ref(&g, &frames[id]),
+                        "frame {id} served but not bit-exact (seed {seed}, chips {chips})"
+                    );
+                    served += 1;
+                }
+                Err(e) => {
+                    prop_assert!(
+                        e.kind != FrameErrorKind::UnknownNet
+                            && e.kind != FrameErrorKind::BadFrame,
+                        "frame {id} failed with an input-class error under chaos: {e}"
+                    );
+                }
+            }
+            outcomes += 1;
+        }
+        prop_assert!(
+            outcomes == nframes,
+            "{outcomes} outcomes for {nframes} frames (seed {seed}, chips {chips})"
+        );
+        // Unless the plan can take chips down (a ChipDeath, or a
+        // WorkerPanic on a 1-worker chip can cascade to organic chip
+        // death), some frame must actually serve: transient faults and
+        // stalls deplete, and the retry budget outlasts them.
+        let fleet_can_die = FaultPlan::seeded(seed, chips, nframes)
+            .events()
+            .iter()
+            .any(|e| matches!(e.kind, FaultKind::ChipDeath | FaultKind::WorkerPanic));
+        if !fleet_can_die {
+            prop_assert!(served > 0, "no frame served at all (seed {seed}, chips {chips})");
+        }
+        assert_budget_drains(&coord)?;
+        coord.stop();
+        Ok(())
+    });
+}
+
+/// Plan-driven chip death: the first frame chip 0 dequeues kills the
+/// whole chip. The in-hand frame and everything queued behind it fail
+/// over to chip 1 — zero errors, every output bit-exact, the victim's
+/// envelope records the failover, and the fleet reports `Dead`.
+#[test]
+fn chip_death_fails_over_and_keeps_serving() {
+    let (g, _) = quicknet();
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        chips: 2,
+        fault_plan: FaultPlan::none().with(0, 0, FaultKind::ChipDeath),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg).unwrap();
+    let frames: Vec<Tensor> =
+        (0..6).map(|s| Tensor::random_image(s, g.in_h, g.in_w, g.in_c)).collect();
+    let pendings: Vec<_> = frames.iter().map(|f| coord.submit(f.clone()).unwrap()).collect();
+    let mut failovers = 0;
+    for (i, p) in pendings.into_iter().enumerate() {
+        let r = p.recv().expect("survivor delivers every frame");
+        failovers += r.attempts.failovers;
+        assert_eq!(r.chip, 1, "frame {i} must be served by the surviving chip");
+        let out = r.ok().unwrap_or_else(|e| panic!("frame {i} errored: {e}"));
+        assert_eq!(out.output, run_graph_ref(&g, &frames[i]), "frame {i} bit-exact");
+    }
+    assert!(failovers >= 1, "the killed chip's frame must record its failover");
+    let health = coord.chip_health();
+    assert_eq!(health[0], ChipHealth::Dead);
+    assert_ne!(health[1], ChipHealth::Dead);
+    assert_budget_drains(&coord).unwrap();
+    coord.stop();
+}
+
+/// A stall longer than the per-attempt deadline: the chip serves the
+/// frame late → the worker notices the blown deadline at wake-up,
+/// re-routes the frame to the healthy sibling, and the envelope
+/// records both the miss and the failover. The frame still lands Ok
+/// and bit-exact.
+#[test]
+fn stall_past_deadline_reroutes_and_counts_the_miss() {
+    let (g, _) = quicknet();
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        chips: 2,
+        deadline: Some(Duration::from_millis(10)),
+        fault_plan: FaultPlan::none().with(0, 0, FaultKind::Stall { ms: 60 }),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg).unwrap();
+    let f = Tensor::random_image(3, g.in_h, g.in_w, g.in_c);
+    let r = coord.submit(f.clone()).unwrap().recv().unwrap();
+    assert_eq!(r.attempts.deadline_misses, 1, "the stall must blow exactly one deadline");
+    assert_eq!(r.attempts.failovers, 1, "the miss must move the frame off the slow chip");
+    assert_eq!(r.attempts.attempts, 2);
+    assert_eq!(r.chip, 1, "served by the chip that did not stall");
+    assert_eq!(r.ok().unwrap().output, run_graph_ref(&g, &f));
+    coord.stop();
+}
+
+/// A transient per-frame fault retries on the same (only) chip and
+/// succeeds on the second attempt: one retry, no failover (same chip),
+/// bit-exact output, and the run metrics count the retry.
+#[test]
+fn transient_fault_retries_to_success() {
+    let (g, _) = quicknet();
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        chips: 1,
+        retry_backoff: Duration::from_micros(50),
+        fault_plan: FaultPlan::none().with(0, 0, FaultKind::TransientFail),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg).unwrap();
+    let f = Tensor::random_image(11, g.in_h, g.in_w, g.in_c);
+    let m = coord.run_stream(vec![f.clone()]).unwrap();
+    assert_eq!(m.frames, 1);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.retries, 1, "exactly one re-dispatch");
+    assert_eq!(m.failovers, 0, "same-chip retry is not a failover");
+    coord.stop();
+}
+
+/// Transient faults at every chip-local dequeue of the only chip burn
+/// the whole retry budget: the frame is *delivered* as a typed
+/// `RetriesExhausted` error — never a hang, never a bare disconnect —
+/// and the admission bytes come back.
+#[test]
+fn retry_exhaustion_is_a_typed_delivered_error() {
+    let (g, _) = quicknet();
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        chips: 1,
+        max_retries: 1,
+        retry_backoff: Duration::from_micros(50),
+        fault_plan: FaultPlan::none()
+            .with(0, 0, FaultKind::TransientFail)
+            .with(0, 1, FaultKind::TransientFail),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg).unwrap();
+    let f = Tensor::random_image(5, g.in_h, g.in_w, g.in_c);
+    let r = coord.submit(f).unwrap().recv().expect("exhaustion is delivered, not dropped");
+    let err = r.result.expect_err("both attempts were faulted");
+    assert_eq!(err.kind, FrameErrorKind::RetriesExhausted, "{err}");
+    assert_eq!(r.attempts.attempts, 2, "1 + max_retries dispatches");
+    assert_budget_drains(&coord).unwrap();
+    coord.stop();
+}
+
+/// Quarantine shrinks the effective admission budget; cooldown expiry
+/// re-admits the chip and the budget grows back — graceful degradation
+/// is reversible for everything short of death.
+#[test]
+fn quarantine_shrinks_budget_and_cooldown_restores_it() {
+    let (g, one) = quicknet();
+    let cfg = CoordinatorConfig {
+        workers: 1,
+        chips: 2,
+        admission: AdmissionPolicy { max_dram_bytes: 2 * one, mode: AdmissionMode::Block },
+        quarantine_after: 1,
+        quarantine_cooldown: Duration::from_millis(60),
+        fault_plan: FaultPlan::none().with(0, 0, FaultKind::TransientFail),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_registry(vec![("quicknet".into(), g.clone())], cfg).unwrap();
+    assert_eq!(coord.effective_admission_budget(), 2 * one, "full fleet, full budget");
+    let f = Tensor::random_image(9, g.in_h, g.in_w, g.in_c);
+    // the transient fault trips chip 0 straight into quarantine
+    // (quarantine_after = 1); the retry serves elsewhere
+    let m = coord.run_stream(vec![f]).unwrap();
+    assert_eq!(m.frames + m.errors, 1);
+    assert_eq!(
+        coord.effective_admission_budget(),
+        one,
+        "one quarantined chip sheds its half of the budget"
+    );
+    assert!(coord.chip_health().contains(&ChipHealth::Quarantined));
+    std::thread::sleep(Duration::from_millis(120));
+    assert_eq!(
+        coord.effective_admission_budget(),
+        2 * one,
+        "cooldown expiry re-admits the chip and restores the budget"
+    );
+    assert!(!coord.chip_health().contains(&ChipHealth::Dead));
+    coord.stop();
+}
+
+/// The CI smoke in miniature: a 4-chip fleet serving a two-net mix
+/// under a seeded plan with deadlines. Per-chip rows cover the fleet,
+/// aggregate accounting is exact, and at least one chip did real work.
+#[test]
+fn seeded_chaos_mix_reports_per_chip_and_loses_nothing() {
+    let nets = zoo::graphs_by_names("quicknet,edgenet").unwrap();
+    let total = 12usize;
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        chips: 4,
+        deadline: Some(Duration::from_millis(50)),
+        quarantine_cooldown: Duration::from_millis(30),
+        fault_plan: FaultPlan::seeded(7, 4, total),
+        ..Default::default()
+    };
+    let tagged = zoo::mix_stream(&nets, &[1, 1], total);
+    let coord = Coordinator::start_registry(nets, cfg).unwrap();
+    let rep = coord.run_mix(tagged).unwrap();
+    assert_eq!(rep.aggregate.frames + rep.aggregate.errors, total as u64);
+    assert_eq!(rep.per_chip.len(), 4);
+    assert_eq!(rep.chip_health.len(), 4);
+    let chip_frames: u64 = rep.per_chip.iter().map(|c| c.frames).sum();
+    assert_eq!(chip_frames, rep.aggregate.frames, "every served frame lands on a chip row");
+    assert!(rep.aggregate.frames > 0, "a 4-chip fleet keeps serving under the plan");
+    coord.stop();
+}
