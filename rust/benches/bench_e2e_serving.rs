@@ -22,7 +22,7 @@ fn main() {
         &["net", "f (MHz)", "workers", "tile thr", "device fps", "p50", "p99",
           "mJ/frame", "host sim fps"],
     );
-    for net_name in ["quicknet", "facenet", "edgenet", "widenet"] {
+    for net_name in ["quicknet", "facenet", "edgenet", "widenet", "mobilenet"] {
         let net = zoo::graph_by_name(net_name).unwrap();
         // (freq, chip workers, host tile threads per frame)
         for (freq, workers, tile_workers) in

@@ -10,6 +10,7 @@ use std::time::Instant;
 
 use kn_stream::compiler::NetRunner;
 use kn_stream::model::{zoo, LayerSpec, NetSpec, Tensor};
+use kn_stream::planner::PlanPolicy;
 use kn_stream::sim::SimStats;
 use kn_stream::util::bench::{fmt_dur, JsonReport, Table};
 use kn_stream::util::json::{num, obj, s};
@@ -116,6 +117,47 @@ fn main() {
          'pad ovh' = simulator MACs / model MACs — the 3x3-array padding cost of kernel \
          decomposition (K=11 -> 144/121, K=5 -> 36/25) plus 16-feature rounding."
     );
+
+    // ---- MobileNet-class per-node utilization (depthwise fast path) --------
+    // Heuristic = packed dw lowering (16 channel planes per scan),
+    // MinTraffic = fused DwPw on top of it. The per-node lane
+    // utilization column is the acceptance metric for the fast path.
+    let g = zoo::graph_by_name("mobilenet").unwrap();
+    let frame = Tensor::random_image(9, g.in_h, g.in_w, g.in_c);
+    let mut mt = Table::new(
+        "mobilenet per-node (dw fast path): packed vs fused",
+        &["node", "policy", "cycles", "MACs", "lane util", "DRAM KB"],
+    );
+    for policy in [PlanPolicy::Heuristic, PlanPolicy::MinTraffic] {
+        let runner = NetRunner::from_graph_with_policy(&g, policy).expect("plan mobilenet");
+        let (_, per_node) = runner.run_frame_node_stats(&frame).expect("run mobilenet");
+        for (node, st) in g.nodes.iter().zip(&per_node) {
+            if st.cycles == 0 {
+                continue; // fused-away dw node: all work attributed to its pw consumer
+            }
+            let dram = (st.dram_read_bytes + st.dram_write_bytes) as f64 / 1e3;
+            mt.row(&[
+                node.op.name().to_string(),
+                policy.name().into(),
+                format!("{}", st.cycles),
+                eng(st.macs as f64),
+                format!("{:.3}", st.lane_utilization()),
+                format!("{dram:.1}"),
+            ]);
+            report.push_row(
+                "mobilenet_nodes",
+                obj(vec![
+                    ("node", s(node.op.name())),
+                    ("policy", s(policy.name())),
+                    ("sim_cycles", num(st.cycles as f64)),
+                    ("macs", num(st.macs as f64)),
+                    ("lane_utilization", num(st.lane_utilization())),
+                    ("dram_bytes", num((st.dram_read_bytes + st.dram_write_bytes) as f64)),
+                ]),
+            );
+        }
+    }
+    mt.print();
 
     // ---- machine-readable hot-path artifact (tracked by CI) ----------------
     let total_wall_s = total_wall_ns as f64 / 1e9;

@@ -7,6 +7,7 @@
 use kn_stream::compiler::NetRunner;
 use kn_stream::energy::{AreaModel, EnergyModel, OperatingPoint};
 use kn_stream::model::{zoo, Tensor};
+use kn_stream::planner::PlanPolicy;
 use kn_stream::util::bench::{JsonReport, Table};
 use kn_stream::util::json::{num, obj, s};
 
@@ -55,14 +56,22 @@ fn main() {
     let mut t = Table::new(
         "Measured (simulated) effective performance per workload",
         &["net", "corner", "cycles/frame", "latency", "fps", "eff GOPS", "util",
-          "mJ/frame"],
+          "lane util", "mJ/frame"],
     );
     let mut report = JsonReport::new("table2");
     report.text("bench", "table2_perf");
-    for name in ["facenet", "alexnet"] {
-        let net = zoo::by_name(name).unwrap();
-        let runner = NetRunner::new(&net).expect("compile");
-        let frame = Tensor::random_image(5, net.in_h, net.in_w, net.in_c);
+    for name in ["facenet", "alexnet", "mobilenet"] {
+        // mobilenet is a graph net (dw/pw layers, GAP); the planner's
+        // dag-aware policy exercises the fused DwPw lowering here.
+        let (runner, in_h, in_w, in_c) = if name == "mobilenet" {
+            let g = zoo::graph_by_name(name).unwrap();
+            let r = NetRunner::from_graph_with_policy(&g, PlanPolicy::DagAware).expect("compile");
+            (r, g.in_h, g.in_w, g.in_c)
+        } else {
+            let net = zoo::by_name(name).unwrap();
+            (NetRunner::new(&net).expect("compile"), net.in_h, net.in_w, net.in_c)
+        };
+        let frame = Tensor::random_image(5, in_h, in_w, in_c);
         let (_, stats) = runner.run_frame(&frame).expect("run");
         for f in [500.0, 20.0] {
             let op = OperatingPoint::for_freq(f);
@@ -76,6 +85,7 @@ fn main() {
                 format!("{:.1}", 1.0 / secs),
                 format!("{:.1}", stats.ops() as f64 / secs / 1e9),
                 format!("{:.2}", stats.utilization()),
+                format!("{:.2}", stats.lane_utilization()),
                 format!("{:.2}", e.total_j() * 1e3),
             ]);
             report.push_row(
@@ -87,6 +97,7 @@ fn main() {
                     ("device_fps", num(1.0 / secs)),
                     ("eff_gops", num(stats.ops() as f64 / secs / 1e9)),
                     ("utilization", num(stats.utilization())),
+                    ("lane_utilization", num(stats.lane_utilization())),
                     ("mj_per_frame", num(e.total_j() * 1e3)),
                 ]),
             );

@@ -32,11 +32,11 @@
 
 use std::collections::HashMap;
 
-use super::decompose::{plan_conv, Plan};
-use super::kernel_decomp::{tap_weights, taps, Tap};
+use super::decompose::{dw_eligible, plan_conv, Plan};
+use super::kernel_decomp::{dw_tap_weights, tap_weights, taps, Tap};
 use crate::isa::{
-    AddPass, BiasLoad, Cmd, ConvCfg, ConvPass, DmaDesc, PoolPass, WeightLoad, PASS_FIRST,
-    PASS_LAST,
+    AddPass, BiasLoad, Cmd, ConvCfg, ConvPass, DmaDesc, PoolPass, WeightLoad, PASS_DW,
+    PASS_FIRST, PASS_LAST,
 };
 use crate::model::graph::{Graph, NodeOp, NodeRef};
 use crate::model::{AddSpec, ConcatSpec, ConvSpec, NetSpec, PoolSpec};
@@ -297,19 +297,39 @@ fn check_plan(c: &ConvSpec, h: usize, w: usize, plan: &Plan) -> anyhow::Result<(
         "conv {}: tile of {max_out} px exceeds the {ACC_TILE_PX}-px ACC BUF",
         c.name
     );
-    let cg = c.cin / c.groups;
-    anyhow::ensure!(
-        plan.c_per_group >= 1 && plan.c_per_group <= cg,
-        "conv {}: c_per_group {} outside 1..={cg}",
-        c.name,
-        plan.c_per_group
-    );
-    anyhow::ensure!(
-        plan.c_groups == cg.div_ceil(plan.c_per_group)
-            && plan.m_tiles == (c.cout / c.groups).div_ceil(NUM_CU),
-        "conv {}: inconsistent channel/feature grouping",
-        c.name
-    );
+    if plan.dw {
+        anyhow::ensure!(
+            dw_eligible(c),
+            "conv {}: depthwise plan for a non-depthwise layer",
+            c.name
+        );
+        let lanes = c.cin.min(NUM_CU);
+        anyhow::ensure!(
+            plan.c_per_group >= 1 && plan.c_per_group <= lanes,
+            "conv {}: dw c_per_group {} outside 1..={lanes}",
+            c.name,
+            plan.c_per_group
+        );
+        anyhow::ensure!(
+            plan.c_groups == c.cin.div_ceil(plan.c_per_group) && plan.m_tiles == 1,
+            "conv {}: inconsistent depthwise channel grouping",
+            c.name
+        );
+    } else {
+        let cg = c.cin / c.groups;
+        anyhow::ensure!(
+            plan.c_per_group >= 1 && plan.c_per_group <= cg,
+            "conv {}: c_per_group {} outside 1..={cg}",
+            c.name,
+            plan.c_per_group
+        );
+        anyhow::ensure!(
+            plan.c_groups == cg.div_ceil(plan.c_per_group)
+                && plan.m_tiles == (c.cout / c.groups).div_ceil(NUM_CU),
+            "conv {}: inconsistent channel/feature grouping",
+            c.name
+        );
+    }
     let in_max = plan.tiles.iter().map(|t| t.ih * t.iw).max().unwrap() * plan.c_per_group;
     anyhow::ensure!(
         (in_max + max_out * NUM_CU) * 2 <= SRAM_BYTES,
@@ -361,6 +381,65 @@ fn compile_graph_opts(
         canvases.push(cv);
     }
 
+    // ---- fused depthwise→pointwise pairs ---------------------------------
+    // A pointwise plan carrying `fuse_dw` absorbs its depthwise producer:
+    // the dw node emits nothing and its output canvas is never written —
+    // the dw results stream through SRAM staging inside the pw segments.
+    // Every legality condition is re-checked with real errors so a
+    // planner bug cannot mis-emit.
+    let mut fused_dw_of: Vec<Option<usize>> = vec![None; graph.nodes.len()];
+    let mut fused_away = vec![false; graph.nodes.len()];
+    if let Some(plans) = plans_in {
+        for (ni, node) in graph.nodes.iter().enumerate() {
+            let NodeOp::Conv(pw) = &node.op else { continue };
+            let Some(Some(plan)) = plans.get(ni) else { continue };
+            if !plan.fuse_dw {
+                continue;
+            }
+            anyhow::ensure!(
+                pw.k == 1 && pw.stride == 1 && pw.pad == 0 && pw.groups == 1,
+                "conv {}: fuse_dw on a non-1x1-pointwise layer",
+                pw.name
+            );
+            let Some(NodeRef::Node(di)) = node.inputs.first().copied() else {
+                anyhow::bail!("conv {}: fuse_dw input is the graph input", pw.name);
+            };
+            let NodeOp::Conv(dw) = &graph.nodes[di].op else {
+                anyhow::bail!("conv {}: fuse_dw input is not a conv", pw.name);
+            };
+            anyhow::ensure!(
+                dw_eligible(dw),
+                "conv {}: fuse_dw producer {} is not depthwise",
+                pw.name,
+                dw.name
+            );
+            let consumers = graph
+                .nodes
+                .iter()
+                .flat_map(|n| &n.inputs)
+                .filter(|r| matches!(r, NodeRef::Node(i) if *i == di))
+                .count();
+            anyhow::ensure!(
+                consumers == 1 && graph.output != NodeRef::Node(di),
+                "conv {}: fused producer {} has other consumers",
+                pw.name,
+                dw.name
+            );
+            let dwp = plans
+                .get(di)
+                .cloned()
+                .flatten()
+                .ok_or_else(|| anyhow::anyhow!("conv {}: fused producer has no plan", pw.name))?;
+            anyhow::ensure!(
+                dwp.dw && dwp.gy == plan.gy && dwp.gx == plan.gx,
+                "conv {}: fused producer plan is not a matching depthwise grid",
+                pw.name
+            );
+            fused_dw_of[ni] = Some(di);
+            fused_away[di] = true;
+        }
+    }
+
     // ---- per-node programs -----------------------------------------------
     let mut plans = Vec::new();
     for (ni, node) in graph.nodes.iter().enumerate() {
@@ -381,16 +460,40 @@ fn compile_graph_opts(
                     None => plan_conv(c, h, w)
                         .map_err(|e| anyhow::anyhow!("conv {}: {e}", c.name))?,
                 };
-                emit_conv(
-                    &mut em,
-                    ni,
-                    c,
-                    &plan,
-                    srcs[0].0,
-                    &srcs[0].1,
-                    (ni + 1, &dst),
-                    emit_threads,
-                );
+                if fused_away[ni] {
+                    // emitted inside the consuming pointwise node's segments
+                } else if let Some(di) = fused_dw_of[ni] {
+                    let NodeOp::Conv(dw) = &graph.nodes[di].op else { unreachable!() };
+                    let dwplan = plans_in
+                        .and_then(|p| p.get(di).cloned().flatten())
+                        .expect("checked in the fusion pass");
+                    let dsrc_idx = canvas_of(graph.nodes[di].inputs[0]);
+                    let dsrc = canvases[dsrc_idx].clone();
+                    emit_fused_dwpw(
+                        &mut em,
+                        (di, dw),
+                        &dwplan,
+                        (ni, c),
+                        &plan,
+                        dsrc_idx,
+                        &dsrc,
+                        (ni + 1, &dst),
+                        emit_threads,
+                    )?;
+                } else if plan.dw {
+                    emit_conv_dw(&mut em, ni, c, &plan, srcs[0].0, &srcs[0].1, (ni + 1, &dst));
+                } else {
+                    emit_conv(
+                        &mut em,
+                        ni,
+                        c,
+                        &plan,
+                        srcs[0].0,
+                        &srcs[0].1,
+                        (ni + 1, &dst),
+                        emit_threads,
+                    );
+                }
                 plans.push((c.name.clone(), plan));
             }
             NodeOp::Pool(p) => emit_pool(&mut em, ni, p, srcs[0].0, &srcs[0].1, (ni + 1, &dst))?,
@@ -575,6 +678,8 @@ fn emit_conv(
                     }
                 }
                 let total_passes = passes.len();
+                // real output features this engine tile computes
+                let mn = (mg - mt * NUM_CU).min(NUM_CU) as u16;
                 // prime the shadow bank with pass 0's weights
                 em.push(Cmd::LoadWeights(WeightLoad {
                     dram_px: passes[0].woff as u32,
@@ -627,6 +732,9 @@ fn emit_conv(
                         dy: pd.dy,
                         dx: pd.dx,
                         flags,
+                        mn,
+                        dpp: 0,
+                        dpl: 0,
                     }));
                 }
                 // store the 16-feature group to the output canvas
@@ -672,6 +780,342 @@ fn emit_conv(
             },
         );
     }
+}
+
+/// Fill the weight/bias blocks of one *depthwise* conv node: per
+/// 16-channel lane group, one bias block (lane f = channel `c0 + f`)
+/// and one 9×16 block per tap. Blocks are tiny (144 px), so the fill is
+/// sequential — trivially byte-identical at any `emit_threads`.
+fn prefill_conv_blocks_dw(em: &mut Emitter, ni: usize, c: &ConvSpec, plan: &Plan) {
+    let weights = c.weights(); // (K, K, 1, cin) C-order
+    let biases = c.biases();
+    let tap_list = taps(c.k);
+    for cgi in 0..plan.c_groups {
+        let c0 = cgi * plan.c_per_group;
+        let cn = plan.c_per_group.min(c.cin - c0);
+        let o = em.alloc_dram(2 * NUM_CU);
+        for f in 0..NUM_CU {
+            let v = if f < cn { biases[c0 + f] } else { 0 };
+            em.dram[o + 2 * f] = (v as u32 & 0xFFFF) as u16 as i16;
+            em.dram[o + 2 * f + 1] = ((v as u32) >> 16) as u16 as i16;
+        }
+        em.bcache.insert((ni, cgi, 0), o);
+        for (ti, tp) in tap_list.iter().enumerate() {
+            let len = 9 * NUM_CU;
+            let off = em.alloc_dram(len);
+            em.wcache.insert((ni, cgi, 0, ti, 0), (off, len));
+            let blk = dw_tap_weights(&weights, c.k, c.cin, *tp, c0, cn);
+            em.dram[off..off + len].copy_from_slice(&blk);
+        }
+    }
+}
+
+/// Emit one depthwise conv node on the packed fast path: each pass
+/// scans `c_per_group` ≤ 16 independent channel planes, one per engine
+/// lane, instead of broadcasting one channel across 16 feature columns.
+fn emit_conv_dw(
+    em: &mut Emitter,
+    ni: usize,
+    c: &ConvSpec,
+    plan: &Plan,
+    src_idx: usize,
+    src: &Canvas,
+    (dst_idx, dst): (usize, &Canvas),
+) {
+    prefill_conv_blocks_dw(em, ni, c, plan);
+    let tap_list = taps(c.k);
+    let cfg = ConvCfg { stride: c.stride as u8, shift: c.shift, relu: c.relu };
+    let off = src.pad - c.pad;
+    em.push(Cmd::SetConv(cfg));
+
+    // SRAM per tile: [input (c_per_group planes)] [out staging 16 planes]
+    let in_tile_px_max =
+        plan.tiles.iter().map(|t| t.ih * t.iw).max().unwrap() * plan.c_per_group;
+
+    for tile in &plan.tiles {
+        let seg_start = em.program.len();
+        let in_px = tile.ih * tile.iw;
+        let sram_in = 0u32;
+        let sram_out = in_tile_px_max as u32;
+        debug_assert!(
+            (in_tile_px_max + tile.oh * tile.ow * NUM_CU) * 2 <= SRAM_BYTES,
+            "plan exceeded SRAM"
+        );
+        for cgi in 0..plan.c_groups {
+            let c0 = cgi * plan.c_per_group;
+            let cn = plan.c_per_group.min(c.cin - c0);
+            em.push(Cmd::LoadBias(BiasLoad { dram_px: em.bcache[&(ni, cgi, 0)] as u32 }));
+            for ci in 0..cn {
+                em.push(Cmd::LoadImage(DmaDesc {
+                    dram_px: src.px_canvas(c0 + ci, off + tile.iy0, off + tile.ix0) as u32,
+                    sram_px: sram_in + (ci * in_px) as u32,
+                    row_px: tile.iw as u32,
+                    rows: tile.ih as u16,
+                    dram_pitch: src.cw as u32,
+                    sram_pitch: tile.iw as u32,
+                }));
+            }
+            em.push(Cmd::Sync);
+            for (ti, tp) in tap_list.iter().enumerate() {
+                let (woff, _) = em.wcache[&(ni, cgi, 0, ti, 0)];
+                em.push(Cmd::LoadWeights(WeightLoad { dram_px: woff as u32, cn: 1 }));
+                let mut flags = PASS_DW;
+                if ti == 0 {
+                    flags |= PASS_FIRST;
+                }
+                if ti + 1 == tap_list.len() {
+                    flags |= PASS_LAST;
+                }
+                em.push(Cmd::Conv(ConvPass {
+                    src_px: sram_in,
+                    acc_px: 0,
+                    dst_px: sram_out,
+                    ih: tile.ih as u16,
+                    iw: tile.iw as u16,
+                    ctot: cn as u16,
+                    c0: 0,
+                    cn: cn as u16,
+                    oh: tile.oh as u16,
+                    ow: tile.ow as u16,
+                    dy: tp.dy,
+                    dx: tp.dx,
+                    flags,
+                    mn: cn as u16,
+                    dpp: 0,
+                    dpl: 0,
+                }));
+            }
+            // store the cn finished channel planes
+            for m in 0..cn {
+                em.push(Cmd::Store(DmaDesc {
+                    dram_px: dst.px(c0 + m, tile.oy0, tile.ox0) as u32,
+                    sram_px: sram_out + (m * tile.oh * tile.ow) as u32,
+                    row_px: tile.ow as u32,
+                    rows: tile.oh as u16,
+                    dram_pitch: dst.cw as u32,
+                    sram_pitch: tile.ow as u32,
+                }));
+            }
+            em.push(Cmd::Sync);
+        }
+        em.end_segment(
+            ni,
+            seg_start,
+            Some(cfg),
+            vec![Region {
+                canvas: src_idx,
+                c0: 0,
+                c1: c.cin,
+                y0: off + tile.iy0,
+                y1: off + tile.iy0 + tile.ih,
+                x0: off + tile.ix0,
+                x1: off + tile.ix0 + tile.iw,
+            }],
+            Region {
+                canvas: dst_idx,
+                c0: 0,
+                c1: c.cout,
+                y0: dst.pad + tile.oy0,
+                y1: dst.pad + tile.oy0 + tile.oh,
+                x0: dst.pad + tile.ox0,
+                x1: dst.pad + tile.ox0 + tile.ow,
+            },
+        );
+    }
+}
+
+/// Emit a fused depthwise→1×1-pointwise pair as one node program
+/// attributed to the pointwise node. Per tile: the depthwise phase
+/// writes all `C` finished channel planes into SRAM *staging* (via the
+/// pass's `dpp`/`dpl` strided store), then the pointwise phase runs
+/// normal 1×1 passes straight from staging — the dw→pw intermediate
+/// never round-trips through DRAM.
+///
+/// Staging planes are `pt.ih × pt.iw` = `(oh+2) × (ow+2)` — exactly the
+/// input window a k=1 conv pass scans (kernel decomposition pads 1×1 to
+/// 3×3). The 2-px margin is never zeroed: every margin pixel only ever
+/// multiplies a zero-padded weight, which contributes exactly 0 in the
+/// wrapping arithmetic.
+#[allow(clippy::too_many_arguments)]
+fn emit_fused_dwpw(
+    em: &mut Emitter,
+    (di, dw): (usize, &ConvSpec),
+    dwplan: &Plan,
+    (ni, pw): (usize, &ConvSpec),
+    pwplan: &Plan,
+    src_idx: usize,
+    src: &Canvas,
+    (dst_idx, dst): (usize, &Canvas),
+    emit_threads: usize,
+) -> anyhow::Result<()> {
+    prefill_conv_blocks_dw(em, di, dw, dwplan);
+    prefill_conv_blocks(em, ni, pw, pwplan, emit_threads);
+    let c_mid = dw.cout; // dw output channels = pw input channels
+    let dw_taps = taps(dw.k);
+    let dw_cfg = ConvCfg { stride: dw.stride as u8, shift: dw.shift, relu: dw.relu };
+    let pw_cfg = ConvCfg { stride: 1, shift: pw.shift, relu: pw.relu };
+    let off = src.pad - dw.pad;
+    anyhow::ensure!(
+        dwplan.tiles.len() == pwplan.tiles.len(),
+        "fused {}+{}: tile counts disagree",
+        dw.name,
+        pw.name
+    );
+    em.push(Cmd::SetConv(dw_cfg));
+
+    // worst-tile SRAM: [dw input group][staging C planes][pw out 16 planes]
+    let in_px_max =
+        dwplan.tiles.iter().map(|t| t.ih * t.iw).max().unwrap() * dwplan.c_per_group;
+    let s_max = pwplan.tiles.iter().map(|t| t.ih * t.iw).max().unwrap();
+    let out_px_max = pwplan.tiles.iter().map(|t| t.oh * t.ow).max().unwrap();
+    let sram_need = (in_px_max + c_mid * s_max + out_px_max * NUM_CU) * 2;
+    anyhow::ensure!(
+        sram_need <= SRAM_BYTES,
+        "fused {}+{}: SRAM staging {sram_need} B exceeds the bank",
+        dw.name,
+        pw.name
+    );
+
+    for (dt, pt) in dwplan.tiles.iter().zip(&pwplan.tiles) {
+        anyhow::ensure!(
+            (dt.oy0, dt.ox0, dt.oh, dt.ow) == (pt.oy0, pt.ox0, pt.oh, pt.ow),
+            "fused {}+{}: tile grids disagree",
+            dw.name,
+            pw.name
+        );
+        let seg_start = em.program.len();
+        em.push(Cmd::SetConv(dw_cfg));
+        let in_px = dt.ih * dt.iw;
+        let s_px = pt.ih * pt.iw; // one staging plane
+        let sram_in = 0u32;
+        let sram_stage = in_px_max as u32;
+        let sram_out = sram_stage + (c_mid * s_px) as u32;
+
+        // ---- phase 1: depthwise into SRAM staging ----
+        for cgi in 0..dwplan.c_groups {
+            let c0 = cgi * dwplan.c_per_group;
+            let cn = dwplan.c_per_group.min(c_mid - c0);
+            em.push(Cmd::LoadBias(BiasLoad { dram_px: em.bcache[&(di, cgi, 0)] as u32 }));
+            for ci in 0..cn {
+                em.push(Cmd::LoadImage(DmaDesc {
+                    dram_px: src.px_canvas(c0 + ci, off + dt.iy0, off + dt.ix0) as u32,
+                    sram_px: sram_in + (ci * in_px) as u32,
+                    row_px: dt.iw as u32,
+                    rows: dt.ih as u16,
+                    dram_pitch: src.cw as u32,
+                    sram_pitch: dt.iw as u32,
+                }));
+            }
+            em.push(Cmd::Sync);
+            for (ti, tp) in dw_taps.iter().enumerate() {
+                let (woff, _) = em.wcache[&(di, cgi, 0, ti, 0)];
+                em.push(Cmd::LoadWeights(WeightLoad { dram_px: woff as u32, cn: 1 }));
+                let mut flags = PASS_DW;
+                if ti == 0 {
+                    flags |= PASS_FIRST;
+                }
+                if ti + 1 == dw_taps.len() {
+                    flags |= PASS_LAST;
+                }
+                em.push(Cmd::Conv(ConvPass {
+                    src_px: sram_in,
+                    acc_px: 0,
+                    dst_px: sram_stage + (c0 * s_px) as u32,
+                    ih: dt.ih as u16,
+                    iw: dt.iw as u16,
+                    ctot: cn as u16,
+                    c0: 0,
+                    cn: cn as u16,
+                    oh: dt.oh as u16,
+                    ow: dt.ow as u16,
+                    dy: tp.dy,
+                    dx: tp.dx,
+                    flags,
+                    mn: cn as u16,
+                    dpp: pt.iw as u16,
+                    dpl: s_px as u16,
+                }));
+            }
+        }
+
+        // ---- phase 2: pointwise mixer straight from staging ----
+        em.push(Cmd::SetConv(pw_cfg));
+        let mg = pw.cout;
+        for mt in 0..pwplan.m_tiles {
+            em.push(Cmd::LoadBias(BiasLoad { dram_px: em.bcache[&(ni, 0, mt)] as u32 }));
+            let mn = (mg - mt * NUM_CU).min(NUM_CU) as u16;
+            for cgi in 0..pwplan.c_groups {
+                let c0 = cgi * pwplan.c_per_group;
+                let cn = pwplan.c_per_group.min(c_mid - c0);
+                let (woff, _) = em.wcache[&(ni, 0, mt, 0, cgi)];
+                em.push(Cmd::LoadWeights(WeightLoad { dram_px: woff as u32, cn: cn as u16 }));
+                let mut flags = 0u8;
+                if cgi == 0 {
+                    flags |= PASS_FIRST;
+                }
+                if cgi + 1 == pwplan.c_groups {
+                    flags |= PASS_LAST;
+                }
+                em.push(Cmd::Conv(ConvPass {
+                    src_px: sram_stage + (c0 * s_px) as u32,
+                    acc_px: 0,
+                    dst_px: sram_out,
+                    ih: pt.ih as u16,
+                    iw: pt.iw as u16,
+                    ctot: cn as u16,
+                    c0: 0,
+                    cn: cn as u16,
+                    oh: pt.oh as u16,
+                    ow: pt.ow as u16,
+                    dy: 0,
+                    dx: 0,
+                    flags,
+                    mn,
+                    dpp: 0,
+                    dpl: 0,
+                }));
+            }
+            for f in 0..NUM_CU {
+                let m = mt * NUM_CU + f;
+                if m >= mg {
+                    break;
+                }
+                em.push(Cmd::Store(DmaDesc {
+                    dram_px: dst.px(m, pt.oy0, pt.ox0) as u32,
+                    sram_px: sram_out + (f * pt.oh * pt.ow) as u32,
+                    row_px: pt.ow as u32,
+                    rows: pt.oh as u16,
+                    dram_pitch: dst.cw as u32,
+                    sram_pitch: pt.ow as u32,
+                }));
+            }
+            em.push(Cmd::Sync);
+        }
+        em.end_segment(
+            ni,
+            seg_start,
+            Some(dw_cfg),
+            vec![Region {
+                canvas: src_idx,
+                c0: 0,
+                c1: dw.cin,
+                y0: off + dt.iy0,
+                y1: off + dt.iy0 + dt.ih,
+                x0: off + dt.ix0,
+                x1: off + dt.ix0 + dt.iw,
+            }],
+            Region {
+                canvas: dst_idx,
+                c0: 0,
+                c1: pw.cout,
+                y0: dst.pad + pt.oy0,
+                y1: dst.pad + pt.oy0 + pt.oh,
+                x0: dst.pad + pt.ox0,
+                x1: dst.pad + pt.ox0 + pt.ow,
+            },
+        );
+    }
+    Ok(())
 }
 
 /// Emit one pool node: channel-chunked SRAM-resident pooling.
@@ -940,7 +1384,8 @@ mod tests {
     #[test]
     fn segments_partition_the_program() {
         // (vgg16 omitted: compiling its full weight image is bench-scale)
-        for name in ["quicknet", "facenet", "alexnet", "edgenet", "widenet", "gapnet"] {
+        for name in ["quicknet", "facenet", "alexnet", "edgenet", "widenet", "gapnet", "mobilenet"]
+        {
             let graph = zoo::graph_by_name(name).unwrap();
             let compiled = compile_graph(&graph).unwrap();
             let mut covered = 0usize;

@@ -60,6 +60,19 @@ pub struct Plan {
     pub in_tile_bytes: usize,
     /// Output staging bytes (one 16-feature group of one tile).
     pub out_tile_bytes: usize,
+    /// Depthwise fast-path schedule: `c_per_group` (≤ 16) channel
+    /// *planes* packed across the engine width per pass, `m_tiles` = 1.
+    pub dw: bool,
+    /// Pointwise node only: fuse with its depthwise producer — the dw
+    /// output streams through SRAM staging instead of a DRAM
+    /// round-trip. Requires this plan's grid to equal the producer's.
+    pub fuse_dw: bool,
+}
+
+/// A conv is depthwise-eligible when every channel is its own group:
+/// the packed schedule runs 16 channel planes per pass instead of one.
+pub fn dw_eligible(spec: &ConvSpec) -> bool {
+    spec.groups == spec.cin && spec.cout == spec.cin
 }
 
 /// Errors a plan request can hit.
@@ -123,6 +136,16 @@ fn candidate_sram(tile: &Tile, c_per_group: usize) -> (usize, usize, usize) {
     (in_bytes, out_bytes, w_bytes)
 }
 
+/// Depthwise variant: the weight stage holds a single 9×16 block per
+/// pass (one 3×3 filter per lane), regardless of how many channel
+/// planes are resident.
+fn candidate_sram_dw(tile: &Tile, c_per_group: usize) -> (usize, usize, usize) {
+    let in_bytes = tile.ih * tile.iw * c_per_group * 2;
+    let out_bytes = tile.oh * tile.ow * NUM_CU * 2;
+    let w_bytes = 9 * NUM_CU * 2;
+    (in_bytes, out_bytes, w_bytes)
+}
+
 /// Materialize the full [`Plan`] for an explicitly chosen grid and
 /// channel grouping — the planner's candidate enumerator picks
 /// `(gy, gx, c_per_group)` analytically and builds the executable plan
@@ -141,9 +164,26 @@ pub fn plan_with_grid(
         (w + 2 * spec.pad - spec.k) / spec.stride + 1,
     );
     let kp = 3 * ceil_div(spec.k, 3);
-    let cg_in = spec.cin / spec.groups;
     let tiles = tiles_for_grid((oh, ow), (gy, gx), spec.stride, kp);
     let worst = tiles.iter().max_by_key(|t| t.ih * t.iw).expect("grid produces tiles").clone();
+    if dw_eligible(spec) {
+        let cpg = c_per_group.min(NUM_CU).min(spec.cin);
+        let (ib, ob, wb) = candidate_sram_dw(&worst, cpg);
+        return Plan {
+            gy,
+            gx,
+            tiles,
+            c_per_group: cpg,
+            c_groups: ceil_div(spec.cin, cpg),
+            m_tiles: 1,
+            sram_bytes: ib + ob + wb,
+            in_tile_bytes: ib,
+            out_tile_bytes: ob,
+            dw: true,
+            fuse_dw: false,
+        };
+    }
+    let cg_in = spec.cin / spec.groups;
     let (ib, ob, wb) = candidate_sram(&worst, c_per_group);
     Plan {
         gy,
@@ -155,6 +195,8 @@ pub fn plan_with_grid(
         sram_bytes: ib + ob + wb,
         in_tile_bytes: ib,
         out_tile_bytes: ob,
+        dw: false,
+        fuse_dw: false,
     }
 }
 
@@ -178,7 +220,9 @@ pub fn plan_conv_budget(
         (w + 2 * spec.pad - spec.k) / spec.stride + 1,
     );
     let kp = 3 * ceil_div(spec.k, 3);
-    let cg_in = spec.cin / spec.groups; // channels per conv group
+    let dw = dw_eligible(spec);
+    // depthwise packs channel planes across lanes; others group cin/groups
+    let cg_in = if dw { spec.cin.min(NUM_CU) } else { spec.cin / spec.groups };
     // grid search: smallest tile count first, square-ish grids preferred
     for tiles_target in 1..=oh * ow {
         let mut grids: Vec<(usize, usize)> = Vec::new();
@@ -210,18 +254,28 @@ pub fn plan_conv_budget(
                 .clone();
             let mut c_per_group = cg_in;
             loop {
-                let (ib, ob, wb) = candidate_sram(&worst, c_per_group);
+                let (ib, ob, wb) = if dw {
+                    candidate_sram_dw(&worst, c_per_group)
+                } else {
+                    candidate_sram(&worst, c_per_group)
+                };
                 if ib + ob + wb <= sram_budget {
                     let plan = Plan {
                         gy,
                         gx,
                         tiles,
                         c_per_group,
-                        c_groups: ceil_div(cg_in, c_per_group),
-                        m_tiles: ceil_div(spec.cout / spec.groups, NUM_CU),
+                        c_groups: if dw {
+                            ceil_div(spec.cin, c_per_group)
+                        } else {
+                            ceil_div(cg_in, c_per_group)
+                        },
+                        m_tiles: if dw { 1 } else { ceil_div(spec.cout / spec.groups, NUM_CU) },
                         sram_bytes: ib + ob + wb,
                         in_tile_bytes: ib,
                         out_tile_bytes: ob,
+                        dw,
+                        fuse_dw: false,
                     };
                     return Ok(plan);
                 }

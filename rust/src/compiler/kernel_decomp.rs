@@ -73,6 +73,32 @@ pub fn tap_weights(
     out
 }
 
+/// Extract one tap's weights for a *depthwise* conv in the packed
+/// channel-lane layout: one 9×16 tap-major block where CU column `m`
+/// holds the 3×3 sub-kernel of channel `c0 + m`. The engine then scans
+/// 16 independent channel planes per pass instead of broadcasting one
+/// channel across 16 feature columns.
+///
+/// `w` is the layer's weight tensor in (K, K, 1, cin) C-order (cg = 1
+/// for depthwise); lanes `cn..16` are zero-padded.
+pub fn dw_tap_weights(w: &[i16], k: usize, cin: usize, tap: Tap, c0: usize, cn: usize) -> Vec<i16> {
+    assert!((1..=crate::NUM_CU).contains(&cn));
+    assert_eq!(w.len(), k * k * cin);
+    let mut out = vec![0i16; 9 * crate::NUM_CU];
+    for ty in 0..3 {
+        for tx in 0..3 {
+            let (fy, fx) = (tap.fy + ty, tap.fx + tx);
+            if fy >= k || fx >= k {
+                continue; // zero padding beyond the real kernel
+            }
+            for m in 0..cn {
+                out[(ty * 3 + tx) * crate::NUM_CU + m] = w[(fy * k + fx) * cin + (c0 + m)];
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +134,31 @@ mod tests {
                 }
             }
             assert!(cover.iter().all(|&c| c == 1), "k={k}");
+        }
+    }
+
+    #[test]
+    fn dw_tap_weight_block_is_channel_per_lane() {
+        // K=5, cin=20: tap (3,3) is partial; lanes beyond cn are zero.
+        let k = 5;
+        let cin = 20usize;
+        let w: Vec<i16> = (0..k * k * cin).map(|i| i as i16 + 1).collect();
+        let tp = taps(5)[3];
+        let (c0, cn) = (16usize, 4usize);
+        let tw = dw_tap_weights(&w, k, cin, tp, c0, cn);
+        assert_eq!(tw.len(), 9 * 16);
+        for ty in 0..3 {
+            for tx in 0..3 {
+                for m in 0..16 {
+                    let got = tw[(ty * 3 + tx) * 16 + m];
+                    let want = if ty < 2 && tx < 2 && m < cn {
+                        w[((3 + ty) * k + 3 + tx) * cin + c0 + m]
+                    } else {
+                        0
+                    };
+                    assert_eq!(got, want, "ty={ty} tx={tx} m={m}");
+                }
+            }
         }
     }
 

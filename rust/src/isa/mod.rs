@@ -65,7 +65,7 @@ impl Opcode {
             Opcode::LoadImage | Opcode::Store => 12,
             Opcode::LoadWeights => 4,
             Opcode::LoadBias => 3,
-            Opcode::Conv => 15,
+            Opcode::Conv => 18,
             Opcode::Pool => 9,
             Opcode::Add => 10,
         }
@@ -109,11 +109,27 @@ pub struct ConvPass {
     /// Kernel-decomposition tap offset.
     pub dy: u8,
     pub dx: u8,
-    pub flags: u8, // bit0 FIRST, bit1 LAST
+    pub flags: u8, // bit0 FIRST, bit1 LAST, bit2 DW
+    /// Active output lanes of this pass (1..=16): the CU columns whose
+    /// features (or, under `PASS_DW`, channels) are real rather than
+    /// zero-padded. Pure accounting — the datapath always runs 16 wide.
+    pub mn: u16,
+    /// `PASS_DW` LAST-pass destination layout: row pitch of each output
+    /// plane (0 ⇒ `ow`, contiguous) ...
+    pub dpp: u16,
+    /// ... and plane stride in pixels (0 ⇒ `oh*ow`). A fused DwPw
+    /// schedule points these at a margined SRAM staging canvas the
+    /// following pointwise pass reads as its input tile.
+    pub dpl: u16,
 }
 
 pub const PASS_FIRST: u8 = 1 << 0;
 pub const PASS_LAST: u8 = 1 << 1;
+/// Depthwise pass: the 144-px weight block holds 16 *independent* 3×3
+/// filters (CU column m = channel `c0+m`'s taps) and lane m scans its
+/// own input plane `src_px + m·ih·iw` — 16 channel planes per round
+/// instead of one channel broadcast to all 16 feature lanes.
+pub const PASS_DW: u8 = 1 << 2;
 
 /// 2-D DMA descriptor (pixel-granular; 1 px = 2 bytes): `rows` rows of
 /// `row_px` pixels, with independent DRAM/SRAM row pitches — the shape
@@ -269,6 +285,9 @@ impl Cmd {
                     p.oh,
                     p.ow,
                     (p.dy as u16) | ((p.dx as u16) << 4) | ((p.flags as u16) << 8),
+                    p.mn,
+                    p.dpp,
+                    p.dpl,
                 ]);
             }
             Cmd::Pool(p) => {
@@ -337,6 +356,9 @@ impl Cmd {
                 let oh = read16(words, i)?;
                 let ow = read16(words, i)?;
                 let packed = read16(words, i)?;
+                let mn = read16(words, i)?;
+                let dpp = read16(words, i)?;
+                let dpl = read16(words, i)?;
                 Cmd::Conv(ConvPass {
                     src_px,
                     acc_px,
@@ -351,6 +373,9 @@ impl Cmd {
                     dy: (packed & 0xF) as u8,
                     dx: ((packed >> 4) & 0xF) as u8,
                     flags: ((packed >> 8) & 0xFF) as u8,
+                    mn,
+                    dpp,
+                    dpl,
                 })
             }
             Opcode::Pool => {
@@ -461,7 +486,10 @@ mod tests {
                 ow: g.usize_in(1, 256) as u16,
                 dy: g.usize_in(0, 9) as u8,
                 dx: g.usize_in(0, 9) as u8,
-                flags: g.usize_in(0, 3) as u8,
+                flags: g.usize_in(0, 7) as u8,
+                mn: g.usize_in(1, 16) as u16,
+                dpp: g.usize_in(0, 4096) as u16,
+                dpl: g.usize_in(0, 4096) as u16,
             }),
             5 => {
                 let avg = g.bool();

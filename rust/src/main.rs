@@ -92,13 +92,14 @@ fn cmd_run(args: Vec<String>) -> anyhow::Result<()> {
         let dev_ms = stats.cycles as f64 * op.cycle_s() * 1e3;
         let e = energy.energy(&stats, op);
         println!(
-            "frame {i}: out{:?} | {} cycles = {:.2} ms on-device ({:.1} fps) | util {:.2} | \
-             {}OPS eff | {:.2} mJ | sim wall {:.0} ms",
+            "frame {i}: out{:?} | {} cycles = {:.2} ms on-device ({:.1} fps) | util {:.2} \
+             (lane {:.2}) | {}OPS eff | {:.2} mJ | sim wall {:.0} ms",
             out.shape(),
             stats.cycles,
             dev_ms,
             1e3 / dev_ms,
             stats.utilization(),
+            stats.lane_utilization(),
             eng(stats.ops() as f64 / (stats.cycles as f64 * op.cycle_s())),
             e.total_j() * 1e3,
             t0.elapsed().as_secs_f64() * 1e3,
@@ -338,18 +339,29 @@ fn cmd_plan_optimize(
     let kb = |b: u64| format!("{:.1}", b as f64 / 1e3);
     let mut t = Table::new(
         &format!("{} decomposition plan — policy {}", net.name, policy.name()),
-        &["node", "grid", "c-grps", "tiles", "sram KB", "prd rd", "mea rd", "prd wr", "mea wr"],
+        &[
+            "node", "grid", "c-grps", "tiles", "sram KB", "prd rd", "mea rd", "prd wr",
+            "mea wr", "lane util",
+        ],
     );
     for (i, node) in net.nodes.iter().enumerate() {
         let pred = &gp.node_traffic[i];
+        // a fused-away depthwise producer runs inside its pointwise
+        // consumer's segments; a fused pointwise node is tagged "+dw"
+        let fused = gp.plans[i].as_ref().is_some_and(|p| p.fuse_dw);
         let (grid, cgrps, tiles, sram) = match gp.reports.iter().find(|r| r.node == i) {
             Some(r) => (
-                format!("{}x{}", r.grid.0, r.grid.1),
+                format!("{}x{}{}", r.grid.0, r.grid.1, if fused { "+dw" } else { "" }),
                 format!("{}", r.c_groups),
                 format!("{}", r.ntiles),
                 format!("{:.1}", r.sram_bytes as f64 / 1e3),
             ),
             None => ("-".into(), "-".into(), "-".into(), "-".into()),
+        };
+        let util = if measured[i].active_cycles == 0 {
+            "-".into()
+        } else {
+            format!("{:.3}", measured[i].lane_utilization())
         };
         t.row(&[
             node.name().to_string(),
@@ -361,6 +373,7 @@ fn cmd_plan_optimize(
             kb(measured[i].dram_read_bytes),
             kb(pred.write_bytes),
             kb(measured[i].dram_write_bytes),
+            util,
         ]);
     }
     t.print();

@@ -53,6 +53,17 @@ pub fn conv_ref_with(x: &Tensor, spec: &ConvSpec, w: &[i16], b: &[i32]) -> Tenso
     out
 }
 
+/// Depthwise conv oracle (`groups == cin == cout`): each output channel
+/// is its own input channel filtered by its own K×K kernel. Pure
+/// delegation to the grouped [`conv_ref`] math — this exists so the
+/// depthwise fast path has a named, shape-checked reference to be
+/// bit-exact against.
+pub fn depthwise_ref(x: &Tensor, spec: &ConvSpec) -> Tensor {
+    assert_eq!(spec.groups, spec.cin, "depthwise: groups == cin");
+    assert_eq!(spec.cout, spec.cin, "depthwise: cout == cin");
+    conv_ref(x, spec)
+}
+
 /// Average pooling oracle: int32 window sum, then round-half-up
 /// division by the window area — the same rounding convention as the
 /// conv requantizer (`fixed::requantize`), so `k = 2` (÷4) is exactly a

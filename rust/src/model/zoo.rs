@@ -249,6 +249,63 @@ pub fn gapnet() -> Graph {
     g
 }
 
+/// Depthwise conv node: `c` independent 3×3 filters (groups = cin =
+/// cout), the layer shape the packed dw fast path exists for.
+fn dwnode(name: &str, stride: usize, c: usize, shift: u8, seed: u32) -> NodeOp {
+    NodeOp::Conv(ConvSpec {
+        name: name.into(),
+        k: 3,
+        stride,
+        pad: 1,
+        cin: c,
+        cout: c,
+        shift,
+        relu: true,
+        wseed: seed,
+        bseed: seed + 1,
+        groups: c,
+    })
+}
+
+/// Pointwise 1×1 mixer node — the fusion partner of [`dwnode`].
+fn pwnode(name: &str, cin: usize, cout: usize, shift: u8, relu: bool, seed: u32) -> NodeOp {
+    NodeOp::Conv(ConvSpec {
+        name: name.into(),
+        k: 1,
+        stride: 1,
+        pad: 0,
+        cin,
+        cout,
+        shift,
+        relu,
+        wseed: seed,
+        bseed: seed + 1,
+        groups: 1,
+    })
+}
+
+/// MobileNet-class stack: a dense stem, two depthwise-separable blocks
+/// (3×3 depthwise → 1×1 pointwise, the second depthwise strided), a
+/// global-average-pool head and a 1×1 scorer. The primary workload of
+/// the depthwise fast path and the fused DwPw lowering: channel widths
+/// 16 and 32 exercise both the single-group (cn = 16) and two-group
+/// packings, and every dw→pw pair is a legal fusion site.
+pub fn mobilenet() -> Graph {
+    let base = 19000;
+    let mut g = Graph::new("mobilenet", 24, 24, 3);
+    let n = |g: &mut Graph, op, ins: &[&str]| {
+        g.add_node(op, ins).expect("mobilenet is well-formed");
+    };
+    n(&mut g, gnode("stem", 3, 1, 3, 16, 9, true, base), &["input"]);
+    n(&mut g, dwnode("dw1", 1, 16, 7, base + 2), &["stem"]);
+    n(&mut g, pwnode("pw1", 16, 32, 9, true, base + 4), &["dw1"]);
+    n(&mut g, dwnode("dw2", 2, 32, 7, base + 6), &["pw1"]);
+    n(&mut g, pwnode("pw2", 32, 32, 10, true, base + 8), &["dw2"]);
+    n(&mut g, NodeOp::Pool(PoolSpec::global_avg("gap", 12)), &["pw2"]);
+    n(&mut g, pwnode("score", 32, 16, 10, false, base + 10), &["gap"]);
+    g
+}
+
 /// Look up a net by name.
 pub fn by_name(name: &str) -> Option<NetSpec> {
     match name {
@@ -267,6 +324,7 @@ pub fn graph_by_name(name: &str) -> Option<Graph> {
         "edgenet" => Some(edgenet()),
         "widenet" => Some(widenet()),
         "gapnet" => Some(gapnet()),
+        "mobilenet" => Some(mobilenet()),
         _ => by_name(name).map(|n| Graph::from_net(&n)),
     }
 }
@@ -320,7 +378,7 @@ pub const ALL: &[&str] = &["quicknet", "facenet", "alexnet", "vgg16"];
 
 /// Every zoo net, including the graph-native topologies.
 pub const GRAPH_ALL: &[&str] =
-    &["quicknet", "facenet", "alexnet", "vgg16", "edgenet", "widenet", "gapnet"];
+    &["quicknet", "facenet", "alexnet", "vgg16", "edgenet", "widenet", "gapnet", "mobilenet"];
 
 #[cfg(test)]
 mod tests {
@@ -405,5 +463,27 @@ mod tests {
         assert_eq!(edgenet().out_shape().unwrap(), (14, 14, 16));
         assert_eq!(widenet().out_shape().unwrap(), (14, 14, 16));
         assert_eq!(gapnet().out_shape().unwrap(), (1, 1, 16));
+    }
+
+    #[test]
+    fn mobilenet_shapes_and_dw_structure() {
+        let g = mobilenet();
+        let shapes = g.validate().unwrap();
+        let by = |n: &str| {
+            g.nodes
+                .iter()
+                .position(|nd| nd.op.name() == n)
+                .unwrap_or_else(|| panic!("missing {n}"))
+        };
+        assert_eq!(shapes[by("stem")], (24, 24, 16));
+        assert_eq!(shapes[by("dw1")], (24, 24, 16));
+        assert_eq!(shapes[by("pw1")], (24, 24, 32));
+        assert_eq!(shapes[by("dw2")], (12, 12, 32));
+        assert_eq!(shapes[by("pw2")], (12, 12, 32));
+        assert_eq!(g.out_shape().unwrap(), (1, 1, 16));
+        for dwn in ["dw1", "dw2"] {
+            let NodeOp::Conv(c) = &g.nodes[by(dwn)].op else { panic!("{dwn} is a conv") };
+            assert!(crate::compiler::decompose::dw_eligible(c), "{dwn}");
+        }
     }
 }

@@ -66,6 +66,8 @@ pub struct ConvCandidate {
     pub out_tile_bytes: usize,
     /// Largest output tile in pixels (ACC BUF constraint).
     pub max_out_px: usize,
+    /// Depthwise fast-path schedule (`emit_conv_dw` lowering).
+    pub dw: bool,
     /// Predicted DRAM traffic of the emitted schedule.
     pub traffic: NodeTraffic,
 }
@@ -149,12 +151,125 @@ pub fn conv_candidate(
         in_tile_bytes,
         out_tile_bytes,
         max_out_px: max_th * max_tw,
+        dw: false,
         traffic: NodeTraffic {
             read_bytes: 2 * (input_px + weight_px + bias_px),
             write_bytes: 2 * output_px,
             macs,
         },
     }
+}
+
+/// Evaluate one `(gy, gx, c_per_group)` *depthwise fast-path* candidate
+/// (`emit_conv_dw` lowering): `c_per_group` ≤ 16 channel planes per
+/// pass across the engine lanes, one 9×16 weight block per (channel
+/// group, tap), every channel's input loaded once per tile.
+pub fn dw_candidate(
+    spec: &ConvSpec,
+    h: usize,
+    w: usize,
+    gy: usize,
+    gx: usize,
+    c_per_group: usize,
+) -> ConvCandidate {
+    debug_assert!(spec.groups == spec.cin && spec.cout == spec.cin);
+    debug_assert!((1..=NUM_CU.min(spec.cin)).contains(&c_per_group));
+    let (oh, ow) = conv_out_shape(spec, h, w);
+    let kp = 3 * spec.k.div_ceil(3);
+    let ntaps = (kp / 3) * (kp / 3);
+    let c_groups = spec.cin.div_ceil(c_per_group);
+    let ntiles = gy * gx;
+
+    let (row_in_sum, max_th, max_ih) = axis_aggregates(oh, gy, spec.stride, kp);
+    let (col_in_sum, max_tw, max_iw) = axis_aggregates(ow, gx, spec.stride, kp);
+    let sum_in_px = row_in_sum * col_in_sum;
+
+    // SRAM footprint shared with `decompose::candidate_sram_dw`.
+    let in_tile_bytes = max_ih * max_iw * c_per_group * 2;
+    let out_tile_bytes = max_th * max_tw * NUM_CU * 2;
+    let w_bytes = PES_PER_CU * NUM_CU * 2;
+
+    let input_px = (sum_in_px * spec.cin) as u64;
+    let weight_px = (ntiles * c_groups * ntaps * PES_PER_CU * NUM_CU) as u64;
+    let bias_px = (ntiles * c_groups * 2 * NUM_CU) as u64;
+    let output_px = (spec.cout * oh * ow) as u64;
+    // the dw pass issues 144 multiplies per output pixel per tap pass
+    let macs = (oh * ow) as u64 * (NUM_CU * PES_PER_CU * ntaps * c_groups) as u64;
+
+    ConvCandidate {
+        gy,
+        gx,
+        c_per_group,
+        c_groups,
+        m_tiles: 1,
+        ntiles,
+        sram_bytes: in_tile_bytes + out_tile_bytes + w_bytes,
+        in_tile_bytes,
+        out_tile_bytes,
+        max_out_px: max_th * max_tw,
+        dw: true,
+        traffic: NodeTraffic {
+            read_bytes: 2 * (input_px + weight_px + bias_px),
+            write_bytes: 2 * output_px,
+            macs,
+        },
+    }
+}
+
+/// Predicted traffic of a fused depthwise→pointwise pair emitted by
+/// `emit_fused_dwpw` on the depthwise candidate's grid: the dw phase
+/// reads its input/weights/biases exactly like `dw_candidate`, the pw
+/// phase re-streams its weights per tile, and the dw→pw intermediate
+/// never touches DRAM — only the pw output is written back. Also
+/// returns the fused pair's peak SRAM bytes (dw input group + `C`
+/// staging planes + pw output staging).
+pub fn fused_dwpw_traffic(
+    dw_spec: &ConvSpec,
+    pw_spec: &ConvSpec,
+    h: usize,
+    w: usize,
+    dw_cand: &ConvCandidate,
+) -> (NodeTraffic, usize) {
+    debug_assert!(pw_spec.k == 1 && pw_spec.stride == 1 && pw_spec.pad == 0);
+    debug_assert_eq!(pw_spec.cin, dw_spec.cout);
+    let (oh, ow) = conv_out_shape(dw_spec, h, w);
+    let kp = 3 * dw_spec.k.div_ceil(3);
+    let ntaps_dw = (kp / 3) * (kp / 3);
+    let c_mid = dw_spec.cout;
+    let m_tiles_pw = pw_spec.cout.div_ceil(NUM_CU);
+    let ntiles = dw_cand.ntiles;
+    let (gy, gx) = (dw_cand.gy, dw_cand.gx);
+
+    let (row_in_sum, _, max_ih) = axis_aggregates(oh, gy, dw_spec.stride, kp);
+    let (col_in_sum, _, max_iw) = axis_aggregates(ow, gx, dw_spec.stride, kp);
+    let sum_in_px = row_in_sum * col_in_sum;
+    // pw staging planes: the 1×1 pass's (th+2)×(tw+2) input window
+    let (_, max_th, max_sh) = axis_aggregates(oh, gy, 1, 3);
+    let (_, max_tw, max_sw) = axis_aggregates(ow, gx, 1, 3);
+
+    let input_px = (sum_in_px * dw_spec.cin) as u64;
+    let dw_weight_px = (ntiles * dw_cand.c_groups * ntaps_dw * PES_PER_CU * NUM_CU) as u64;
+    let dw_bias_px = (ntiles * dw_cand.c_groups * 2 * NUM_CU) as u64;
+    let pw_weight_px = (ntiles * m_tiles_pw * c_mid * PES_PER_CU * NUM_CU) as u64;
+    let pw_bias_px = (ntiles * m_tiles_pw * 2 * NUM_CU) as u64;
+    let output_px = (pw_spec.cout * oh * ow) as u64;
+    let macs = (oh * ow) as u64
+        * (NUM_CU * PES_PER_CU) as u64
+        * (dw_cand.c_groups * ntaps_dw + c_mid * m_tiles_pw) as u64;
+
+    let sram_bytes = (max_ih * max_iw * dw_cand.c_per_group
+        + c_mid * max_sh * max_sw
+        + max_th * max_tw * NUM_CU)
+        * 2;
+    (
+        NodeTraffic {
+            read_bytes: 2
+                * (input_px + dw_weight_px + dw_bias_px + pw_weight_px + pw_bias_px),
+            write_bytes: 2 * output_px,
+            macs,
+        },
+        sram_bytes,
+    )
 }
 
 /// Channel chunking `[ (c0, len), … ]` for a per-channel SRAM cost of

@@ -14,9 +14,11 @@
 //! * Distinct groupings only arise at the distinct values of
 //!   `⌈cg / n⌉`, an O(√cg) set.
 
-use super::cost::{conv_candidate, conv_out_shape, ConvCandidate};
+use super::cost::{conv_candidate, conv_out_shape, dw_candidate, ConvCandidate};
+use crate::compiler::decompose::dw_eligible;
 use crate::model::ConvSpec;
 use crate::sim::accbuf::ACC_TILE_PX;
+use crate::NUM_CU;
 
 /// The distinct values of `⌈cg / n⌉` for `n = 1..=cg`, descending —
 /// every channels-per-group count that yields a distinct `c_groups`.
@@ -37,6 +39,33 @@ pub fn enumerate_conv(
     sram_budget: usize,
 ) -> Vec<ConvCandidate> {
     let (oh, ow) = conv_out_shape(spec, h, w);
+    if dw_eligible(spec) {
+        // Depthwise-eligible layers always lower through the packed
+        // fast path (the materializer `plan_with_grid` does the same),
+        // so only dw candidates are emitted: per grid, the widest
+        // SRAM-feasible lane packing (fewest channel groups = least
+        // weight/bias re-streaming).
+        let mut out = Vec::new();
+        for gy in 1..=oh {
+            if oh.div_ceil(gy) > ACC_TILE_PX {
+                continue;
+            }
+            for gx in 1..=ow {
+                let probe = dw_candidate(spec, h, w, gy, gx, 1);
+                if probe.max_out_px > ACC_TILE_PX || probe.sram_bytes > sram_budget {
+                    continue;
+                }
+                for cpg in (1..=NUM_CU.min(spec.cin)).rev() {
+                    let cand = dw_candidate(spec, h, w, gy, gx, cpg);
+                    if cand.feasible(sram_budget) {
+                        out.push(cand);
+                        break;
+                    }
+                }
+            }
+        }
+        return out;
+    }
     let cg = spec.cin / spec.groups;
     let c_options = channel_group_options(cg);
     let mut out = Vec::new();

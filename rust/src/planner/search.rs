@@ -27,12 +27,12 @@
 //! neighbors' current choices until a sweep changes nothing.
 
 use super::cost::{
-    add_chunks, concat_chunks, est_node_cycles, fixed_node_traffic, pool_chunks, predicted_stats,
-    ConvCandidate, NodeTraffic,
+    add_chunks, concat_chunks, est_node_cycles, fixed_node_traffic, fused_dwpw_traffic,
+    pool_chunks, predicted_stats, ConvCandidate, NodeTraffic,
 };
 use super::enumerate::{enumerate_conv, min_traffic, prune_for_search};
 use super::PlanPolicy;
-use crate::compiler::decompose::{plan_conv_budget, plan_with_grid, split_even, Plan};
+use crate::compiler::decompose::{dw_eligible, plan_conv_budget, plan_with_grid, split_even, Plan};
 use crate::energy::{EnergyModel, OperatingPoint};
 use crate::model::graph::{Graph, NodeOp, NodeRef};
 use crate::model::ConvSpec;
@@ -289,12 +289,36 @@ fn read_shape(
 }
 
 /// Total cross-node dependency edges the compiled segment DAG will
-/// contain under the given per-conv-node grid choices.
-fn count_dep_edges(graph: &Graph, ctx: &DepCtx, grids: &[Option<(usize, usize)>]) -> u64 {
+/// contain under the given per-conv-node grid choices. `fused_dw_of`
+/// mirrors codegen's fusion map (pointwise node → its absorbed
+/// depthwise producer): a fused-away producer emits no segments, and
+/// the pointwise node's segments read the producer's *input* canvas
+/// through the depthwise tile geometry instead.
+fn count_dep_edges(
+    graph: &Graph,
+    ctx: &DepCtx,
+    grids: &[Option<(usize, usize)>],
+    fused_dw_of: &[Option<usize>],
+) -> u64 {
+    let n = graph.nodes.len();
+    let mut fused_away = vec![false; n];
+    for di in fused_dw_of.iter().flatten() {
+        fused_away[*di] = true;
+    }
     let writes: Vec<WShape> =
-        (0..graph.nodes.len()).map(|ni| write_shape(graph, ctx, ni, grids[ni])).collect();
+        (0..n).map(|ni| write_shape(graph, ctx, ni, grids[ni])).collect();
     let mut total = 0u64;
     for (ni, node) in graph.nodes.iter().enumerate() {
+        if fused_away[ni] {
+            continue; // emits no segments of its own
+        }
+        if let Some(di) = fused_dw_of[ni] {
+            // the fused segment's only read is the dw input window
+            if let NodeRef::Node(p) = graph.nodes[di].inputs[0] {
+                total += count_edge(&writes[p], &read_shape(graph, ctx, di, 0, grids[di]));
+            }
+            continue;
+        }
         for (idx, r) in node.inputs.iter().enumerate() {
             // An Add reads both operands inside ONE segment; if both
             // edges point at the same producer the emitter dedupes the
@@ -443,14 +467,25 @@ pub fn plan_graph_budget(
                 let Some(info) = info else { continue };
                 let plan = plan_conv_budget(&info.spec, info.h, info.w, sram_budget)
                     .map_err(|e| anyhow::anyhow!("conv {}: {e}", info.spec.name))?;
-                sel[i] = Some(super::cost::conv_candidate(
-                    &info.spec,
-                    info.h,
-                    info.w,
-                    plan.gy,
-                    plan.gx,
-                    plan.c_per_group,
-                ));
+                sel[i] = Some(if plan.dw {
+                    super::cost::dw_candidate(
+                        &info.spec,
+                        info.h,
+                        info.w,
+                        plan.gy,
+                        plan.gx,
+                        plan.c_per_group,
+                    )
+                } else {
+                    super::cost::conv_candidate(
+                        &info.spec,
+                        info.h,
+                        info.w,
+                        plan.gy,
+                        plan.gx,
+                        plan.c_per_group,
+                    )
+                });
             }
         }
         PlanPolicy::MinTraffic | PlanPolicy::DagAware => {
@@ -477,6 +512,67 @@ pub fn plan_graph_budget(
         }
     }
 
+    // ---- depthwise→pointwise fusion post-pass ---------------------------
+    // For the searching policies, absorb a 1×1 pointwise conv into its
+    // depthwise producer when the fused lowering (dw output staged in
+    // SRAM, never round-tripped through DRAM) beats the best *separate*
+    // plans on predicted traffic. `fuse[ni] = Some(di)` mirrors the
+    // fusion map codegen derives; the dw node's candidate is re-pinned
+    // to the grid that minimizes the fused traffic.
+    let mut fuse: Vec<Option<usize>> = vec![None; n];
+    let mut fused_cost: Vec<Option<(NodeTraffic, usize)>> = vec![None; n];
+    if matches!(policy, PlanPolicy::MinTraffic | PlanPolicy::DagAware) {
+        for ni in 0..n {
+            let NodeOp::Conv(pw) = &graph.nodes[ni].op else { continue };
+            if pw.k != 1 || pw.stride != 1 || pw.pad != 0 || pw.groups != 1 {
+                continue;
+            }
+            let Some(&NodeRef::Node(di)) = graph.nodes[ni].inputs.first() else { continue };
+            let NodeOp::Conv(dw) = &graph.nodes[di].op else { continue };
+            if !dw_eligible(dw) || graph.output == NodeRef::Node(di) || fuse[di].is_some() {
+                continue;
+            }
+            let consumers = graph
+                .nodes
+                .iter()
+                .flat_map(|nd| nd.inputs.iter())
+                .filter(|r| matches!(r, NodeRef::Node(j) if *j == di))
+                .count();
+            if consumers != 1 {
+                continue;
+            }
+            let dinfo = infos[di].as_ref().expect("dw conv info");
+            // Best fused grid: the dw node's grid drives both phases,
+            // so minimize the *fused* traffic over its candidates.
+            let mut best: Option<(ConvCandidate, NodeTraffic, usize)> = None;
+            for dc in enumerate_conv(&dinfo.spec, dinfo.h, dinfo.w, sram_budget) {
+                let (t, sram) = fused_dwpw_traffic(&dinfo.spec, pw, dinfo.h, dinfo.w, &dc);
+                if sram > sram_budget {
+                    continue;
+                }
+                let better = match &best {
+                    None => true,
+                    Some((_, bt, _)) => t.total_bytes() < bt.total_bytes(),
+                };
+                if better {
+                    best = Some((dc, t, sram));
+                }
+            }
+            let Some((dc, ft, fsram)) = best else { continue };
+            let separate = sel[di].expect("dw candidate").traffic.total_bytes()
+                + sel[ni].expect("pw candidate").traffic.total_bytes();
+            if ft.total_bytes() < separate {
+                sel[di] = Some(dc);
+                fuse[ni] = Some(di);
+                fused_cost[ni] = Some((ft, fsram));
+            }
+        }
+    }
+    let mut fused_away = vec![false; n];
+    for di in fuse.iter().flatten() {
+        fused_away[*di] = true;
+    }
+
     // ---- finalize --------------------------------------------------------
     let mut plans: Vec<Option<Plan>> = vec![None; n];
     let mut node_traffic = vec![NodeTraffic::default(); n];
@@ -486,17 +582,7 @@ pub fn plan_graph_budget(
         match (&node.op, &sel[i]) {
             (NodeOp::Conv(_), Some(cand)) => {
                 let info = infos[i].as_ref().expect("conv info");
-                plans[i] = Some(plan_with_grid(
-                    &info.spec,
-                    info.h,
-                    info.w,
-                    cand.gy,
-                    cand.gx,
-                    cand.c_per_group,
-                ));
-                node_traffic[i] = cand.traffic;
-                grids[i] = Some((cand.gy, cand.gx));
-                reports.push(NodePlanReport {
+                let mut report = NodePlanReport {
                     node: i,
                     name: info.spec.name.clone(),
                     grid: (cand.gy, cand.gx),
@@ -504,7 +590,46 @@ pub fn plan_graph_budget(
                     ntiles: cand.ntiles,
                     sram_bytes: cand.sram_bytes,
                     traffic: cand.traffic,
-                });
+                };
+                if let Some(di) = fuse[i] {
+                    // pointwise absorbed into its depthwise producer:
+                    // ride the dw grid, chunk staged channels 16-wide
+                    let dc = sel[di].expect("fused dw candidate");
+                    let mut plan = plan_with_grid(
+                        &info.spec,
+                        info.h,
+                        info.w,
+                        dc.gy,
+                        dc.gx,
+                        info.spec.cin.min(crate::NUM_CU),
+                    );
+                    plan.fuse_dw = true;
+                    let (ft, fsram) = fused_cost[i].expect("fused traffic");
+                    report.grid = (dc.gy, dc.gx);
+                    report.c_groups = plan.c_groups;
+                    report.ntiles = plan.tiles.len();
+                    report.sram_bytes = fsram;
+                    report.traffic = ft;
+                    node_traffic[i] = ft;
+                    grids[i] = Some((dc.gy, dc.gx));
+                    plans[i] = Some(plan);
+                } else {
+                    plans[i] = Some(plan_with_grid(
+                        &info.spec,
+                        info.h,
+                        info.w,
+                        cand.gy,
+                        cand.gx,
+                        cand.c_per_group,
+                    ));
+                    // a fused-away dw node's traffic is carried by its
+                    // pointwise consumer
+                    node_traffic[i] =
+                        if fused_away[i] { NodeTraffic::default() } else { cand.traffic };
+                    report.traffic = node_traffic[i];
+                    grids[i] = Some((cand.gy, cand.gx));
+                }
+                reports.push(report);
             }
             (op, _) => {
                 let ins: Vec<(usize, usize, usize)> =
@@ -513,7 +638,7 @@ pub fn plan_graph_budget(
             }
         }
     }
-    let dep_edges = count_dep_edges(graph, &ctx, &grids);
+    let dep_edges = count_dep_edges(graph, &ctx, &grids, &fuse);
     let est_critical_path_cycles = critical_path(graph, &ctx, &node_traffic, &grids);
     Ok(GraphPlan {
         policy,
@@ -536,6 +661,8 @@ fn descend(
     sel: &mut [Option<ConvCandidate>],
 ) {
     let n = graph.nodes.len();
+    // fusion is decided in a post-pass; the descent scores unfused plans
+    let no_fuse: Vec<Option<usize>> = vec![None; n];
     let score = |sel: &[Option<ConvCandidate>]| -> f64 {
         let mut traffic = vec![NodeTraffic::default(); n];
         let mut grids: Vec<Option<(usize, usize)>> = vec![None; n];
@@ -554,7 +681,7 @@ fn descend(
             }
             total_bytes += traffic[i].total_bytes();
         }
-        let deps = count_dep_edges(graph, ctx, &grids);
+        let deps = count_dep_edges(graph, ctx, &grids, &no_fuse);
         let cp = critical_path(graph, ctx, &traffic, &grids);
         total_bytes as f64 + DEP_EDGE_BYTES * deps as f64 + CP_BYTES_PER_CYCLE * cp as f64
     };

@@ -14,7 +14,7 @@ use super::engine::CuEngine;
 use super::fastconv;
 use super::sram::{BufferBank, WORD_PX};
 use super::SimStats;
-use crate::isa::{AddPass, Cmd, ConvCfg, ConvPass, PoolPass, PASS_FIRST, PASS_LAST};
+use crate::isa::{AddPass, Cmd, ConvCfg, ConvPass, PoolPass, PASS_DW, PASS_FIRST, PASS_LAST};
 use crate::{NUM_CU, PES_PER_CU};
 
 /// Deferred DRAM writes produced by [`Accelerator::exec_shared`]:
@@ -288,6 +288,9 @@ impl Accelerator {
     /// streamed inner through the column-buffer schedule. The SRAM tile
     /// is planar (channel-major): `src_px + (ch*ih + y)*iw + x`.
     fn exec_conv(&mut self, p: ConvPass) {
+        if p.flags & PASS_DW != 0 {
+            return self.exec_conv_dw(p);
+        }
         let st = self.conv_cfg.stride as usize;
         assert!(st >= 1);
         let (ih, iw) = (p.ih as usize, p.iw as usize);
@@ -325,6 +328,9 @@ impl Accelerator {
         let t = fastconv::scan_timing(ih, iw, oh, ow, st);
         let chan_w = PES_PER_CU * NUM_CU; // one channel: 9 taps × 16 features
         let scan_macs = (oh * ow * chan_w) as u64;
+        // occupied lanes: mn real output features out of the 16 issued
+        let mn = (p.mn as usize).clamp(1, NUM_CU);
+        let scan_lane_macs = (oh * ow * PES_PER_CU * mn) as u64;
         let mut macs = 0u64;
         for ci in 0..cn {
             // §4.2: synchronized filter update at the channel boundary;
@@ -350,6 +356,7 @@ impl Accelerator {
             );
             self.engine.charge_muls(scan_macs);
             macs += scan_macs;
+            self.stats.lane_macs += scan_lane_macs;
 
             // Column-buffer fill + streaming traffic + scan cycles
             // (compute- or stream-bound), per the analytic model.
@@ -374,6 +381,89 @@ impl Accelerator {
             }
             self.sram.charge_write_px(oh * ow * NUM_CU);
             self.stats.cycles += (oh * ow * NUM_CU).div_ceil(WORD_PX) as u64;
+        }
+
+        self.stats.sram_reads = self.sram.reads;
+        self.stats.sram_writes = self.sram.writes;
+        self.stats.pool_ops = self.pool_ops_total;
+    }
+
+    /// One **depthwise** convolution pass (`PASS_DW`): the 16 CU columns
+    /// hold 16 *independent* 3×3 filters and lane `m` scans its own
+    /// input plane, so one pass covers `cn` channels per tap instead of
+    /// broadcasting one channel across 16 feature lanes. The pass loop
+    /// is tap-outer (one `LoadWeights`+`Conv` per decomposed tap);
+    /// `PASS_LAST` requantizes and writes `cn` channel planes at
+    /// `dst + m·dpl`, row pitch `dpp` (SRAM staging for the fused
+    /// DwPw path, plain planar tiles otherwise).
+    fn exec_conv_dw(&mut self, p: ConvPass) {
+        let st = self.conv_cfg.stride as usize;
+        assert!(st >= 1);
+        let (ih, iw) = (p.ih as usize, p.iw as usize);
+        let (oh, ow) = (p.oh as usize, p.ow as usize);
+        let (dy, dx) = (p.dy as usize, p.dx as usize);
+        let cn = p.cn as usize;
+        assert!((1..=NUM_CU).contains(&cn), "dw pass packs 1..=16 channel lanes");
+        assert!(oh * ow <= ACC_TILE_PX, "output tile exceeds ACC BUF (compiler bug)");
+        assert!(dy + (oh - 1) * st + 3 <= ih, "tap row range exceeds tile");
+        assert!(dx + (ow - 1) * st + 3 <= iw, "tap col range exceeds tile");
+
+        if p.flags & PASS_FIRST != 0 {
+            self.accbuf.init_plane(0, oh * ow);
+            self.stats.cycles += (oh * ow) as u64 / WORD_PX as u64 + 1;
+        }
+
+        let (wstage, ready) = self.wstage.pop_front().expect("Conv without LoadWeights");
+        assert_eq!(
+            wstage.len(),
+            PES_PER_CU * NUM_CU,
+            "dw weight block is one 9x16 tap-major block (compiler bug)"
+        );
+        if ready > self.stats.cycles {
+            self.stats.dma_stall_cycles += ready - self.stats.cycles;
+            self.stats.cycles = ready;
+        }
+        self.engine.prefetch_channel(&wstage);
+        self.stats.cycles += self.engine.update_weights();
+
+        let t = fastconv::dw_scan_timing(ih, iw, oh, ow, st, cn);
+        fastconv::dwconv_scan_tap_major(
+            self.sram.raw(),
+            p.src_px as usize,
+            ih * iw,
+            iw,
+            st,
+            (dy, dx),
+            (oh, ow),
+            cn,
+            &wstage,
+            self.accbuf.plane_mut(0, oh * ow),
+        );
+        // the array still *issues* all 144 MACs per output pixel; only
+        // cn·9 of them land on occupied lanes
+        let scan_macs = (oh * ow * PES_PER_CU * NUM_CU) as u64;
+        self.engine.charge_muls(scan_macs);
+        self.stats.macs += scan_macs;
+        self.stats.lane_macs += (oh * ow * PES_PER_CU * cn) as u64;
+        self.stats.cycles += t.fill_cycles;
+        self.sram.charge_read_px(t.stream_px);
+        self.stats.cycles += t.scan_cycles;
+        self.stats.active_cycles += t.active_cycles;
+
+        if p.flags & PASS_LAST != 0 {
+            let (shift, relu) = (self.conv_cfg.shift, self.conv_cfg.relu);
+            let dst = p.dst_px as usize;
+            let dpp = if p.dpp == 0 { ow } else { p.dpp as usize };
+            let dpl = if p.dpl == 0 { oh * ow } else { p.dpl as usize };
+            for px in 0..oh * ow {
+                let q = self.accbuf.requant_px(0, px, shift, relu);
+                let (y, x) = (px / ow, px % ow);
+                for (m, &v) in q.iter().take(cn).enumerate() {
+                    self.sram.write_px(dst + m * dpl + y * dpp + x, v);
+                }
+            }
+            self.sram.charge_write_px(oh * ow * cn);
+            self.stats.cycles += (oh * ow * cn).div_ceil(WORD_PX) as u64;
         }
 
         self.stats.sram_reads = self.sram.reads;

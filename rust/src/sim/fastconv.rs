@@ -57,6 +57,80 @@ pub fn scan_timing(ih: usize, iw: usize, oh: usize, ow: usize, stride: usize) ->
     }
 }
 
+/// Cycle/traffic model of one *depthwise* scan: `cn` channel planes
+/// stream through the single-ported bank (one word budget per plane,
+/// like the per-channel scans they replace) while all `cn` lanes
+/// compute in parallel — so compute is `oh·ow` once, not per channel.
+pub fn dw_scan_timing(
+    ih: usize,
+    iw: usize,
+    oh: usize,
+    ow: usize,
+    stride: usize,
+    cn: usize,
+) -> ScanTiming {
+    let rows = ((oh - 1) * stride + 3).min(ih);
+    let compute = (oh * ow) as u64;
+    let stream = (cn * (rows * iw).div_ceil(WORD_PX)) as u64;
+    ScanTiming {
+        fill_cycles: super::colbuf::fill_words(iw) as u64,
+        scan_cycles: compute.max(stream),
+        active_cycles: compute,
+        stream_px: cn * rows * iw,
+    }
+}
+
+/// Accumulate one *depthwise* scan — one 3×3 tap offset at `stride` —
+/// into the int32 ACC plane. Unlike [`conv_scan_tap_major`], the 16 CU
+/// columns hold 16 *independent* filters (`wtap[tap·16 + m]` = channel
+/// `m`'s tap) and lane `m` scans its own input plane at
+/// `plane + m·plane_stride`: one pass covers `cn` channels instead of
+/// broadcasting one channel to 16 feature lanes. Lanes `cn..16` are
+/// left untouched (their weights are zero-padded anyway).
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv_scan_tap_major(
+    sram: &[i16],
+    plane: usize,
+    plane_stride: usize,
+    iw: usize,
+    stride: usize,
+    (dy, dx): (usize, usize),
+    (oh, ow): (usize, usize),
+    cn: usize,
+    wtap: &[i16],
+    acc: &mut [i32],
+) {
+    assert_eq!(wtap.len(), 9 * NUM_CU, "one dw block = 9 taps x 16 channel lanes");
+    assert_eq!(acc.len(), oh * ow * NUM_CU, "ACC plane shape mismatch");
+    assert!((1..=NUM_CU).contains(&cn));
+    assert!(stride >= 1);
+    let span = (ow - 1) * stride + 1;
+    for m in 0..cn {
+        // lane m: a scalar 9-tap sweep over its private channel plane
+        let mut w = [0i32; 9];
+        for (t, wd) in w.iter_mut().enumerate() {
+            *wd = wtap[t * NUM_CU + m] as i32;
+        }
+        let pbase = plane + m * plane_stride;
+        for oy in 0..oh {
+            let row0 = pbase + (oy * stride + dy) * iw + dx;
+            let arow = &mut acc[oy * ow * NUM_CU..(oy + 1) * ow * NUM_CU];
+            for ty in 0..3 {
+                for tx in 0..3 {
+                    let wm = w[ty * 3 + tx];
+                    let base = row0 + ty * iw + tx;
+                    let src = &sram[base..base + span];
+                    for (a, &px) in
+                        arow.chunks_exact_mut(NUM_CU).zip(src.iter().step_by(stride))
+                    {
+                        a[m] = a[m].wrapping_add((px as i32).wrapping_mul(wm));
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Accumulate one channel scan — one 3×3 tap offset (`dy`, `dx`) at
 /// `stride` — into the int32 ACC plane `acc` (`oh·ow` pixels × 16
 /// feature lanes, pixel-major).
@@ -176,6 +250,66 @@ mod tests {
         for i in 0..both.len() {
             assert_eq!(both[i], a[i].wrapping_add(b[i]), "lane {i}");
         }
+    }
+
+    /// The depthwise scan must equal 16 independent single-lane scans:
+    /// lane m of the dw kernel == lane m of a broadcast scan whose
+    /// weight block is zero except in column m, run over plane m.
+    #[test]
+    fn dw_scan_matches_per_lane_broadcast_scans() {
+        check("dw scan == per-lane scans", 30, |g| {
+            let stride = if g.bool() { 1 } else { 2 };
+            let oh = g.usize_in(1, 6);
+            let ow = g.usize_in(1, 6);
+            let (dy, dx) = (g.usize_in(0, 2), g.usize_in(0, 2));
+            let ih = dy + (oh - 1) * stride + 3;
+            let iw = dx + (ow - 1) * stride + 3;
+            let cn = g.usize_in(1, NUM_CU);
+            let ps = ih * iw;
+            let sram = g.vec_i16(cn * ps, -32768, 32767);
+            let wtap = g.vec_i16(9 * NUM_CU, -32768, 32767);
+
+            let mut got = vec![0i32; oh * ow * NUM_CU];
+            dwconv_scan_tap_major(
+                &sram, 0, ps, iw, stride, (dy, dx), (oh, ow), cn, &wtap, &mut got,
+            );
+            for m in 0..cn {
+                let mut wm = vec![0i16; 9 * NUM_CU];
+                for t in 0..9 {
+                    wm[t * NUM_CU + m] = wtap[t * NUM_CU + m];
+                }
+                let mut want = vec![0i32; oh * ow * NUM_CU];
+                conv_scan_tap_major(
+                    &sram, m * ps, iw, stride, (dy, dx), (oh, ow), &wm, &mut want,
+                );
+                for px in 0..oh * ow {
+                    let (a, b) = (got[px * NUM_CU + m], want[px * NUM_CU + m]);
+                    if a != b {
+                        return Err(format!("lane {m} px {px}: dw {a} != broadcast {b}"));
+                    }
+                }
+            }
+            // untouched lanes stay zero
+            for m in cn..NUM_CU {
+                if (0..oh * ow).any(|px| got[px * NUM_CU + m] != 0) {
+                    return Err(format!("lane {m} >= cn={cn} was written"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Depthwise timing: compute charged once for all 16 lanes, stream
+    /// charged per plane.
+    #[test]
+    fn dw_timing_model() {
+        let t = dw_scan_timing(10, 8, 8, 6, 1, 16);
+        assert_eq!(t.active_cycles, 48); // one tile scan, not 16
+        assert_eq!(t.stream_px, 16 * 10 * 8);
+        assert_eq!(t.scan_cycles, 16 * 10); // stream-bound: 16 planes x 80/8
+        let t1 = dw_scan_timing(35, 35, 32, 32, 1, 2);
+        assert_eq!(t1.active_cycles, 1024);
+        assert_eq!(t1.scan_cycles, 1024.max(2 * (34 * 35usize).div_ceil(8) as u64));
     }
 
     /// The analytic scan timing reproduces the documented cycle model:

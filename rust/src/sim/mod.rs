@@ -49,6 +49,12 @@ pub struct SimStats {
     pub active_cycles: u64,
     /// Multiply-accumulate operations actually performed.
     pub macs: u64,
+    /// MACs on *occupied* lanes only: a conv pass issues 144 multiplies
+    /// per cycle regardless, but only `9 × mn` of them (mn = active CU
+    /// columns) feed real outputs. `macs` keeps the issued count (the
+    /// energy/cost models depend on it); this counter is the numerator
+    /// of the engine-width utilization the depthwise fast path improves.
+    pub lane_macs: u64,
     /// SRAM word accesses (16 B words; single-port — reads + writes).
     pub sram_reads: u64,
     pub sram_writes: u64,
@@ -70,6 +76,7 @@ impl SimStats {
         self.cycles += o.cycles;
         self.active_cycles += o.active_cycles;
         self.macs += o.macs;
+        self.lane_macs += o.lane_macs;
         self.sram_reads += o.sram_reads;
         self.sram_writes += o.sram_writes;
         self.dram_read_bytes += o.dram_read_bytes;
@@ -86,6 +93,20 @@ impl SimStats {
             return 0.0;
         }
         self.macs as f64 / (crate::NUM_CU * crate::PES_PER_CU) as f64 / self.cycles as f64
+    }
+
+    /// Engine-width utilization: occupied-lane MACs / (144 × active
+    /// cycles). A grouped depthwise lowering runs one real channel per
+    /// 16-wide round (≈ 9/144 = 0.0625); the packed depthwise schedule
+    /// fills all 16 lanes (→ 1.0). Active cycles, not total: this is a
+    /// datapath-occupancy number, DMA stalls are accounted elsewhere.
+    pub fn lane_utilization(&self) -> f64 {
+        if self.active_cycles == 0 {
+            return 0.0;
+        }
+        self.lane_macs as f64
+            / (crate::NUM_CU * crate::PES_PER_CU) as f64
+            / self.active_cycles as f64
     }
 
     /// Paper-style ops (1 MAC = 2 ops).

@@ -11,7 +11,7 @@ use kn_stream::compiler::{
 };
 use kn_stream::model::reference::run_graph_ref;
 use kn_stream::model::{zoo, ConvSpec, Graph, NodeOp, Tensor};
-use kn_stream::planner::cost::conv_candidate;
+use kn_stream::planner::cost::{conv_candidate, dw_candidate};
 use kn_stream::planner::enumerate::enumerate_conv;
 use kn_stream::planner::{plan_graph, PlanPolicy};
 use kn_stream::sim::accbuf::ACC_TILE_PX;
@@ -19,14 +19,24 @@ use kn_stream::sim::SimConfig;
 use kn_stream::util::prop::{check, Gen};
 use kn_stream::SRAM_BYTES;
 
-/// A random legal conv spec plus an input plane it accepts.
+/// A random legal conv spec plus an input plane it accepts. One third
+/// of the draws are depthwise (`groups == cin == cout`), so the packed
+/// dw lowering rides through every property below.
 fn random_conv(g: &mut Gen) -> (ConvSpec, usize, usize) {
     let k = *g.choose(&[1usize, 3, 5]);
     let stride = *g.choose(&[1usize, 2]);
     let pad = g.usize_in(0, k / 2);
-    let groups = if g.bool() { 1 } else { 2 };
-    let cin = groups * g.usize_in(1, 6);
-    let cout = groups * g.usize_in(1, 12);
+    let (groups, cin, cout) = match g.usize_in(0, 2) {
+        0 => {
+            let c = g.usize_in(1, 6);
+            (1, c, g.usize_in(1, 12))
+        }
+        1 => (2, 2 * g.usize_in(1, 6), 2 * g.usize_in(1, 12)),
+        _ => {
+            let c = g.usize_in(1, 24);
+            (c, c, c) // depthwise
+        }
+    };
     // plane sized so at least one output pixel exists at this stride
     let h = k + stride * g.usize_in(0, 14);
     let w = k + stride * g.usize_in(0, 14);
@@ -120,9 +130,16 @@ fn enumerated_candidates_are_feasible_and_consistent() {
                     plan.sram_bytes, cand.sram_bytes
                 ));
             }
-            let re = conv_candidate(&spec, h, w, cand.gy, cand.gx, cand.c_per_group);
+            let re = if cand.dw {
+                dw_candidate(&spec, h, w, cand.gy, cand.gx, cand.c_per_group)
+            } else {
+                conv_candidate(&spec, h, w, cand.gy, cand.gx, cand.c_per_group)
+            };
             if re.traffic != cand.traffic {
                 return Err("candidate evaluation is not deterministic".into());
+            }
+            if re.dw != plan.dw {
+                return Err(format!("candidate dw={} but plan dw={}", re.dw, plan.dw));
             }
         }
         Ok(())
@@ -134,7 +151,7 @@ fn enumerated_candidates_are_feasible_and_consistent() {
 /// (linear, residual Add, branch+Concat, avg/GAP pooling, groups).
 #[test]
 fn dep_edge_mirror_matches_compiled_segments() {
-    for name in ["quicknet", "facenet", "edgenet", "widenet", "gapnet", "alexnet"] {
+    for name in ["quicknet", "facenet", "edgenet", "widenet", "gapnet", "alexnet", "mobilenet"] {
         let graph = zoo::graph_by_name(name).unwrap();
         for policy in PlanPolicy::ALL {
             let gp = plan_graph(&graph, policy).unwrap();
@@ -155,7 +172,7 @@ fn dep_edge_mirror_matches_compiled_segments() {
 /// concat terms, summed).
 #[test]
 fn graph_traffic_predictions_are_exact_per_frame() {
-    for name in ["quicknet", "edgenet", "widenet", "gapnet"] {
+    for name in ["quicknet", "edgenet", "widenet", "gapnet", "mobilenet"] {
         let graph = zoo::graph_by_name(name).unwrap();
         let frame = Tensor::random_image(11, graph.in_h, graph.in_w, graph.in_c);
         for policy in PlanPolicy::ALL {
@@ -176,7 +193,7 @@ fn graph_traffic_predictions_are_exact_per_frame() {
 /// pipeline depths {1, 3}.
 #[test]
 fn all_policies_are_bit_exact_under_parallel_and_pipelined_execution() {
-    for name in ["quicknet", "facenet", "edgenet", "widenet", "gapnet"] {
+    for name in ["quicknet", "facenet", "edgenet", "widenet", "gapnet", "mobilenet"] {
         let graph = zoo::graph_by_name(name).unwrap();
         let frames: Vec<Tensor> = (0..3)
             .map(|s| Tensor::random_image(s, graph.in_h, graph.in_w, graph.in_c))
@@ -205,7 +222,7 @@ fn all_policies_are_bit_exact_under_parallel_and_pipelined_execution() {
 /// to the historical direct compile — program, DRAM image, segments.
 #[test]
 fn heuristic_policy_is_byte_identical_to_direct_compile() {
-    for name in ["quicknet", "facenet", "edgenet", "widenet", "gapnet"] {
+    for name in ["quicknet", "facenet", "edgenet", "widenet", "gapnet", "mobilenet"] {
         let graph = zoo::graph_by_name(name).unwrap();
         let direct = compile_graph(&graph).unwrap();
         let gp = plan_graph(&graph, PlanPolicy::Heuristic).unwrap();
@@ -281,4 +298,85 @@ fn dag_aware_measurably_beats_heuristic_on_channel_heavy_layers() {
             "{name}: dag-aware traffic {ptr} blew past heuristic {htr} + slack"
         );
     }
+}
+
+/// Tentpole acceptance on the MobileNet-class zoo graph: the searching
+/// policies must fuse at least one dw→pw pair on merit, per-node
+/// predictions must stay exact under fusion (the fused-away dw node
+/// measures zero traffic; its pw consumer carries the fused cost), and
+/// against the legacy one-channel-per-scan grouped lowering the packed
+/// dw path must show ≥4× measured lane utilization while the fused
+/// plan moves strictly fewer DRAM bytes.
+#[test]
+fn mobilenet_fusion_is_selected_exact_and_beats_grouped() {
+    let graph = zoo::graph_by_name("mobilenet").unwrap();
+    let frame = Tensor::random_image(5, graph.in_h, graph.in_w, graph.in_c);
+    let want = run_graph_ref(&graph, &frame);
+
+    for policy in [PlanPolicy::MinTraffic, PlanPolicy::DagAware] {
+        let gp = plan_graph(&graph, policy).unwrap();
+        let fused: Vec<usize> = (0..graph.nodes.len())
+            .filter(|&i| gp.plans[i].as_ref().is_some_and(|p| p.fuse_dw))
+            .collect();
+        assert!(!fused.is_empty(), "{}: no dw->pw pair fused", policy.name());
+        let compiled = compile_graph_with_plans(&graph, &gp.plans).unwrap();
+        let runner = NetRunner::from_compiled(compiled, SimConfig::default()).unwrap();
+        let (out, per_node) = runner.run_frame_node_stats(&frame).unwrap();
+        assert_eq!(out, want, "{}: fused output", policy.name());
+        for (i, node) in graph.nodes.iter().enumerate() {
+            let p = &gp.node_traffic[i];
+            let m = &per_node[i];
+            let who = format!("{}/{}", policy.name(), node.op.name());
+            assert_eq!(p.read_bytes, m.dram_read_bytes, "{who} read bytes");
+            assert_eq!(p.write_bytes, m.dram_write_bytes, "{who} write bytes");
+            assert_eq!(p.macs, m.macs, "{who} macs");
+        }
+    }
+
+    // Legacy baseline: force the pre-packing grouped lowering on the dw
+    // layers (one channel per scan pass) and compare measured counters.
+    let is_dw = |op: &NodeOp| match op {
+        NodeOp::Conv(c) => c.groups == c.cin && c.cout == c.cin && c.cin > 1,
+        _ => false,
+    };
+    let heur = plan_graph(&graph, PlanPolicy::Heuristic).unwrap();
+    let mut grouped_plans = heur.plans.clone();
+    for (i, node) in graph.nodes.iter().enumerate() {
+        if is_dw(&node.op) {
+            let p = grouped_plans[i].as_mut().unwrap();
+            p.dw = false;
+            p.c_per_group = 1;
+            p.c_groups = 1;
+            p.m_tiles = 1;
+        }
+    }
+    let grouped = NetRunner::from_compiled(
+        compile_graph_with_plans(&graph, &grouped_plans).unwrap(),
+        SimConfig::default(),
+    )
+    .unwrap();
+    let packed = NetRunner::from_graph_with_policy(&graph, PlanPolicy::Heuristic).unwrap();
+    let fusedr = NetRunner::from_graph_with_policy(&graph, PlanPolicy::MinTraffic).unwrap();
+
+    let (gout, gnode) = grouped.run_frame_node_stats(&frame).unwrap();
+    let (pout, pnode) = packed.run_frame_node_stats(&frame).unwrap();
+    assert_eq!(gout, want, "grouped lowering output");
+    assert_eq!(pout, want, "packed lowering output");
+    for (i, node) in graph.nodes.iter().enumerate() {
+        if is_dw(&node.op) {
+            let (pu, gu) = (pnode[i].lane_utilization(), gnode[i].lane_utilization());
+            assert!(
+                pu >= 4.0 * gu,
+                "{}: packed lane util {pu:.4} < 4x grouped {gu:.4}",
+                node.op.name()
+            );
+        }
+    }
+
+    let (_, gtot) = grouped.run_frame(&frame).unwrap();
+    let (fout, ftot) = fusedr.run_frame(&frame).unwrap();
+    assert_eq!(fout, want, "fused planner output");
+    let gtr = gtot.dram_read_bytes + gtot.dram_write_bytes;
+    let ftr = ftot.dram_read_bytes + ftot.dram_write_bytes;
+    assert!(ftr < gtr, "fused DRAM traffic {ftr} must beat grouped lowering {gtr}");
 }
