@@ -12,7 +12,10 @@
 //! forces channel re-streaming); outputs stay bit-identical, which the
 //! measured section re-verifies against the heuristic compile.
 
-use kn_stream::compiler::{compile_graph_threads, NetRunner};
+use kn_stream::analysis::analyze;
+use kn_stream::compiler::{
+    compile_graph_threads, compile_graph_with_options, CompileOptions, NetRunner,
+};
 use kn_stream::model::{zoo, Tensor};
 use kn_stream::planner::{plan_graph_budget, PlanPolicy};
 use kn_stream::util::bench::{bench_once, JsonReport, Table};
@@ -157,6 +160,44 @@ fn main() {
             obj(vec![
                 ("threads", Json::Num(threads as f64)),
                 ("wall_ms", Json::Num(r.mean.as_secs_f64() * 1e3)),
+            ]),
+        );
+    }
+    t.print();
+
+    // ---- static analysis: full-schedule lint cost per net ----------------
+    let mut t = Table::new(
+        "schedule lint at 128K dag-aware — analyzer wall time",
+        &["net", "segs", "hazards", "lint ms"],
+    );
+    let opts = CompileOptions { verify: false, ..Default::default() };
+    for name in EXEC_NETS {
+        let graph = zoo::graph_by_name(name).unwrap();
+        let gp = plan_graph_budget(&graph, PlanPolicy::DagAware, SRAM_BYTES).unwrap();
+        let net = compile_graph_with_options(&graph, Some(&gp.plans), &opts).unwrap();
+        let mut hazards = 0u64;
+        let mut segs = 0usize;
+        let r = bench_once(&format!("lint_{name}"), || {
+            let a = analyze(&net).unwrap();
+            assert!(a.is_clean(), "{name}: {}", a.report());
+            hazards = a.hazards_checked;
+            segs = a.segments;
+            hazards
+        });
+        let lint_ms = r.mean.as_secs_f64() * 1e3;
+        t.row(&[
+            name.to_string(),
+            format!("{segs}"),
+            format!("{hazards}"),
+            format!("{lint_ms:.2}"),
+        ]);
+        report.push_row(
+            "lint",
+            obj(vec![
+                ("net", s(name)),
+                ("segments", Json::Num(segs as f64)),
+                ("hazards_checked", Json::Num(hazards as f64)),
+                ("lint_ms", Json::Num(lint_ms)),
             ]),
         );
     }

@@ -1,0 +1,1138 @@
+//! Static schedule analysis: an ISA linter and segment-DAG race
+//! detector over compiled command streams.
+//!
+//! The compiler *promises* a long list of invariants — every DMA stays
+//! inside the allocated DRAM image, every SRAM access fits the 128 KB
+//! bank, stores land only in canvas valid regions (the zero apron that
+//! implements conv padding must stay zero), loads never read canvas
+//! bytes no store produced, `PASS_DW` field encodings match the staging
+//! planes they address, and the segment dependency DAG covers every
+//! cross-segment data hazard. Codegen asserts some of this where it is
+//! authored, with `debug_assert!`s that vanish in release builds.
+//!
+//! This module re-derives all of it **from the artifact**: it decodes
+//! the encoded word stream back to commands (flagging encode/decode
+//! drift), interprets each segment symbolically over DRAM/SRAM address
+//! intervals, and recomputes every pairwise read/write intersection
+//! between segments — independently of codegen's region bookkeeping —
+//! checking each RAW/WAR/WAW conflict against reachability in the
+//! declared DAG. Anything off-contract becomes a typed [`Diagnostic`]
+//! naming the defect class, the segment, and the offending commands.
+//!
+//! The independence is the point: the analyzer shares *constants* with
+//! the compiler (canvas layout geometry, `SRAM_BYTES`, `ACC_TILE_PX`)
+//! but none of its region/dep code, so a bug in either side surfaces as
+//! a disagreement instead of being trusted twice. The mutation harness
+//! in `tests/integration_analysis.rs` seeds one defect per class and
+//! asserts the analyzer kills all of them.
+
+use std::collections::VecDeque;
+
+use crate::compiler::CompiledNet;
+use crate::isa::{Cmd, ConvCfg, DmaDesc, PASS_DW, PASS_LAST};
+use crate::model::graph::{Graph, NodeOp, NodeRef};
+use crate::sim::accbuf::ACC_TILE_PX;
+use crate::{NUM_CU, PES_PER_CU, SRAM_BYTES};
+
+/// SRAM capacity in pixels (1 px = 2 bytes).
+const SRAM_CAP_PX: u64 = (SRAM_BYTES / 2) as u64;
+
+/// Flavor of a cross-segment data conflict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HazardKind {
+    /// Read-after-write: the later segment reads what the earlier wrote.
+    Raw,
+    /// Write-after-read: the later segment overwrites what the earlier reads.
+    War,
+    /// Write-after-write: both segments write the same bytes.
+    Waw,
+}
+
+impl HazardKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            HazardKind::Raw => "RAW",
+            HazardKind::War => "WAR",
+            HazardKind::Waw => "WAW",
+        }
+    }
+}
+
+/// Defect classes the analyzer reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiagKind {
+    /// Encoded words fail to decode, or decode to different commands
+    /// than the in-memory program (encode/decode drift).
+    DecodeDrift,
+    /// A command touches SRAM beyond the configured capacity.
+    SramOob,
+    /// A compute pass's output overlaps its own input region, two
+    /// operands of a pass alias, or compute output lands on the
+    /// segment's DMA-staged input allocation.
+    SramOverlap,
+    /// The segment's touched SRAM high-water mark exceeds capacity.
+    SramFootprint,
+    /// Weight shadow-bank misuse: `Conv` with nothing staged, staging
+    /// past depth 2, a stale block left at segment end, or a staged
+    /// block whose length mismatches the pass that consumes it.
+    WeightStage,
+    /// A DMA access falls outside the allocated DRAM image.
+    DramOob,
+    /// A store lands outside every canvas valid region: in the zero
+    /// apron/margin, the input canvas, or the weight/bias blocks.
+    BadStore,
+    /// A load reads valid canvas bytes that no store ever writes.
+    UninitRead,
+    /// `PASS_DW`/lane field inconsistency: `mn` or depthwise `cn`
+    /// outside `1..=16`, or `dpp`/`dpl` smaller than the plane extents
+    /// the pass writes.
+    DwField,
+    /// Conv/pool geometry violates the datapath contract: output tile
+    /// past the ACC BUF partial plane, tap window outside the input
+    /// tile, a conv pass with no `SetConv` in effect, stride 0.
+    ConvShape,
+    /// Segment bookkeeping broken: ranges overlap or escape the
+    /// program, a segment does not end on its `Sync` barrier, or
+    /// non-prologue commands sit between segments.
+    SegmentForm,
+    /// A dependency edge points at the segment itself or forward:
+    /// the declared segment order is not topological.
+    NonTopological,
+    /// A cross-segment hazard with no covering dependency path.
+    UncoveredHazard(HazardKind),
+}
+
+/// One analyzer finding.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub kind: DiagKind,
+    /// Segment the finding is anchored to (`None` = whole-program).
+    pub segment: Option<usize>,
+    /// Offending command indices into the analyzed program.
+    pub cmds: Vec<usize>,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{:?}]", self.kind)?;
+        if let Some(s) = self.segment {
+            write!(f, " seg {s}")?;
+        }
+        if !self.cmds.is_empty() {
+            write!(f, " cmd {:?}", self.cmds)?;
+        }
+        write!(f, ": {}", self.detail)
+    }
+}
+
+/// Analyzer verdict over one compiled net.
+#[derive(Debug, Default)]
+pub struct Analysis {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Cross-segment interval conflicts the race detector examined
+    /// (covered hazards included) — a coverage meter, not a defect
+    /// count.
+    pub hazards_checked: u64,
+    pub segments: usize,
+}
+
+impl Analysis {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// All diagnostics, one per line.
+    pub fn report(&self) -> String {
+        self.diagnostics.iter().map(|d| format!("  {d}\n")).collect()
+    }
+
+    pub fn has_kind(&self, kind: DiagKind) -> bool {
+        self.diagnostics.iter().any(|d| d.kind == kind)
+    }
+}
+
+/// Analyze a compiled net end to end: encodes the program to its wire
+/// form and lints the words (so encode/decode drift is always checked).
+pub fn analyze(net: &CompiledNet) -> anyhow::Result<Analysis> {
+    analyze_words(net, &Cmd::encode_program(&net.program))
+}
+
+/// Analyze a compiled net against an explicit word stream (the form a
+/// command FIFO would consume). Errors only on analysis-infrastructure
+/// failure (an invalid graph); schedule defects come back as
+/// diagnostics.
+pub fn analyze_words(net: &CompiledNet, words: &[u16]) -> anyhow::Result<Analysis> {
+    let mut diags: Vec<Diagnostic> = Vec::new();
+
+    // ---- 1. decode the wire form; flag drift against the in-memory program
+    let prog: Vec<Cmd> = match Cmd::decode_program(words) {
+        Ok(decoded) => {
+            if decoded != net.program {
+                let at = decoded
+                    .iter()
+                    .zip(&net.program)
+                    .position(|(a, b)| a != b)
+                    .unwrap_or_else(|| decoded.len().min(net.program.len()));
+                diags.push(Diagnostic {
+                    kind: DiagKind::DecodeDrift,
+                    segment: None,
+                    cmds: vec![at],
+                    detail: format!(
+                        "decoded program diverges from the in-memory program at command {at}: \
+                         {:?} vs {:?} ({} vs {} commands)",
+                        decoded.get(at),
+                        net.program.get(at),
+                        decoded.len(),
+                        net.program.len()
+                    ),
+                });
+            }
+            decoded
+        }
+        Err(e) => {
+            diags.push(Diagnostic {
+                kind: DiagKind::DecodeDrift,
+                segment: None,
+                cmds: vec![e.cmd],
+                detail: format!("word stream does not decode: {e}"),
+            });
+            // Fall back to the in-memory program so the remaining
+            // checks still run.
+            net.program.clone()
+        }
+    };
+
+    // ---- 2. re-derive the DRAM canvas layout from the graph alone
+    let canvases = canvas_layouts(&net.graph)?;
+    let weights_base = canvases.last().map_or(0, |cv| (cv.base + cv.len_px()) as u64);
+    let dram_px = net.dram_px as u64;
+
+    check_segment_form(net, &prog, &mut diags);
+
+    // ---- 3. per-segment symbolic interpretation
+    let mut seg_access: Vec<SegAccess> = Vec::with_capacity(net.segments.len());
+    let mut canvas_loads: Vec<(usize, usize, Vec<Iv>)> = Vec::new();
+    for (si, seg) in net.segments.iter().enumerate() {
+        seg_access.push(analyze_segment(
+            si,
+            seg,
+            &prog,
+            &canvases,
+            weights_base,
+            dram_px,
+            &mut canvas_loads,
+            &mut diags,
+        ));
+    }
+
+    // ---- 4. uninitialized-read detection (halo-aware)
+    let all_writes = merge_ivs(seg_access.iter().flat_map(|a| a.dram_w.iter().copied()).collect());
+    check_uninit_reads(&canvas_loads, &canvases, &all_writes, &mut diags);
+
+    // ---- 5. race detection over the segment DAG
+    let hazards_checked = check_races(net, &prog, &seg_access, &mut diags);
+
+    Ok(Analysis { diagnostics: diags, hazards_checked, segments: net.segments.len() })
+}
+
+// ---------------------------------------------------------------------------
+// interval arithmetic (half-open pixel ranges)
+
+/// Half-open pixel interval `[start, end)`.
+type Iv = (u64, u64);
+
+/// Sort and coalesce (touching intervals merge; empties drop).
+fn merge_ivs(mut v: Vec<Iv>) -> Vec<Iv> {
+    v.retain(|iv| iv.0 < iv.1);
+    v.sort_unstable();
+    let mut out: Vec<Iv> = Vec::with_capacity(v.len());
+    for iv in v {
+        match out.last_mut() {
+            Some(last) if iv.0 <= last.1 => last.1 = last.1.max(iv.1),
+            _ => out.push(iv),
+        }
+    }
+    out
+}
+
+/// First overlap between two merged interval sets, if any.
+fn sets_overlap(a: &[Iv], b: &[Iv]) -> Option<Iv> {
+    let (first_a, last_a) = (a.first()?, a.last()?);
+    let (first_b, last_b) = (b.first()?, b.last()?);
+    if last_a.1 <= first_b.0 || last_b.1 <= first_a.0 {
+        return None; // disjoint bounding boxes — the common case
+    }
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if lo < hi {
+            return Some((lo, hi));
+        }
+        if a[i].1 <= b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    None
+}
+
+/// First pixel of `iv` not covered by the merged set, if any.
+fn first_uncovered(iv: Iv, set: &[Iv]) -> Option<u64> {
+    let mut at = iv.0;
+    // First interval that could cover `at`.
+    let mut idx = set.partition_point(|s| s.1 <= at);
+    while at < iv.1 {
+        match set.get(idx) {
+            Some(&(lo, hi)) if lo <= at => {
+                at = hi;
+                idx += 1;
+            }
+            _ => return Some(at),
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// canvas layout re-derivation (independent of codegen's `Canvas`)
+
+/// One DRAM activation canvas: planar (c, ch, cw) with `pad` zero
+/// border top/left and a `margin` extension bottom/right; the valid
+/// region of channel `k` is rows `pad..pad+h` × cols `pad..pad+w`.
+struct CanvasLayout {
+    base: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    pad: usize,
+    ch: usize,
+    cw: usize,
+}
+
+impl CanvasLayout {
+    fn len_px(&self) -> usize {
+        self.c * self.ch * self.cw
+    }
+}
+
+/// Recompute the canvas layout the compiler promises: per-canvas pad is
+/// the largest consumer conv pad, the margin absorbs kernel-
+/// decomposition overshoot (`Kp − K`), and bases are allocated
+/// sequentially from DRAM 0 in canvas order (input first, then one
+/// canvas per node).
+fn canvas_layouts(graph: &Graph) -> anyhow::Result<Vec<CanvasLayout>> {
+    let shapes = graph.validate()?;
+    let n_canvas = graph.nodes.len() + 1;
+    let mut pad = vec![0usize; n_canvas];
+    let mut need = vec![0usize; n_canvas];
+    for node in &graph.nodes {
+        if let NodeOp::Conv(c) = &node.op {
+            let kp = 3 * c.k.div_ceil(3);
+            let j = canvas_of(node.inputs[0]);
+            pad[j] = pad[j].max(c.pad);
+            need[j] = need[j].max(c.pad + kp - c.k);
+        }
+    }
+    let mut out = Vec::with_capacity(n_canvas);
+    let mut base = 0usize;
+    for (j, (pad, need)) in pad.into_iter().zip(need).enumerate() {
+        let r = if j == 0 { NodeRef::Input } else { NodeRef::Node(j - 1) };
+        let (h, w, c) = graph.shape_of(r, &shapes);
+        let margin = need.saturating_sub(pad);
+        let (ch, cw) = (h + 2 * pad + margin, w + 2 * pad + margin);
+        let cv = CanvasLayout { base, h, w, c, pad, ch, cw };
+        base += cv.len_px();
+        out.push(cv);
+    }
+    Ok(out)
+}
+
+/// Canvas index of a node input (0 = graph input, node *i* → *i + 1*).
+fn canvas_of(r: NodeRef) -> usize {
+    match r {
+        NodeRef::Input => 0,
+        NodeRef::Node(i) => i + 1,
+    }
+}
+
+/// Index of the canvas containing DRAM pixel `px` (caller guarantees
+/// `px < weights_base`).
+fn canvas_at(canvases: &[CanvasLayout], px: u64) -> usize {
+    canvases.partition_point(|cv| (cv.base as u64) <= px).saturating_sub(1)
+}
+
+// ---------------------------------------------------------------------------
+// per-command access derivation
+
+/// DRAM row intervals a DMA descriptor touches on the DRAM side.
+fn dma_dram_rows(d: &DmaDesc) -> Vec<Iv> {
+    (0..u64::from(d.rows))
+        .map(|r| {
+            let a = u64::from(d.dram_px) + r * u64::from(d.dram_pitch);
+            (a, a + u64::from(d.row_px))
+        })
+        .collect()
+}
+
+/// SRAM row intervals a DMA descriptor touches on the SRAM side.
+fn dma_sram_rows(d: &DmaDesc) -> Vec<Iv> {
+    (0..u64::from(d.rows))
+        .map(|r| {
+            let a = u64::from(d.sram_px) + r * u64::from(d.sram_pitch);
+            (a, a + u64::from(d.row_px))
+        })
+        .collect()
+}
+
+/// DRAM intervals a command reads (weight/bias fetches included).
+fn dram_reads(cmd: &Cmd) -> Vec<Iv> {
+    match cmd {
+        Cmd::LoadImage(d) => dma_dram_rows(d),
+        Cmd::LoadWeights(w) => {
+            let a = u64::from(w.dram_px);
+            vec![(a, a + u64::from(w.cn) * (PES_PER_CU * NUM_CU) as u64)]
+        }
+        Cmd::LoadBias(b) => {
+            let a = u64::from(b.dram_px);
+            vec![(a, a + 2 * NUM_CU as u64)]
+        }
+        _ => Vec::new(),
+    }
+}
+
+/// DRAM intervals a command writes.
+fn dram_writes(cmd: &Cmd) -> Vec<Iv> {
+    match cmd {
+        Cmd::Store(d) => dma_dram_rows(d),
+        _ => Vec::new(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// per-segment symbolic interpreter
+
+/// Merged DRAM read/write footprints of one segment.
+#[derive(Default)]
+struct SegAccess {
+    dram_r: Vec<Iv>,
+    dram_w: Vec<Iv>,
+}
+
+fn diag(
+    diags: &mut Vec<Diagnostic>,
+    kind: DiagKind,
+    segment: Option<usize>,
+    cmds: Vec<usize>,
+    detail: String,
+) {
+    diags.push(Diagnostic { kind, segment, cmds, detail });
+}
+
+/// Check SRAM intervals against capacity; returns the highest pixel
+/// touched (for the footprint high-water mark).
+fn check_sram(
+    ivs: &[Iv],
+    si: usize,
+    ci: usize,
+    what: &str,
+    diags: &mut Vec<Diagnostic>,
+) -> u64 {
+    let mut top = 0u64;
+    for &(lo, hi) in ivs {
+        top = top.max(hi);
+        if hi > SRAM_CAP_PX || lo >= SRAM_CAP_PX {
+            diag(
+                diags,
+                DiagKind::SramOob,
+                Some(si),
+                vec![ci],
+                format!("{what} touches SRAM px [{lo}, {hi}) past the {SRAM_CAP_PX} px bank"),
+            );
+            break; // one report per command
+        }
+    }
+    top
+}
+
+/// Check DRAM intervals against the allocated image size.
+fn check_dram(
+    ivs: &[Iv],
+    dram_px: u64,
+    si: usize,
+    ci: usize,
+    what: &str,
+    diags: &mut Vec<Diagnostic>,
+) {
+    for &(lo, hi) in ivs {
+        if hi > dram_px || lo >= dram_px {
+            diag(
+                diags,
+                DiagKind::DramOob,
+                Some(si),
+                vec![ci],
+                format!("{what} touches DRAM px [{lo}, {hi}) past the {dram_px} px image"),
+            );
+            break;
+        }
+    }
+}
+
+/// Interpret one segment: weight-stage discipline, SRAM bounds and
+/// aliasing, conv/pool geometry, `PASS_DW` fields, store legality.
+/// Returns the segment's merged DRAM footprints and appends every
+/// `LoadImage` canvas read to `canvas_loads` for the later
+/// uninitialized-read pass.
+#[allow(clippy::too_many_arguments)]
+fn analyze_segment(
+    si: usize,
+    seg: &crate::compiler::Segment,
+    prog: &[Cmd],
+    canvases: &[CanvasLayout],
+    weights_base: u64,
+    dram_px: u64,
+    canvas_loads: &mut Vec<(usize, usize, Vec<Iv>)>,
+    diags: &mut Vec<Diagnostic>,
+) -> SegAccess {
+    if seg.start >= seg.end || seg.end > prog.len() {
+        // Already reported by `check_segment_form`; nothing to interpret.
+        return SegAccess::default();
+    }
+
+    let mut cfg: Option<ConvCfg> = seg.cfg;
+    // (command index, staged channel count) — FIFO, depth 2.
+    let mut wstage: VecDeque<(usize, u16)> = VecDeque::new();
+    let mut dma_in_w: Vec<Iv> = Vec::new(); // SRAM written by LoadImage
+    let mut comp_w: Vec<Iv> = Vec::new(); // SRAM written by compute passes
+    let mut sram_top = 0u64;
+    let mut dram_r: Vec<Iv> = Vec::new();
+    let mut dram_w: Vec<Iv> = Vec::new();
+
+    for ci in seg.start..seg.end {
+        match &prog[ci] {
+            Cmd::Nop | Cmd::Sync => {}
+            Cmd::Halt => diag(
+                diags,
+                DiagKind::SegmentForm,
+                Some(si),
+                vec![ci],
+                "Halt inside a segment".into(),
+            ),
+            Cmd::SetConv(c) => cfg = Some(*c),
+            Cmd::LoadImage(d) => {
+                let dr = dma_dram_rows(d);
+                check_dram(&dr, dram_px, si, ci, "LoadImage", diags);
+                let sw = dma_sram_rows(d);
+                sram_top = sram_top.max(check_sram(&sw, si, ci, "LoadImage", diags));
+                canvas_loads.push((si, ci, dr.clone()));
+                dram_r.extend(dr);
+                dma_in_w.extend(sw);
+            }
+            Cmd::Store(d) => {
+                let sr = dma_sram_rows(d);
+                sram_top = sram_top.max(check_sram(&sr, si, ci, "Store", diags));
+                let dw = dma_dram_rows(d);
+                check_dram(&dw, dram_px, si, ci, "Store", diags);
+                check_store_rows(&dw, canvases, weights_base, dram_px, si, ci, diags);
+                dram_w.extend(dw);
+            }
+            Cmd::LoadWeights(w) => {
+                let r = dram_reads(&prog[ci]);
+                check_dram(&r, dram_px, si, ci, "LoadWeights", diags);
+                dram_r.extend(r);
+                wstage.push_back((ci, w.cn));
+                if wstage.len() > 2 {
+                    diag(
+                        diags,
+                        DiagKind::WeightStage,
+                        Some(si),
+                        vec![ci],
+                        format!("weight shadow bank over-filled to depth {}", wstage.len()),
+                    );
+                }
+            }
+            Cmd::LoadBias(_) => {
+                let r = dram_reads(&prog[ci]);
+                check_dram(&r, dram_px, si, ci, "LoadBias", diags);
+                dram_r.extend(r);
+            }
+            Cmd::Conv(p) => {
+                let staged = wstage.pop_front();
+                let Some(c) = cfg else {
+                    diag(
+                        diags,
+                        DiagKind::ConvShape,
+                        Some(si),
+                        vec![ci],
+                        "conv pass with no SetConv in effect".into(),
+                    );
+                    continue;
+                };
+                if c.stride == 0 {
+                    diag(
+                        diags,
+                        DiagKind::ConvShape,
+                        Some(si),
+                        vec![ci],
+                        "conv stride 0".into(),
+                    );
+                    continue;
+                }
+                let st = u64::from(c.stride);
+                let (ih, iw) = (u64::from(p.ih), u64::from(p.iw));
+                let (oh, ow) = (u64::from(p.oh), u64::from(p.ow));
+                let is_dw = p.flags & PASS_DW != 0;
+                let last = p.flags & PASS_LAST != 0;
+
+                if oh == 0 || ow == 0 {
+                    diag(
+                        diags,
+                        DiagKind::ConvShape,
+                        Some(si),
+                        vec![ci],
+                        format!("empty output tile {oh}x{ow}"),
+                    );
+                    continue;
+                }
+                if oh * ow > ACC_TILE_PX as u64 {
+                    diag(
+                        diags,
+                        DiagKind::ConvShape,
+                        Some(si),
+                        vec![ci],
+                        format!(
+                            "output tile {oh}x{ow} overflows the {ACC_TILE_PX} px ACC BUF plane"
+                        ),
+                    );
+                }
+                if u64::from(p.dy) + (oh - 1) * st + 3 > ih
+                    || u64::from(p.dx) + (ow - 1) * st + 3 > iw
+                {
+                    diag(
+                        diags,
+                        DiagKind::ConvShape,
+                        Some(si),
+                        vec![ci],
+                        format!(
+                            "tap window (dy={}, dx={}, stride {st}) overruns the {ih}x{iw} \
+                             input tile for a {oh}x{ow} output",
+                            p.dy, p.dx
+                        ),
+                    );
+                }
+                if p.mn == 0 || p.mn > NUM_CU as u16 {
+                    diag(
+                        diags,
+                        DiagKind::DwField,
+                        Some(si),
+                        vec![ci],
+                        format!("mn {} outside 1..={NUM_CU}", p.mn),
+                    );
+                }
+                match staged {
+                    None => diag(
+                        diags,
+                        DiagKind::WeightStage,
+                        Some(si),
+                        vec![ci],
+                        "conv pass with an empty weight shadow bank".into(),
+                    ),
+                    Some((load_ci, cn_load)) => {
+                        let want = if is_dw { 1 } else { p.cn };
+                        if cn_load != want {
+                            diag(
+                                diags,
+                                DiagKind::WeightStage,
+                                Some(si),
+                                vec![load_ci, ci],
+                                format!(
+                                    "staged weight block is {cn_load}*144 px but the pass \
+                                     consumes {want}*144"
+                                ),
+                            );
+                        }
+                    }
+                }
+
+                // Input hull: lane/channel planes src + k*ih*iw, k in 0..cn.
+                let src = u64::from(p.src_px);
+                let read = (src, src + u64::from(p.cn) * ih * iw);
+                sram_top = sram_top.max(check_sram(&[read], si, ci, "Conv input", diags));
+
+                let mut write: Option<Iv> = None;
+                if is_dw {
+                    if p.cn == 0 || p.cn > NUM_CU as u16 {
+                        diag(
+                            diags,
+                            DiagKind::DwField,
+                            Some(si),
+                            vec![ci],
+                            format!("depthwise cn {} outside 1..={NUM_CU}", p.cn),
+                        );
+                    } else if last {
+                        let dpp = if p.dpp == 0 { ow } else { u64::from(p.dpp) };
+                        let dpl = if p.dpl == 0 { oh * ow } else { u64::from(p.dpl) };
+                        if dpp < ow {
+                            diag(
+                                diags,
+                                DiagKind::DwField,
+                                Some(si),
+                                vec![ci],
+                                format!("dpp {dpp} shorter than the {ow} px output row"),
+                            );
+                        }
+                        if dpl < (oh - 1) * dpp + ow {
+                            diag(
+                                diags,
+                                DiagKind::DwField,
+                                Some(si),
+                                vec![ci],
+                                format!(
+                                    "dpl {dpl} too small for {oh} rows of pitch {dpp} \
+                                     (plane extent {})",
+                                    (oh - 1) * dpp + ow
+                                ),
+                            );
+                        }
+                        let dst = u64::from(p.dst_px);
+                        write = Some((dst, dst + u64::from(p.cn - 1) * dpl + (oh - 1) * dpp + ow));
+                    }
+                } else if last {
+                    let dst = u64::from(p.dst_px);
+                    write = Some((dst, dst + NUM_CU as u64 * oh * ow));
+                }
+                if let Some(w) = write {
+                    sram_top = sram_top.max(check_sram(&[w], si, ci, "Conv output", diags));
+                    if let Some(ov) = sets_overlap(&[read], &[w]) {
+                        diag(
+                            diags,
+                            DiagKind::SramOverlap,
+                            Some(si),
+                            vec![ci],
+                            format!(
+                                "conv output [{}, {}) overlaps its input tile at px {}",
+                                w.0, w.1, ov.0
+                            ),
+                        );
+                    }
+                    comp_w.push(w);
+                }
+            }
+            Cmd::Pool(p) => {
+                let (ih, iw, c) = (u64::from(p.ih), u64::from(p.iw), u64::from(p.c));
+                let (k, st) = (u64::from(p.k), u64::from(p.stride));
+                if k == 0 || st == 0 || k > ih || k > iw {
+                    diag(
+                        diags,
+                        DiagKind::ConvShape,
+                        Some(si),
+                        vec![ci],
+                        format!("pool window {k} stride {st} illegal for a {ih}x{iw} tile"),
+                    );
+                    continue;
+                }
+                let (oh, ow) = ((ih - k) / st + 1, (iw - k) / st + 1);
+                let src = u64::from(p.src_px);
+                let dst = u64::from(p.dst_px);
+                let read = (src, src + c * ih * iw);
+                let write = (dst, dst + c * oh * ow);
+                sram_top = sram_top.max(check_sram(&[read], si, ci, "Pool input", diags));
+                sram_top = sram_top.max(check_sram(&[write], si, ci, "Pool output", diags));
+                if sets_overlap(&[read], &[write]).is_some() {
+                    diag(
+                        diags,
+                        DiagKind::SramOverlap,
+                        Some(si),
+                        vec![ci],
+                        "pool output overlaps its input region".into(),
+                    );
+                }
+                comp_w.push(write);
+            }
+            Cmd::Add(a) => {
+                let n = u64::from(a.n_px);
+                let ra = (u64::from(a.src_a_px), u64::from(a.src_a_px) + n);
+                let rb = (u64::from(a.src_b_px), u64::from(a.src_b_px) + n);
+                let w = (u64::from(a.dst_px), u64::from(a.dst_px) + n);
+                sram_top = sram_top.max(check_sram(&[ra], si, ci, "Add operand a", diags));
+                sram_top = sram_top.max(check_sram(&[rb], si, ci, "Add operand b", diags));
+                sram_top = sram_top.max(check_sram(&[w], si, ci, "Add output", diags));
+                if sets_overlap(&merge_ivs(vec![ra, rb]), &[w]).is_some() {
+                    diag(
+                        diags,
+                        DiagKind::SramOverlap,
+                        Some(si),
+                        vec![ci],
+                        "add output overlaps an input operand".into(),
+                    );
+                }
+                comp_w.push(w);
+            }
+        }
+    }
+
+    if !wstage.is_empty() {
+        let cmds: Vec<usize> = wstage.iter().map(|&(ci, _)| ci).collect();
+        diag(
+            diags,
+            DiagKind::WeightStage,
+            Some(si),
+            cmds,
+            format!("{} stale weight block(s) staged at segment end", wstage.len()),
+        );
+    }
+    let staged_in = merge_ivs(dma_in_w);
+    let computed = merge_ivs(comp_w);
+    if let Some(ov) = sets_overlap(&staged_in, &computed) {
+        diag(
+            diags,
+            DiagKind::SramOverlap,
+            Some(si),
+            Vec::new(),
+            format!(
+                "compute output overlaps the DMA-staged input allocation at SRAM px \
+                 [{}, {})",
+                ov.0, ov.1
+            ),
+        );
+    }
+    if sram_top > SRAM_CAP_PX {
+        diag(
+            diags,
+            DiagKind::SramFootprint,
+            Some(si),
+            Vec::new(),
+            format!(
+                "segment footprint reaches SRAM px {sram_top} ({} bytes) past the \
+                 {SRAM_BYTES}-byte bank",
+                sram_top * 2
+            ),
+        );
+    }
+
+    SegAccess { dram_r: merge_ivs(dram_r), dram_w: merge_ivs(dram_w) }
+}
+
+/// Every store row must land wholly inside one canvas valid region:
+/// the zero apron/margin, the input canvas, and the weight blocks must
+/// never be written.
+#[allow(clippy::too_many_arguments)]
+fn check_store_rows(
+    rows: &[Iv],
+    canvases: &[CanvasLayout],
+    weights_base: u64,
+    dram_px: u64,
+    si: usize,
+    ci: usize,
+    diags: &mut Vec<Diagnostic>,
+) {
+    for &(lo, hi) in rows {
+        if hi > dram_px || lo >= dram_px {
+            return; // DramOob already reported; classification is moot
+        }
+        if lo >= weights_base {
+            diag(
+                diags,
+                DiagKind::BadStore,
+                Some(si),
+                vec![ci],
+                format!("store row [{lo}, {hi}) lands in the weight/bias region"),
+            );
+            return;
+        }
+        let j = canvas_at(canvases, lo);
+        let cv = &canvases[j];
+        let (base, cwu) = (cv.base as u64, cv.cw as u64);
+        let plane = (cv.ch * cv.cw) as u64;
+        let off = lo - base;
+        let (k, rem) = (off / plane, off % plane);
+        let (y, x) = (rem / cwu, rem % cwu);
+        let valid = hi <= base + cv.len_px() as u64
+            && k < cv.c as u64
+            && (cv.pad as u64..(cv.pad + cv.h) as u64).contains(&y)
+            && x >= cv.pad as u64
+            && x + (hi - lo) <= (cv.pad + cv.w) as u64;
+        if j == 0 {
+            diag(
+                diags,
+                DiagKind::BadStore,
+                Some(si),
+                vec![ci],
+                format!("store row [{lo}, {hi}) overwrites the input canvas"),
+            );
+            return;
+        }
+        if !valid {
+            diag(
+                diags,
+                DiagKind::BadStore,
+                Some(si),
+                vec![ci],
+                format!(
+                    "store row [{lo}, {hi}) escapes canvas {j}'s valid region \
+                     (ch {k}, y {y}, x {x}; the zero apron must stay zero)"
+                ),
+            );
+            return;
+        }
+    }
+}
+
+/// Clip a canvas read interval to the valid-region bytes it covers and
+/// report the first pixel no store ever writes. The zero apron/margin
+/// and the input canvas are exempt (padding halos legally read zeros;
+/// the runtime writes the input frame).
+fn check_uninit_reads(
+    canvas_loads: &[(usize, usize, Vec<Iv>)],
+    canvases: &[CanvasLayout],
+    writes: &[Iv],
+    diags: &mut Vec<Diagnostic>,
+) {
+    let weights_base = canvases.last().map_or(0, |cv| (cv.base + cv.len_px()) as u64);
+    for (si, ci, rows) in canvas_loads {
+        'rows: for &(lo, hi) in rows {
+            if lo >= weights_base {
+                continue;
+            }
+            let j = canvas_at(canvases, lo);
+            if j == 0 {
+                continue;
+            }
+            let cv = &canvases[j];
+            let (base, cwu) = (cv.base as u64, cv.cw as u64);
+            let plane = (cv.ch * cv.cw) as u64;
+            let end = hi.min(base + cv.len_px() as u64);
+            // Walk the canvas rows the interval spans; intersect each
+            // with that row's valid columns.
+            let mut a = lo;
+            while a < end {
+                let off = a - base;
+                let (k, rem) = (off / plane, off % plane);
+                let (y, x) = (rem / cwu, rem % cwu);
+                let row_end = a + (cwu - x); // canvas-row boundary
+                let b = end.min(row_end);
+                let row0 = a - x; // DRAM px of this canvas row's col 0
+                if k < cv.c as u64 && (cv.pad as u64..(cv.pad + cv.h) as u64).contains(&y) {
+                    let vlo = (row0 + cv.pad as u64).max(a);
+                    let vhi = (row0 + (cv.pad + cv.w) as u64).min(b);
+                    if vlo < vhi {
+                        if let Some(px) = first_uncovered((vlo, vhi), writes) {
+                            diag(
+                                diags,
+                                DiagKind::UninitRead,
+                                Some(*si),
+                                vec![*ci],
+                                format!(
+                                    "reads canvas {j} px {px} (ch {k}, y {y}) that no \
+                                     store ever writes"
+                                ),
+                            );
+                            break 'rows; // one report per command
+                        }
+                    }
+                }
+                a = b;
+            }
+        }
+    }
+}
+
+/// Segment bookkeeping: ranges must tile the program in order, every
+/// inter-segment gap may hold only `SetConv` prologues, each segment
+/// must end on its `Sync` barrier, and the tail is the single `Halt`.
+fn check_segment_form(net: &CompiledNet, prog: &[Cmd], diags: &mut Vec<Diagnostic>) {
+    let mut at = 0usize;
+    for (si, seg) in net.segments.iter().enumerate() {
+        if seg.start < at || seg.start >= seg.end || seg.end > prog.len() {
+            diag(
+                diags,
+                DiagKind::SegmentForm,
+                Some(si),
+                Vec::new(),
+                format!(
+                    "segment range [{}, {}) overlaps its predecessor or escapes the \
+                     {}-command program",
+                    seg.start,
+                    seg.end,
+                    prog.len()
+                ),
+            );
+            at = at.max(seg.end.min(prog.len()));
+            continue;
+        }
+        for (ci, c) in prog.iter().enumerate().take(seg.start).skip(at) {
+            if !matches!(c, Cmd::SetConv(_)) {
+                diag(
+                    diags,
+                    DiagKind::SegmentForm,
+                    None,
+                    vec![ci],
+                    format!("non-prologue command {c:?} between segments"),
+                );
+            }
+        }
+        if !matches!(prog[seg.end - 1], Cmd::Sync) {
+            diag(
+                diags,
+                DiagKind::SegmentForm,
+                Some(si),
+                vec![seg.end - 1],
+                "segment does not end on its Sync barrier".into(),
+            );
+        }
+        at = seg.end;
+    }
+    let tail = &prog[at.min(prog.len())..];
+    if tail != [Cmd::Halt] {
+        diag(
+            diags,
+            DiagKind::SegmentForm,
+            None,
+            Vec::new(),
+            format!("program tail after the last segment is {tail:?}, expected a single Halt"),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// race detection over the segment DAG
+
+/// Recompute every pairwise DRAM read/write intersection between
+/// segments and require a dependency path for each RAW/WAR/WAW
+/// conflict. Returns the number of conflicts examined.
+fn check_races(
+    net: &CompiledNet,
+    prog: &[Cmd],
+    acc: &[SegAccess],
+    diags: &mut Vec<Diagnostic>,
+) -> u64 {
+    let n = net.segments.len();
+    let wlen = n.div_ceil(64);
+
+    // Ancestor bitsets: anc[j] holds every segment with a dependency
+    // path into j. Built in declared order, so it is also the
+    // topology check — an edge pointing at itself or forward cannot
+    // contribute and is reported.
+    let mut anc: Vec<Vec<u64>> = Vec::with_capacity(n);
+    for (j, seg) in net.segments.iter().enumerate() {
+        let mut cur = vec![0u64; wlen];
+        for &d in &seg.deps {
+            if d >= j {
+                diag(
+                    diags,
+                    DiagKind::NonTopological,
+                    Some(j),
+                    Vec::new(),
+                    format!("dep edge {j} -> {d} points forward; segment order is not topological"),
+                );
+                continue;
+            }
+            cur[d / 64] |= 1 << (d % 64);
+            for (w, s) in cur.iter_mut().zip(&anc[d]) {
+                *w |= s;
+            }
+        }
+        anc.push(cur);
+    }
+
+    let mut hazards = 0u64;
+    for j in 1..n {
+        for i in 0..j {
+            let covered = (anc[j][i / 64] >> (i % 64)) & 1 == 1;
+            for kind in [HazardKind::Raw, HazardKind::Waw, HazardKind::War] {
+                let (a, b) = match kind {
+                    HazardKind::Raw => (&acc[i].dram_w, &acc[j].dram_r),
+                    HazardKind::Waw => (&acc[i].dram_w, &acc[j].dram_w),
+                    HazardKind::War => (&acc[i].dram_r, &acc[j].dram_w),
+                };
+                let Some(ov) = sets_overlap(a, b) else { continue };
+                hazards += 1;
+                if !covered {
+                    let (ca, cb) = offending_cmds(prog, net, i, j, ov, kind);
+                    diag(
+                        diags,
+                        DiagKind::UncoveredHazard(kind),
+                        Some(j),
+                        vec![ca, cb],
+                        format!(
+                            "{} hazard between segments {i} and {j} on DRAM px [{}, {}) \
+                             has no covering dependency path",
+                            kind.name(),
+                            ov.0,
+                            ov.1
+                        ),
+                    );
+                }
+            }
+        }
+    }
+    hazards
+}
+
+/// Name one offending command on each side of a hazard: the first
+/// command in each segment whose relevant DRAM access intersects the
+/// conflicting interval.
+fn offending_cmds(
+    prog: &[Cmd],
+    net: &CompiledNet,
+    i: usize,
+    j: usize,
+    ov: Iv,
+    kind: HazardKind,
+) -> (usize, usize) {
+    let pick = |si: usize, want_write: bool| -> usize {
+        let seg = &net.segments[si];
+        for ci in seg.start..seg.end.min(prog.len()) {
+            let ivs = if want_write { dram_writes(&prog[ci]) } else { dram_reads(&prog[ci]) };
+            if ivs.iter().any(|iv| iv.0 < ov.1 && ov.0 < iv.1) {
+                return ci;
+            }
+        }
+        seg.start
+    };
+    match kind {
+        HazardKind::Raw => (pick(i, true), pick(j, false)),
+        HazardKind::War => (pick(i, false), pick(j, true)),
+        HazardKind::Waw => (pick(i, true), pick(j, true)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_merge_coalesces_and_drops_empties() {
+        let m = merge_ivs(vec![(5, 9), (0, 3), (3, 5), (7, 7), (20, 25)]);
+        assert_eq!(m, vec![(0, 9), (20, 25)]);
+    }
+
+    #[test]
+    fn interval_overlap_finds_first_intersection() {
+        let a = vec![(0u64, 10u64), (20, 30)];
+        let b = vec![(10u64, 15u64), (28, 40)];
+        assert_eq!(sets_overlap(&a, &b), Some((28, 30)));
+        assert_eq!(sets_overlap(&a, &[(10, 20)]), None);
+        assert_eq!(sets_overlap(&a, &[]), None);
+    }
+
+    #[test]
+    fn first_uncovered_walks_the_merged_set() {
+        let set = vec![(0u64, 10u64), (12, 20)];
+        assert_eq!(first_uncovered((2, 9), &set), None);
+        assert_eq!(first_uncovered((2, 12), &set), Some(10));
+        assert_eq!(first_uncovered((15, 25), &set), Some(20));
+        assert_eq!(first_uncovered((30, 31), &set), Some(30));
+    }
+
+    #[test]
+    fn analyzer_passes_a_trivial_compile() {
+        let graph = crate::model::zoo::graph_by_name("quicknet").unwrap();
+        let net = crate::compiler::compile_graph(&graph).unwrap();
+        let a = analyze(&net).unwrap();
+        assert!(a.is_clean(), "quicknet should lint clean:\n{}", a.report());
+        assert!(a.hazards_checked > 0, "a multi-node net must exercise the race detector");
+    }
+}

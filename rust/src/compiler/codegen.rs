@@ -227,10 +227,39 @@ pub fn compile_net(net: &NetSpec) -> anyhow::Result<CompiledNet> {
     compile_graph(&Graph::from_net(net))
 }
 
+/// Knobs for `compile_graph*`.
+#[derive(Clone, Debug)]
+pub struct CompileOptions {
+    /// Weight-emission thread count (1 = fully sequential).
+    pub emit_threads: usize,
+    /// Run the static schedule analyzer ([`crate::analysis::analyze`])
+    /// on the compiled artifact and fail compilation on any diagnostic.
+    /// Defaults **on** under `debug_assertions` — every test compile is
+    /// verified — and off in release, where callers opt in explicitly
+    /// (the `lint` CLI always analyzes).
+    pub verify: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        Self { emit_threads: default_emit_threads(), verify: cfg!(debug_assertions) }
+    }
+}
+
 /// Compile a graph into a command program + DRAM image + segment DAG,
 /// with the historical per-node heuristic decomposition.
 pub fn compile_graph(graph: &Graph) -> anyhow::Result<CompiledNet> {
-    compile_graph_opts(graph, None, default_emit_threads())
+    compile_graph_with_options(graph, None, &CompileOptions::default())
+}
+
+/// [`compile_graph`] with explicit [`CompileOptions`] and optional
+/// planner-chosen per-node plans.
+pub fn compile_graph_with_options(
+    graph: &Graph,
+    plans: Option<&[Option<Plan>]>,
+    opts: &CompileOptions,
+) -> anyhow::Result<CompiledNet> {
+    compile_graph_opts(graph, plans, opts.emit_threads, opts.verify)
 }
 
 /// [`compile_graph`] with per-conv-node decomposition plans chosen by
@@ -242,7 +271,7 @@ pub fn compile_graph_with_plans(
     graph: &Graph,
     plans: &[Option<Plan>],
 ) -> anyhow::Result<CompiledNet> {
-    compile_graph_opts(graph, Some(plans), default_emit_threads())
+    compile_graph_with_options(graph, Some(plans), &CompileOptions::default())
 }
 
 /// [`compile_graph`] with an explicit weight-emission thread count
@@ -250,7 +279,7 @@ pub fn compile_graph_with_plans(
 /// byte-identical at any thread count — block offsets are assigned
 /// sequentially and block contents depend only on the layer weights.
 pub fn compile_graph_threads(graph: &Graph, emit_threads: usize) -> anyhow::Result<CompiledNet> {
-    compile_graph_opts(graph, None, emit_threads)
+    compile_graph_with_options(graph, None, &CompileOptions { emit_threads, ..Default::default() })
 }
 
 /// Default weight-emission parallelism: the host's cores, capped —
@@ -344,6 +373,7 @@ fn compile_graph_opts(
     graph: &Graph,
     plans_in: Option<&[Option<Plan>]>,
     emit_threads: usize,
+    verify: bool,
 ) -> anyhow::Result<CompiledNet> {
     let shapes = graph.validate()?;
     let n_canvas = graph.nodes.len() + 1;
@@ -481,7 +511,7 @@ fn compile_graph_opts(
                         emit_threads,
                     )?;
                 } else if plan.dw {
-                    emit_conv_dw(&mut em, ni, c, &plan, srcs[0].0, &srcs[0].1, (ni + 1, &dst));
+                    emit_conv_dw(&mut em, ni, c, &plan, srcs[0].0, &srcs[0].1, (ni + 1, &dst))?;
                 } else {
                     emit_conv(
                         &mut em,
@@ -492,7 +522,7 @@ fn compile_graph_opts(
                         &srcs[0].1,
                         (ni + 1, &dst),
                         emit_threads,
-                    );
+                    )?;
                 }
                 plans.push((c.name.clone(), plan));
             }
@@ -518,13 +548,20 @@ fn compile_graph_opts(
             }
         }
         deps.sort_unstable();
-        debug_assert!(deps.iter().all(|&d| d < si), "non-topological segment dep");
+        // Promoted from a debug_assert: a non-topological edge would
+        // deadlock or misorder the DAG runner, so release builds must
+        // refuse it too.
+        anyhow::ensure!(
+            deps.iter().all(|&d| d < si),
+            "graph {}: segment {si} has a non-topological dependency edge ({deps:?})",
+            graph.name
+        );
         em.segments[si].deps = deps;
     }
 
     let dram_px = em.dram.len();
     let output = canvases[canvas_of(graph.output)].clone();
-    Ok(CompiledNet {
+    let compiled = CompiledNet {
         graph: graph.clone(),
         program: em.program,
         dram_init: em.dram,
@@ -533,7 +570,18 @@ fn compile_graph_opts(
         plans,
         dram_px,
         segments: em.segments,
-    })
+    };
+    if verify {
+        let analysis = crate::analysis::analyze(&compiled)?;
+        anyhow::ensure!(
+            analysis.is_clean(),
+            "graph {}: static schedule analyzer found {} defect(s):\n{}",
+            graph.name,
+            analysis.diagnostics.len(),
+            analysis.report()
+        );
+    }
+    Ok(compiled)
 }
 
 /// Fill the weight/bias image blocks of one conv node. Offsets are
@@ -621,7 +669,7 @@ fn emit_conv(
     src: &Canvas,
     (dst_idx, dst): (usize, &Canvas),
     emit_threads: usize,
-) {
+) -> anyhow::Result<()> {
     prefill_conv_blocks(em, ni, c, plan, emit_threads);
     let cg = c.cin / c.groups; // channels per conv group
     let mg = c.cout / c.groups; // features per conv group
@@ -643,9 +691,12 @@ fn emit_conv(
         let in_px = tile.ih * tile.iw;
         let sram_in = 0u32;
         let sram_out = in_tile_px_max as u32;
-        debug_assert!(
+        // Promoted from a debug_assert: an over-budget tile would
+        // silently corrupt SRAM in release builds.
+        anyhow::ensure!(
             (in_tile_px_max + tile.oh * tile.ow * NUM_CU) * 2 <= SRAM_BYTES,
-            "plan exceeded SRAM"
+            "conv {}: tile staging exceeds the {SRAM_BYTES}-byte SRAM bank",
+            c.name
         );
         // track which channel slice currently resides in SRAM
         let mut loaded: Option<(usize, usize)> = None; // (group, cgroup)
@@ -780,6 +831,7 @@ fn emit_conv(
             },
         );
     }
+    Ok(())
 }
 
 /// Fill the weight/bias blocks of one *depthwise* conv node: per
@@ -821,7 +873,7 @@ fn emit_conv_dw(
     src_idx: usize,
     src: &Canvas,
     (dst_idx, dst): (usize, &Canvas),
-) {
+) -> anyhow::Result<()> {
     prefill_conv_blocks_dw(em, ni, c, plan);
     let tap_list = taps(c.k);
     let cfg = ConvCfg { stride: c.stride as u8, shift: c.shift, relu: c.relu };
@@ -837,9 +889,11 @@ fn emit_conv_dw(
         let in_px = tile.ih * tile.iw;
         let sram_in = 0u32;
         let sram_out = in_tile_px_max as u32;
-        debug_assert!(
+        // Promoted from a debug_assert (same rationale as emit_conv).
+        anyhow::ensure!(
             (in_tile_px_max + tile.oh * tile.ow * NUM_CU) * 2 <= SRAM_BYTES,
-            "plan exceeded SRAM"
+            "dw conv {}: tile staging exceeds the {SRAM_BYTES}-byte SRAM bank",
+            c.name
         );
         for cgi in 0..plan.c_groups {
             let c0 = cgi * plan.c_per_group;
@@ -922,6 +976,7 @@ fn emit_conv_dw(
             },
         );
     }
+    Ok(())
 }
 
 /// Emit a fused depthwise→1×1-pointwise pair as one node program

@@ -22,8 +22,8 @@ pub mod decompose;
 pub mod kernel_decomp;
 
 pub use codegen::{
-    compile_graph, compile_graph_threads, compile_graph_with_plans, compile_net, CompiledNet,
-    Segment,
+    compile_graph, compile_graph_threads, compile_graph_with_options, compile_graph_with_plans,
+    compile_net, CompileOptions, CompiledNet, Segment,
 };
 pub use decompose::{plan_conv, plan_conv_budget, plan_with_grid, Plan, PlanError};
 

@@ -423,21 +423,77 @@ impl Cmd {
         out
     }
 
-    /// Decode a whole program (stops at Halt or end of stream).
-    pub fn decode_program(words: &[u16]) -> Option<Vec<Cmd>> {
+    /// Decode a whole program (stops at Halt or end of stream). A
+    /// malformed stream reports *where* and *why* it failed — the word
+    /// offset, the command index, and the opcode context — so the
+    /// static analyzer and any other consumer of raw command streams
+    /// can point at the offending word.
+    pub fn decode_program(words: &[u16]) -> Result<Vec<Cmd>, DecodeError> {
         let mut i = 0;
         let mut cmds = Vec::new();
         while i < words.len() {
-            let c = Cmd::decode(words, &mut i)?;
+            let at = i;
+            let op = Opcode::from_u16(words[at]).ok_or(DecodeError {
+                word: at,
+                cmd: cmds.len(),
+                kind: DecodeErrorKind::BadOpcode(words[at]),
+            })?;
+            let need = op.words_needed();
+            if at + need > words.len() {
+                return Err(DecodeError {
+                    word: at,
+                    cmd: cmds.len(),
+                    kind: DecodeErrorKind::Truncated { opcode: op, have: words.len() - at, need },
+                });
+            }
+            let c = Cmd::decode(words, &mut i).expect("length-checked decode");
             let is_halt = c == Cmd::Halt;
             cmds.push(c);
             if is_halt {
                 break;
             }
         }
-        Some(cmds)
+        Ok(cmds)
     }
 }
+
+/// Why one command of a word stream failed to decode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeErrorKind {
+    /// The opcode word holds no known opcode.
+    BadOpcode(u16),
+    /// The stream ends before the command's operand words do.
+    Truncated { opcode: Opcode, have: usize, need: usize },
+}
+
+/// Decode failure with full context: the 16-bit word offset of the
+/// failing command's opcode word, the index of that command in the
+/// stream, and the failure kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeError {
+    pub word: usize,
+    pub cmd: usize,
+    pub kind: DecodeErrorKind,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            DecodeErrorKind::BadOpcode(w) => write!(
+                f,
+                "bad opcode word {w:#06x} at word {} (command {})",
+                self.word, self.cmd
+            ),
+            DecodeErrorKind::Truncated { opcode, have, need } => write!(
+                f,
+                "truncated {opcode:?} at word {} (command {}): {have} of {need} words",
+                self.word, self.cmd
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 #[cfg(test)]
 mod tests {
@@ -539,10 +595,33 @@ mod tests {
             cmds.push(Cmd::Halt);
             let words = Cmd::encode_program(&cmds);
             match Cmd::decode_program(&words) {
-                Some(back) if back == cmds => Ok(()),
+                Ok(back) if back == cmds => Ok(()),
                 other => Err(format!("{} cmds -> {other:?}", cmds.len())),
             }
         });
+    }
+
+    #[test]
+    fn decode_program_reports_offset_and_opcode() {
+        // A junk opcode word mid-stream names the word and command index.
+        let mut words = Cmd::encode_program(&[Cmd::Sync, Cmd::Nop]);
+        words.push(0x00fe);
+        let err = Cmd::decode_program(&words).unwrap_err();
+        assert_eq!(err.word, 2);
+        assert_eq!(err.cmd, 2);
+        assert_eq!(err.kind, DecodeErrorKind::BadOpcode(0x00fe));
+
+        // A stream cut mid-command names the opcode and the shortfall.
+        let mut words = Vec::new();
+        Cmd::LoadBias(BiasLoad { dram_px: 9 }).encode(&mut words);
+        words.truncate(2);
+        let err = Cmd::decode_program(&words).unwrap_err();
+        assert_eq!(err.word, 0);
+        assert_eq!(err.cmd, 0);
+        assert_eq!(
+            err.kind,
+            DecodeErrorKind::Truncated { opcode: Opcode::LoadBias, have: 2, need: 3 }
+        );
     }
 
     #[test]

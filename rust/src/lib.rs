@@ -26,6 +26,12 @@
 //!   SRAM/energy cost model validated against measured `SimStats`, and
 //!   a DAG-aware search that co-optimizes split axes across
 //!   producer→consumer edges (`PlanPolicy`).
+//! - [`analysis`] — static schedule analyzer: an abstract interpreter
+//!   over the compiled command stream that independently re-derives
+//!   every invariant codegen promises (ISA linting, SRAM/DRAM bounds,
+//!   uninitialized-read detection, `PASS_DW` field checks) plus a
+//!   segment-DAG race detector proving every RAW/WAR/WAW hazard is
+//!   covered by a dependency path.
 //! - [`model`] — network descriptions (linear `NetSpec` stacks and the
 //!   graph IR with residual Add / channel Concat) + the deterministic
 //!   synthetic zoo shared with the Python compile path.
@@ -39,6 +45,7 @@
 //! - [`util`] — offline-environment substrates built from scratch: PRNG,
 //!   JSON parser, CLI parser, stats, bench harness, property testing.
 
+pub mod analysis;
 pub mod compiler;
 pub mod coordinator;
 pub mod energy;

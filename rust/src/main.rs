@@ -6,9 +6,12 @@
 //!   serve    streaming frame server (coordinator) over synthetic camera
 //!   verify   golden check: simulator output vs PJRT-executed artifact
 //!   plan     print the decomposition plan of every conv layer
+//!   lint     static schedule analyzer: ISA lint + segment-DAG race
+//!            detection over the compiled command stream
 //!   info     chip configuration, area and DVFS summary
 
-use kn_stream::compiler::NetRunner;
+use kn_stream::analysis::analyze;
+use kn_stream::compiler::{compile_graph_with_options, CompileOptions, NetRunner};
 use kn_stream::coordinator::{
     AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig, FaultPlan,
 };
@@ -41,6 +44,7 @@ fn real_main() -> anyhow::Result<()> {
         "serve" => cmd_serve(rest),
         "verify" => cmd_verify(rest),
         "plan" => cmd_plan(rest),
+        "lint" => cmd_lint(rest),
         "info" => cmd_info(),
         other => {
             print_usage();
@@ -52,7 +56,7 @@ fn real_main() -> anyhow::Result<()> {
 fn print_usage() {
     println!(
         "kn-stream — streaming CNN accelerator (Du et al. 2017) reproduction\n\n\
-         USAGE: kn-stream <run|serve|verify|plan|info> [options]\n\
+         USAGE: kn-stream <run|serve|verify|plan|lint|info> [options]\n\
          Try `kn-stream run --help`."
     );
 }
@@ -417,6 +421,81 @@ fn cmd_plan_optimize(
     );
     println!("cost model check: predicted DRAM bytes == measured for all {} nodes",
              net.nodes.len());
+    Ok(())
+}
+
+/// `lint`: compile every requested net × policy, run the static
+/// schedule analyzer on the artifact, and fail on any diagnostic.
+/// `--chips N` re-compiles N times and requires byte-identical output
+/// first — the determinism a sharded multi-chip deployment assumes.
+fn cmd_lint(args: Vec<String>) -> anyhow::Result<()> {
+    let mut cli = Cli::new("kn-stream lint", "static schedule analyzer over compiled programs");
+    cli.opt("net", "all", "zoo net to lint, or 'all' (incl. graph nets)")
+        .opt("policy", "all", "plan policy (heuristic|min-traffic|dag-aware|all)")
+        .opt("chips", "1", "independent compiles that must be byte-identical before analysis");
+    let m = cli.parse_from(args)?;
+    let nets: Vec<String> = if m.get("net") == "all" {
+        zoo::GRAPH_ALL.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![m.get("net").to_string()]
+    };
+    let policies: Vec<PlanPolicy> = if m.get("policy") == "all" {
+        PlanPolicy::ALL.to_vec()
+    } else {
+        vec![PlanPolicy::parse(m.get("policy"))?]
+    };
+    let chips = m.get_usize("chips").max(1);
+    // The analyzer runs explicitly below, so the in-compile verify gate
+    // would only duplicate work.
+    let opts = CompileOptions { verify: false, ..Default::default() };
+    let mut t = Table::new(
+        "static schedule lint",
+        &["net", "policy", "segments", "cmds", "hazards", "lint ms", "verdict"],
+    );
+    let (mut dirty, mut rows) = (0usize, 0usize);
+    for name in &nets {
+        let graph = graph_arg(name)?;
+        for &policy in &policies {
+            let compile = || -> anyhow::Result<kn_stream::compiler::CompiledNet> {
+                match policy {
+                    PlanPolicy::Heuristic => compile_graph_with_options(&graph, None, &opts),
+                    _ => {
+                        let gp = plan_graph(&graph, policy)?;
+                        compile_graph_with_options(&graph, Some(&gp.plans), &opts)
+                    }
+                }
+            };
+            let compiled = compile()?;
+            for c in 1..chips {
+                let again = compile()?;
+                anyhow::ensure!(
+                    again.program == compiled.program && again.dram_init == compiled.dram_init,
+                    "{name}/{}: chip {c} compile is not byte-identical",
+                    policy.name()
+                );
+            }
+            let t0 = std::time::Instant::now();
+            let analysis = analyze(&compiled)?;
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            for d in &analysis.diagnostics {
+                println!("{name}/{}: {d}", policy.name());
+            }
+            dirty += usize::from(!analysis.is_clean());
+            rows += 1;
+            t.row(&[
+                name.clone(),
+                policy.name().to_string(),
+                format!("{}", analysis.segments),
+                format!("{}", compiled.program.len()),
+                format!("{}", analysis.hazards_checked),
+                format!("{ms:.1}"),
+                if analysis.is_clean() { "clean".into() } else { "DIRTY".into() },
+            ]);
+        }
+    }
+    t.print();
+    anyhow::ensure!(dirty == 0, "{dirty} of {rows} schedule(s) failed lint");
+    println!("lint: {rows} net x policy schedule(s) clean");
     Ok(())
 }
 

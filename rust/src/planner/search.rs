@@ -638,6 +638,7 @@ pub fn plan_graph_budget(
             }
         }
     }
+    lint_fusion(graph, &fuse, &plans)?;
     let dep_edges = count_dep_edges(graph, &ctx, &grids, &fuse);
     let est_critical_path_cycles = critical_path(graph, &ctx, &node_traffic, &grids);
     Ok(GraphPlan {
@@ -649,6 +650,78 @@ pub fn plan_graph_budget(
         dep_edges,
         est_critical_path_cycles,
     })
+}
+
+/// Lint the fusion post-pass output before it leaves the planner: every
+/// `fuse_dw` plan must name a depthwise producer whose plan rides the
+/// identical tile grid, and no plan may carry the marker without a
+/// fusion entry. Codegen re-checks the same contracts at emission; the
+/// planner-side lint attributes a violation to the search instead of
+/// letting it surface as a downstream emission error.
+fn lint_fusion(
+    graph: &Graph,
+    fuse: &[Option<usize>],
+    plans: &[Option<Plan>],
+) -> anyhow::Result<()> {
+    for (ni, fused) in fuse.iter().enumerate() {
+        let Some(di) = *fused else {
+            if let Some(p) = &plans[ni] {
+                anyhow::ensure!(
+                    !p.fuse_dw,
+                    "graph {}: node {ni} carries fuse_dw without a fusion entry",
+                    graph.name
+                );
+            }
+            continue;
+        };
+        let pw = plans[ni]
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("graph {}: fused node {ni} has no plan", graph.name))?;
+        let dwp = plans[di].as_ref().ok_or_else(|| {
+            anyhow::anyhow!("graph {}: fused dw producer {di} has no plan", graph.name)
+        })?;
+        anyhow::ensure!(
+            pw.fuse_dw && !pw.dw,
+            "graph {}: fusion entry {ni} -> {di} but node {ni}'s plan is not a fused pointwise",
+            graph.name
+        );
+        anyhow::ensure!(
+            dwp.dw && !dwp.fuse_dw,
+            "graph {}: fused producer {di} is not a plain depthwise plan",
+            graph.name
+        );
+        let (NodeOp::Conv(pws), NodeOp::Conv(dws)) = (&graph.nodes[ni].op, &graph.nodes[di].op)
+        else {
+            anyhow::bail!("graph {}: fusion entry {ni} -> {di} names a non-conv node", graph.name);
+        };
+        anyhow::ensure!(
+            pws.k == 1 && pws.stride == 1 && pws.pad == 0 && pws.groups == 1,
+            "graph {}: fused consumer {ni} is not a 1x1/s1/p0 pointwise conv",
+            graph.name
+        );
+        anyhow::ensure!(
+            dw_eligible(dws),
+            "graph {}: fused producer {di} is not depthwise-eligible",
+            graph.name
+        );
+        anyhow::ensure!(
+            (dwp.gy, dwp.gx) == (pw.gy, pw.gx)
+                && dwp.tiles.len() == pw.tiles.len()
+                && dwp
+                    .tiles
+                    .iter()
+                    .zip(&pw.tiles)
+                    .all(|(a, b)| (a.oy0, a.ox0, a.oh, a.ow) == (b.oy0, b.ox0, b.oh, b.ow)),
+            "graph {}: fused pair {ni} -> {di} rides mismatched tile grids \
+             ({}x{} vs {}x{})",
+            graph.name,
+            dwp.gy,
+            dwp.gx,
+            pw.gy,
+            pw.gx
+        );
+    }
+    Ok(())
 }
 
 /// Coordinate descent over the pruned candidate lists: re-choose one

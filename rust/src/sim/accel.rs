@@ -45,6 +45,7 @@ pub struct SharedDram<'a> {
 // SAFETY: see the type-level contract — all cross-thread element
 // accesses are either externally ordered or disjoint.
 unsafe impl Sync for SharedDram<'_> {}
+// SAFETY: same contract — the handle carries no thread-affine state.
 unsafe impl Send for SharedDram<'_> {}
 
 impl<'a> SharedDram<'a> {

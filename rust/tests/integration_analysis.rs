@@ -1,0 +1,252 @@
+//! Static schedule analyzer: property tests and a mutation harness.
+//!
+//! Two claims are tested here. First, every schedule the compiler emits
+//! — all zoo nets, all planner policies, several SRAM budgets — lints
+//! clean: the analyzer re-derives the invariants codegen promises from
+//! the command stream alone and finds nothing. Second, the analyzer is
+//! *sensitive*: for each seeded defect class (dropped dependency edge,
+//! overlapping SRAM allocation, out-of-bounds DMA, uninitialized canvas
+//! read, bad `mn`/`dpp`/`dpl` depthwise fields, corrupted encoding,
+//! non-topological deps) a mutated program produces the expected
+//! diagnostic kind. Together they bound the analyzer's false-positive
+//! and false-negative rates on the defect taxonomy.
+
+use kn_stream::analysis::{analyze, analyze_words, DiagKind, HazardKind};
+use kn_stream::compiler::{compile_graph_with_options, CompileOptions, CompiledNet};
+use kn_stream::isa::{Cmd, PASS_DW, PASS_LAST};
+use kn_stream::model::zoo;
+use kn_stream::planner::{plan_graph, plan_graph_budget, PlanPolicy};
+use kn_stream::SRAM_BYTES;
+
+/// Compile a zoo net under a policy with the verify gate OFF — the
+/// mutation tests below analyze explicitly (and would trip the gate).
+fn compile(name: &str, policy: PlanPolicy) -> CompiledNet {
+    let graph = zoo::graph_by_name(name).expect("zoo net");
+    let opts = CompileOptions { verify: false, ..Default::default() };
+    if policy == PlanPolicy::Heuristic {
+        compile_graph_with_options(&graph, None, &opts).expect("compile")
+    } else {
+        let gp = plan_graph(&graph, policy).expect("plan");
+        compile_graph_with_options(&graph, Some(&gp.plans), &opts).expect("compile")
+    }
+}
+
+/// True when `dst` is reachable from `src` through the dep edges
+/// (walking backwards from `dst`). Used to tell redundant dep edges
+/// (another path covers the hazard) from load-bearing ones.
+fn reachable(net: &CompiledNet, src: usize, dst: usize) -> bool {
+    let mut stack = vec![dst];
+    let mut seen = vec![false; net.segments.len()];
+    while let Some(x) = stack.pop() {
+        if x == src {
+            return true;
+        }
+        for &d in &net.segments[x].deps {
+            if !seen[d] {
+                seen[d] = true;
+                stack.push(d);
+            }
+        }
+    }
+    false
+}
+
+/// Index into `program` of a conv pass matching `pred`.
+fn find_conv(net: &CompiledNet, pred: impl Fn(&kn_stream::isa::ConvPass) -> bool) -> usize {
+    net.program
+        .iter()
+        .position(|c| matches!(c, Cmd::Conv(p) if pred(p)))
+        .expect("no conv pass matches the predicate")
+}
+
+// ---------------------------------------------------------------------------
+// property: everything the compiler emits lints clean
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zoo_schedules_lint_clean_across_policies() {
+    for name in zoo::GRAPH_ALL {
+        if *name == "vgg16" {
+            continue; // tier-2 scale; covered by the CLI lint sweep
+        }
+        for policy in PlanPolicy::ALL {
+            let net = compile(name, policy);
+            let a = analyze(&net).expect("analysis");
+            assert!(
+                a.is_clean(),
+                "{name}/{}: analyzer found defects in a valid schedule:\n{}",
+                policy.name(),
+                a.report()
+            );
+            assert!(a.segments == net.segments.len());
+            assert!(
+                a.hazards_checked > 0,
+                "{name}/{}: race detector examined no hazards",
+                policy.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn budget_sweep_lints_clean() {
+    // The decomposition depth axis: tighter SRAM budgets force more
+    // image/feature splitting and denser segment DAGs.
+    let graph = zoo::graph_by_name("alexnet").expect("zoo net");
+    let opts = CompileOptions { verify: false, ..Default::default() };
+    for budget in [SRAM_BYTES / 2, (SRAM_BYTES * 3) / 4, SRAM_BYTES] {
+        let gp = plan_graph_budget(&graph, PlanPolicy::MinTraffic, budget).expect("plan");
+        let net = compile_graph_with_options(&graph, Some(&gp.plans), &opts).expect("compile");
+        let a = analyze(&net).expect("analysis");
+        assert!(a.is_clean(), "alexnet @ {budget} B: {}", a.report());
+    }
+}
+
+#[test]
+fn verify_gate_accepts_valid_schedules() {
+    let graph = zoo::graph_by_name("quicknet").expect("zoo net");
+    let opts = CompileOptions { verify: true, ..Default::default() };
+    compile_graph_with_options(&graph, None, &opts).expect("verify gate rejected a valid net");
+}
+
+// ---------------------------------------------------------------------------
+// mutation harness: each seeded defect class must be detected
+// ---------------------------------------------------------------------------
+
+#[test]
+fn mutation_dropped_dep_edge_is_an_uncovered_hazard() {
+    let mut net = compile("facenet", PlanPolicy::Heuristic);
+    let mut killed = 0usize;
+    for j in 0..net.segments.len() {
+        for k in 0..net.segments[j].deps.len() {
+            let d = net.segments[j].deps.remove(k);
+            if reachable(&net, d, j) {
+                // A redundant edge — the hazard stays covered through
+                // another path, so dropping it is not a defect.
+                net.segments[j].deps.insert(k, d);
+                continue;
+            }
+            let a = analyze(&net).expect("analysis");
+            assert!(
+                a.has_kind(DiagKind::UncoveredHazard(HazardKind::Raw)),
+                "seg {j}: dropping dep {d} left every hazard covered:\n{}",
+                a.report()
+            );
+            net.segments[j].deps.insert(k, d);
+            killed += 1;
+            if killed >= 4 {
+                return; // enough witnesses; keep the test fast
+            }
+        }
+    }
+    assert!(killed > 0, "facenet has no load-bearing dep edge to drop");
+}
+
+#[test]
+fn mutation_overlapping_sram_alloc_is_detected() {
+    let mut net = compile("quicknet", PlanPolicy::Heuristic);
+    // Aim a conv pass's output at its own staged input: write hull
+    // [src, src + 16*oh*ow) intersects read hull [src, src + cn*ih*iw).
+    let i = find_conv(&net, |p| p.flags & PASS_LAST != 0 && p.flags & PASS_DW == 0);
+    if let Cmd::Conv(p) = &mut net.program[i] {
+        p.dst_px = p.src_px;
+    }
+    let a = analyze(&net).expect("analysis");
+    assert!(a.has_kind(DiagKind::SramOverlap), "in-place conv not flagged:\n{}", a.report());
+}
+
+#[test]
+fn mutation_oob_dma_is_detected() {
+    // SRAM side: a LoadImage staged past the 64 Ki-pixel bank.
+    let mut net = compile("quicknet", PlanPolicy::Heuristic);
+    let i = net
+        .program
+        .iter()
+        .position(|c| matches!(c, Cmd::LoadImage(_)))
+        .expect("no LoadImage");
+    if let Cmd::LoadImage(d) = &mut net.program[i] {
+        d.sram_px = (SRAM_BYTES / 2) as u32;
+    }
+    let a = analyze(&net).expect("analysis");
+    assert!(a.has_kind(DiagKind::SramOob), "OOB LoadImage not flagged:\n{}", a.report());
+
+    // DRAM side: a Store aimed past the allocated image.
+    let mut net = compile("quicknet", PlanPolicy::Heuristic);
+    let i = net
+        .program
+        .iter()
+        .position(|c| matches!(c, Cmd::Store(_)))
+        .expect("no Store");
+    if let Cmd::Store(d) = &mut net.program[i] {
+        d.dram_px = net.dram_px as u32;
+    }
+    let a = analyze(&net).expect("analysis");
+    assert!(a.has_kind(DiagKind::DramOob), "OOB Store not flagged:\n{}", a.report());
+}
+
+#[test]
+fn mutation_dropped_store_is_an_uninitialized_read() {
+    let mut net = compile("quicknet", PlanPolicy::Heuristic);
+    // Drop the first Store (node 0's canvas): the pool node then loads
+    // canvas bytes nothing ever wrote.
+    let i = net
+        .program
+        .iter()
+        .position(|c| matches!(c, Cmd::Store(_)))
+        .expect("no Store");
+    net.program[i] = Cmd::Nop;
+    let a = analyze(&net).expect("analysis");
+    assert!(a.has_kind(DiagKind::UninitRead), "dropped store not flagged:\n{}", a.report());
+}
+
+#[test]
+fn mutation_bad_dw_fields_are_detected() {
+    // mobilenet's depthwise fast path emits packed PASS_DW passes.
+    let base = compile("mobilenet", PlanPolicy::Heuristic);
+    let pick = find_conv(&base, |p| {
+        p.flags & PASS_DW != 0 && p.flags & PASS_LAST != 0 && p.ow > 1 && p.oh > 1
+    });
+    let cases: [(&str, fn(&mut kn_stream::isa::ConvPass)); 3] = [
+        ("mn=17", |p| p.mn = 17),
+        ("dpp=1", |p| p.dpp = 1),
+        ("dpl=1", |p| p.dpl = 1),
+    ];
+    for (label, mutate) in cases {
+        let mut net = compile("mobilenet", PlanPolicy::Heuristic);
+        if let Cmd::Conv(p) = &mut net.program[pick] {
+            mutate(p);
+        } else {
+            unreachable!("pick indexes a conv pass");
+        }
+        let a = analyze(&net).expect("analysis");
+        assert!(a.has_kind(DiagKind::DwField), "{label} not flagged:\n{}", a.report());
+    }
+}
+
+#[test]
+fn mutation_corrupted_encoding_is_decode_drift() {
+    let net = compile("quicknet", PlanPolicy::Heuristic);
+    let words = Cmd::encode_program(&net.program);
+
+    // An undecodable opcode at a command boundary.
+    let mut bad = words.clone();
+    bad[0] = 0x00fe;
+    let a = analyze_words(&net, &bad).expect("analysis");
+    assert!(a.has_kind(DiagKind::DecodeDrift), "bad opcode not flagged:\n{}", a.report());
+
+    // A decodable stream whose operands drifted from the in-memory
+    // program (a single flipped payload bit).
+    let mut bad = words;
+    bad[1] ^= 1;
+    let a = analyze_words(&net, &bad).expect("analysis");
+    assert!(a.has_kind(DiagKind::DecodeDrift), "operand drift not flagged:\n{}", a.report());
+}
+
+#[test]
+fn mutation_forward_dep_is_non_topological() {
+    let mut net = compile("quicknet", PlanPolicy::Heuristic);
+    assert!(net.segments.len() >= 2);
+    net.segments[0].deps.push(1);
+    let a = analyze(&net).expect("analysis");
+    assert!(a.has_kind(DiagKind::NonTopological), "forward dep not flagged:\n{}", a.report());
+}
