@@ -16,8 +16,9 @@ use kn_stream::analysis::analyze;
 use kn_stream::compiler::{
     compile_graph_threads, compile_graph_with_options, CompileOptions, NetRunner,
 };
+use kn_stream::energy::OperatingPoint;
 use kn_stream::model::{zoo, Tensor};
-use kn_stream::planner::{plan_graph_budget, PlanPolicy};
+use kn_stream::planner::{plan_graph_budget, plan_graph_objective, PlanObjective, PlanPolicy};
 use kn_stream::util::bench::{bench_once, JsonReport, Table};
 use kn_stream::util::json::{obj, s, Json};
 use kn_stream::SRAM_BYTES;
@@ -28,6 +29,10 @@ const ANALYTIC_NETS: &[&str] =
     &["quicknet", "facenet", "edgenet", "widenet", "gapnet", "alexnet", "vgg16"];
 const EXEC_NETS: &[&str] = &["facenet", "edgenet", "widenet", "gapnet"];
 const BUDGETS: &[usize] = &[64 * 1024, 128 * 1024, 256 * 1024];
+/// Nets for the objective trade-off sweep (planning-only, so mobilenet
+/// and its fused dw/pw pairs ride along at no execution cost).
+const OBJ_NETS: &[&str] = &["facenet", "edgenet", "widenet", "gapnet", "mobilenet"];
+const OBJ_FREQS_MHZ: &[f64] = &[20.0, 100.0, 250.0, 500.0];
 
 fn main() {
     let mut report = JsonReport::new("planner");
@@ -84,6 +89,51 @@ fn main() {
     }
     t.print();
     report.num("dag_beats_heuristic_nets", dag_beats_heuristic as f64);
+
+    // ---- objectives: latency/energy trade at DVFS points -----------------
+    let mut t = Table::new(
+        "objective trade at 128K (full candidate search) — per DVFS point",
+        &["net", "objective", "MHz", "cycles", "lat ms", "energy mJ", "DRAM MB"],
+    );
+    for name in OBJ_NETS {
+        let graph = zoo::graph_by_name(name).unwrap();
+        for &freq in OBJ_FREQS_MHZ {
+            let op = OperatingPoint::for_freq(freq);
+            let objectives = [
+                PlanObjective::MinTraffic,
+                PlanObjective::MinLatency { op },
+                PlanObjective::MinEnergy { slo_ms: 0.0, op },
+                PlanObjective::MinEdp { op },
+            ];
+            for objective in objectives {
+                let gp = plan_graph_objective(&graph, PlanPolicy::MinTraffic, objective).unwrap();
+                let tt = gp.total_traffic();
+                let dram_bytes = (tt.read_bytes + tt.write_bytes) as f64;
+                t.row(&[
+                    name.to_string(),
+                    objective.name().to_string(),
+                    format!("{freq:.0}"),
+                    format!("{}", gp.predicted_cycles()),
+                    format!("{:.3}", gp.latency_ms(op)),
+                    format!("{:.3}", gp.energy_j(op) * 1e3),
+                    format!("{:.3}", dram_bytes / 1e6),
+                ]);
+                report.push_row(
+                    "objective",
+                    obj(vec![
+                        ("net", s(name)),
+                        ("objective", s(objective.name())),
+                        ("freq_mhz", Json::Num(freq)),
+                        ("cycles", Json::Num(gp.predicted_cycles() as f64)),
+                        ("latency_ms", Json::Num(gp.latency_ms(op))),
+                        ("energy_mj", Json::Num(gp.energy_j(op) * 1e3)),
+                        ("pred_dram_bytes", Json::Num(dram_bytes)),
+                    ]),
+                );
+            }
+        }
+    }
+    t.print();
 
     // ---- measured: execute each policy, verify bit-exactness -------------
     let mut t = Table::new(

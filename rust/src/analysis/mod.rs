@@ -29,9 +29,12 @@
 use std::collections::VecDeque;
 
 use crate::compiler::CompiledNet;
-use crate::isa::{Cmd, ConvCfg, DmaDesc, PASS_DW, PASS_LAST};
+use crate::isa::{Cmd, ConvCfg, DmaDesc, PASS_DW, PASS_FIRST, PASS_LAST};
 use crate::model::graph::{Graph, NodeOp, NodeRef};
 use crate::sim::accbuf::ACC_TILE_PX;
+use crate::sim::dma::SegClock;
+use crate::sim::fastconv::{dw_scan_timing, scan_timing};
+use crate::sim::sram::WORD_PX;
 use crate::{NUM_CU, PES_PER_CU, SRAM_BYTES};
 
 /// SRAM capacity in pixels (1 px = 2 bytes).
@@ -100,6 +103,10 @@ pub enum DiagKind {
     NonTopological,
     /// A cross-segment hazard with no covering dependency path.
     UncoveredHazard(HazardKind),
+    /// The planner's predicted per-node cycle table disagrees with the
+    /// exact cycle count replayed from the decoded command stream
+    /// ([`lint_timing`]) — the timing claims drifted from the artifact.
+    TimingDrift,
 }
 
 /// One analyzer finding.
@@ -997,6 +1004,121 @@ fn check_segment_form(net: &CompiledNet, prog: &[Cmd], diags: &mut Vec<Diagnosti
 }
 
 // ---------------------------------------------------------------------------
+// timing replay: exact per-segment cycles from the decoded stream
+
+/// Exact cycle count of one segment, replayed from the decoded command
+/// stream through the same charge rules the simulator applies (via
+/// [`SegClock`]): overlappable DMA on a serialized channel, the
+/// two-deep weight stage with stall-to-fetch, `scan_timing`/
+/// `dw_scan_timing` per conv pass, `oh·ow·k` per pool channel, and the
+/// `Sync` drain. Commands whose geometry is illegal (reported elsewhere
+/// as `ConvShape`) contribute what they legally can.
+pub fn segment_cycles(seg: &crate::compiler::Segment, prog: &[Cmd]) -> u64 {
+    let mut clk = SegClock::new();
+    let mut cfg = seg.cfg;
+    for cmd in &prog[seg.start..seg.end.min(prog.len())] {
+        match cmd {
+            Cmd::Nop | Cmd::Halt => {}
+            Cmd::Sync => clk.sync(),
+            Cmd::SetConv(c) => cfg = Some(*c),
+            Cmd::LoadImage(d) | Cmd::Store(d) => {
+                clk.dma(u64::from(d.rows) * u64::from(d.row_px) * 2);
+            }
+            Cmd::LoadWeights(w) => {
+                clk.load_weights(u64::from(w.cn) * (PES_PER_CU * NUM_CU) as u64);
+            }
+            Cmd::LoadBias(_) => clk.dma(2 * 2 * NUM_CU as u64),
+            Cmd::Conv(p) => {
+                let st = cfg.map_or(1, |c| c.stride as usize).max(1);
+                let (ih, iw) = (p.ih as usize, p.iw as usize);
+                let (oh, ow) = (p.oh as usize, p.ow as usize);
+                if p.flags & PASS_FIRST != 0 {
+                    clk.compute((oh * ow / WORD_PX) as u64 + 1);
+                }
+                clk.pop_weights();
+                if p.flags & PASS_DW != 0 {
+                    let cn = (p.cn as usize).clamp(1, NUM_CU);
+                    let t = dw_scan_timing(ih, iw, oh, ow, st, cn);
+                    clk.compute(t.fill_cycles + t.scan_cycles);
+                    if p.flags & PASS_LAST != 0 {
+                        clk.compute((oh * ow * cn).div_ceil(WORD_PX) as u64);
+                    }
+                } else {
+                    let t = scan_timing(ih, iw, oh, ow, st);
+                    clk.compute(u64::from(p.cn) * (t.fill_cycles + t.scan_cycles));
+                    if p.flags & PASS_LAST != 0 {
+                        clk.compute((oh * ow * NUM_CU).div_ceil(WORD_PX) as u64);
+                    }
+                }
+            }
+            Cmd::Pool(p) => {
+                let (ih, iw) = (p.ih as usize, p.iw as usize);
+                let (k, st) = (p.k as usize, p.stride as usize);
+                if k == 0 || st == 0 || k > ih || k > iw {
+                    continue;
+                }
+                let (oh, ow) = ((ih - k) / st + 1, (iw - k) / st + 1);
+                clk.compute((p.c as usize * oh * ow * k) as u64);
+            }
+            Cmd::Add(a) => clk.compute(3 * u64::from(a.n_px).div_ceil(WORD_PX as u64)),
+        }
+    }
+    clk.cyc
+}
+
+/// Per-node exact cycle totals derived from the artifact alone: every
+/// segment replayed through [`segment_cycles`], summed onto the graph
+/// node that owns it. Every segment ends on a `Sync` barrier, so the
+/// per-segment deltas are translation-invariant and the per-node sums
+/// equal the measured `SimStats` attribution.
+pub fn derived_node_cycles(net: &CompiledNet) -> Vec<u64> {
+    let mut per_node = vec![0u64; net.graph.nodes.len()];
+    for seg in &net.segments {
+        per_node[seg.node] += segment_cycles(seg, &net.program);
+    }
+    per_node
+}
+
+/// Timing lint: check a planner-predicted per-node cycle table (e.g.
+/// `GraphPlan::node_cycles`) against the exact totals replayed from the
+/// compiled command stream. Any disagreement is a [`DiagKind::TimingDrift`]
+/// diagnostic — the planner's timing claims no longer describe the
+/// artifact it planned.
+pub fn lint_timing(net: &CompiledNet, predicted: &[u64]) -> Vec<Diagnostic> {
+    let derived = derived_node_cycles(net);
+    let mut diags = Vec::new();
+    if predicted.len() != derived.len() {
+        diag(
+            &mut diags,
+            DiagKind::TimingDrift,
+            None,
+            Vec::new(),
+            format!(
+                "predicted cycle table has {} entries for a {}-node graph",
+                predicted.len(),
+                derived.len()
+            ),
+        );
+        return diags;
+    }
+    for (i, (&p, &d)) in predicted.iter().zip(&derived).enumerate() {
+        if p != d {
+            diag(
+                &mut diags,
+                DiagKind::TimingDrift,
+                None,
+                Vec::new(),
+                format!(
+                    "node {i}: planner predicts {p} cycles but the decoded command \
+                     stream replays to {d}"
+                ),
+            );
+        }
+    }
+    diags
+}
+
+// ---------------------------------------------------------------------------
 // race detection over the segment DAG
 
 /// Recompute every pairwise DRAM read/write intersection between
@@ -1134,5 +1256,19 @@ mod tests {
         let a = analyze(&net).unwrap();
         assert!(a.is_clean(), "quicknet should lint clean:\n{}", a.report());
         assert!(a.hazards_checked > 0, "a multi-node net must exercise the race detector");
+    }
+
+    #[test]
+    fn timing_replay_agrees_with_the_planner_and_kills_corruption() {
+        let graph = crate::model::zoo::graph_by_name("quicknet").unwrap();
+        let gp =
+            crate::planner::plan_graph(&graph, crate::planner::PlanPolicy::MinTraffic).unwrap();
+        let net = crate::compiler::compile_graph_with_plans(&graph, &gp.plans).unwrap();
+        let clean = lint_timing(&net, &gp.node_cycles);
+        assert!(clean.is_empty(), "planner vs replay drift:\n{clean:?}");
+        let mut bad = gp.node_cycles.clone();
+        bad[0] += 1;
+        assert!(lint_timing(&net, &bad).iter().any(|d| d.kind == DiagKind::TimingDrift));
+        assert!(lint_timing(&net, &bad[1..]).iter().any(|d| d.kind == DiagKind::TimingDrift));
     }
 }

@@ -238,11 +238,21 @@ pub struct CompileOptions {
     /// verified — and off in release, where callers opt in explicitly
     /// (the `lint` CLI always analyzes).
     pub verify: bool,
+    /// What the planner minimizes when a searching
+    /// [`crate::planner::PlanPolicy`] chooses the decomposition
+    /// (ignored by the emitter itself; read by
+    /// [`crate::compiler::NetRunner`] and the CLI when they plan
+    /// before compiling). Default: DRAM traffic.
+    pub objective: crate::planner::PlanObjective,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        Self { emit_threads: default_emit_threads(), verify: cfg!(debug_assertions) }
+        Self {
+            emit_threads: default_emit_threads(),
+            verify: cfg!(debug_assertions),
+            objective: crate::planner::PlanObjective::MinTraffic,
+        }
     }
 }
 

@@ -215,16 +215,49 @@ impl NetRunner {
         Self::from_graph_with_config_policy(graph, SimConfig::default(), policy)
     }
 
+    /// [`NetRunner::from_graph_with_policy`] with an explicit plan
+    /// objective, default sim config.
+    pub fn from_graph_with_policy_objective(
+        graph: &Graph,
+        policy: crate::planner::PlanPolicy,
+        objective: crate::planner::PlanObjective,
+    ) -> anyhow::Result<Self> {
+        Self::from_graph_with_config_policy_objective(
+            graph,
+            SimConfig::default(),
+            policy,
+            objective,
+        )
+    }
+
     /// [`NetRunner::from_graph_with_policy`] with explicit sim config.
     pub fn from_graph_with_config_policy(
         graph: &Graph,
         cfg: SimConfig,
         policy: crate::planner::PlanPolicy,
     ) -> anyhow::Result<Self> {
+        Self::from_graph_with_config_policy_objective(
+            graph,
+            cfg,
+            policy,
+            crate::planner::PlanObjective::MinTraffic,
+        )
+    }
+
+    /// [`NetRunner::from_graph_with_config_policy`] with an explicit
+    /// plan objective (what a searching policy minimizes: traffic,
+    /// latency, energy under an SLO, or EDP at an operating point).
+    /// `Heuristic` ignores the objective — it never scores plans.
+    pub fn from_graph_with_config_policy_objective(
+        graph: &Graph,
+        cfg: SimConfig,
+        policy: crate::planner::PlanPolicy,
+        objective: crate::planner::PlanObjective,
+    ) -> anyhow::Result<Self> {
         let compiled = match policy {
             crate::planner::PlanPolicy::Heuristic => compile_graph(graph)?,
             _ => {
-                let gp = crate::planner::plan_graph(graph, policy)?;
+                let gp = crate::planner::plan_graph_objective(graph, policy, objective)?;
                 codegen::compile_graph_with_plans(graph, &gp.plans)?
             }
         };

@@ -41,4 +41,7 @@ pub use request::{
     Attempts, FrameError, FrameErrorKind, FrameOutput, FrameRequest, FrameResult, SubmitError,
     NO_CHIP, NO_WORKER,
 };
-pub use server::{AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig, Pending};
+pub use server::{
+    AdmissionMode, AdmissionPolicy, AutoOp, Coordinator, CoordinatorConfig, Pending,
+    DVFS_LADDER_MHZ,
+};

@@ -59,9 +59,9 @@ use super::request::{
     NO_CHIP, NO_WORKER,
 };
 use crate::compiler::{AccelPool, NetRunner};
-use crate::energy::OperatingPoint;
+use crate::energy::{EnergyModel, OperatingPoint};
 use crate::model::{Graph, NetSpec, Tensor};
-use crate::planner::PlanPolicy;
+use crate::planner::{PlanObjective, PlanPolicy};
 
 /// What to do when admitting a frame would exceed the DRAM budget.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -142,6 +142,10 @@ pub struct CoordinatorConfig {
     /// outputs are bit-identical under every policy; only DRAM traffic
     /// and tile-level parallelism change.
     pub plan_policy: PlanPolicy,
+    /// What a searching `plan_policy` minimizes ([`PlanObjective`]):
+    /// DRAM traffic (the default), exact latency, energy under an SLO,
+    /// or EDP at an operating point. `Heuristic` ignores it.
+    pub objective: PlanObjective,
     /// Per-*attempt* service deadline (measured from each dispatch to
     /// a chip). `None` = no deadline. A frame past-due at dequeue, or
     /// stalled past it by a slow chip, is re-routed and the miss
@@ -176,6 +180,7 @@ impl Default for CoordinatorConfig {
             chip_ops: Vec::new(),
             admission: AdmissionPolicy::default(),
             plan_policy: PlanPolicy::Heuristic,
+            objective: PlanObjective::MinTraffic,
             deadline: None,
             max_retries: 2,
             retry_backoff: Duration::from_micros(200),
@@ -921,6 +926,90 @@ impl Pending {
     }
 }
 
+/// DVFS frequencies (MHz) [`Coordinator::auto_pick_ops`] sweeps: the
+/// paper's Table 2 corners (20, 500) plus evenly spaced points between.
+pub const DVFS_LADDER_MHZ: [f64; 11] =
+    [20.0, 50.0, 100.0, 150.0, 200.0, 250.0, 300.0, 350.0, 400.0, 450.0, 500.0];
+
+/// One net's auto-picked operating point: the minimum-energy
+/// [`DVFS_LADDER_MHZ`] point whose *measured* single-frame latency
+/// meets the SLO (PEAK fallback when no ladder point can).
+#[derive(Clone, Debug)]
+pub struct AutoOp {
+    pub net: String,
+    /// Measured device cycles of the probe frame.
+    pub cycles: u64,
+    /// The chosen operating point.
+    pub op: OperatingPoint,
+    /// Probe-frame latency at `op`, milliseconds.
+    pub latency_ms: f64,
+    /// Probe-frame energy at `op`, joules.
+    pub energy_j: f64,
+    /// The same frame's energy at PEAK — the baseline the pick beats.
+    pub peak_energy_j: f64,
+    /// Whether the SLO holds at `op` (`false` only on PEAK fallback,
+    /// when even the fastest point misses the deadline).
+    pub slo_met: bool,
+}
+
+/// Probe one net (one seeded frame on the simulator) and pick its
+/// minimum-energy ladder point within the SLO.
+fn auto_pick_for(name: &str, runner: &NetRunner, slo_ms: f64) -> anyhow::Result<AutoOp> {
+    let em = EnergyModel::default();
+    let (h, w, c) = runner.compiled.graph.in_shape();
+    let frame = Tensor::random_image(0, h, w, c);
+    let (_, stats) = runner
+        .run_frame(&frame)
+        .map_err(|e| anyhow::anyhow!("auto-pick probe frame for '{name}': {e:#}"))?;
+    let peak_energy_j = em.energy(&stats, crate::energy::dvfs::PEAK).total_j();
+    let mut best: Option<AutoOp> = None;
+    for f in DVFS_LADDER_MHZ {
+        let op = OperatingPoint::for_freq(f);
+        let latency_ms = stats.cycles as f64 * op.cycle_s() * 1e3;
+        if latency_ms > slo_ms {
+            continue;
+        }
+        let energy_j = em.energy(&stats, op).total_j();
+        let better = match &best {
+            None => true,
+            Some(b) => energy_j < b.energy_j,
+        };
+        if better {
+            best = Some(AutoOp {
+                net: name.to_string(),
+                cycles: stats.cycles,
+                op,
+                latency_ms,
+                energy_j,
+                peak_energy_j,
+                slo_met: true,
+            });
+        }
+    }
+    Ok(best.unwrap_or_else(|| {
+        let op = crate::energy::dvfs::PEAK;
+        AutoOp {
+            net: name.to_string(),
+            cycles: stats.cycles,
+            op,
+            latency_ms: stats.cycles as f64 * op.cycle_s() * 1e3,
+            energy_j: peak_energy_j,
+            peak_energy_j,
+            slo_met: false,
+        }
+    }))
+}
+
+/// The fleet operating point: the *fastest* per-net pick, so every
+/// net's SLO still holds on a chip that adopts it.
+fn fleet_op(picks: &[AutoOp]) -> OperatingPoint {
+    picks
+        .iter()
+        .map(|p| p.op)
+        .reduce(|a, b| if b.freq_mhz > a.freq_mhz { b } else { a })
+        .unwrap_or(crate::energy::dvfs::PEAK)
+}
+
 /// The serving front-end.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
@@ -956,18 +1045,59 @@ impl Coordinator {
         nets: Vec<(String, Graph)>,
         cfg: CoordinatorConfig,
     ) -> anyhow::Result<Self> {
+        let (registry, by_name) = Self::compile_registry(&nets, &cfg)?;
+        Self::start_compiled(registry, by_name, cfg)
+    }
+
+    /// [`Coordinator::start_registry`], with the fleet operating point
+    /// chosen by the DVFS auto-pick instead of `cfg.op`: each net is
+    /// probed once on its compiled runner (before any chip exists),
+    /// the per-net minimum-energy point within `slo_ms` is computed,
+    /// and every chip starts at the fastest per-net pick — the lowest
+    /// fleet frequency at which all registered nets meet the SLO.
+    /// Returns the per-net pick table alongside the coordinator
+    /// ([`Coordinator::op`] reports the fleet point in force).
+    pub fn start_registry_auto_op(
+        nets: Vec<(String, Graph)>,
+        mut cfg: CoordinatorConfig,
+        slo_ms: f64,
+    ) -> anyhow::Result<(Self, Vec<AutoOp>)> {
+        let (registry, by_name) = Self::compile_registry(&nets, &cfg)?;
+        let mut picks: Vec<AutoOp> = Vec::with_capacity(registry.len());
+        for (name, runner) in &registry {
+            picks.push(auto_pick_for(name, runner, slo_ms)?);
+        }
+        cfg.op = fleet_op(&picks);
+        Ok((Self::start_compiled(registry, by_name, cfg)?, picks))
+    }
+
+    /// Compile every named graph once into the shared registry.
+    fn compile_registry(
+        nets: &[(String, Graph)],
+        cfg: &CoordinatorConfig,
+    ) -> anyhow::Result<(Vec<(String, Arc<NetRunner>)>, HashMap<String, usize>)> {
         anyhow::ensure!(!nets.is_empty(), "serving registry needs at least one net");
         let mut registry: Vec<(String, Arc<NetRunner>)> = Vec::with_capacity(nets.len());
         let mut by_name = HashMap::new();
-        for (name, graph) in &nets {
+        for (name, graph) in nets {
             anyhow::ensure!(
                 by_name.insert(name.clone(), registry.len()).is_none(),
                 "duplicate net name '{name}' in registry"
             );
-            let runner = NetRunner::from_graph_with_policy(graph, cfg.plan_policy)
-                .map_err(|e| anyhow::anyhow!("compiling net '{name}': {e:#}"))?;
+            let runner =
+                NetRunner::from_graph_with_policy_objective(graph, cfg.plan_policy, cfg.objective)
+                    .map_err(|e| anyhow::anyhow!("compiling net '{name}': {e:#}"))?;
             registry.push((name.clone(), Arc::new(runner)));
         }
+        Ok((registry, by_name))
+    }
+
+    /// Start the chip fleet over an already-compiled registry.
+    fn start_compiled(
+        registry: Vec<(String, Arc<NetRunner>)>,
+        by_name: HashMap<String, usize>,
+        cfg: CoordinatorConfig,
+    ) -> anyhow::Result<Self> {
         let admission = Arc::new(Admission {
             policy: cfg.admission,
             in_flight: Mutex::new(0),
@@ -1214,6 +1344,29 @@ impl Coordinator {
         for h in lock_recover(&self.handles).drain(..) {
             let _ = h.join();
         }
+    }
+
+    /// Serve-side DVFS auto-pick (the paper's Table 2 trade, closed
+    /// into a control loop): run one probe frame per registered net on
+    /// the simulator, then choose per net the minimum-energy
+    /// [`DVFS_LADDER_MHZ`] point whose *measured* latency meets
+    /// `slo_ms` milliseconds (PEAK fallback when none does, flagged
+    /// `slo_met: false`). Returns the per-net table plus the fleet
+    /// operating point — the fastest per-net pick, so every net's SLO
+    /// still holds on every chip that adopts it. Deterministic: the
+    /// probe frame is seeded and the simulator is cycle-exact.
+    pub fn auto_pick_ops(&self, slo_ms: f64) -> anyhow::Result<(OperatingPoint, Vec<AutoOp>)> {
+        let mut picks: Vec<AutoOp> = Vec::with_capacity(self.nets.len());
+        for (name, runner) in &self.nets {
+            picks.push(auto_pick_for(name, runner, slo_ms)?);
+        }
+        Ok((fleet_op(&picks), picks))
+    }
+
+    /// The fleet-default operating point ([`CoordinatorConfig::op`]);
+    /// chips without a per-chip override run at this point.
+    pub fn op(&self) -> OperatingPoint {
+        self.cfg.op
     }
 
     /// Chaos/test hook (legacy, untargeted): panic whichever worker on
@@ -1559,6 +1712,73 @@ mod tests {
             let out = coord.submit(f.clone()).unwrap().recv().unwrap().ok().unwrap();
             assert_eq!(out.output, run_graph_ref(&graph, &f), "frame {s}");
         }
+        coord.stop();
+    }
+
+    /// Serving through a latency-objective plan must also stay
+    /// bit-exact — the objective only changes decomposition choices.
+    #[test]
+    fn objective_plan_serving_is_bit_exact() {
+        let graph = zoo::edgenet();
+        let cfg = CoordinatorConfig {
+            plan_policy: PlanPolicy::MinTraffic,
+            objective: PlanObjective::MinLatency { op: crate::energy::dvfs::PEAK },
+            ..Default::default()
+        };
+        let coord = Coordinator::start_graph(&graph, cfg).unwrap();
+        let f = Tensor::random_image(0, graph.in_h, graph.in_w, graph.in_c);
+        let out = coord.submit(f.clone()).unwrap().recv().unwrap().ok().unwrap();
+        assert_eq!(out.output, run_graph_ref(&graph, &f));
+        coord.stop();
+    }
+
+    /// The acceptance criterion for energy-aware serving: under a
+    /// 50 ms SLO the auto-pick must land on a *lower-energy, slower*
+    /// operating point than PEAK for quicknet — and the fleet point is
+    /// the fastest per-net pick.
+    #[test]
+    fn auto_pick_finds_sub_peak_point_within_slo() {
+        let net = zoo::quicknet();
+        let coord = Coordinator::start(&net, CoordinatorConfig::default()).unwrap();
+        let (fleet, picks) = coord.auto_pick_ops(50.0).unwrap();
+        assert_eq!(picks.len(), 1);
+        let p = &picks[0];
+        assert_eq!(p.net, "quicknet");
+        assert!(p.slo_met, "quicknet must fit a 50 ms SLO at some ladder point");
+        assert!(p.latency_ms <= 50.0, "picked latency {} ms", p.latency_ms);
+        assert!(
+            p.op.freq_mhz < crate::energy::dvfs::PEAK.freq_mhz,
+            "auto-pick stayed at PEAK ({} MHz) — no energy won",
+            p.op.freq_mhz
+        );
+        assert!(
+            p.energy_j < p.peak_energy_j,
+            "picked energy {} J must beat PEAK {} J",
+            p.energy_j,
+            p.peak_energy_j
+        );
+        assert_eq!(fleet.freq_mhz, p.op.freq_mhz, "one net: fleet point is its pick");
+
+        // An impossible SLO falls back to PEAK, flagged.
+        let (_, picks) = coord.auto_pick_ops(0.0).unwrap();
+        assert!(!picks[0].slo_met);
+        assert_eq!(picks[0].op, crate::energy::dvfs::PEAK);
+        coord.stop();
+
+        // The auto-op constructor applies the fleet pick to the chips
+        // and serving stays bit-exact at the slower point.
+        let graph = Graph::from_net(&net);
+        let (coord, picks) = Coordinator::start_registry_auto_op(
+            vec![("quicknet".into(), graph)],
+            CoordinatorConfig::default(),
+            50.0,
+        )
+        .unwrap();
+        assert_eq!(coord.op().freq_mhz, picks[0].op.freq_mhz);
+        assert!(coord.op().freq_mhz < crate::energy::dvfs::PEAK.freq_mhz);
+        let f = Tensor::random_image(7, net.in_h, net.in_w, net.in_c);
+        let out = coord.submit(f.clone()).unwrap().recv().unwrap().ok().unwrap();
+        assert_eq!(out.output, run_net_ref(&net, &f));
         coord.stop();
     }
 

@@ -143,6 +143,59 @@ mod tests {
         assert!(m.peak_tops_per_w(EFFICIENT) > 2.0 * m.peak_tops_per_w(PEAK));
     }
 
+    /// Pin the full per-event breakdown at the EFFICIENT corner: every
+    /// term is hand-computed from the Table-2-calibrated constants
+    /// (ds = 0.6² = 0.36, leak scale 0.6³ = 0.216, t = 10⁶ cy / 20 MHz
+    /// = 0.05 s). A drift in any per-event energy or scaling law moves
+    /// exactly one of these.
+    #[test]
+    fn efficient_corner_energy_breakdown_is_pinned() {
+        let m = EnergyModel::default();
+        let stats = SimStats {
+            cycles: 1_000_000,
+            macs: 9_000_000,
+            sram_reads: 100_000,
+            sram_writes: 50_000,
+            pool_ops: 10_000,
+            dram_read_bytes: 1_000_000,
+            dram_write_bytes: 500_000,
+            ..Default::default()
+        };
+        let e = m.energy(&stats, EFFICIENT);
+        let close = |got: f64, want: f64| (got - want).abs() < want * 1e-9;
+        assert!(close(e.mac_j, 1.62e-5), "mac {:.4e}", e.mac_j);
+        assert!(close(e.sram_j, 6.48e-7), "sram {:.4e}", e.sram_j);
+        assert!(close(e.accbuf_j, 3.6e-7), "accbuf {:.4e}", e.accbuf_j);
+        assert!(close(e.pool_j, 1.44e-9), "pool {:.4e}", e.pool_j);
+        assert!(close(e.dram_j, 1.2e-4), "dram {:.4e}", e.dram_j);
+        assert!(close(e.ctrl_j, 4.032e-5), "ctrl {:.4e}", e.ctrl_j);
+        assert!(close(e.leak_j, 2.16e-5), "leak {:.4e}", e.leak_j);
+        assert!(close(e.onchip_j(), e.total_j() - 1.2e-4), "onchip excludes DRAM");
+    }
+
+    /// Interpolated `for_freq` points follow the linear V/f law and
+    /// its derived scalings exactly: 260 MHz is the V-midpoint
+    /// (0.8 V → ds 0.64, leak 0.512) and 100 MHz lands at 2/3 V.
+    #[test]
+    fn interpolated_points_follow_the_vf_law() {
+        let m = EnergyModel::default();
+        let op = OperatingPoint::for_freq(260.0);
+        assert!((op.vdd - 0.8).abs() < 1e-12);
+        assert!((op.dyn_scale() - 0.64).abs() < 1e-12);
+        assert!((op.leak_scale() - 0.512).abs() < 1e-12);
+        let p260 = m.peak_power_w(op);
+        assert!(p260 > m.peak_power_w(EFFICIENT) && p260 < m.peak_power_w(PEAK));
+        let op100 = OperatingPoint::for_freq(100.0);
+        assert!((op100.vdd - 2.0 / 3.0).abs() < 1e-12);
+        // dynamic terms of a fixed-stats workload scale with V²: the
+        // 0.8 V midpoint costs exactly 0.64× the PEAK mac/ctrl energy
+        let stats = SimStats { cycles: 500_000, macs: 10_000_000, ..Default::default() };
+        let (mid, peak) = (m.energy(&stats, op), m.energy(&stats, PEAK));
+        assert!((mid.mac_j - 0.64 * peak.mac_j).abs() < peak.mac_j * 1e-12);
+        assert!((mid.ctrl_j - 0.64 * peak.ctrl_j).abs() < peak.ctrl_j * 1e-12);
+        assert_eq!(mid.dram_j, peak.dram_j, "DRAM energy does not scale with core VDD");
+    }
+
     #[test]
     fn run_energy_scales_with_voltage() {
         let m = EnergyModel::default();

@@ -10,14 +10,14 @@
 //!            detection over the compiled command stream
 //!   info     chip configuration, area and DVFS summary
 
-use kn_stream::analysis::analyze;
+use kn_stream::analysis::{analyze, lint_timing};
 use kn_stream::compiler::{compile_graph_with_options, CompileOptions, NetRunner};
 use kn_stream::coordinator::{
     AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig, FaultPlan,
 };
 use kn_stream::energy::{AreaModel, EnergyModel, OperatingPoint};
 use kn_stream::model::{zoo, Tensor};
-use kn_stream::planner::{plan_graph, PlanPolicy};
+use kn_stream::planner::{plan_graph, plan_graph_objective, PlanObjective, PlanPolicy};
 use kn_stream::runtime::Golden;
 use kn_stream::util::bench::Table;
 use kn_stream::util::cli::Cli;
@@ -78,12 +78,16 @@ fn cmd_run(args: Vec<String>) -> anyhow::Result<()> {
         .opt("frames", "1", "number of frames")
         .opt("freq", "500", "clock in MHz (20..500, sets VDD by DVFS law)")
         .opt("seed", "1", "input frame seed")
-        .opt("plan-policy", "heuristic", "decomposition planner (heuristic|min-traffic|dag-aware)");
+        .opt("plan-policy", "heuristic", "decomposition planner (heuristic|min-traffic|dag-aware)")
+        .opt("objective", "min-traffic", "objective (min-traffic|min-latency|min-energy|min-edp)")
+        .opt("slo-ms", "0", "latency SLO for --objective min-energy (0 = none)");
     let m = cli.parse_from(args)?;
     let net = graph_arg(m.get("net"))?;
     let op = OperatingPoint::for_freq(m.get_f64("freq"));
     let policy = PlanPolicy::parse(m.get("plan-policy"))?;
-    let runner = NetRunner::from_graph_with_policy(&net, policy)?;
+    let objective =
+        PlanObjective::parse(m.get("objective"), m.get_f64("freq"), m.get_f64("slo-ms"))?;
+    let runner = NetRunner::from_graph_with_policy_objective(&net, policy, objective)?;
     let energy = EnergyModel::default();
     let ov = &runner.compiled.output;
     println!("net={} in={:?} out={:?}  @ {:.0} MHz / {:.2} V", net.name, net.in_shape(),
@@ -144,6 +148,7 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         .opt("admit-mb", "0", "in-flight DRAM-image budget in MB (0 = unbounded)")
         .opt("admit-mode", "block", "over-budget behavior: block|reject")
         .opt("plan-policy", "heuristic", "decomposition planner (heuristic|min-traffic|dag-aware)")
+        .opt("objective", "min-traffic", "objective (min-traffic|min-latency|min-energy|min-edp)")
         .opt("freq", "500", "clock in MHz")
         .opt("chips", "1", "independent chip fault domains (frames route least-loaded)")
         .opt("chip-freqs", "", "per-chip MHz overrides, comma-separated (default: --freq)")
@@ -185,6 +190,7 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         }
     };
     let deadline_ms = m.get_f64("deadline-ms");
+    let objective = PlanObjective::parse(m.get("objective"), m.get_f64("freq"), deadline_ms)?;
     let cfg = CoordinatorConfig {
         workers: m.get_usize("workers"),
         chips,
@@ -195,6 +201,7 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         chip_ops,
         admission,
         plan_policy: PlanPolicy::parse(m.get("plan-policy"))?,
+        objective,
         deadline: (deadline_ms > 0.0)
             .then(|| std::time::Duration::from_micros((deadline_ms * 1e3) as u64)),
         max_retries: m.get_usize("max-retries") as u32,
@@ -203,7 +210,36 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
     };
 
     let tagged = zoo::mix_stream(&nets, &weights, frames);
-    let coord = Coordinator::start_registry(nets, cfg)?;
+    // min-energy serving with an SLO picks its own fleet DVFS point
+    // from measured probe frames (unless per-chip points were forced).
+    let auto_op = matches!(objective, PlanObjective::MinEnergy { .. })
+        && deadline_ms > 0.0
+        && m.get("chip-freqs").is_empty();
+    let (coord, op) = if auto_op {
+        let (coord, picks) = Coordinator::start_registry_auto_op(nets, cfg, deadline_ms)?;
+        let mut t = Table::new(
+            "DVFS auto-pick (min energy within SLO, per net)",
+            &["net", "cycles", "MHz", "VDD", "lat ms", "mJ", "PEAK mJ", "SLO met"],
+        );
+        for p in &picks {
+            t.row(&[
+                p.net.clone(),
+                format!("{}", p.cycles),
+                format!("{:.0}", p.op.freq_mhz),
+                format!("{:.2}", p.op.vdd),
+                format!("{:.2}", p.latency_ms),
+                format!("{:.3}", p.energy_j * 1e3),
+                format!("{:.3}", p.peak_energy_j * 1e3),
+                if p.slo_met { "yes".into() } else { "NO (PEAK fallback)".into() },
+            ]);
+        }
+        t.print();
+        let op = coord.op();
+        println!("fleet operating point: {:.0} MHz / {:.2} V", op.freq_mhz, op.vdd);
+        (coord, op)
+    } else {
+        (Coordinator::start_registry(nets, cfg)?, op)
+    };
     let rep = coord.run_mix(tagged)?;
     let energy = EnergyModel::default();
     let mut t = Table::new(
@@ -288,6 +324,9 @@ fn cmd_plan(args: Vec<String>) -> anyhow::Result<()> {
     let mut cli = Cli::new("kn-stream plan", "print decomposition plans");
     cli.opt("net", "alexnet", "zoo net (incl. graph nets edgenet|widenet|gapnet)")
         .opt("policy", "dag-aware", "planner for --optimize (heuristic|min-traffic|dag-aware)")
+        .opt("objective", "min-traffic", "objective (min-traffic|min-latency|min-energy|min-edp)")
+        .opt("freq", "500", "operating point for latency/energy objectives, MHz")
+        .opt("slo-ms", "0", "latency SLO for --objective min-energy (0 = none)")
         .opt("seed", "1", "frame seed for the --optimize measurement run");
     cli.flag("dump-graph", "print the compiled segment DAG as Graphviz DOT and exit");
     cli.flag(
@@ -298,7 +337,10 @@ fn cmd_plan(args: Vec<String>) -> anyhow::Result<()> {
     let net = graph_arg(m.get("net"))?;
     if m.get_flag("optimize") {
         let policy = PlanPolicy::parse(m.get("policy"))?;
-        return cmd_plan_optimize(&net, policy, m.get_u64("seed") as u32);
+        let objective =
+            PlanObjective::parse(m.get("objective"), m.get_f64("freq"), m.get_f64("slo-ms"))?;
+        let op = OperatingPoint::for_freq(m.get_f64("freq"));
+        return cmd_plan_optimize(&net, policy, objective, op, m.get_u64("seed") as u32);
     }
     let runner = NetRunner::from_graph(&net)?;
     if m.get_flag("dump-graph") {
@@ -326,13 +368,17 @@ fn cmd_plan(args: Vec<String>) -> anyhow::Result<()> {
 }
 
 /// `plan --optimize`: per-node plan table with predicted vs measured
-/// DRAM bytes under the chosen policy, then a whole-graph policy diff.
+/// DRAM bytes *and cycles* under the chosen policy and objective, then
+/// a whole-graph policy diff. Exits nonzero on any model drift —
+/// bytes, cycles, or the decoded-stream timing replay.
 fn cmd_plan_optimize(
     net: &kn_stream::model::Graph,
     policy: PlanPolicy,
+    objective: PlanObjective,
+    op: OperatingPoint,
     seed: u32,
 ) -> anyhow::Result<()> {
-    let gp = plan_graph(net, policy)?;
+    let gp = plan_graph_objective(net, policy, objective)?;
     // reuse the computed plans — don't run the planner again inside
     // NetRunner::from_graph_with_policy
     let compiled = kn_stream::compiler::compile_graph_with_plans(net, &gp.plans)?;
@@ -342,10 +388,15 @@ fn cmd_plan_optimize(
 
     let kb = |b: u64| format!("{:.1}", b as f64 / 1e3);
     let mut t = Table::new(
-        &format!("{} decomposition plan — policy {}", net.name, policy.name()),
+        &format!(
+            "{} decomposition plan — policy {}, objective {}",
+            net.name,
+            policy.name(),
+            gp.objective.name()
+        ),
         &[
             "node", "grid", "c-grps", "tiles", "sram KB", "prd rd", "mea rd", "prd wr",
-            "mea wr", "lane util",
+            "mea wr", "prd cyc", "mea cyc", "lane util",
         ],
     );
     for (i, node) in net.nodes.iter().enumerate() {
@@ -377,6 +428,8 @@ fn cmd_plan_optimize(
             kb(measured[i].dram_read_bytes),
             kb(pred.write_bytes),
             kb(measured[i].dram_write_bytes),
+            format!("{}", gp.node_cycles[i]),
+            format!("{}", measured[i].cycles),
             util,
         ]);
     }
@@ -384,7 +437,10 @@ fn cmd_plan_optimize(
 
     let mut t = Table::new(
         "policy comparison (predicted)",
-        &["policy", "DRAM rd MB", "DRAM wr MB", "dep edges", "crit.path Mcy", "est mJ/frame"],
+        &[
+            "policy", "DRAM rd MB", "DRAM wr MB", "dep edges", "crit.path Mcy", "lat ms @op",
+            "est mJ/frame",
+        ],
     );
     for p in PlanPolicy::ALL {
         // the chosen policy's plan is already computed; plan the others
@@ -392,7 +448,7 @@ fn cmd_plan_optimize(
         let g = if p == policy {
             &gp
         } else {
-            fresh = plan_graph(net, p)?;
+            fresh = plan_graph_objective(net, p, objective)?;
             &fresh
         };
         let tt = g.total_traffic();
@@ -402,7 +458,8 @@ fn cmd_plan_optimize(
             format!("{:.3}", tt.write_bytes as f64 / 1e6),
             format!("{}", g.dep_edges),
             format!("{:.3}", g.est_critical_path_cycles as f64 / 1e6),
-            format!("{:.3}", g.energy_j(kn_stream::energy::dvfs::PEAK) * 1e3),
+            format!("{:.3}", g.latency_ms(op)),
+            format!("{:.3}", g.energy_j(op) * 1e3),
         ]);
     }
     t.print();
@@ -413,14 +470,24 @@ fn cmd_plan_optimize(
         .filter(|(i, _)| {
             gp.node_traffic[*i].read_bytes != measured[*i].dram_read_bytes
                 || gp.node_traffic[*i].write_bytes != measured[*i].dram_write_bytes
+                || gp.node_cycles[*i] != measured[*i].cycles
         })
         .count();
     anyhow::ensure!(
         mism == 0,
         "cost model drifted from the emitter on {mism} node(s) — see table above"
     );
-    println!("cost model check: predicted DRAM bytes == measured for all {} nodes",
-             net.nodes.len());
+    // Second, independent gate: replay the decoded command stream
+    // through the analysis timing lint against the planner's table.
+    let drift = lint_timing(&runner.compiled, &gp.node_cycles);
+    for d in &drift {
+        println!("{d}");
+    }
+    anyhow::ensure!(drift.is_empty(), "timing lint: {} drift diagnostic(s)", drift.len());
+    println!(
+        "cost model check: predicted DRAM bytes and cycles == measured for all {} nodes",
+        net.nodes.len()
+    );
     Ok(())
 }
 

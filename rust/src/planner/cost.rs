@@ -1,7 +1,7 @@
 //! Analytic cost model of the decomposition compiler — predicts, per
-//! candidate plan and per graph node, exactly the DRAM traffic the
-//! emitted command stream will generate, plus the SRAM footprint, MAC
-//! count and a port/DMA cycle estimate used for scoring.
+//! candidate plan and per graph node, exactly the DRAM traffic **and
+//! device cycles** the emitted command stream will generate, plus the
+//! SRAM footprint and MAC count used for scoring.
 //!
 //! The DRAM numbers are **exact by construction**: each formula mirrors
 //! one emission loop of `compiler::codegen` —
@@ -25,7 +25,8 @@
 
 use crate::model::{ConvSpec, NodeOp};
 use crate::sim::accbuf::ACC_TILE_PX;
-use crate::sim::{SimConfig, SimStats};
+use crate::sim::dma::SegClock;
+use crate::sim::SimStats;
 use crate::{NUM_CU, PES_PER_CU, SRAM_BYTES};
 
 /// Predicted DRAM traffic (and MACs) of one graph node for one frame.
@@ -332,23 +333,291 @@ pub fn fixed_node_traffic(
     }
 }
 
-/// Rough device-cycle estimate for one node: compute cycles (144 MACs
-/// per cycle) plus DMA cycles at the nominal DRAM bandwidth. Used only
-/// for the DAG-aware critical-path score and reporting — never for
-/// correctness.
-pub fn est_node_cycles(t: &NodeTraffic) -> u64 {
-    let bw = SimConfig::default().dram_bytes_per_cycle;
-    t.macs / (NUM_CU * PES_PER_CU) as u64 + (t.total_bytes() as f64 / bw) as u64
+// ---------------------------------------------------------------------------
+// exact cycle model
+// ---------------------------------------------------------------------------
+//
+// Like the DRAM-byte formulas above, the cycle predictions replay each
+// emission loop of `compiler::codegen` against the simulator's charge
+// rules (`sim::dma::SegClock` + `scan_timing`/`dw_scan_timing`), so
+// predicted cycles equal the measured `SimStats::cycles` **exactly**
+// under the default DRAM timing. Because a tile's cycle count depends
+// only on its `(th, tw)` output span and `split_even` produces at most
+// two distinct span lengths per axis, a conv node costs at most four
+// tile replays regardless of grid size.
+
+/// Distinct output-span lengths of `split_even(n, parts)` with their
+/// multiplicities (zero-length spans are skipped, as `tiles_for_grid`
+/// does). At most two classes.
+fn axis_classes(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let (q, r) = (n / parts, n % parts);
+    let mut out = Vec::new();
+    if r > 0 {
+        out.push((q + 1, r));
+    }
+    if q > 0 {
+        out.push((q, parts - r));
+    }
+    out
 }
 
-/// Predicted frame [`SimStats`] from the summed node traffic: MACs and
-/// DRAM bytes are exact; `cycles` is the serial [`est_node_cycles`]
-/// estimate (so the energy model's control/leakage terms are at least
-/// plausible); SRAM word counters are left at zero, which
-/// under-estimates energy by the on-chip-SRAM term.
-pub fn predicted_stats(total: &NodeTraffic) -> SimStats {
+/// Replay one `emit_conv` tile segment: `(groups × m_tiles)` rounds of
+/// bias → primed/pipelined weight blocks → per-pass channel scans →
+/// feature stores, with the `loaded` slot tracking which channel slice
+/// is resident (inputs reload only when it changes).
+fn conv_tile_cycles(spec: &ConvSpec, th: usize, tw: usize, cand: &ConvCandidate) -> u64 {
+    let kp = 3 * spec.k.div_ceil(3);
+    let ntaps = (kp / 3) * (kp / 3);
+    let (ih, iw) = ((th - 1) * spec.stride + kp, (tw - 1) * spec.stride + kp);
+    let cg = spec.cin / spec.groups;
+    let mg = spec.cout / spec.groups;
+    let t = crate::sim::fastconv::scan_timing(ih, iw, th, tw, spec.stride);
+    let scan = t.fill_cycles + t.scan_cycles;
+    let cn_of = |cgi: usize| cand.c_per_group.min(cg - cgi * cand.c_per_group);
+    let total_passes = cand.c_groups * ntaps;
+    let mut clk = SegClock::new();
+    let mut loaded: Option<(usize, usize)> = None;
+    for g in 0..spec.groups {
+        for mt in 0..cand.m_tiles {
+            clk.dma(2 * 2 * NUM_CU as u64); // bias block
+            clk.load_weights((cn_of(0) * PES_PER_CU * NUM_CU) as u64); // prime
+            for pass in 0..total_passes {
+                let cgi = pass / ntaps;
+                if loaded != Some((g, cgi)) {
+                    for _ in 0..cn_of(cgi) {
+                        clk.dma((ih * iw * 2) as u64);
+                    }
+                    clk.sync();
+                    loaded = Some((g, cgi));
+                }
+                if pass + 1 < total_passes {
+                    let next = cn_of((pass + 1) / ntaps);
+                    clk.load_weights((next * PES_PER_CU * NUM_CU) as u64);
+                }
+                if pass == 0 {
+                    clk.compute((th * tw / 8 + 1) as u64); // ACC init (PASS_FIRST)
+                }
+                clk.pop_weights();
+                clk.compute(cn_of(cgi) as u64 * scan);
+                if pass + 1 == total_passes {
+                    // requantize flush drains all 16 lanes (PASS_LAST)
+                    clk.compute((th * tw * NUM_CU).div_ceil(8) as u64);
+                }
+            }
+            for _ in 0..NUM_CU.min(mg - mt * NUM_CU) {
+                clk.dma((th * tw * 2) as u64);
+            }
+            clk.sync();
+        }
+    }
+    clk.cyc
+}
+
+/// Replay one `emit_conv_dw` tile segment: per channel group, bias +
+/// packed plane loads, then one weight block and one multi-lane scan
+/// per tap, then the group's stores. The flush drains only the `cn`
+/// live lanes.
+fn dw_tile_cycles(spec: &ConvSpec, th: usize, tw: usize, cand: &ConvCandidate) -> u64 {
+    let kp = 3 * spec.k.div_ceil(3);
+    let ntaps = (kp / 3) * (kp / 3);
+    let (ih, iw) = ((th - 1) * spec.stride + kp, (tw - 1) * spec.stride + kp);
+    let mut clk = SegClock::new();
+    for cgi in 0..cand.c_groups {
+        let cn = cand.c_per_group.min(spec.cin - cgi * cand.c_per_group);
+        clk.dma(2 * 2 * NUM_CU as u64);
+        for _ in 0..cn {
+            clk.dma((ih * iw * 2) as u64);
+        }
+        clk.sync();
+        for ti in 0..ntaps {
+            clk.load_weights((PES_PER_CU * NUM_CU) as u64);
+            if ti == 0 {
+                clk.compute((th * tw / 8 + 1) as u64);
+            }
+            clk.pop_weights();
+            let t = crate::sim::fastconv::dw_scan_timing(ih, iw, th, tw, spec.stride, cn);
+            clk.compute(t.fill_cycles + t.scan_cycles);
+            if ti + 1 == ntaps {
+                clk.compute((th * tw * cn).div_ceil(8) as u64);
+            }
+        }
+        for _ in 0..cn {
+            clk.dma((th * tw * 2) as u64);
+        }
+        clk.sync();
+    }
+    clk.cyc
+}
+
+/// Exact device cycles of one conv node under `cand` — the sum over
+/// tile classes of one segment replay each.
+pub fn conv_node_cycles(spec: &ConvSpec, h: usize, w: usize, cand: &ConvCandidate) -> u64 {
+    let (oh, ow) = conv_out_shape(spec, h, w);
+    let mut total = 0u64;
+    for &(th, cy) in &axis_classes(oh, cand.gy) {
+        for &(tw, cx) in &axis_classes(ow, cand.gx) {
+            let one = if cand.dw {
+                dw_tile_cycles(spec, th, tw, cand)
+            } else {
+                conv_tile_cycles(spec, th, tw, cand)
+            };
+            total += (cy * cx) as u64 * one;
+        }
+    }
+    total
+}
+
+/// Exact device cycles of a fused depthwise→pointwise pair emitted by
+/// `emit_fused_dwpw` on the depthwise candidate's grid: the dw phase
+/// runs without stores (its output stays staged on chip), then the pw
+/// phase consumes the staged planes — one weight block per channel
+/// group, popped with no prefetch pipelining — and writes back.
+pub fn fused_dwpw_cycles(
+    dw_spec: &ConvSpec,
+    pw_spec: &ConvSpec,
+    h: usize,
+    w: usize,
+    dw_cand: &ConvCandidate,
+) -> u64 {
+    debug_assert!(pw_spec.k == 1 && pw_spec.stride == 1 && pw_spec.pad == 0);
+    let (oh, ow) = conv_out_shape(dw_spec, h, w);
+    let kp = 3 * dw_spec.k.div_ceil(3);
+    let ntaps_dw = (kp / 3) * (kp / 3);
+    let c_mid = dw_spec.cout;
+    let cpg_pw = c_mid.min(NUM_CU);
+    let c_groups_pw = c_mid.div_ceil(cpg_pw);
+    let m_tiles_pw = pw_spec.cout.div_ceil(NUM_CU);
+    let mut total = 0u64;
+    for &(th, cy) in &axis_classes(oh, dw_cand.gy) {
+        for &(tw, cx) in &axis_classes(ow, dw_cand.gx) {
+            let mut clk = SegClock::new();
+            // dw phase: like `dw_tile_cycles` but with no writeback
+            let (dih, diw) = ((th - 1) * dw_spec.stride + kp, (tw - 1) * dw_spec.stride + kp);
+            for cgi in 0..dw_cand.c_groups {
+                let cn = dw_cand.c_per_group.min(dw_spec.cin - cgi * dw_cand.c_per_group);
+                clk.dma(2 * 2 * NUM_CU as u64);
+                for _ in 0..cn {
+                    clk.dma((dih * diw * 2) as u64);
+                }
+                clk.sync();
+                for ti in 0..ntaps_dw {
+                    clk.load_weights((PES_PER_CU * NUM_CU) as u64);
+                    if ti == 0 {
+                        clk.compute((th * tw / 8 + 1) as u64);
+                    }
+                    clk.pop_weights();
+                    let t = crate::sim::fastconv::dw_scan_timing(
+                        dih,
+                        diw,
+                        th,
+                        tw,
+                        dw_spec.stride,
+                        cn,
+                    );
+                    clk.compute(t.fill_cycles + t.scan_cycles);
+                    if ti + 1 == ntaps_dw {
+                        clk.compute((th * tw * cn).div_ceil(8) as u64);
+                    }
+                }
+            }
+            // pw phase over the staged (th+2)×(tw+2) halo windows
+            let t = crate::sim::fastconv::scan_timing(th + 2, tw + 2, th, tw, 1);
+            let scan = t.fill_cycles + t.scan_cycles;
+            for mt in 0..m_tiles_pw {
+                clk.dma(2 * 2 * NUM_CU as u64);
+                for cgi in 0..c_groups_pw {
+                    let cn = cpg_pw.min(c_mid - cgi * cpg_pw);
+                    clk.load_weights((cn * PES_PER_CU * NUM_CU) as u64);
+                    if cgi == 0 {
+                        clk.compute((th * tw / 8 + 1) as u64);
+                    }
+                    clk.pop_weights();
+                    clk.compute(cn as u64 * scan);
+                    if cgi + 1 == c_groups_pw {
+                        clk.compute((th * tw * NUM_CU).div_ceil(8) as u64);
+                    }
+                }
+                for _ in 0..NUM_CU.min(pw_spec.cout - mt * NUM_CU) {
+                    clk.dma((th * tw * 2) as u64);
+                }
+                clk.sync();
+            }
+            total += (cy * cx) as u64 * clk.cyc;
+        }
+    }
+    total
+}
+
+/// Exact device cycles of a non-conv node — one chunk-segment replay
+/// per emitted chunk, mirroring `emit_pool`/`emit_add`/`emit_concat`.
+pub fn fixed_node_cycles(
+    op: &NodeOp,
+    ins: &[(usize, usize, usize)],
+    out: (usize, usize, usize),
+) -> u64 {
+    let mut total = 0u64;
+    match op {
+        NodeOp::Conv(_) => unreachable!("conv cycles come from its candidate"),
+        NodeOp::Pool(p) => {
+            let (ih, iw, c) = ins[0];
+            let (oh, ow, _) = out;
+            for &(_, cc) in &pool_chunks(ih, iw, oh, ow, c) {
+                let mut clk = SegClock::new();
+                for _ in 0..cc {
+                    clk.dma((ih * iw * 2) as u64);
+                }
+                clk.sync();
+                clk.compute((cc * oh * ow * p.k) as u64);
+                for _ in 0..cc {
+                    clk.dma((oh * ow * 2) as u64);
+                }
+                clk.sync();
+                total += clk.cyc;
+            }
+        }
+        NodeOp::Add(_) => {
+            let (h, w, c) = ins[0];
+            for &(_, cc) in &add_chunks(h, w, c) {
+                let mut clk = SegClock::new();
+                for _ in 0..2 * cc {
+                    clk.dma((h * w * 2) as u64);
+                }
+                clk.sync();
+                clk.compute(3 * (cc * h * w).div_ceil(8) as u64);
+                for _ in 0..cc {
+                    clk.dma((h * w * 2) as u64);
+                }
+                clk.sync();
+                total += clk.cyc;
+            }
+        }
+        NodeOp::Concat(_) => {
+            for &(h, w, ci) in ins {
+                for &(_, cc) in &concat_chunks(h, w, ci) {
+                    let mut clk = SegClock::new();
+                    for _ in 0..cc {
+                        clk.dma((h * w * 2) as u64);
+                    }
+                    clk.sync();
+                    for _ in 0..cc {
+                        clk.dma((h * w * 2) as u64);
+                    }
+                    clk.sync();
+                    total += clk.cyc;
+                }
+            }
+        }
+    }
+    total
+}
+
+/// Predicted frame [`SimStats`] from the summed node traffic and the
+/// summed exact node cycles: MACs, DRAM bytes **and cycles** are exact
+/// under the default DRAM timing. SRAM word counters are left at zero,
+/// which under-estimates energy by the on-chip-SRAM term.
+pub fn predicted_stats(total: &NodeTraffic, cycles: u64) -> SimStats {
     SimStats {
-        cycles: est_node_cycles(total),
+        cycles,
         macs: total.macs,
         dram_read_bytes: total.read_bytes,
         dram_write_bytes: total.write_bytes,
@@ -414,6 +683,24 @@ mod tests {
                     assert_eq!(input_px, (sum_in * cgt) as u64, "{name}/{}", c.name);
                 }
                 shape = l.out_shape(shape);
+            }
+        }
+    }
+
+    #[test]
+    fn axis_classes_match_explicit_split() {
+        for (n, parts) in [(55, 3), (13, 2), (224, 7), (10, 10), (7, 9), (16, 16)] {
+            let spans = crate::compiler::decompose::split_even(n, parts);
+            let mut counts = std::collections::BTreeMap::new();
+            for &(_, l) in &spans {
+                if l > 0 {
+                    *counts.entry(l).or_insert(0usize) += 1;
+                }
+            }
+            let classes = axis_classes(n, parts);
+            assert_eq!(classes.len(), counts.len(), "n={n} parts={parts}");
+            for &(len, cnt) in &classes {
+                assert_eq!(counts[&len], cnt, "n={n} parts={parts} len={len}");
             }
         }
     }

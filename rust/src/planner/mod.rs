@@ -13,14 +13,16 @@
 //!   conv node, not one heuristic winner;
 //! * [`cost`] — an analytic model predicting per-plan DRAM bytes
 //!   (input reload with halo, weight re-streaming, bias, output
-//!   writeback), SRAM footprint, MACs and cycle estimates — pinned to
-//!   measured `SimStats` counters by property test;
+//!   writeback), SRAM footprint, MACs and **exact** device cycles —
+//!   pinned to measured `SimStats` counters by property test;
 //! * [`search`] — graph-level selection: the per-node traffic optimum
 //!   ([`PlanPolicy::MinTraffic`]) and a DAG-aware coordinate descent
 //!   ([`PlanPolicy::DagAware`]) that co-optimizes split axes across
-//!   producer→consumer edges, scored by predicted traffic plus a
-//!   cross-tile dependency-edge count (an exact mirror of codegen's
-//!   region-intersection pass) and a critical-path/parallelism term.
+//!   producer→consumer edges, scored by the chosen [`PlanObjective`]
+//!   (DRAM bytes, exact latency, energy under an SLO, or EDP at an
+//!   operating point) plus a cross-tile dependency-edge count (an
+//!   exact mirror of codegen's region-intersection pass) and a
+//!   critical-path/parallelism term in true cycle units.
 //!
 //! All policies produce plans the unchanged emitter executes; frame
 //! outputs are bit-identical across policies (the decomposition only
@@ -34,7 +36,10 @@ pub mod search;
 
 pub use cost::{ConvCandidate, NodeTraffic};
 pub use enumerate::enumerate_conv;
-pub use search::{plan_graph, plan_graph_budget, GraphPlan, NodePlanReport};
+pub use search::{
+    plan_graph, plan_graph_budget, plan_graph_budget_objective, plan_graph_objective, GraphPlan,
+    NodePlanReport, PlanObjective,
+};
 
 /// Which decomposition planner the compiler runs.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]

@@ -27,8 +27,9 @@
 //! neighbors' current choices until a sweep changes nothing.
 
 use super::cost::{
-    add_chunks, concat_chunks, est_node_cycles, fixed_node_traffic, fused_dwpw_traffic,
-    pool_chunks, predicted_stats, ConvCandidate, NodeTraffic,
+    add_chunks, concat_chunks, conv_node_cycles, fixed_node_cycles, fixed_node_traffic,
+    fused_dwpw_cycles, fused_dwpw_traffic, pool_chunks, predicted_stats, ConvCandidate,
+    NodeTraffic,
 };
 use super::enumerate::{enumerate_conv, min_traffic, prune_for_search};
 use super::PlanPolicy;
@@ -44,14 +45,20 @@ use crate::SRAM_BYTES;
 /// spends waiting on a producer it didn't need). Small against any
 /// real tile transfer, so traffic always dominates.
 const DEP_EDGE_BYTES: f64 = 128.0;
-/// Critical-path weight (byte-equivalents per estimated cycle).
+/// Critical-path weight (byte-equivalents per exact cycle).
 /// Deliberately *far below* the DMA bandwidth: at bandwidth scale a
-/// compute-bound layer's cycle estimate dwarfs its DRAM bytes and the
+/// compute-bound layer's cycle count dwarfs its DRAM bytes and the
 /// search would happily burn real traffic for width. At 0.05 the term
 /// acts as intended — among near-equal-traffic assignments it prefers
 /// the wider, shorter-critical-path one; it never buys width with more
 /// than a few KB of traffic.
 const CP_BYTES_PER_CYCLE: f64 = 0.05;
+/// Dep-edge weight of the latency objective, in cycles: one edge ≈ the
+/// `DEP_EDGE_BYTES` sync round converted at the nominal 3.2 B/cycle.
+const DEP_EDGE_CYCLES: f64 = DEP_EDGE_BYTES / 3.2;
+/// Critical-path tie-break weight of the latency objective (serial
+/// device cycles dominate; width is a scheduler bonus).
+const CP_CYCLE_WEIGHT: f64 = 0.05;
 /// Candidates may cost at most this fraction more traffic than the
 /// per-node optimum (the alignment budget of the DAG-aware search).
 const TRAFFIC_SLACK: f64 = 0.25;
@@ -62,6 +69,79 @@ const CAND_CAP: usize = 64;
 const PAR_WIDTH: u64 = 4;
 /// Coordinate-descent sweep bound (converges in 1–2 on the zoo).
 const MAX_SWEEPS: usize = 4;
+
+/// What the searching policies (`MinTraffic`, `DagAware`) minimize.
+/// The legacy byte objective stays the default; the other three rank
+/// candidates by the planner's **exact** cycle model at a chosen
+/// [`OperatingPoint`] (simulated cycles are frequency-independent, so
+/// the `op` matters only where energy or wall-clock enters the score).
+/// The `Heuristic` policy ignores the objective — it never scores.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PlanObjective {
+    /// Total DRAM bytes — the paper's §5 objective.
+    MinTraffic,
+    /// Predicted device latency (exact serial cycles) at `op`.
+    MinLatency { op: OperatingPoint },
+    /// Predicted energy per frame at `op`, subject to a latency SLO:
+    /// when the energy-optimal plan would miss `slo_ms` at `op`, the
+    /// planner falls back to the latency-optimal plan (`slo_ms <= 0`
+    /// disables the SLO).
+    MinEnergy { slo_ms: f64, op: OperatingPoint },
+    /// Energy×delay product at `op`. Per-node selection is greedy
+    /// (the product is not additive across nodes); the DAG-aware
+    /// descent scores the true whole-graph product.
+    MinEdp { op: OperatingPoint },
+}
+
+impl Default for PlanObjective {
+    fn default() -> Self {
+        Self::MinTraffic
+    }
+}
+
+impl PlanObjective {
+    pub const fn name(&self) -> &'static str {
+        match self {
+            Self::MinTraffic => "min-traffic",
+            Self::MinLatency { .. } => "min-latency",
+            Self::MinEnergy { .. } => "min-energy",
+            Self::MinEdp { .. } => "min-edp",
+        }
+    }
+
+    /// Parse a CLI objective name. `freq_mhz` fixes the operating
+    /// point; `slo_ms` only matters for `min-energy`.
+    pub fn parse(s: &str, freq_mhz: f64, slo_ms: f64) -> anyhow::Result<Self> {
+        let op = OperatingPoint::for_freq(freq_mhz);
+        Ok(match s {
+            "min-traffic" => Self::MinTraffic,
+            "min-latency" => Self::MinLatency { op },
+            "min-energy" => Self::MinEnergy { slo_ms, op },
+            "min-edp" => Self::MinEdp { op },
+            _ => anyhow::bail!(
+                "unknown objective '{s}' (min-traffic | min-latency | min-energy | min-edp)"
+            ),
+        })
+    }
+}
+
+/// Predicted energy of one node or one whole plan from its traffic and
+/// exact cycles — SRAM/pool counters at zero, exactly like
+/// [`GraphPlan::energy_j`], so per-node metrics sum to the plan total.
+fn metric_energy_j(t: &NodeTraffic, cycles: u64, op: OperatingPoint) -> f64 {
+    EnergyModel::default().energy(&predicted_stats(t, cycles), op).total_j()
+}
+
+/// The scalar one node contributes to the objective — additive across
+/// nodes for every objective except EDP (see [`PlanObjective::MinEdp`]).
+fn objective_metric(obj: PlanObjective, t: &NodeTraffic, cycles: u64) -> f64 {
+    match obj {
+        PlanObjective::MinTraffic => t.total_bytes() as f64,
+        PlanObjective::MinLatency { .. } => cycles as f64,
+        PlanObjective::MinEnergy { op, .. } => metric_energy_j(t, cycles, op),
+        PlanObjective::MinEdp { op } => metric_energy_j(t, cycles, op) * cycles as f64,
+    }
+}
 
 /// Canvas index of a node input (mirror of `codegen::canvas_of`):
 /// 0 is the graph input, node *i* writes canvas *i + 1*.
@@ -343,18 +423,18 @@ fn node_width(graph: &Graph, ctx: &DepCtx, ni: usize, grid: Option<(usize, usize
 }
 
 /// Critical-path cycles through the node DAG: each node contributes
-/// its analytic cycle estimate divided by its achievable width.
+/// its **exact** cycle count divided by its achievable width.
 fn critical_path(
     graph: &Graph,
     ctx: &DepCtx,
-    traffic: &[NodeTraffic],
+    node_cycles: &[u64],
     grids: &[Option<(usize, usize)>],
 ) -> u64 {
     let mut cp = vec![0u64; graph.nodes.len()];
     let mut best = 0u64;
     for (i, node) in graph.nodes.iter().enumerate() {
         let width = node_width(graph, ctx, i, grids[i]).clamp(1, PAR_WIDTH);
-        let own = est_node_cycles(&traffic[i]) / width;
+        let own = node_cycles[i] / width;
         let base = node
             .inputs
             .iter()
@@ -386,17 +466,23 @@ pub struct NodePlanReport {
 /// A whole-graph decomposition assignment plus its predicted costs.
 pub struct GraphPlan {
     pub policy: PlanPolicy,
+    pub objective: PlanObjective,
     pub sram_budget: usize,
     /// Per-node executable plan (`Some` for conv nodes) — feed to
     /// `compiler::compile_graph_with_plans`.
     pub plans: Vec<Option<Plan>>,
     /// Predicted per-node DRAM traffic (every node).
     pub node_traffic: Vec<NodeTraffic>,
+    /// Predicted per-node device cycles — **exact** against the
+    /// measured per-node `SimStats` under the default DRAM timing. A
+    /// fused-away depthwise producer carries 0 (its pointwise consumer
+    /// carries the fused segment's cycles), mirroring `node_traffic`.
+    pub node_cycles: Vec<u64>,
     /// Conv-node summary rows.
     pub reports: Vec<NodePlanReport>,
     /// Cross-tile dependency edges the segment DAG will contain.
     pub dep_edges: u64,
-    /// Critical-path cycle estimate (parallelism proxy).
+    /// Critical-path cycles (parallelism proxy over exact node cycles).
     pub est_critical_path_cycles: u64,
 }
 
@@ -409,10 +495,20 @@ impl GraphPlan {
         t
     }
 
-    /// Predicted frame stats (exact MACs + DRAM bytes, estimated
-    /// cycles) for the energy model.
+    /// Predicted frame cycles — exact vs the measured serial device.
+    pub fn predicted_cycles(&self) -> u64 {
+        self.node_cycles.iter().sum()
+    }
+
+    /// Predicted frame latency at an operating point, in milliseconds.
+    pub fn latency_ms(&self, op: OperatingPoint) -> f64 {
+        self.predicted_cycles() as f64 * op.cycle_s() * 1e3
+    }
+
+    /// Predicted frame stats (exact MACs, DRAM bytes **and** cycles)
+    /// for the energy model.
     pub fn predicted_stats(&self) -> SimStats {
-        predicted_stats(&self.total_traffic())
+        predicted_stats(&self.total_traffic(), self.predicted_cycles())
     }
 
     /// Estimated energy per frame at an operating point (DRAM + MAC +
@@ -422,9 +518,18 @@ impl GraphPlan {
     }
 }
 
-/// Plan a graph under the chip's 128 KB budget.
+/// Plan a graph under the chip's 128 KB budget (traffic objective).
 pub fn plan_graph(graph: &Graph, policy: PlanPolicy) -> anyhow::Result<GraphPlan> {
     plan_graph_budget(graph, policy, SRAM_BYTES)
+}
+
+/// Plan a graph under the chip's 128 KB budget against an objective.
+pub fn plan_graph_objective(
+    graph: &Graph,
+    policy: PlanPolicy,
+    objective: PlanObjective,
+) -> anyhow::Result<GraphPlan> {
+    plan_graph_budget_objective(graph, policy, SRAM_BYTES, objective)
 }
 
 /// Plan a graph under an explicit SRAM budget (what-if sweeps; only
@@ -433,6 +538,37 @@ pub fn plan_graph_budget(
     graph: &Graph,
     policy: PlanPolicy,
     sram_budget: usize,
+) -> anyhow::Result<GraphPlan> {
+    plan_graph_budget_objective(graph, policy, sram_budget, PlanObjective::MinTraffic)
+}
+
+/// Plan a graph under an explicit SRAM budget and objective. A
+/// `MinEnergy` plan that would miss its SLO at the chosen operating
+/// point falls back to the latency-optimal plan — so its energy never
+/// exceeds `MinLatency`'s, and the SLO is met whenever any plan in the
+/// candidate space can meet it.
+pub fn plan_graph_budget_objective(
+    graph: &Graph,
+    policy: PlanPolicy,
+    sram_budget: usize,
+    objective: PlanObjective,
+) -> anyhow::Result<GraphPlan> {
+    let gp = plan_impl(graph, policy, sram_budget, objective)?;
+    if let PlanObjective::MinEnergy { slo_ms, op } = objective {
+        if slo_ms > 0.0 && gp.latency_ms(op) > slo_ms {
+            let mut fb = plan_impl(graph, policy, sram_budget, PlanObjective::MinLatency { op })?;
+            fb.objective = objective;
+            return Ok(fb);
+        }
+    }
+    Ok(gp)
+}
+
+fn plan_impl(
+    graph: &Graph,
+    policy: PlanPolicy,
+    sram_budget: usize,
+    objective: PlanObjective,
 ) -> anyhow::Result<GraphPlan> {
     let shapes = graph.validate()?;
     let n = graph.nodes.len();
@@ -490,6 +626,7 @@ pub fn plan_graph_budget(
         }
         PlanPolicy::MinTraffic | PlanPolicy::DagAware => {
             let mut lists: Vec<Vec<ConvCandidate>> = vec![Vec::new(); n];
+            let mut picks: Vec<Option<usize>> = vec![None; n];
             for (i, info) in infos.iter().enumerate() {
                 let Some(info) = info else { continue };
                 let cands = enumerate_conv(&info.spec, info.h, info.w, sram_budget);
@@ -501,13 +638,39 @@ pub fn plan_graph_budget(
                 );
                 lists[i] = if policy == PlanPolicy::DagAware {
                     prune_for_search(cands, TRAFFIC_SLACK, CAND_CAP)
-                } else {
+                } else if objective == PlanObjective::MinTraffic {
                     vec![*min_traffic(&cands).expect("non-empty")]
+                } else {
+                    // latency/energy objectives rank the full list
+                    cands
                 };
-                sel[i] = Some(lists[i][0]);
+                // Seed: index 0 is the min-traffic head; other
+                // objectives take the per-node metric argmin (globally
+                // optimal for every additive objective).
+                picks[i] = Some(match objective {
+                    PlanObjective::MinTraffic => 0,
+                    _ => {
+                        let mut bi = 0;
+                        let mut bm = f64::INFINITY;
+                        for (j, c) in lists[i].iter().enumerate() {
+                            let cyc = conv_node_cycles(&info.spec, info.h, info.w, c);
+                            let m = objective_metric(objective, &c.traffic, cyc);
+                            if m < bm {
+                                bm = m;
+                                bi = j;
+                            }
+                        }
+                        bi
+                    }
+                });
             }
             if policy == PlanPolicy::DagAware {
-                descend(graph, &ctx, &infos, &lists, &mut sel);
+                descend(graph, &ctx, &infos, &lists, &mut picks, objective);
+            }
+            for i in 0..n {
+                if let Some(j) = picks[i] {
+                    sel[i] = Some(lists[i][j]);
+                }
             }
         }
     }
@@ -516,11 +679,11 @@ pub fn plan_graph_budget(
     // For the searching policies, absorb a 1×1 pointwise conv into its
     // depthwise producer when the fused lowering (dw output staged in
     // SRAM, never round-tripped through DRAM) beats the best *separate*
-    // plans on predicted traffic. `fuse[ni] = Some(di)` mirrors the
+    // plans on the active objective. `fuse[ni] = Some(di)` mirrors the
     // fusion map codegen derives; the dw node's candidate is re-pinned
-    // to the grid that minimizes the fused traffic.
+    // to the grid that minimizes the fused metric.
     let mut fuse: Vec<Option<usize>> = vec![None; n];
-    let mut fused_cost: Vec<Option<(NodeTraffic, usize)>> = vec![None; n];
+    let mut fused_cost: Vec<Option<(NodeTraffic, usize, u64)>> = vec![None; n];
     if matches!(policy, PlanPolicy::MinTraffic | PlanPolicy::DagAware) {
         for ni in 0..n {
             let NodeOp::Conv(pw) = &graph.nodes[ni].op else { continue };
@@ -543,28 +706,38 @@ pub fn plan_graph_budget(
             }
             let dinfo = infos[di].as_ref().expect("dw conv info");
             // Best fused grid: the dw node's grid drives both phases,
-            // so minimize the *fused* traffic over its candidates.
-            let mut best: Option<(ConvCandidate, NodeTraffic, usize)> = None;
+            // so minimize the *fused* objective metric over its
+            // candidates.
+            let mut best: Option<(ConvCandidate, NodeTraffic, usize, u64, f64)> = None;
             for dc in enumerate_conv(&dinfo.spec, dinfo.h, dinfo.w, sram_budget) {
                 let (t, sram) = fused_dwpw_traffic(&dinfo.spec, pw, dinfo.h, dinfo.w, &dc);
                 if sram > sram_budget {
                     continue;
                 }
+                let cyc = fused_dwpw_cycles(&dinfo.spec, pw, dinfo.h, dinfo.w, &dc);
+                let m = objective_metric(objective, &t, cyc);
                 let better = match &best {
                     None => true,
-                    Some((_, bt, _)) => t.total_bytes() < bt.total_bytes(),
+                    Some((.., bm)) => m < *bm,
                 };
                 if better {
-                    best = Some((dc, t, sram));
+                    best = Some((dc, t, sram, cyc, m));
                 }
             }
-            let Some((dc, ft, fsram)) = best else { continue };
-            let separate = sel[di].expect("dw candidate").traffic.total_bytes()
-                + sel[ni].expect("pw candidate").traffic.total_bytes();
-            if ft.total_bytes() < separate {
+            let Some((dc, ft, fsram, fcyc, fmetric)) = best else { continue };
+            let sep_metric = [di, ni]
+                .iter()
+                .map(|&i| {
+                    let c = sel[i].expect("separate candidate");
+                    let info = infos[i].as_ref().expect("conv info");
+                    let cyc = conv_node_cycles(&info.spec, info.h, info.w, &c);
+                    objective_metric(objective, &c.traffic, cyc)
+                })
+                .sum::<f64>();
+            if fmetric < sep_metric {
                 sel[di] = Some(dc);
                 fuse[ni] = Some(di);
-                fused_cost[ni] = Some((ft, fsram));
+                fused_cost[ni] = Some((ft, fsram, fcyc));
             }
         }
     }
@@ -576,6 +749,7 @@ pub fn plan_graph_budget(
     // ---- finalize --------------------------------------------------------
     let mut plans: Vec<Option<Plan>> = vec![None; n];
     let mut node_traffic = vec![NodeTraffic::default(); n];
+    let mut node_cycles = vec![0u64; n];
     let mut reports = Vec::new();
     let mut grids: Vec<Option<(usize, usize)>> = vec![None; n];
     for (i, node) in graph.nodes.iter().enumerate() {
@@ -604,13 +778,14 @@ pub fn plan_graph_budget(
                         info.spec.cin.min(crate::NUM_CU),
                     );
                     plan.fuse_dw = true;
-                    let (ft, fsram) = fused_cost[i].expect("fused traffic");
+                    let (ft, fsram, fcyc) = fused_cost[i].expect("fused traffic");
                     report.grid = (dc.gy, dc.gx);
                     report.c_groups = plan.c_groups;
                     report.ntiles = plan.tiles.len();
                     report.sram_bytes = fsram;
                     report.traffic = ft;
                     node_traffic[i] = ft;
+                    node_cycles[i] = fcyc;
                     grids[i] = Some((dc.gy, dc.gx));
                     plans[i] = Some(plan);
                 } else {
@@ -622,10 +797,12 @@ pub fn plan_graph_budget(
                         cand.gx,
                         cand.c_per_group,
                     ));
-                    // a fused-away dw node's traffic is carried by its
-                    // pointwise consumer
-                    node_traffic[i] =
-                        if fused_away[i] { NodeTraffic::default() } else { cand.traffic };
+                    // a fused-away dw node's traffic and cycles are
+                    // carried by its pointwise consumer
+                    if !fused_away[i] {
+                        node_traffic[i] = cand.traffic;
+                        node_cycles[i] = conv_node_cycles(&info.spec, info.h, info.w, cand);
+                    }
                     report.traffic = node_traffic[i];
                     grids[i] = Some((cand.gy, cand.gx));
                 }
@@ -635,17 +812,20 @@ pub fn plan_graph_budget(
                 let ins: Vec<(usize, usize, usize)> =
                     node.inputs.iter().map(|r| ctx.shape_of(graph, *r)).collect();
                 node_traffic[i] = fixed_node_traffic(op, &ins, shapes[i]);
+                node_cycles[i] = fixed_node_cycles(op, &ins, shapes[i]);
             }
         }
     }
     lint_fusion(graph, &fuse, &plans)?;
     let dep_edges = count_dep_edges(graph, &ctx, &grids, &fuse);
-    let est_critical_path_cycles = critical_path(graph, &ctx, &node_traffic, &grids);
+    let est_critical_path_cycles = critical_path(graph, &ctx, &node_cycles, &grids);
     Ok(GraphPlan {
         policy,
+        objective,
         sram_budget,
         plans,
         node_traffic,
+        node_cycles,
         reports,
         dep_edges,
         est_critical_path_cycles,
@@ -726,40 +906,93 @@ fn lint_fusion(
 
 /// Coordinate descent over the pruned candidate lists: re-choose one
 /// node at a time against the full objective until a sweep converges.
+/// `picks[i]` indexes into `lists[i]`; per-candidate cycles are
+/// memoized up front so each score evaluation is pure bookkeeping.
 fn descend(
     graph: &Graph,
     ctx: &DepCtx,
     infos: &[Option<ConvInfo>],
     lists: &[Vec<ConvCandidate>],
-    sel: &mut [Option<ConvCandidate>],
+    picks: &mut [Option<usize>],
+    objective: PlanObjective,
 ) {
     let n = graph.nodes.len();
     // fusion is decided in a post-pass; the descent scores unfused plans
     let no_fuse: Vec<Option<usize>> = vec![None; n];
-    let score = |sel: &[Option<ConvCandidate>]| -> f64 {
-        let mut traffic = vec![NodeTraffic::default(); n];
+    // memoized exact cycles per (node, candidate)
+    let cyc: Vec<Vec<u64>> = infos
+        .iter()
+        .zip(lists)
+        .map(|(info, list)| match info {
+            Some(info) => list
+                .iter()
+                .map(|c| conv_node_cycles(&info.spec, info.h, info.w, c))
+                .collect(),
+            None => Vec::new(),
+        })
+        .collect();
+    // fixed (non-conv) node costs never change across the descent
+    let fixed: Vec<Option<(NodeTraffic, u64)>> = graph
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, node)| {
+            if infos[i].is_some() {
+                return None;
+            }
+            let ins: Vec<(usize, usize, usize)> =
+                node.inputs.iter().map(|r| ctx.shape_of(graph, *r)).collect();
+            Some((
+                fixed_node_traffic(&node.op, &ins, ctx.shapes[i]),
+                fixed_node_cycles(&node.op, &ins, ctx.shapes[i]),
+            ))
+        })
+        .collect();
+    let score = |picks: &[Option<usize>]| -> f64 {
+        let mut totals = NodeTraffic::default();
+        let mut node_cycles = vec![0u64; n];
         let mut grids: Vec<Option<(usize, usize)>> = vec![None; n];
-        let mut total_bytes = 0u64;
-        for (i, node) in graph.nodes.iter().enumerate() {
-            match &sel[i] {
-                Some(c) => {
-                    traffic[i] = c.traffic;
+        let mut total_cycles = 0u64;
+        for i in 0..n {
+            match picks[i] {
+                Some(j) => {
+                    let c = &lists[i][j];
+                    totals.add(&c.traffic);
+                    node_cycles[i] = cyc[i][j];
                     grids[i] = Some((c.gy, c.gx));
                 }
                 None => {
-                    let ins: Vec<(usize, usize, usize)> =
-                        node.inputs.iter().map(|r| ctx.shape_of(graph, *r)).collect();
-                    traffic[i] = fixed_node_traffic(&node.op, &ins, ctx.shapes[i]);
+                    let (t, fc) = fixed[i].as_ref().expect("fixed node cost");
+                    totals.add(t);
+                    node_cycles[i] = *fc;
                 }
             }
-            total_bytes += traffic[i].total_bytes();
+            total_cycles += node_cycles[i];
         }
-        let deps = count_dep_edges(graph, ctx, &grids, &no_fuse);
-        let cp = critical_path(graph, ctx, &traffic, &grids);
-        total_bytes as f64 + DEP_EDGE_BYTES * deps as f64 + CP_BYTES_PER_CYCLE * cp as f64
+        let deps = count_dep_edges(graph, ctx, &grids, &no_fuse) as f64;
+        let cp = critical_path(graph, ctx, &node_cycles, &grids) as f64;
+        match objective {
+            PlanObjective::MinTraffic => {
+                totals.total_bytes() as f64 + DEP_EDGE_BYTES * deps + CP_BYTES_PER_CYCLE * cp
+            }
+            PlanObjective::MinLatency { .. } => {
+                total_cycles as f64 + DEP_EDGE_CYCLES * deps + CP_CYCLE_WEIGHT * cp
+            }
+            PlanObjective::MinEnergy { slo_ms, op } => {
+                // 1 J per ms over the SLO: a deadline miss dominates
+                // any realistic per-frame energy difference.
+                let e = metric_energy_j(&totals, total_cycles, op);
+                let lat_ms = total_cycles as f64 * op.cycle_s() * 1e3;
+                let penalty = if slo_ms > 0.0 { (lat_ms - slo_ms).max(0.0) } else { 0.0 };
+                e + penalty
+            }
+            PlanObjective::MinEdp { op } => {
+                metric_energy_j(&totals, total_cycles, op) * (total_cycles as f64 * op.cycle_s())
+            }
+        }
     };
 
-    let mut best = score(sel);
+    let mut best = score(picks);
     for _ in 0..MAX_SWEEPS {
         let mut changed = false;
         for i in 0..n {
@@ -768,19 +1001,19 @@ fn descend(
             }
             // Evaluate every candidate for node i against the current
             // neighbor choices; keep the best found (restoring the
-            // incumbent if none improves) so `best == score(sel)` holds
-            // at every step.
-            let mut best_cand = sel[i];
-            for cand in &lists[i] {
-                sel[i] = Some(*cand);
-                let s = score(sel);
+            // incumbent if none improves) so `best == score(picks)`
+            // holds at every step.
+            let mut best_pick = picks[i];
+            for j in 0..lists[i].len() {
+                picks[i] = Some(j);
+                let s = score(picks);
                 if s + 1e-9 < best {
                     best = s;
-                    best_cand = Some(*cand);
+                    best_pick = Some(j);
                     changed = true;
                 }
             }
-            sel[i] = best_cand;
+            picks[i] = best_pick;
         }
         if !changed {
             break;

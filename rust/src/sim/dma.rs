@@ -38,6 +38,78 @@ impl DramModel {
     }
 }
 
+/// Timing-only replay of one segment's command stream: the datapath
+/// clock, the serialized DMA channel, and the two-deep weight stage,
+/// advanced by exactly the charge rules `Accel::exec` applies. Both the
+/// planner's analytic cycle model (`planner::cost`) and the analyzer's
+/// decoded-stream timing lint (`analysis`) drive this struct, so a
+/// drift between them and the simulator is a drift in *one* place.
+///
+/// Uses the default DRAM timing (32-cycle burst, 3.2 B/cycle) — the
+/// configuration every exactness gate and test runs under.
+pub struct SegClock {
+    /// Datapath clock (cycles since segment start).
+    pub cyc: u64,
+    /// Timestamp when the DMA channel frees.
+    dma_free: u64,
+    /// Completion timestamps of staged weight blocks (FIFO).
+    wfifo: std::collections::VecDeque<u64>,
+    burst_latency: u64,
+    bytes_per_cycle: f64,
+}
+
+impl Default for SegClock {
+    fn default() -> Self {
+        Self {
+            cyc: 0,
+            dma_free: 0,
+            wfifo: std::collections::VecDeque::new(),
+            burst_latency: 32,
+            bytes_per_cycle: 3.2,
+        }
+    }
+}
+
+impl SegClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn xfer(&self, bytes: u64) -> u64 {
+        self.burst_latency + (bytes as f64 / self.bytes_per_cycle).ceil() as u64
+    }
+
+    /// Schedule an overlappable DMA transfer (LoadImage / Store /
+    /// LoadBias): the channel serializes, the datapath does not wait.
+    pub fn dma(&mut self, bytes: u64) {
+        self.dma_free = self.dma_free.max(self.cyc) + self.xfer(bytes);
+    }
+
+    /// Schedule a weight-block fetch and stage its completion time.
+    pub fn load_weights(&mut self, px: u64) {
+        self.dma(px * 2);
+        self.wfifo.push_back(self.dma_free);
+    }
+
+    /// A conv pass consumes the oldest staged weight block, stalling
+    /// until its fetch completes.
+    pub fn pop_weights(&mut self) {
+        if let Some(ready) = self.wfifo.pop_front() {
+            self.cyc = self.cyc.max(ready);
+        }
+    }
+
+    /// Datapath compute: advance the clock unconditionally.
+    pub fn compute(&mut self, cycles: u64) {
+        self.cyc += cycles;
+    }
+
+    /// `Sync`: wait for the DMA channel to drain.
+    pub fn sync(&mut self) {
+        self.cyc = self.cyc.max(self.dma_free);
+    }
+}
+
 /// The DMA engine: one channel, tracked by completion time.
 #[derive(Default)]
 pub struct Dma {
@@ -136,5 +208,23 @@ mod tests {
     fn oob_checked() {
         let mut dram = DramModel::new(16);
         Dma::default().read(&mut dram, 10, 10, 0);
+    }
+
+    #[test]
+    fn seg_clock_mirrors_the_charge_rules() {
+        let mut c = SegClock::new();
+        // bias fetch: 32 + ceil(64/3.2) = 52 channel-cycles, hidden
+        c.dma(64);
+        assert_eq!(c.cyc, 0);
+        // weight block: 144 px = 288 B → 32 + 90 = 122, queued behind
+        c.load_weights(144);
+        c.sync();
+        assert_eq!(c.cyc, 52 + 122);
+        c.pop_weights(); // already staged — no stall
+        assert_eq!(c.cyc, 174);
+        c.load_weights(144); // issues at 174, ready 296
+        c.compute(10);
+        c.pop_weights(); // stalls the datapath to the fetch
+        assert_eq!(c.cyc, 296);
     }
 }

@@ -330,4 +330,44 @@ mod tests {
         let t3 = scan_timing(9, 12, 4, 4, 2);
         assert_eq!(t3.stream_px, 9 * 12); // (4-1)*2+3 = 9 = ih
     }
+
+    /// Partial-lane depthwise groups (trailing `cn < 16`) at stride 2:
+    /// the likeliest predicted/measured drift sources in the planner's
+    /// cycle model. Stream cost scales with the *actual* lane count,
+    /// and a small trailing group can flip a pass from stream- to
+    /// compute-bound.
+    #[test]
+    fn dw_partial_lane_timing_edges() {
+        // stride 2, rows clamped to ih: rows = (4-1)*2+3 = 9 = ih,
+        // words per plane = ceil(9*12/8) = 14.
+        let t5 = dw_scan_timing(9, 12, 4, 4, 2, 5);
+        assert_eq!(t5.fill_cycles, 3); // 24 px / 8 per word
+        assert_eq!(t5.active_cycles, 16);
+        assert_eq!(t5.stream_px, 5 * 9 * 12);
+        assert_eq!(t5.scan_cycles, 5 * 14); // stream-bound at 5 lanes
+
+        // the same pass with a single trailing lane is compute-bound:
+        // one plane streams in 14 words < 16 output pixels.
+        let t1 = dw_scan_timing(9, 12, 4, 4, 2, 1);
+        assert_eq!(t1.scan_cycles, 16);
+        assert_eq!(t1.stream_px, 9 * 12);
+
+        // crossover sits exactly at cn = 2 (28 words > 16 px)
+        assert_eq!(dw_scan_timing(9, 12, 4, 4, 2, 2).scan_cycles, 28);
+
+        // scan cycles are monotone nondecreasing in the lane count and
+        // match the documented max(compute, cn·words) at every cn —
+        // full group (16), trailing groups, and the stride-2 clamp.
+        for (ih, iw, oh, ow, st) in [(9, 12, 4, 4, 2), (11, 11, 5, 5, 2), (10, 8, 8, 6, 1)] {
+            let rows = ((oh - 1) * st + 3).min(ih);
+            let words = (rows * iw).div_ceil(WORD_PX) as u64;
+            let mut prev = 0;
+            for cn in 1..=NUM_CU {
+                let t = dw_scan_timing(ih, iw, oh, ow, st, cn);
+                assert_eq!(t.scan_cycles, ((oh * ow) as u64).max(cn as u64 * words));
+                assert!(t.scan_cycles >= prev, "scan not monotone at cn={cn}");
+                prev = t.scan_cycles;
+            }
+        }
+    }
 }

@@ -11,7 +11,7 @@
 //! diagnostic kind. Together they bound the analyzer's false-positive
 //! and false-negative rates on the defect taxonomy.
 
-use kn_stream::analysis::{analyze, analyze_words, DiagKind, HazardKind};
+use kn_stream::analysis::{analyze, analyze_words, lint_timing, DiagKind, HazardKind};
 use kn_stream::compiler::{compile_graph_with_options, CompileOptions, CompiledNet};
 use kn_stream::isa::{Cmd, PASS_DW, PASS_LAST};
 use kn_stream::model::zoo;
@@ -240,6 +240,43 @@ fn mutation_corrupted_encoding_is_decode_drift() {
     bad[1] ^= 1;
     let a = analyze_words(&net, &bad).expect("analysis");
     assert!(a.has_kind(DiagKind::DecodeDrift), "operand drift not flagged:\n{}", a.report());
+}
+
+/// Timing-lint mutation battery: the planner's own cycle table replays
+/// clean against the decoded command stream, and *every* single-entry
+/// corruption (as well as a truncated table) is killed as
+/// [`DiagKind::TimingDrift`] — no silent drift window anywhere.
+#[test]
+fn mutation_corrupted_cycle_table_is_timing_drift() {
+    let graph = zoo::graph_by_name("facenet").expect("zoo net");
+    let opts = CompileOptions { verify: false, ..Default::default() };
+    for policy in [PlanPolicy::MinTraffic, PlanPolicy::DagAware] {
+        let gp = plan_graph(&graph, policy).expect("plan");
+        let net = compile_graph_with_options(&graph, Some(&gp.plans), &opts).expect("compile");
+        assert!(
+            lint_timing(&net, &gp.node_cycles).is_empty(),
+            "{}: planner cycle table drifted from its own artifact",
+            policy.name()
+        );
+        for i in 0..gp.node_cycles.len() {
+            if gp.node_cycles[i] == 0 {
+                continue; // fused-away producer: runs inside its consumer
+            }
+            let mut bad = gp.node_cycles.clone();
+            bad[i] -= 1;
+            assert!(
+                lint_timing(&net, &bad).iter().any(|d| d.kind == DiagKind::TimingDrift),
+                "{}: corrupting node {i}'s cycle count went undetected",
+                policy.name()
+            );
+        }
+        let truncated = &gp.node_cycles[1..];
+        assert!(
+            lint_timing(&net, truncated).iter().any(|d| d.kind == DiagKind::TimingDrift),
+            "{}: truncated cycle table went undetected",
+            policy.name()
+        );
+    }
 }
 
 #[test]
