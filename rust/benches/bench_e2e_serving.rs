@@ -4,9 +4,12 @@
 //!
 //! `cargo bench --bench bench_e2e_serving`
 
+use std::sync::Arc;
+
 use kn_stream::coordinator::{AdmissionMode, AdmissionPolicy, Coordinator, CoordinatorConfig};
 use kn_stream::energy::{dvfs, EnergyModel, OperatingPoint};
 use kn_stream::model::{zoo, Tensor};
+use kn_stream::obs::Obs;
 use kn_stream::runtime::Golden;
 use kn_stream::util::bench::{bench_once, JsonReport, Table};
 use kn_stream::util::json::{num, obj, s};
@@ -342,6 +345,82 @@ fn main() {
     );
     coord.stop();
     kt.print();
+
+    // ---- Tracing overhead: off vs on, same seed, bit-exact outputs -------
+    // The observability contract: span tracing must not change a single
+    // output bit or stats counter, and its wall-clock cost must stay
+    // small (the hot path adds two timestamped pushes per segment).
+    let run_pass = |obs: Arc<Obs>| {
+        let coord = Coordinator::start_graph(
+            &net,
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 8,
+                tile_workers: 2,
+                pipeline_depth: 2,
+                op: OperatingPoint::for_freq(500.0),
+                obs,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let frames: Vec<Tensor> = (0..frames_n)
+            .map(|i| Tensor::random_image(i as u32, net.in_h, net.in_w, net.in_c))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let pendings: Vec<_> = frames.iter().map(|f| coord.submit(f.clone()).unwrap()).collect();
+        let outs: Vec<_> = pendings
+            .into_iter()
+            .map(|p| p.recv().expect("delivered").ok().expect("served"))
+            .collect();
+        let wall = t0.elapsed().as_secs_f64();
+        coord.stop();
+        (wall, outs)
+    };
+    let obs = Obs::with(true, true);
+    let (wall_off, outs_off) = run_pass(Obs::none());
+    let (wall_on, outs_on) = run_pass(obs.clone());
+    for (i, (a, b)) in outs_off.iter().zip(&outs_on).enumerate() {
+        assert_eq!(a.output, b.output, "frame {i}: tracing must not change outputs");
+        assert_eq!(a.stats, b.stats, "frame {i}: tracing must not change stats");
+    }
+    let spans = obs.trace.as_ref().unwrap().spans().len();
+    assert!(spans > 0, "traced pass recorded spans");
+    let overhead = wall_on / wall_off;
+    assert!(overhead < 10.0, "tracing overhead {overhead:.2}x is out of hand");
+    let mut ot = Table::new(
+        "Tracing overhead (edgenet, off vs on, same seed, outputs bit-exact)",
+        &["tracing", "wall s", "host fps", "spans", "overhead"],
+    );
+    ot.row(&[
+        "off".into(),
+        format!("{wall_off:.3}"),
+        format!("{:.1}", frames_n as f64 / wall_off),
+        "0".into(),
+        "1.00x".into(),
+    ]);
+    ot.row(&[
+        "on".into(),
+        format!("{wall_on:.3}"),
+        format!("{:.1}", frames_n as f64 / wall_on),
+        format!("{spans}"),
+        format!("{overhead:.2}x"),
+    ]);
+    ot.print();
+    for (mode, wall, nspans) in [("off", wall_off, 0usize), ("on", wall_on, spans)] {
+        report.push_row(
+            "trace_overhead",
+            obj(vec![
+                ("net", s("edgenet")),
+                ("tracing", s(mode)),
+                ("wall_s", num(wall)),
+                ("wall_fps", num(frames_n as f64 / wall)),
+                ("spans", num(nspans as f64)),
+                ("overhead_x", num(wall / wall_off)),
+                ("bit_exact", num(1.0)),
+            ]),
+        );
+    }
 
     report.write().expect("write BENCH_e2e.json");
 

@@ -1014,6 +1014,46 @@ fn check_segment_form(net: &CompiledNet, prog: &[Cmd], diags: &mut Vec<Diagnosti
 /// `Sync` drain. Commands whose geometry is illegal (reported elsewhere
 /// as `ConvShape`) contribute what they legally can.
 pub fn segment_cycles(seg: &crate::compiler::Segment, prog: &[Cmd]) -> u64 {
+    segment_replay(seg, prog).cyc
+}
+
+/// Exact phase split of one segment's clock, from the same replay as
+/// [`segment_cycles`]. The three phases partition `cycles` by
+/// construction — `SegClock` charges every clock advance to exactly one
+/// of compute, inbound-load stall, or outbound store drain — so
+/// `load_stall + compute + store_stall == cycles` always, and `cycles`
+/// equals the measured per-segment `SimStats.cycles` delta (PR 9's
+/// exactness gate). The trace sink uses this split to render DMA-load /
+/// compute / store sub-spans under each segment span.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SegPhases {
+    /// Total segment cycles (== the sum of the three phases).
+    pub cycles: u64,
+    /// Datapath compute cycles.
+    pub compute: u64,
+    /// Non-hidden inbound DMA stall (weights/image/bias fetch).
+    pub load_stall: u64,
+    /// Non-hidden outbound store drain at `Sync` barriers.
+    pub store_stall: u64,
+}
+
+/// Replay one segment and return its exact phase split.
+pub fn segment_phases(seg: &crate::compiler::Segment, prog: &[Cmd]) -> SegPhases {
+    let clk = segment_replay(seg, prog);
+    SegPhases {
+        cycles: clk.cyc,
+        compute: clk.compute_cycles,
+        load_stall: clk.load_stall_cycles,
+        store_stall: clk.store_stall_cycles,
+    }
+}
+
+/// Phase split of every segment of a compiled net, in segment order.
+pub fn net_phases(net: &CompiledNet) -> Vec<SegPhases> {
+    net.segments.iter().map(|seg| segment_phases(seg, &net.program)).collect()
+}
+
+fn segment_replay(seg: &crate::compiler::Segment, prog: &[Cmd]) -> SegClock {
     let mut clk = SegClock::new();
     let mut cfg = seg.cfg;
     for cmd in &prog[seg.start..seg.end.min(prog.len())] {
@@ -1021,8 +1061,11 @@ pub fn segment_cycles(seg: &crate::compiler::Segment, prog: &[Cmd]) -> u64 {
             Cmd::Nop | Cmd::Halt => {}
             Cmd::Sync => clk.sync(),
             Cmd::SetConv(c) => cfg = Some(*c),
-            Cmd::LoadImage(d) | Cmd::Store(d) => {
+            Cmd::LoadImage(d) => {
                 clk.dma(u64::from(d.rows) * u64::from(d.row_px) * 2);
+            }
+            Cmd::Store(d) => {
+                clk.store(u64::from(d.rows) * u64::from(d.row_px) * 2);
             }
             Cmd::LoadWeights(w) => {
                 clk.load_weights(u64::from(w.cn) * (PES_PER_CU * NUM_CU) as u64);
@@ -1063,7 +1106,7 @@ pub fn segment_cycles(seg: &crate::compiler::Segment, prog: &[Cmd]) -> u64 {
             Cmd::Add(a) => clk.compute(3 * u64::from(a.n_px).div_ceil(WORD_PX as u64)),
         }
     }
-    clk.cyc
+    clk
 }
 
 /// Per-node exact cycle totals derived from the artifact alone: every

@@ -29,10 +29,12 @@ pub use decompose::{plan_conv, plan_conv_budget, plan_with_grid, Plan, PlanError
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use crate::model::{Graph, NetSpec, Tensor};
 use crate::sim::accel::{SharedDram, StoreLog};
 use crate::sim::{Accelerator, SimConfig, SimStats};
+use crate::util::sync::{into_inner_recover, lock_recover};
 
 /// One scheduler event of a traced parallel run: a worker entered
 /// (`enter == true`) or finished a segment of frame `frame` (index
@@ -42,12 +44,70 @@ use crate::sim::{Accelerator, SimConfig, SimStats};
 /// one frame that is the branch-overlap property of the DAG scheduler,
 /// across frames it is the cross-frame overlap the pipelined window
 /// exists to create.
+///
+/// Each event also carries the tile worker that ran the segment and a
+/// wall-clock timestamp (nanoseconds since the [`TraceTarget`] epoch);
+/// exit events additionally carry the segment's measured `SimStats`
+/// delta (`cycles`, `dma_stall_cycles`). The observability layer
+/// (`crate::obs`) pairs enter/exit events into per-track spans.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SegTrace {
     pub frame: usize,
     pub seg: usize,
     pub node: usize,
     pub enter: bool,
+    /// Tile worker (DAG executor index) that ran the segment.
+    pub worker: usize,
+    /// Nanoseconds since the trace epoch at which the event occurred.
+    pub t_ns: u64,
+    /// Measured segment cycles (exit events only; 0 on enter).
+    pub cycles: u64,
+    /// Measured non-hidden DMA stall cycles (exit events only).
+    pub dma_stall_cycles: u64,
+}
+
+/// Collector handed to the traced run paths: an epoch for timestamping
+/// plus the shared event vector. The epoch can be shared with an
+/// observability sink (`obs::TraceSink`) so events from many runs land
+/// on one timeline. All locking is poison-tolerant (`lock_recover`): a
+/// panicked tile worker must not cascade into every other worker that
+/// merely wants to record what it ran — the trace is precisely the
+/// artifact you want intact *after* a crash.
+pub struct TraceTarget {
+    epoch: Instant,
+    events: Mutex<Vec<SegTrace>>,
+}
+
+impl Default for TraceTarget {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceTarget {
+    pub fn new() -> Self {
+        Self::with_epoch(Instant::now())
+    }
+
+    /// A target whose timestamps are relative to `epoch` (share one
+    /// epoch across runs to get one coherent timeline).
+    pub fn with_epoch(epoch: Instant) -> Self {
+        Self { epoch, events: Mutex::new(Vec::new()) }
+    }
+
+    /// Nanoseconds since the epoch, saturating (monotonic clock).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn push(&self, e: SegTrace) {
+        lock_recover(&self.events).push(e);
+    }
+
+    /// Consume the target, returning the recorded events (poison-safe).
+    pub fn take(self) -> Vec<SegTrace> {
+        into_inner_recover(self.events)
+    }
 }
 
 /// Scheduler state of one in-flight frame — one slot of the rolling
@@ -471,10 +531,10 @@ impl NetRunner {
         frame: &Tensor,
         workers: usize,
     ) -> anyhow::Result<(Tensor, SimStats, Vec<SegTrace>)> {
-        let trace = Mutex::new(Vec::new());
+        let trace = TraceTarget::new();
         let mut v = self.run_window(&self.pool, &[frame], workers, 1, Some(&trace))?;
         let (out, stats) = v.pop().expect("one frame in, one result out");
-        Ok((out, stats, trace.into_inner().unwrap()))
+        Ok((out, stats, trace.take()))
     }
 
     /// Run a stream of frames through the **cross-frame pipelined**
@@ -540,10 +600,36 @@ impl NetRunner {
         workers: usize,
         depth: usize,
     ) -> anyhow::Result<(Vec<(Tensor, SimStats)>, Vec<SegTrace>)> {
-        let trace = Mutex::new(Vec::new());
+        let trace = TraceTarget::new();
         let refs: Vec<&Tensor> = frames.iter().collect();
         let outs = self.run_window(&self.pool, &refs, workers, depth, Some(&trace))?;
-        Ok((outs, trace.into_inner().unwrap()))
+        Ok((outs, trace.take()))
+    }
+
+    /// Refs-taking traced run against the runner's own pool, recording
+    /// into a caller-owned [`TraceTarget`] (so many runs can share one
+    /// epoch/timeline). Used by the observability layer.
+    pub fn run_frames_pipelined_ref_traced(
+        &self,
+        frames: &[&Tensor],
+        workers: usize,
+        depth: usize,
+        trace: &TraceTarget,
+    ) -> anyhow::Result<Vec<(Tensor, SimStats)>> {
+        self.run_window(&self.pool, frames, workers, depth, Some(trace))
+    }
+
+    /// [`Self::run_frames_pipelined_ref_traced`] on an explicit pool —
+    /// the traced window-serving path of the chip-sharded coordinator.
+    pub fn run_frames_pipelined_ref_traced_on(
+        &self,
+        pool: &AccelPool,
+        frames: &[&Tensor],
+        workers: usize,
+        depth: usize,
+        trace: &TraceTarget,
+    ) -> anyhow::Result<Vec<(Tensor, SimStats)>> {
+        self.run_window(pool, frames, workers, depth, Some(trace))
     }
 
     /// The scheduler core: execute a rolling window of per-frame
@@ -558,7 +644,7 @@ impl NetRunner {
         frames: &[&Tensor],
         workers: usize,
         depth: usize,
-        trace: Option<&Mutex<Vec<SegTrace>>>,
+        trace: Option<&TraceTarget>,
     ) -> anyhow::Result<Vec<(Tensor, SimStats)>> {
         for f in frames {
             self.check_frame(f)?;
@@ -639,7 +725,8 @@ impl NetRunner {
             let dependents = &self.dependents;
             let handles: Vec<_> = accels
                 .iter_mut()
-                .map(|accel| {
+                .enumerate()
+                .map(|(wid, accel)| {
                     scope.spawn(move || {
                         let mut wlog = StoreLog::new();
                         loop {
@@ -666,11 +753,15 @@ impl NetRunner {
                             let seg = &segments[idx];
                             let dram_cell = &dram_cells[slot];
                             if let Some(t) = trace {
-                                t.lock().unwrap().push(SegTrace {
+                                t.push(SegTrace {
                                     frame: frame_id,
                                     seg: idx,
                                     node: seg.node,
                                     enter: true,
+                                    worker: wid,
+                                    t_ns: t.now_ns(),
+                                    cycles: 0,
+                                    dma_stall_cycles: 0,
                                 });
                             }
                             // Per-segment counter reset: the delta this
@@ -690,11 +781,15 @@ impl NetRunner {
                             accel.sync_stats();
                             let delta = accel.stats.clone();
                             if let Some(t) = trace {
-                                t.lock().unwrap().push(SegTrace {
+                                t.push(SegTrace {
                                     frame: frame_id,
                                     seg: idx,
                                     node: seg.node,
                                     enter: false,
+                                    worker: wid,
+                                    t_ns: t.now_ns(),
+                                    cycles: delta.cycles,
+                                    dma_stall_cycles: delta.dma_stall_cycles,
                                 });
                             }
 

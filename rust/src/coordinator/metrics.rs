@@ -28,13 +28,18 @@ pub struct RunMetrics {
     pub failovers: u64,
     /// Attempts abandoned because the per-attempt deadline had passed.
     pub deadline_misses: u64,
+    /// Submissions bounced by admission control (delivered as
+    /// `FrameErrorKind::Admission` errors; a subset of `errors`).
+    pub rejects: u64,
     pub wall_s: f64,
     /// Wall-clock latency histogram (µs buckets).
     pub wall_lat_us: Histogram,
     /// Device latency histogram (µs at the DVFS point).
     pub dev_lat_us: Histogram,
-    /// Queue wait (submit → worker dequeue) per served frame, in µs.
-    pub queue_wait_us: Running,
+    /// Queue wait (submit → worker dequeue) per served frame, in µs —
+    /// log-bucketed so the tail (p95/p99) is reportable, with exact
+    /// mean/max.
+    pub queue_wait_us: Histogram,
     /// Pipelined-window size each served frame ran in (1 =
     /// unpipelined). Mean > 1 means cross-frame windows actually
     /// formed; the latency/throughput split of a depth sweep reads as:
@@ -56,10 +61,11 @@ impl RunMetrics {
             retries: 0,
             failovers: 0,
             deadline_misses: 0,
+            rejects: 0,
             wall_s: 0.0,
             wall_lat_us: Histogram::new(),
             dev_lat_us: Histogram::new(),
-            queue_wait_us: Running::new(),
+            queue_wait_us: Histogram::new(),
             window: Running::new(),
             totals: SimStats::default(),
             op,
@@ -77,7 +83,7 @@ impl RunMetrics {
         self.frames += 1;
         self.wall_lat_us.record(wall_latency_s * 1e6);
         self.dev_lat_us.record(device_latency_s * 1e6);
-        self.queue_wait_us.push(queue_wait_s * 1e6);
+        self.queue_wait_us.record(queue_wait_s * 1e6);
         self.window.push(window as f64);
         self.totals.add(stats);
     }
@@ -102,7 +108,12 @@ impl RunMetrics {
                 o.queue_wait_s,
                 o.window,
             ),
-            Err(e) => self.record_error(&e.message),
+            Err(e) => {
+                if e.kind == super::request::FrameErrorKind::Admission {
+                    self.rejects += 1;
+                }
+                self.record_error(&e.message)
+            }
         }
     }
 
@@ -153,8 +164,8 @@ impl RunMetrics {
         };
         format!(
             "frames={}{errs} | device: {:.1} fps, {}OPS eff, util {:.2} | dev-lat p50/p95/p99 = \
-             {:.1}/{:.1}/{:.1} ms | q-wait mean/max {:.0}/{:.0} µs{pipe}{robust} | energy/frame \
-             {:.2} mJ (on-chip {:.2} mJ) | host {:.1} fps",
+             {:.1}/{:.1}/{:.1} ms | q-wait p50/p95/p99 {:.0}/{:.0}/{:.0} µs{pipe}{robust} | \
+             energy/frame {:.2} mJ (on-chip {:.2} mJ) | host {:.1} fps",
             self.frames,
             self.device_fps(),
             eng(self.device_ops_per_s()),
@@ -162,8 +173,9 @@ impl RunMetrics {
             self.dev_lat_us.quantile(0.50) / 1e3,
             self.dev_lat_us.quantile(0.95) / 1e3,
             self.dev_lat_us.quantile(0.99) / 1e3,
-            self.queue_wait_us.mean(),
-            self.queue_wait_us.max(),
+            self.queue_wait_us.quantile(0.50),
+            self.queue_wait_us.quantile(0.95),
+            self.queue_wait_us.quantile(0.99),
             e.total_j() / self.frames.max(1) as f64 * 1e3,
             e.onchip_j() / self.frames.max(1) as f64 * 1e3,
             self.wall_fps(),
@@ -342,6 +354,34 @@ mod tests {
         assert_eq!(m.deadline_misses, 1);
         let rep = m.report(&EnergyModel::default());
         assert!(rep.contains("retries 3 / failovers 3 / deadline-miss 1"), "{rep}");
+    }
+
+    #[test]
+    fn admission_rejects_counted_and_qwait_percentiles_reported() {
+        let mut m = RunMetrics::new(PEAK);
+        m.record_result(&FrameResult {
+            id: 0,
+            net: "a".into(),
+            worker: NO_WORKER,
+            chip: NO_CHIP,
+            attempts: Attempts::default(),
+            result: Err(FrameError::new(FrameErrorKind::Admission, "queue full")),
+        });
+        m.record_result(&FrameResult {
+            id: 1,
+            net: "a".into(),
+            worker: NO_WORKER,
+            chip: NO_CHIP,
+            attempts: Attempts::default(),
+            result: Err(FrameError::new(FrameErrorKind::Internal, "boom")),
+        });
+        assert_eq!(m.errors, 2);
+        assert_eq!(m.rejects, 1, "only Admission errors count as rejects");
+        // queue-wait percentiles surface in the report line
+        let stats = SimStats { cycles: 1000, ..Default::default() };
+        m.record(&stats, 0.01, 0.001, 0.0005, 1);
+        let rep = m.report(&EnergyModel::default());
+        assert!(rep.contains("q-wait p50/p95/p99"), "{rep}");
     }
 
     #[test]

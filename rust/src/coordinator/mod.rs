@@ -21,6 +21,13 @@
 //! per-attempt deadlines, and bounded retry/failover — the lossless
 //! accounting invariant holds under every seeded fault plan.
 //!
+//! Observability rides on `CoordinatorConfig::obs` ([`crate::obs`]):
+//! per-segment span tracing through the serving path, a structured
+//! fleet event log with monotonic sequence numbers (faults, retries,
+//! failovers, health transitions), and Prometheus exposition over the
+//! serve report. Disabled (the default) it is a pair of `Option`
+//! checks per site and leaves outputs/stats bit-identical.
+//!
 //! With `CoordinatorConfig::pipeline_depth > 1`, workers dequeue
 //! contiguous same-net *windows* of frames and run them through the
 //! cross-frame pipelined scheduler: frame N+1's early segments overlap

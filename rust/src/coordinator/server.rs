@@ -61,7 +61,9 @@ use super::request::{
 use crate::compiler::{AccelPool, NetRunner};
 use crate::energy::{EnergyModel, OperatingPoint};
 use crate::model::{Graph, NetSpec, Tensor};
+use crate::obs::{EventKind, Obs};
 use crate::planner::{PlanObjective, PlanPolicy};
+use crate::util::sync::lock_recover;
 
 /// What to do when admitting a frame would exceed the DRAM budget.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -166,6 +168,11 @@ pub struct CoordinatorConfig {
     pub quarantine_cooldown: Duration,
     /// Deterministic fault injection schedule (empty = no faults).
     pub fault_plan: FaultPlan,
+    /// Observability sinks ([`Obs`]): span tracing and/or the fleet
+    /// event log. Defaults to [`Obs::none`] — disabled observability is
+    /// a pair of `Option` checks per emission site and leaves outputs
+    /// and stats bit-identical.
+    pub obs: Arc<Obs>,
 }
 
 impl Default for CoordinatorConfig {
@@ -187,6 +194,7 @@ impl Default for CoordinatorConfig {
             quarantine_after: 3,
             quarantine_cooldown: Duration::from_millis(250),
             fault_plan: FaultPlan::none(),
+            obs: Obs::none(),
         }
     }
 }
@@ -199,18 +207,14 @@ impl Default for CoordinatorConfig {
 // in every submitter that touched it afterwards. The two helpers below
 // are the only ways this module takes a lock now:
 //
-// - `lock_recover` for ledger/queue/health state whose invariants are
-//   update-atomic (plain arithmetic and VecDeque ops that cannot
-//   unwind mid-update): poison is survivable, so recover the guard and
-//   keep serving. Mandatory on every path reachable from `Drop` during
-//   unwind, where a second panic would abort the process.
+// - `util::sync::lock_recover` for ledger/queue/health state whose
+//   invariants are update-atomic (plain arithmetic and VecDeque ops
+//   that cannot unwind mid-update): poison is survivable, so recover
+//   the guard and keep serving. Mandatory on every path reachable from
+//   `Drop` during unwind, where a second panic would abort the process.
 // - `lock_or_accounted_err` for request paths that can hand the caller
 //   a typed error instead: poison surfaces as a *delivered*
 //   `FrameError`, accounted like any other failure.
-
-fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
 
 fn lock_or_accounted_err<'a, T>(
     m: &'a Mutex<T>,
@@ -526,6 +530,9 @@ struct Chip {
     dequeued: AtomicU64,
     /// Pending fault events for this chip, sorted by frame index.
     faults: Mutex<VecDeque<FaultEvent>>,
+    /// Shared observability sinks (event log + trace); disabled sinks
+    /// cost two `Option` checks per emission site.
+    obs: Arc<Obs>,
 }
 
 impl Chip {
@@ -536,6 +543,10 @@ impl Chip {
     /// May this chip take new frames right now? Lazily re-admits a
     /// quarantined chip whose cooldown has expired (as `Degraded`; a
     /// success then heals it to `Healthy`).
+    ///
+    /// Health-transition events are emitted while the state lock is
+    /// held (here and in the other transitions below), so event-log
+    /// sequence numbers observe transitions in the order they happen.
     fn routable(&self, now: Instant) -> bool {
         let mut st = lock_recover(&self.state);
         match st.health {
@@ -546,6 +557,9 @@ impl Chip {
                     st.health = ChipHealth::Degraded;
                     st.consec_failures = 0;
                     st.quarantine_until = None;
+                    self.obs.event(EventKind::ChipReadmitted, Some(self.id), None, || {
+                        format!("chip {} cooldown expired; re-admitted as degraded", self.id)
+                    });
                     true
                 }
                 _ => false,
@@ -553,10 +567,15 @@ impl Chip {
         }
     }
 
-    fn mark_dead(&self) {
+    /// Returns `true` on the actual transition into `Dead` (so the
+    /// caller emits exactly one `chip-dead` event even when kill paths
+    /// race).
+    fn mark_dead(&self) -> bool {
         let mut st = lock_recover(&self.state);
+        let was_dead = st.health == ChipHealth::Dead;
         st.health = ChipHealth::Dead;
         st.quarantine_until = None;
+        !was_dead
     }
 
     fn note_failure(&self, quarantine_after: u32, cooldown: Duration) {
@@ -564,12 +583,24 @@ impl Chip {
         if st.health == ChipHealth::Dead {
             return;
         }
+        let old = st.health;
         st.consec_failures += 1;
         if st.consec_failures >= quarantine_after {
             st.health = ChipHealth::Quarantined;
             st.quarantine_until = Some(Instant::now() + cooldown);
+            if old != ChipHealth::Quarantined {
+                let n = st.consec_failures;
+                self.obs.event(EventKind::ChipQuarantined, Some(self.id), None, || {
+                    format!("chip {} quarantined after {n} consecutive failure(s)", self.id)
+                });
+            }
         } else {
             st.health = ChipHealth::Degraded;
+            if old != ChipHealth::Degraded {
+                self.obs.event(EventKind::ChipDegraded, Some(self.id), None, || {
+                    format!("chip {} degraded by a failure", self.id)
+                });
+            }
         }
     }
 
@@ -578,9 +609,15 @@ impl Chip {
         if st.health == ChipHealth::Dead {
             return;
         }
+        let healed = st.health != ChipHealth::Healthy;
         st.health = ChipHealth::Healthy;
         st.consec_failures = 0;
         st.quarantine_until = None;
+        if healed {
+            self.obs.event(EventKind::ChipHealed, Some(self.id), None, || {
+                format!("chip {} healed by a successful window", self.id)
+            });
+        }
     }
 
     /// Consume the fault scheduled for chip-local dequeue index `n`,
@@ -618,6 +655,8 @@ struct Router {
     /// Set by `stop()` before `Stop` jobs go out, so consumer guards
     /// don't mistake an orderly shutdown for an organic chip death.
     stopping: AtomicBool,
+    /// Shared observability sinks (same handle the chips carry).
+    obs: Arc<Obs>,
 }
 
 impl Router {
@@ -657,13 +696,15 @@ impl Router {
     fn admit(&self, bytes: usize) -> Result<(), AdmitFail> {
         let policy = self.admission.policy;
         if bytes > policy.max_dram_bytes {
-            return Err(AdmitFail::Rejected(FrameError::new(
+            let err = FrameError::new(
                 FrameErrorKind::Admission,
                 format!(
                     "admission: frame needs {bytes} B of DRAM image, budget is {} B",
                     policy.max_dram_bytes
                 ),
-            )));
+            );
+            self.obs.event(EventKind::AdmissionReject, None, None, || err.message.clone());
+            return Err(AdmitFail::Rejected(err));
         }
         let mut used = lock_or_accounted_err(&self.admission.in_flight, "admission ledger")
             .map_err(AdmitFail::Rejected)?;
@@ -678,7 +719,7 @@ impl Router {
             }
             match policy.mode {
                 AdmissionMode::Reject => {
-                    return Err(AdmitFail::Rejected(FrameError::new(
+                    let err = FrameError::new(
                         FrameErrorKind::Admission,
                         format!(
                             "admission: rejected — {bytes} B needed, {} B of {eff} B effective \
@@ -686,19 +727,25 @@ impl Router {
                             *used,
                             self.chips.len()
                         ),
-                    )));
+                    );
+                    self.obs.event(EventKind::AdmissionReject, None, None, || err.message.clone());
+                    return Err(AdmitFail::Rejected(err));
                 }
                 AdmissionMode::Block => {
                     let ceiling = self.effective_budget(alive);
                     if bytes > ceiling {
-                        return Err(AdmitFail::Rejected(FrameError::new(
+                        let err = FrameError::new(
                             FrameErrorKind::Admission,
                             format!(
                                 "admission: degraded fleet — frame needs {bytes} B but only \
                                  {alive}/{} chips are alive ({ceiling} B budget ceiling)",
                                 self.chips.len()
                             ),
-                        )));
+                        );
+                        self.obs.event(EventKind::AdmissionReject, None, None, || {
+                            err.message.clone()
+                        });
+                        return Err(AdmitFail::Rejected(err));
                     }
                     let (g, _) = self
                         .admission
@@ -795,6 +842,9 @@ impl Router {
                     job.req.id, job.attempts, job.failovers, job.deadline_misses
                 ),
             );
+            self.obs.event(EventKind::RetriesExhausted, Some(from), Some(job.req.id), || {
+                err.message.clone()
+            });
             Self::deliver_error(job, from, err);
             return;
         }
@@ -812,6 +862,9 @@ impl Router {
                         job.req.id, job.attempts
                     ),
                 );
+                self.obs.event(EventKind::ChipsUnavailable, Some(from), Some(job.req.id), || {
+                    err.message.clone()
+                });
                 Self::deliver_error(job, from, err);
                 return;
             };
@@ -821,9 +874,20 @@ impl Router {
                 job.failovers += 1;
             }
             job.dispatched = Instant::now();
+            let (frame_id, attempt) = (job.req.id, job.attempts);
             chip.load.fetch_add(1, Ordering::SeqCst);
             match chip.queue.push_unbounded(Job::Frame(Box::new(job))) {
-                Ok(()) => return,
+                Ok(()) => {
+                    self.obs.event(EventKind::Retry, Some(chip.id), Some(frame_id), || {
+                        format!("{why}; attempt {attempt} re-dispatched to chip {}", chip.id)
+                    });
+                    if moved {
+                        self.obs.event(EventKind::Failover, Some(chip.id), Some(frame_id), || {
+                            format!("frame {frame_id} failed over chip {from} → {}", chip.id)
+                        });
+                    }
+                    return;
+                }
                 Err(j) => {
                     chip.load.fetch_sub(1, Ordering::SeqCst);
                     match j {
@@ -860,7 +924,9 @@ impl Router {
     /// none remain). Idempotent; safe to call from an unwinding worker.
     fn kill_chip(&self, id: usize, why: &str) {
         let chip = &self.chips[id];
-        chip.mark_dead();
+        if chip.mark_dead() {
+            self.obs.event(EventKind::ChipDead, Some(id), None, || format!("chip {id}: {why}"));
+        }
         for j in chip.queue.close_and_drain() {
             if let Job::Frame(f) = j {
                 chip.load.fetch_sub(1, Ordering::SeqCst);
@@ -1065,7 +1131,18 @@ impl Coordinator {
         let (registry, by_name) = Self::compile_registry(&nets, &cfg)?;
         let mut picks: Vec<AutoOp> = Vec::with_capacity(registry.len());
         for (name, runner) in &registry {
-            picks.push(auto_pick_for(name, runner, slo_ms)?);
+            let pick = auto_pick_for(name, runner, slo_ms)?;
+            cfg.obs.event(EventKind::AutoPick, None, None, || {
+                format!(
+                    "{}: {:.0} MHz, {:.3} ms, {:.4} J (slo {slo_ms} ms {})",
+                    pick.net,
+                    pick.op.freq_mhz,
+                    pick.latency_ms,
+                    pick.energy_j,
+                    if pick.slo_met { "met" } else { "MISSED — PEAK fallback" }
+                )
+            });
+            picks.push(pick);
         }
         cfg.op = fleet_op(&picks);
         Ok((Self::start_compiled(registry, by_name, cfg)?, picks))
@@ -1120,6 +1197,7 @@ impl Coordinator {
                     load: AtomicUsize::new(0),
                     dequeued: AtomicU64::new(0),
                     faults: Mutex::new(cfg.fault_plan.events_for(c)),
+                    obs: Arc::clone(&cfg.obs),
                 })
             })
             .collect();
@@ -1131,6 +1209,7 @@ impl Coordinator {
             quarantine_after: cfg.quarantine_after.max(1),
             quarantine_cooldown: cfg.quarantine_cooldown,
             stopping: AtomicBool::new(false),
+            obs: Arc::clone(&cfg.obs),
         });
         let tile_workers = cfg.tile_workers.max(1);
         // Cross-frame overlap happens *among tile workers*; with one
@@ -1172,6 +1251,12 @@ impl Coordinator {
     /// Current health of every chip, indexed by chip id.
     pub fn chip_health(&self) -> Vec<ChipHealth> {
         self.router.chips.iter().map(|c| c.health()).collect()
+    }
+
+    /// Frames currently dispatched to (queued on or executing on) each
+    /// chip — the queue-depth gauge `obs::prom::render` exposes.
+    pub fn chip_loads(&self) -> Vec<usize> {
+        self.router.chips.iter().map(|c| c.load.load(Ordering::SeqCst)).collect()
     }
 
     /// The admission budget currently in force, scaled by the fleet's
@@ -1480,7 +1565,14 @@ fn triage_and_serve(
             continue;
         }
         let n = chip.dequeued.fetch_add(1, Ordering::SeqCst);
-        match chip.take_fault(n) {
+        let fault = chip.take_fault(n);
+        if let Some(kind) = &fault {
+            let (cid, fid) = (chip.id, job.req.id);
+            chip.obs.event(EventKind::FaultInjected, Some(cid), Some(fid), || {
+                format!("{kind:?} at chip {cid} local frame {n} (frame {fid})")
+            });
+        }
+        match fault {
             Some(FaultKind::TransientFail) => {
                 router.note_failure(chip);
                 chip.load.fetch_sub(1, Ordering::SeqCst);
@@ -1491,6 +1583,9 @@ fn triage_and_serve(
                 router.note_failure(chip);
                 if job.past_deadline() {
                     job.deadline_misses += 1;
+                    chip.obs.event(EventKind::DeadlineMiss, Some(chip.id), Some(job.req.id), || {
+                        format!("frame {} stalled {ms} ms past its deadline", job.req.id)
+                    });
                     chip.load.fetch_sub(1, Ordering::SeqCst);
                     router.redispatch(job, chip.id, "compute stall blew the deadline");
                 } else {
@@ -1518,6 +1613,9 @@ fn triage_and_serve(
                     // sim time on a frame that already missed; no
                     // health penalty (queueing, not a chip fault).
                     job.deadline_misses += 1;
+                    chip.obs.event(EventKind::DeadlineMiss, Some(chip.id), Some(job.req.id), || {
+                        format!("frame {} sat in the queue past its deadline", job.req.id)
+                    });
                     chip.load.fetch_sub(1, Ordering::SeqCst);
                     router.redispatch(job, chip.id, "deadline exceeded before service");
                 } else {
@@ -1578,7 +1676,32 @@ fn serve_window(
     let outs = {
         // borrow the frames in place — no per-window image copies
         let frames: Vec<&Tensor> = window.iter().map(|(j, _)| &j.req.frame).collect();
-        runner.run_frames_pipelined_ref_on(&chip.pool, &frames, tile_workers, depth)
+        match chip.obs.trace.as_deref() {
+            None => runner.run_frames_pipelined_ref_on(&chip.pool, &frames, tile_workers, depth),
+            Some(sink) => {
+                // Traced serve: collect the scheduler's enter/exit
+                // events on the sink's epoch, pair them into spans
+                // keyed by the coordinator frame ids, and record the
+                // window on this queue worker's track. The traced
+                // scheduler is the same code path — outputs and stats
+                // stay bit-identical.
+                let ids: Vec<u64> = window.iter().map(|(j, _)| j.req.id).collect();
+                let target = sink.target();
+                let t0 = sink.now_ns();
+                let r = runner.run_frames_pipelined_ref_traced_on(
+                    &chip.pool,
+                    &frames,
+                    tile_workers,
+                    depth,
+                    &target,
+                );
+                let t1 = sink.now_ns();
+                sink.ingest(&window[0].0.req.net, &runner.compiled, chip.id, &ids, &target.take());
+                let cycles = r.as_ref().map_or(0, |o| o.iter().map(|(_, s)| s.cycles).sum());
+                sink.window(&window[0].0.req.net, chip.id, worker, ids, t0, t1, cycles);
+                r
+            }
+        }
     };
     match outs {
         Ok(outs) => {

@@ -42,6 +42,10 @@
 //!   by `python/compile/aot.py` (golden models; never Python at runtime).
 //! - [`coordinator`] — the streaming frame server: request queue, layer
 //!   scheduling onto the accelerator, metrics.
+//! - [`obs`] — observability: Perfetto span tracing (per-segment spans
+//!   with exact DMA-load / compute / store sub-spans), Prometheus metric
+//!   exposition, and the structured fleet event log with monotonic
+//!   sequence numbers.
 //! - [`util`] — offline-environment substrates built from scratch: PRNG,
 //!   JSON parser, CLI parser, stats, bench harness, property testing.
 
@@ -52,6 +56,7 @@ pub mod energy;
 pub mod fixed;
 pub mod isa;
 pub mod model;
+pub mod obs;
 pub mod planner;
 pub mod runtime;
 pub mod sim;

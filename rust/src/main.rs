@@ -17,6 +17,7 @@ use kn_stream::coordinator::{
 };
 use kn_stream::energy::{AreaModel, EnergyModel, OperatingPoint};
 use kn_stream::model::{zoo, Tensor};
+use kn_stream::obs::{prom, Obs, TraceSink};
 use kn_stream::planner::{plan_graph, plan_graph_objective, PlanObjective, PlanPolicy};
 use kn_stream::runtime::Golden;
 use kn_stream::util::bench::Table;
@@ -80,7 +81,8 @@ fn cmd_run(args: Vec<String>) -> anyhow::Result<()> {
         .opt("seed", "1", "input frame seed")
         .opt("plan-policy", "heuristic", "decomposition planner (heuristic|min-traffic|dag-aware)")
         .opt("objective", "min-traffic", "objective (min-traffic|min-latency|min-energy|min-edp)")
-        .opt("slo-ms", "0", "latency SLO for --objective min-energy (0 = none)");
+        .opt("slo-ms", "0", "latency SLO for --objective min-energy (0 = none)")
+        .opt("trace-out", "", "write a Perfetto-loadable Chrome trace of the run to this path");
     let m = cli.parse_from(args)?;
     let net = graph_arg(m.get("net"))?;
     let op = OperatingPoint::for_freq(m.get_f64("freq"));
@@ -88,6 +90,8 @@ fn cmd_run(args: Vec<String>) -> anyhow::Result<()> {
     let objective =
         PlanObjective::parse(m.get("objective"), m.get_f64("freq"), m.get_f64("slo-ms"))?;
     let runner = NetRunner::from_graph_with_policy_objective(&net, policy, objective)?;
+    let trace_out = m.get("trace-out").to_string();
+    let sink = (!trace_out.is_empty()).then(TraceSink::new);
     let energy = EnergyModel::default();
     let ov = &runner.compiled.output;
     println!("net={} in={:?} out={:?}  @ {:.0} MHz / {:.2} V", net.name, net.in_shape(),
@@ -96,7 +100,18 @@ fn cmd_run(args: Vec<String>) -> anyhow::Result<()> {
         let seed = m.get_u64("seed") as u32 + i as u32;
         let frame = Tensor::random_image(seed, net.in_h, net.in_w, net.in_c);
         let t0 = std::time::Instant::now();
-        let (out, stats) = runner.run_frame(&frame)?;
+        let (out, stats) = match &sink {
+            None => runner.run_frame(&frame)?,
+            Some(sink) => {
+                // Traced runs go through the parallel segment-DAG
+                // scheduler (2 tile workers) — the sequential path has
+                // no trace points. Outputs and stats are bit-identical.
+                let target = sink.target();
+                let mut outs = runner.run_frames_pipelined_ref_traced(&[&frame], 2, 1, &target)?;
+                sink.ingest(&net.name, &runner.compiled, 0, &[i], &target.take());
+                outs.pop().expect("one frame in, one result out")
+            }
+        };
         let dev_ms = stats.cycles as f64 * op.cycle_s() * 1e3;
         let e = energy.energy(&stats, op);
         println!(
@@ -112,6 +127,11 @@ fn cmd_run(args: Vec<String>) -> anyhow::Result<()> {
             e.total_j() * 1e3,
             t0.elapsed().as_secs_f64() * 1e3,
         );
+    }
+    if let Some(sink) = &sink {
+        sink.write(&trace_out)?;
+        println!("trace: {} segment span(s) → {trace_out} (load in https://ui.perfetto.dev)",
+                 sink.spans().len());
     }
     Ok(())
 }
@@ -154,7 +174,10 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         .opt("chip-freqs", "", "per-chip MHz overrides, comma-separated (default: --freq)")
         .opt("deadline-ms", "0", "per-attempt service deadline in ms (0 = none)")
         .opt("max-retries", "2", "re-dispatches per frame before retries-exhausted")
-        .opt("chaos-seed", "", "deterministic fault-injection seed (empty = no faults)");
+        .opt("chaos-seed", "", "deterministic fault-injection seed (empty = no faults)")
+        .opt("trace-out", "", "write a Perfetto-loadable Chrome trace of the serve to this path")
+        .opt("metrics-out", "", "write Prometheus text exposition of the run to this path")
+        .opt("event-log", "", "write the structured fleet event log (JSONL) to this path");
     let m = cli.parse_from(args)?;
     let list = if m.get("nets").is_empty() { m.get("net") } else { m.get("nets") };
     let nets = zoo::graphs_by_names(list)?;
@@ -191,6 +214,12 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
     };
     let deadline_ms = m.get_f64("deadline-ms");
     let objective = PlanObjective::parse(m.get("objective"), m.get_f64("freq"), deadline_ms)?;
+    let trace_out = m.get("trace-out").to_string();
+    let metrics_out = m.get("metrics-out").to_string();
+    let event_log = m.get("event-log").to_string();
+    // The event log also feeds the exposition's event counters, so
+    // --metrics-out implies collecting it.
+    let obs = Obs::with(!trace_out.is_empty(), !event_log.is_empty() || !metrics_out.is_empty());
     let cfg = CoordinatorConfig {
         workers: m.get_usize("workers"),
         chips,
@@ -206,6 +235,7 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
             .then(|| std::time::Duration::from_micros((deadline_ms * 1e3) as u64)),
         max_retries: m.get_usize("max-retries") as u32,
         fault_plan,
+        obs: obs.clone(),
         ..CoordinatorConfig::default()
     };
 
@@ -241,10 +271,20 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
         (Coordinator::start_registry(nets, cfg)?, op)
     };
     let rep = coord.run_mix(tagged)?;
+    let chip_loads = coord.chip_loads();
     let energy = EnergyModel::default();
+    let q3 = |h: &kn_stream::util::stats::Histogram, scale: f64, prec: usize| {
+        format!(
+            "{:.prec$}/{:.prec$}/{:.prec$}",
+            h.quantile(0.5) * scale,
+            h.quantile(0.95) * scale,
+            h.quantile(0.99) * scale,
+        )
+    };
     let mut t = Table::new(
         "per-net serving report",
-        &["net", "frames", "errors", "device fps", "p50 ms", "p99 ms", "q-wait µs", "mJ/frame"],
+        &["net", "frames", "errors", "device fps", "lat p50/p95/p99 ms",
+          "q-wait p50/p95/p99 µs", "mJ/frame"],
     );
     for (name, nm) in &rep.per_net {
         let e = energy.energy(&nm.totals, op);
@@ -253,9 +293,8 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
             format!("{}", nm.frames),
             format!("{}", nm.errors),
             format!("{:.1}", nm.device_fps()),
-            format!("{:.2}", nm.dev_lat_us.quantile(0.5) / 1e3),
-            format!("{:.2}", nm.dev_lat_us.quantile(0.99) / 1e3),
-            format!("{:.0}", nm.queue_wait_us.mean()),
+            q3(&nm.dev_lat_us, 1e-3, 2),
+            q3(&nm.queue_wait_us, 1.0, 0),
             format!("{:.3}", e.total_j() / nm.frames.max(1) as f64 * 1e3),
         ]);
     }
@@ -263,8 +302,8 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
     if !rep.per_chip.is_empty() {
         let mut t = Table::new(
             "per-chip fault-domain report",
-            &["chip", "health", "MHz", "frames", "errors", "retries", "failovers",
-              "ddl-miss", "device fps"],
+            &["chip", "health", "MHz", "frames", "errors", "retries", "failovers", "ddl-miss",
+              "lat p50/p95/p99 ms", "q-wait p50/p95/p99 µs"],
         );
         for (c, cm) in rep.per_chip.iter().enumerate() {
             let health =
@@ -278,13 +317,33 @@ fn cmd_serve(args: Vec<String>) -> anyhow::Result<()> {
                 format!("{}", cm.retries),
                 format!("{}", cm.failovers),
                 format!("{}", cm.deadline_misses),
-                format!("{:.1}", cm.device_fps()),
+                q3(&cm.dev_lat_us, 1e-3, 2),
+                q3(&cm.queue_wait_us, 1.0, 0),
             ]);
         }
         t.print();
     }
     println!("aggregate: {}", rep.aggregate.report(&energy));
     coord.stop();
+    if let Some(sink) = &obs.trace {
+        sink.write(&trace_out)?;
+        println!(
+            "trace: {} span(s), {} window(s), {} instant(s) → {trace_out}",
+            sink.spans().len(),
+            sink.windows().len(),
+            sink.instants().len()
+        );
+    }
+    if !metrics_out.is_empty() {
+        std::fs::write(&metrics_out, prom::render(&rep, obs.log.as_deref(), &chip_loads))?;
+        println!("metrics: Prometheus exposition → {metrics_out}");
+    }
+    if let Some(log) = &obs.log {
+        if !event_log.is_empty() {
+            log.write(&event_log)?;
+            println!("events: {} fleet event(s) → {event_log}", log.len());
+        }
+    }
     Ok(())
 }
 

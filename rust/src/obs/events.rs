@@ -1,0 +1,240 @@
+//! Structured fleet event log: coordinator lifecycle events (faults,
+//! retries, failovers, health transitions, admission rejects, DVFS
+//! auto-picks) with monotonic sequence numbers, so fault-handling
+//! *ordering* is testable instead of inferred from log text.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{num, obj, s, Json};
+use crate::util::sync::lock_recover;
+
+/// What happened. `name()` is the stable kebab-case identifier used in
+/// the JSONL stream, trace instant names and Prometheus label values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A seeded fault fired on a chip (detail says which kind).
+    FaultInjected,
+    /// A failed attempt was re-queued on the same chip.
+    Retry,
+    /// A failed attempt was re-routed to a different chip.
+    Failover,
+    /// A frame exhausted its retry budget and was delivered as an error.
+    RetriesExhausted,
+    /// A frame had no routable chip left and was delivered as an error.
+    ChipsUnavailable,
+    /// An attempt exceeded the per-attempt deadline.
+    DeadlineMiss,
+    /// Admission control rejected a submission.
+    AdmissionReject,
+    /// A chip was marked dead (fault injection or organic worker death).
+    ChipDead,
+    /// Consecutive failures quarantined a chip for its cooldown.
+    ChipQuarantined,
+    /// A failure degraded a chip (sheds admission weight).
+    ChipDegraded,
+    /// A success restored a degraded chip to healthy.
+    ChipHealed,
+    /// A quarantined chip's cooldown expired; re-admitted degraded.
+    ChipReadmitted,
+    /// The DVFS auto-picker selected an operating point.
+    AutoPick,
+}
+
+/// Every kind, for exhaustive exposition/reporting sweeps.
+pub const EVENT_KINDS: [EventKind; 13] = [
+    EventKind::FaultInjected,
+    EventKind::Retry,
+    EventKind::Failover,
+    EventKind::RetriesExhausted,
+    EventKind::ChipsUnavailable,
+    EventKind::DeadlineMiss,
+    EventKind::AdmissionReject,
+    EventKind::ChipDead,
+    EventKind::ChipQuarantined,
+    EventKind::ChipDegraded,
+    EventKind::ChipHealed,
+    EventKind::ChipReadmitted,
+    EventKind::AutoPick,
+];
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::FaultInjected => "fault-injected",
+            EventKind::Retry => "retry",
+            EventKind::Failover => "failover",
+            EventKind::RetriesExhausted => "retries-exhausted",
+            EventKind::ChipsUnavailable => "chips-unavailable",
+            EventKind::DeadlineMiss => "deadline-miss",
+            EventKind::AdmissionReject => "admission-reject",
+            EventKind::ChipDead => "chip-dead",
+            EventKind::ChipQuarantined => "chip-quarantined",
+            EventKind::ChipDegraded => "chip-degraded",
+            EventKind::ChipHealed => "chip-healed",
+            EventKind::ChipReadmitted => "chip-readmitted",
+            EventKind::AutoPick => "dvfs-auto-pick",
+        }
+    }
+
+    /// Chip health state machine transitions (for the
+    /// `kn_chip_health_transitions_total` counter).
+    pub fn is_health_transition(&self) -> bool {
+        matches!(
+            self,
+            EventKind::ChipDead
+                | EventKind::ChipQuarantined
+                | EventKind::ChipDegraded
+                | EventKind::ChipHealed
+                | EventKind::ChipReadmitted
+        )
+    }
+}
+
+/// One logged lifecycle event. `seq` is assigned under the log's lock,
+/// so it is a total order over the whole fleet: if quarantine's `seq`
+/// is below re-admission's, quarantine *happened first*.
+#[derive(Clone, Debug)]
+pub struct FleetEvent {
+    /// Monotonic, gapless sequence number (0-based).
+    pub seq: u64,
+    /// Microseconds since the log epoch.
+    pub t_us: u64,
+    pub kind: EventKind,
+    /// Chip the event concerns, if any.
+    pub chip: Option<usize>,
+    /// Frame id the event concerns, if any.
+    pub frame: Option<u64>,
+    /// Human-readable specifics ("transient fault", "cooldown over", …).
+    pub detail: String,
+}
+
+impl FleetEvent {
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(num).unwrap_or(Json::Null);
+        obj(vec![
+            ("seq", num(self.seq as f64)),
+            ("t_us", num(self.t_us as f64)),
+            ("kind", s(self.kind.name())),
+            ("chip", opt(self.chip.map(|c| c as f64))),
+            ("frame", opt(self.frame.map(|f| f as f64))),
+            ("detail", s(&self.detail)),
+        ])
+    }
+}
+
+/// The fleet event log. Sequence numbers are assigned while holding the
+/// event vector's lock, so `events()[i].seq == i` always — monotonic and
+/// gapless by construction. Locking is poison-tolerant: the log must
+/// survive the very crashes it exists to describe.
+pub struct EventLog {
+    epoch: Instant,
+    events: Mutex<Vec<FleetEvent>>,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventLog {
+    pub fn new() -> Self {
+        Self::with_epoch(Instant::now())
+    }
+
+    pub fn with_epoch(epoch: Instant) -> Self {
+        Self { epoch, events: Mutex::new(Vec::new()) }
+    }
+
+    /// Record an event; returns its sequence number.
+    pub fn emit(
+        &self,
+        kind: EventKind,
+        chip: Option<usize>,
+        frame: Option<u64>,
+        detail: String,
+    ) -> u64 {
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        let mut ev = lock_recover(&self.events);
+        let seq = ev.len() as u64;
+        ev.push(FleetEvent { seq, t_us, kind, chip, frame, detail });
+        seq
+    }
+
+    pub fn len(&self) -> usize {
+        lock_recover(&self.events).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of all events in sequence order.
+    pub fn events(&self) -> Vec<FleetEvent> {
+        lock_recover(&self.events).clone()
+    }
+
+    /// How many events of `kind` have been logged.
+    pub fn count(&self, kind: EventKind) -> u64 {
+        lock_recover(&self.events).iter().filter(|e| e.kind == kind).count() as u64
+    }
+
+    /// The whole log as JSON Lines (one object per event, seq order).
+    pub fn to_jsonl(&self) -> String {
+        let ev = lock_recover(&self.events);
+        let mut out = String::new();
+        for e in ev.iter() {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_is_monotonic_and_gapless() {
+        let log = EventLog::new();
+        assert_eq!(log.emit(EventKind::FaultInjected, Some(1), Some(7), "x".into()), 0);
+        assert_eq!(log.emit(EventKind::Retry, Some(1), Some(7), "y".into()), 1);
+        assert_eq!(log.emit(EventKind::ChipDead, Some(1), None, "z".into()), 2);
+        for (i, e) in log.events().iter().enumerate() {
+            assert_eq!(e.seq, i as u64);
+        }
+        assert_eq!(log.count(EventKind::Retry), 1);
+        assert_eq!(log.len(), 3);
+    }
+
+    #[test]
+    fn jsonl_parses_line_by_line() {
+        let log = EventLog::new();
+        log.emit(EventKind::ChipQuarantined, Some(2), None, "3 consecutive failures".into());
+        log.emit(EventKind::ChipReadmitted, Some(2), None, "cooldown over".into());
+        let text = log.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let v = Json::parse(lines[0]).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("chip-quarantined"));
+        assert_eq!(v.get("chip").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("seq").unwrap().as_usize(), Some(0));
+        let v1 = Json::parse(lines[1]).unwrap();
+        assert_eq!(v1.get("seq").unwrap().as_usize(), Some(1));
+        assert_eq!(v1.get("frame").unwrap(), &Json::Null);
+    }
+
+    #[test]
+    fn kind_names_are_stable_and_unique() {
+        let mut names: Vec<&str> = EVENT_KINDS.iter().map(|k| k.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), EVENT_KINDS.len());
+    }
+}

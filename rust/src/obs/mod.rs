@@ -1,0 +1,120 @@
+//! Observability: span tracing, metric exposition, and the fleet event
+//! log — the simulator's internal timeline as first-class artifacts.
+//!
+//! * [`trace`] — pairs the compiler's `SegTrace` events into structured
+//!   per-segment spans with DMA-load / compute / store sub-spans derived
+//!   from the exact `SegClock` phase replay (`analysis::segment_phases`),
+//!   plus serving-window spans and instant events, emitted as Chrome
+//!   Trace Event JSON loadable in Perfetto (`--trace-out trace.json`).
+//! * [`events`] — the structured fleet event log: lifecycle events
+//!   (faults, retries, failovers, health transitions, DVFS auto-picks)
+//!   with monotonic sequence numbers, exportable as JSONL
+//!   (`--event-log events.jsonl`).
+//! * [`prom`] — Prometheus text exposition over a `ServeReport` + the
+//!   event log (`--metrics-out metrics.prom`).
+//!
+//! [`Obs`] bundles the two sinks behind the coordinator config. Both
+//! default to disabled (`Obs::none`), in which case every emission site
+//! is a pair of `Option` checks — no locks, no clocks, no allocation —
+//! and outputs/stats are bit-identical to an untraced run.
+
+pub mod events;
+pub mod prom;
+pub mod trace;
+
+use std::fmt;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub use events::{EventKind, EventLog, FleetEvent, EVENT_KINDS};
+pub use trace::{InstantEvent, SegSpan, TraceSink, WindowSpan};
+
+/// The observability handle carried by `CoordinatorConfig`: an optional
+/// trace sink and an optional event log sharing one epoch, so spans,
+/// instants and logged events land on a single coherent timeline.
+#[derive(Clone, Default)]
+pub struct Obs {
+    pub trace: Option<Arc<TraceSink>>,
+    pub log: Option<Arc<EventLog>>,
+}
+
+impl fmt::Debug for Obs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Obs")
+            .field("trace", &self.trace.is_some())
+            .field("log", &self.log.is_some())
+            .finish()
+    }
+}
+
+impl Obs {
+    /// Everything disabled — the default, near-zero-cost configuration.
+    pub fn none() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Enable the selected sinks on one shared epoch.
+    pub fn with(trace: bool, log: bool) -> Arc<Self> {
+        let epoch = Instant::now();
+        Arc::new(Self {
+            trace: trace.then(|| Arc::new(TraceSink::with_epoch(epoch))),
+            log: log.then(|| Arc::new(EventLog::with_epoch(epoch))),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.trace.is_some() || self.log.is_some()
+    }
+
+    /// Record a lifecycle event: logged (with a fleet-wide sequence
+    /// number) when the event log is enabled, mirrored as a trace
+    /// instant when the trace sink is enabled. `detail` is lazy so
+    /// disabled observability never formats a string.
+    pub fn event<F: FnOnce() -> String>(
+        &self,
+        kind: EventKind,
+        chip: Option<usize>,
+        frame: Option<u64>,
+        detail: F,
+    ) {
+        if self.trace.is_none() && self.log.is_none() {
+            return;
+        }
+        let d = detail();
+        let seq = self.log.as_ref().map_or(0, |l| l.emit(kind, chip, frame, d.clone()));
+        if let Some(t) = &self.trace {
+            t.instant(kind, chip, seq, d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_obs_is_inert_and_cheap() {
+        let obs = Obs::none();
+        assert!(!obs.enabled());
+        // the detail closure must not run when both sinks are off
+        obs.event(EventKind::Retry, Some(0), Some(1), || {
+            panic!("detail formatted on a disabled Obs")
+        });
+    }
+
+    #[test]
+    fn event_tees_to_log_and_trace_with_shared_seq() {
+        let obs = Obs::with(true, true);
+        obs.event(EventKind::FaultInjected, Some(2), Some(9), || "compute stall".into());
+        obs.event(EventKind::Retry, Some(2), Some(9), || "attempt 2 on chip 2".into());
+        let log = obs.log.as_ref().unwrap();
+        let trace = obs.trace.as_ref().unwrap();
+        assert_eq!(log.len(), 2);
+        let instants = trace.instants();
+        assert_eq!(instants.len(), 2);
+        assert_eq!(instants[0].seq, 0);
+        assert_eq!(instants[1].seq, 1);
+        assert_eq!(instants[1].kind, EventKind::Retry);
+        assert_eq!(log.events()[0].detail, "compute stall");
+    }
+}

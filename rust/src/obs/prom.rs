@@ -1,0 +1,197 @@
+//! Prometheus text exposition (version 0.0.4) over a [`ServeReport`]
+//! and the fleet event log. Hand-rolled like the rest of `util` — the
+//! format is line-oriented and trivial to emit without a client crate.
+//!
+//! Family reference (all prefixed `kn_`):
+//!
+//! | family | type | labels |
+//! |---|---|---|
+//! | `kn_frames_total` | counter | `net` (`_all` = aggregate) |
+//! | `kn_errors_total` | counter | `net` |
+//! | `kn_admission_rejects_total` | counter | — |
+//! | `kn_retries_total` | counter | — |
+//! | `kn_failovers_total` | counter | — |
+//! | `kn_deadline_misses_total` | counter | — |
+//! | `kn_dram_read_bytes_total` | counter | — |
+//! | `kn_dram_write_bytes_total` | counter | — |
+//! | `kn_frame_latency_us` | summary | `net`, `quantile` |
+//! | `kn_device_latency_us` | summary | `net`, `quantile` |
+//! | `kn_queue_wait_us` | summary | `net`, `quantile` |
+//! | `kn_utilization` | gauge | — |
+//! | `kn_lane_utilization` | gauge | — |
+//! | `kn_wall_seconds` | gauge | — |
+//! | `kn_chip_health` | gauge | `chip` (0 healthy … 3 dead) |
+//! | `kn_chip_frames_total` | counter | `chip` |
+//! | `kn_chip_errors_total` | counter | `chip` |
+//! | `kn_chip_queue_depth` | gauge | `chip` |
+//! | `kn_chip_health_transitions_total` | counter | `chip` |
+//! | `kn_fleet_events_total` | counter | `kind` |
+
+use std::fmt::Write as _;
+
+use crate::coordinator::{ChipHealth, RunMetrics, ServeReport};
+use crate::util::stats::Histogram;
+
+use super::events::{EventLog, EVENT_KINDS};
+
+/// Escape a label value per the exposition format.
+fn esc(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn head(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn summary(out: &mut String, name: &str, net: &str, h: &Histogram) {
+    let net = esc(net);
+    for q in [0.5, 0.95, 0.99] {
+        let _ =
+            writeln!(out, "{name}{{net=\"{net}\",quantile=\"{q}\"}} {}", h.quantile(q));
+    }
+    let _ = writeln!(out, "{name}_sum{{net=\"{net}\"}} {}", h.sum());
+    let _ = writeln!(out, "{name}_count{{net=\"{net}\"}} {}", h.count());
+}
+
+fn health_value(h: ChipHealth) -> u64 {
+    match h {
+        ChipHealth::Healthy => 0,
+        ChipHealth::Degraded => 1,
+        ChipHealth::Quarantined => 2,
+        ChipHealth::Dead => 3,
+    }
+}
+
+/// Render the exposition document. `log` supplies the event counters
+/// (`kn_fleet_events_total`, health transitions); `chip_loads` the
+/// current per-chip queue depth gauge (pass `&[]` when unknown).
+pub fn render(report: &ServeReport, log: Option<&EventLog>, chip_loads: &[usize]) -> String {
+    let mut out = String::new();
+    let rows: Vec<(&str, &RunMetrics)> = std::iter::once(("_all", &report.aggregate))
+        .chain(report.per_net.iter().map(|(n, m)| (n.as_str(), m)))
+        .collect();
+
+    head(&mut out, "kn_frames_total", "counter", "Frames served successfully.");
+    for (net, m) in &rows {
+        let _ = writeln!(out, "kn_frames_total{{net=\"{}\"}} {}", esc(net), m.frames);
+    }
+    head(&mut out, "kn_errors_total", "counter", "Frames delivered as errors.");
+    for (net, m) in &rows {
+        let _ = writeln!(out, "kn_errors_total{{net=\"{}\"}} {}", esc(net), m.errors);
+    }
+
+    let agg = &report.aggregate;
+    head(&mut out, "kn_admission_rejects_total", "counter", "Submissions bounced by admission.");
+    let _ = writeln!(out, "kn_admission_rejects_total {}", agg.rejects);
+    head(&mut out, "kn_retries_total", "counter", "Dispatch attempts beyond each frame's first.");
+    let _ = writeln!(out, "kn_retries_total {}", agg.retries);
+    head(&mut out, "kn_failovers_total", "counter", "Re-dispatches that moved chips.");
+    let _ = writeln!(out, "kn_failovers_total {}", agg.failovers);
+    head(&mut out, "kn_deadline_misses_total", "counter", "Attempts past their deadline.");
+    let _ = writeln!(out, "kn_deadline_misses_total {}", agg.deadline_misses);
+    head(&mut out, "kn_dram_read_bytes_total", "counter", "DRAM bytes read (all chips).");
+    let _ = writeln!(out, "kn_dram_read_bytes_total {}", agg.totals.dram_read_bytes);
+    head(&mut out, "kn_dram_write_bytes_total", "counter", "DRAM bytes written (all chips).");
+    let _ = writeln!(out, "kn_dram_write_bytes_total {}", agg.totals.dram_write_bytes);
+
+    head(&mut out, "kn_frame_latency_us", "summary", "Wall-clock frame latency (µs).");
+    for (net, m) in &rows {
+        summary(&mut out, "kn_frame_latency_us", net, &m.wall_lat_us);
+    }
+    head(&mut out, "kn_device_latency_us", "summary", "Device frame latency at the DVFS point.");
+    for (net, m) in &rows {
+        summary(&mut out, "kn_device_latency_us", net, &m.dev_lat_us);
+    }
+    head(&mut out, "kn_queue_wait_us", "summary", "Submit-to-dequeue queue wait (µs).");
+    for (net, m) in &rows {
+        summary(&mut out, "kn_queue_wait_us", net, &m.queue_wait_us);
+    }
+
+    head(&mut out, "kn_utilization", "gauge", "MAC array utilization (0..1).");
+    let _ = writeln!(out, "kn_utilization {}", agg.totals.utilization());
+    head(&mut out, "kn_lane_utilization", "gauge", "CU lane occupancy (0..1).");
+    let _ = writeln!(out, "kn_lane_utilization {}", agg.totals.lane_utilization());
+    head(&mut out, "kn_wall_seconds", "gauge", "Wall-clock duration of the run.");
+    let _ = writeln!(out, "kn_wall_seconds {}", agg.wall_s);
+
+    if !report.per_chip.is_empty() {
+        head(&mut out, "kn_chip_health", "gauge", "0 healthy, 1 degraded, 2 quarantined, 3 dead.");
+        for (c, h) in report.chip_health.iter().enumerate() {
+            let _ = writeln!(out, "kn_chip_health{{chip=\"{c}\"}} {}", health_value(*h));
+        }
+        head(&mut out, "kn_chip_frames_total", "counter", "Frames delivered per chip.");
+        for (c, m) in report.per_chip.iter().enumerate() {
+            let _ = writeln!(out, "kn_chip_frames_total{{chip=\"{c}\"}} {}", m.frames);
+        }
+        head(&mut out, "kn_chip_errors_total", "counter", "Errors delivered per chip.");
+        for (c, m) in report.per_chip.iter().enumerate() {
+            let _ = writeln!(out, "kn_chip_errors_total{{chip=\"{c}\"}} {}", m.errors);
+        }
+    }
+    if !chip_loads.is_empty() {
+        head(&mut out, "kn_chip_queue_depth", "gauge", "In-flight jobs queued per chip.");
+        for (c, d) in chip_loads.iter().enumerate() {
+            let _ = writeln!(out, "kn_chip_queue_depth{{chip=\"{c}\"}} {d}");
+        }
+    }
+
+    if let Some(log) = log {
+        head(&mut out, "kn_fleet_events_total", "counter", "Fleet lifecycle events by kind.");
+        for k in EVENT_KINDS {
+            let _ =
+                writeln!(out, "kn_fleet_events_total{{kind=\"{}\"}} {}", k.name(), log.count(k));
+        }
+        if !report.per_chip.is_empty() {
+            head(
+                &mut out,
+                "kn_chip_health_transitions_total",
+                "counter",
+                "Chip health state-machine transitions.",
+            );
+            let events = log.events();
+            for c in 0..report.per_chip.len() {
+                let n = events
+                    .iter()
+                    .filter(|e| e.kind.is_health_transition() && e.chip == Some(c))
+                    .count();
+                let _ = writeln!(out, "kn_chip_health_transitions_total{{chip=\"{c}\"}} {n}");
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServeReport;
+    use crate::energy::dvfs::PEAK;
+    use crate::obs::events::EventKind;
+
+    #[test]
+    fn exposition_is_wellformed() {
+        let mut rep = ServeReport::with_chips(PEAK, &["a".to_string()], &[PEAK, PEAK]);
+        rep.chip_health[1] = ChipHealth::Dead;
+        rep.aggregate.retries = 3;
+        let log = EventLog::new();
+        log.emit(EventKind::FaultInjected, Some(1), Some(0), "transient fault".into());
+        log.emit(EventKind::ChipDead, Some(1), None, "chip death".into());
+        let text = render(&rep, Some(&log), &[2, 0]);
+        assert!(text.contains("# TYPE kn_frames_total counter"));
+        assert!(text.contains("kn_frames_total{net=\"_all\"} 0"));
+        assert!(text.contains("kn_retries_total 3"));
+        assert!(text.contains("kn_chip_health{chip=\"1\"} 3"));
+        assert!(text.contains("kn_chip_queue_depth{chip=\"0\"} 2"));
+        assert!(text.contains("kn_fleet_events_total{kind=\"fault-injected\"} 1"));
+        assert!(text.contains("kn_fleet_events_total{kind=\"chip-dead\"} 1"));
+        assert!(text.contains("kn_fleet_events_total{kind=\"retry\"} 0"));
+        assert!(text.contains("kn_chip_health_transitions_total{chip=\"1\"} 1"));
+        assert!(text.contains("kn_queue_wait_us{net=\"_all\",quantile=\"0.5\"}"));
+        // every non-comment line is "name{labels} value" or "name value"
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, val) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(val.parse::<f64>().is_ok(), "numeric value in {line:?}");
+        }
+    }
+}

@@ -1,0 +1,489 @@
+//! Span tracing: pairs the compiler's `SegTrace` events into structured
+//! per-segment spans `{net, frame, node, segment, chip, worker, tile
+//! class}`, splits each span into DMA-load / compute / store sub-spans
+//! using the exact `SegClock` phase replay (`analysis::segment_phases` —
+//! the same replay the planner's cycle model is built on), and emits the
+//! whole timeline as Chrome Trace Event JSON loadable in Perfetto
+//! (chrome://tracing and https://ui.perfetto.dev).
+//!
+//! Track layout: one Perfetto *process* per chip (`pid == chip id`), one
+//! *thread* per tile worker (`tid == worker`), one thread per chip queue
+//! worker (`tid == 100 + worker`) carrying window spans, and an `events`
+//! thread (`tid == 999`) carrying instant events; fleet-scoped instants
+//! (no chip) live on a synthetic `fleet` process.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::analysis::{net_phases, SegPhases};
+use crate::compiler::{CompiledNet, SegTrace, TraceTarget};
+use crate::model::NodeOp;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::sync::lock_recover;
+
+use super::events::EventKind;
+
+/// Synthetic Perfetto process id for fleet-scoped (chip-less) instants.
+const FLEET_PID: u64 = 9999;
+/// Thread id offset for chip queue-worker (window) tracks.
+const QUEUE_TID: u64 = 100;
+/// Thread id of each chip's instant-event track.
+const EVENTS_TID: u64 = 999;
+
+/// One traced segment execution, fully attributed.
+#[derive(Clone, Debug)]
+pub struct SegSpan {
+    pub net: String,
+    pub chip: usize,
+    /// Tile worker (DAG executor) — one Perfetto track per chip×worker.
+    pub worker: usize,
+    /// Frame id (coordinator-global when serving, window index in `run`).
+    pub frame: u64,
+    pub node: usize,
+    /// Graph node name (e.g. `conv1`, `dw3`).
+    pub node_name: String,
+    /// Tile class: `conv` / `pw` / `dw` / `grouped` / `pool` / `add` /
+    /// `concat`.
+    pub class: String,
+    pub seg: usize,
+    /// Wall-clock span bounds, nanoseconds since the sink epoch.
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    /// Measured segment cycles (the `SimStats` delta this execution
+    /// charged to its frame).
+    pub cycles: u64,
+    /// Measured non-hidden DMA stall cycles of the segment.
+    pub dma_stall_cycles: u64,
+    /// Exact phase split replayed from the command stream. By PR 9's
+    /// exactness gate `phases.cycles == cycles`, and the three phases
+    /// partition it — this is what the sub-spans render.
+    pub phases: SegPhases,
+}
+
+/// One serving window executed by a chip queue worker.
+#[derive(Clone, Debug)]
+pub struct WindowSpan {
+    pub net: String,
+    pub chip: usize,
+    /// Chip queue worker that served the window.
+    pub worker: usize,
+    /// Frame ids of the window, submission order.
+    pub frames: Vec<u64>,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    /// Summed measured cycles of the window's frames.
+    pub cycles: u64,
+}
+
+/// An instant event mirrored from the fleet event log (fault, retry,
+/// failover, health transition, DVFS auto-pick).
+#[derive(Clone, Debug)]
+pub struct InstantEvent {
+    pub t_ns: u64,
+    pub kind: EventKind,
+    pub chip: Option<usize>,
+    /// Sequence number in the fleet event log (0 when no log is wired).
+    pub seq: u64,
+    pub detail: String,
+}
+
+/// Per-net span labels + phase splits, computed once per net and shared
+/// by every ingest of that net's windows.
+struct NetMeta {
+    /// Exact per-segment phase split (`analysis::net_phases`).
+    phases: Vec<SegPhases>,
+    /// Per-node name and tile class.
+    node_names: Vec<String>,
+    node_classes: Vec<String>,
+}
+
+fn tile_class(op: &NodeOp) -> &'static str {
+    match op {
+        NodeOp::Conv(c) => {
+            if c.groups > 1 && c.groups == c.cin {
+                "dw"
+            } else if c.groups > 1 {
+                "grouped"
+            } else if c.k == 1 {
+                "pw"
+            } else {
+                "conv"
+            }
+        }
+        NodeOp::Pool(_) => "pool",
+        NodeOp::Add(_) => "add",
+        NodeOp::Concat(_) => "concat",
+    }
+}
+
+#[derive(Default)]
+struct SinkState {
+    spans: Vec<SegSpan>,
+    windows: Vec<WindowSpan>,
+    instants: Vec<InstantEvent>,
+    meta: HashMap<String, Arc<NetMeta>>,
+}
+
+/// The trace collector: one epoch, one timeline, all chips. Locking is
+/// poison-tolerant — the trace of a crashed run is the one you most
+/// want to read.
+pub struct TraceSink {
+    epoch: Instant,
+    state: Mutex<SinkState>,
+}
+
+impl Default for TraceSink {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceSink {
+    pub fn new() -> Self {
+        Self::with_epoch(Instant::now())
+    }
+
+    pub fn with_epoch(epoch: Instant) -> Self {
+        Self { epoch, state: Mutex::new(SinkState::default()) }
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Nanoseconds since the sink epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// A compiler trace target sharing this sink's epoch, so events from
+    /// every run land on one coherent timeline.
+    pub fn target(&self) -> TraceTarget {
+        TraceTarget::with_epoch(self.epoch)
+    }
+
+    fn meta_for(&self, net: &str, compiled: &CompiledNet) -> Arc<NetMeta> {
+        let mut st = lock_recover(&self.state);
+        if let Some(m) = st.meta.get(net) {
+            return m.clone();
+        }
+        let m = Arc::new(NetMeta {
+            phases: net_phases(compiled),
+            node_names: compiled.graph.nodes.iter().map(|n| n.name().to_string()).collect(),
+            node_classes: compiled.graph.nodes.iter().map(|n| tile_class(&n.op).into()).collect(),
+        });
+        st.meta.insert(net.to_string(), m.clone());
+        m
+    }
+
+    /// Pair the enter/exit events of one traced window into spans. The
+    /// exit timestamp is clamped to at least 1 ns past the enter so
+    /// `enter < exit` holds even under a coarse platform clock.
+    /// `frame_ids[w]` maps the window-local frame index `w` of the trace
+    /// events to the id recorded on the span.
+    pub fn ingest(
+        &self,
+        net: &str,
+        compiled: &CompiledNet,
+        chip: usize,
+        frame_ids: &[u64],
+        events: &[SegTrace],
+    ) {
+        let meta = self.meta_for(net, compiled);
+        let mut open: HashMap<(usize, usize), (u64, usize)> = HashMap::new();
+        let mut spans = Vec::new();
+        for e in events {
+            if e.enter {
+                open.insert((e.frame, e.seg), (e.t_ns, e.worker));
+                continue;
+            }
+            let Some((t0, worker)) = open.remove(&(e.frame, e.seg)) else {
+                continue;
+            };
+            spans.push(SegSpan {
+                net: net.to_string(),
+                chip,
+                worker,
+                frame: frame_ids.get(e.frame).copied().unwrap_or(e.frame as u64),
+                node: e.node,
+                node_name: meta.node_names.get(e.node).cloned().unwrap_or_default(),
+                class: meta.node_classes.get(e.node).cloned().unwrap_or_default(),
+                seg: e.seg,
+                t0_ns: t0,
+                t1_ns: e.t_ns.max(t0 + 1),
+                cycles: e.cycles,
+                dma_stall_cycles: e.dma_stall_cycles,
+                phases: meta.phases.get(e.seg).copied().unwrap_or_default(),
+            });
+        }
+        lock_recover(&self.state).spans.append(&mut spans);
+    }
+
+    /// Record one serving-window span on a chip queue-worker track.
+    #[allow(clippy::too_many_arguments)]
+    pub fn window(
+        &self,
+        net: &str,
+        chip: usize,
+        worker: usize,
+        frames: Vec<u64>,
+        t0_ns: u64,
+        t1_ns: u64,
+        cycles: u64,
+    ) {
+        lock_recover(&self.state).windows.push(WindowSpan {
+            net: net.to_string(),
+            chip,
+            worker,
+            frames,
+            t0_ns,
+            t1_ns: t1_ns.max(t0_ns + 1),
+            cycles,
+        });
+    }
+
+    /// Record an instant event (mirrored from the fleet event log).
+    pub fn instant(&self, kind: EventKind, chip: Option<usize>, seq: u64, detail: String) {
+        let t_ns = self.now_ns();
+        lock_recover(&self.state).instants.push(InstantEvent { t_ns, kind, chip, seq, detail });
+    }
+
+    pub fn spans(&self) -> Vec<SegSpan> {
+        lock_recover(&self.state).spans.clone()
+    }
+
+    pub fn windows(&self) -> Vec<WindowSpan> {
+        lock_recover(&self.state).windows.clone()
+    }
+
+    pub fn instants(&self) -> Vec<InstantEvent> {
+        lock_recover(&self.state).instants.clone()
+    }
+
+    /// The whole timeline as a Chrome Trace Event JSON document.
+    pub fn to_chrome_json(&self) -> Json {
+        let st = lock_recover(&self.state);
+        let us = |ns: u64| ns as f64 / 1000.0;
+        let mut events: Vec<Json> = Vec::new();
+
+        // Track metadata: process per chip, thread per worker role.
+        let mut chips: Vec<u64> = Vec::new();
+        let mut threads: Vec<(u64, u64, String)> = Vec::new();
+        let seen_chip = |chips: &mut Vec<u64>, c: u64| {
+            if !chips.contains(&c) {
+                chips.push(c);
+            }
+        };
+        let seen_thread = |threads: &mut Vec<(u64, u64, String)>, p: u64, t: u64, n: String| {
+            if !threads.iter().any(|(a, b, _)| (*a, *b) == (p, t)) {
+                threads.push((p, t, n));
+            }
+        };
+        for sp in &st.spans {
+            seen_chip(&mut chips, sp.chip as u64);
+            let tid = sp.worker as u64;
+            seen_thread(&mut threads, sp.chip as u64, tid, format!("tile-worker {}", sp.worker));
+        }
+        for w in &st.windows {
+            seen_chip(&mut chips, w.chip as u64);
+            let tid = QUEUE_TID + w.worker as u64;
+            seen_thread(&mut threads, w.chip as u64, tid, format!("queue-worker {}", w.worker));
+        }
+        for i in &st.instants {
+            match i.chip {
+                Some(c) => {
+                    seen_chip(&mut chips, c as u64);
+                    seen_thread(&mut threads, c as u64, EVENTS_TID, "events".into());
+                }
+                None => seen_thread(&mut threads, FLEET_PID, 0, "events".into()),
+            }
+        }
+        for &c in &chips {
+            events.push(obj(vec![
+                ("ph", s("M")),
+                ("name", s("process_name")),
+                ("pid", num(c as f64)),
+                ("tid", num(0.0)),
+                ("args", obj(vec![("name", s(&format!("chip {c}")))])),
+            ]));
+        }
+        if st.instants.iter().any(|i| i.chip.is_none()) {
+            events.push(obj(vec![
+                ("ph", s("M")),
+                ("name", s("process_name")),
+                ("pid", num(FLEET_PID as f64)),
+                ("tid", num(0.0)),
+                ("args", obj(vec![("name", s("fleet"))])),
+            ]));
+        }
+        for (p, t, n) in &threads {
+            events.push(obj(vec![
+                ("ph", s("M")),
+                ("name", s("thread_name")),
+                ("pid", num(*p as f64)),
+                ("tid", num(*t as f64)),
+                ("args", obj(vec![("name", s(n))])),
+            ]));
+        }
+
+        // Segment spans + phase sub-spans.
+        for sp in &st.spans {
+            let (t0, t1) = (us(sp.t0_ns), us(sp.t1_ns));
+            let args = obj(vec![
+                ("net", s(&sp.net)),
+                ("frame", num(sp.frame as f64)),
+                ("node", num(sp.node as f64)),
+                ("seg", num(sp.seg as f64)),
+                ("class", s(&sp.class)),
+                ("cycles", num(sp.cycles as f64)),
+                ("dma_stall_cycles", num(sp.dma_stall_cycles as f64)),
+                ("load_stall_cycles", num(sp.phases.load_stall as f64)),
+                ("compute_cycles", num(sp.phases.compute as f64)),
+                ("store_stall_cycles", num(sp.phases.store_stall as f64)),
+            ]);
+            events.push(obj(vec![
+                ("ph", s("X")),
+                ("name", s(&format!("{} s{} f{}", sp.node_name, sp.seg, sp.frame))),
+                ("cat", s("segment")),
+                ("pid", num(sp.chip as f64)),
+                ("tid", num(sp.worker as f64)),
+                ("ts", num(t0)),
+                ("dur", num(t1 - t0)),
+                ("args", args),
+            ]));
+            // Sub-spans: the wall span scaled by the exact cycle phases.
+            // Wall positions are proportional (cycles are simulated time,
+            // the span is host time); the args carry the exact counts.
+            let total = sp.phases.cycles;
+            if total > 0 {
+                let wall = t1 - t0;
+                let mut cursor = 0u64;
+                for (label, cyc) in [
+                    ("dma-load", sp.phases.load_stall),
+                    ("compute", sp.phases.compute),
+                    ("store", sp.phases.store_stall),
+                ] {
+                    if cyc == 0 {
+                        continue;
+                    }
+                    let p0 = t0 + wall * (cursor as f64 / total as f64);
+                    let pd = wall * (cyc as f64 / total as f64);
+                    cursor += cyc;
+                    events.push(obj(vec![
+                        ("ph", s("X")),
+                        ("name", s(label)),
+                        ("cat", s("phase")),
+                        ("pid", num(sp.chip as f64)),
+                        ("tid", num(sp.worker as f64)),
+                        ("ts", num(p0)),
+                        ("dur", num(pd)),
+                        ("args", obj(vec![("cycles", num(cyc as f64))])),
+                    ]));
+                }
+            }
+        }
+
+        // Window spans on the queue-worker tracks.
+        for w in &st.windows {
+            let (t0, t1) = (us(w.t0_ns), us(w.t1_ns));
+            let frames = Json::Arr(w.frames.iter().map(|&f| num(f as f64)).collect());
+            events.push(obj(vec![
+                ("ph", s("X")),
+                ("name", s(&format!("window[{}] {}", w.frames.len(), w.net))),
+                ("cat", s("window")),
+                ("pid", num(w.chip as f64)),
+                ("tid", num(QUEUE_TID as f64 + w.worker as f64)),
+                ("ts", num(t0)),
+                ("dur", num(t1 - t0)),
+                ("args", obj(vec![("frames", frames), ("cycles", num(w.cycles as f64))])),
+            ]));
+        }
+
+        // Instants: faults, retries, failovers, health transitions.
+        for i in &st.instants {
+            let (pid, tid, scope) = match i.chip {
+                Some(c) => (c as f64, EVENTS_TID as f64, "p"),
+                None => (FLEET_PID as f64, 0.0, "g"),
+            };
+            events.push(obj(vec![
+                ("ph", s("i")),
+                ("name", s(i.kind.name())),
+                ("cat", s("event")),
+                ("pid", num(pid)),
+                ("tid", num(tid)),
+                ("ts", num(us(i.t_ns))),
+                ("s", s(scope)),
+                ("args", obj(vec![("seq", num(i.seq as f64)), ("detail", s(&i.detail))])),
+            ]));
+        }
+
+        obj(vec![("traceEvents", Json::Arr(events)), ("displayTimeUnit", s("ms"))])
+    }
+
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_chrome_json().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::NetRunner;
+    use crate::model::{zoo, Tensor};
+
+    #[test]
+    fn ingest_pairs_events_into_spans_with_phases() {
+        let net = zoo::quicknet();
+        let runner = NetRunner::new(&net).unwrap();
+        let frames: Vec<Tensor> =
+            (0..2).map(|i| Tensor::random_image(i, net.in_h, net.in_w, net.in_c)).collect();
+        let refs: Vec<&Tensor> = frames.iter().collect();
+        let sink = TraceSink::new();
+        let target = sink.target();
+        let outs = runner.run_frames_pipelined_ref_traced(&refs, 2, 2, &target).unwrap();
+        sink.ingest(&net.name, &runner.compiled, 0, &[10, 11], &target.take());
+        let spans = sink.spans();
+        let nseg = runner.compiled.segments.len();
+        assert_eq!(spans.len(), 2 * nseg, "one span per frame × segment");
+        for sp in &spans {
+            assert!(sp.t0_ns < sp.t1_ns, "enter < exit");
+            assert!(sp.frame == 10 || sp.frame == 11, "window ids mapped");
+            assert_eq!(
+                sp.phases.cycles,
+                sp.phases.load_stall + sp.phases.compute + sp.phases.store_stall,
+                "phases partition the segment clock"
+            );
+            assert_eq!(sp.phases.cycles, sp.cycles, "replayed == measured per segment");
+            assert!(!sp.node_name.is_empty());
+        }
+        // per-frame span cycles reconcile with the measured frame stats
+        for (w, (_, stats)) in outs.iter().enumerate() {
+            let total: u64 =
+                spans.iter().filter(|sp| sp.frame == 10 + w as u64).map(|sp| sp.cycles).sum();
+            assert_eq!(total, stats.cycles, "frame {w} span total == SimStats.cycles");
+        }
+    }
+
+    #[test]
+    fn chrome_json_is_wellformed_and_carries_tracks() {
+        let net = zoo::quicknet();
+        let runner = NetRunner::new(&net).unwrap();
+        let frame = Tensor::random_image(3, net.in_h, net.in_w, net.in_c);
+        let sink = TraceSink::new();
+        let target = sink.target();
+        runner.run_frames_pipelined_ref_traced(&[&frame], 2, 1, &target).unwrap();
+        sink.ingest(&net.name, &runner.compiled, 1, &[0], &target.take());
+        sink.instant(EventKind::FaultInjected, Some(1), 0, "transient fault".into());
+        sink.instant(EventKind::AutoPick, None, 1, "quicknet@250MHz".into());
+        let doc = sink.to_chrome_json().to_string();
+        let v = Json::parse(&doc).unwrap();
+        let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+        let xs = evs.iter().filter(|e| e.str_or("ph", "") == "X").count();
+        let is = evs.iter().filter(|e| e.str_or("ph", "") == "i").count();
+        let ms = evs.iter().filter(|e| e.str_or("ph", "") == "M").count();
+        assert!(xs > 0, "has spans");
+        assert_eq!(is, 2, "has both instants");
+        assert!(ms >= 3, "process + thread metadata present");
+    }
+}

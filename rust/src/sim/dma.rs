@@ -56,6 +56,15 @@ pub struct SegClock {
     wfifo: std::collections::VecDeque<u64>,
     burst_latency: u64,
     bytes_per_cycle: f64,
+    /// Cycles `cyc` advanced by datapath compute.
+    pub compute_cycles: u64,
+    /// Cycles `cyc` stalled waiting on inbound DMA (weights/image/bias).
+    pub load_stall_cycles: u64,
+    /// Cycles `cyc` stalled draining outbound stores at a `Sync`.
+    pub store_stall_cycles: u64,
+    /// The most recent DMA queued on the channel was a store, so a
+    /// subsequent `Sync` stall is charged to store drain.
+    store_pending: bool,
 }
 
 impl Default for SegClock {
@@ -66,6 +75,10 @@ impl Default for SegClock {
             wfifo: std::collections::VecDeque::new(),
             burst_latency: 32,
             bytes_per_cycle: 3.2,
+            compute_cycles: 0,
+            load_stall_cycles: 0,
+            store_stall_cycles: 0,
+            store_pending: false,
         }
     }
 }
@@ -79,10 +92,18 @@ impl SegClock {
         self.burst_latency + (bytes as f64 / self.bytes_per_cycle).ceil() as u64
     }
 
-    /// Schedule an overlappable DMA transfer (LoadImage / Store /
-    /// LoadBias): the channel serializes, the datapath does not wait.
+    /// Schedule an overlappable DMA transfer (LoadImage / LoadBias):
+    /// the channel serializes, the datapath does not wait.
     pub fn dma(&mut self, bytes: u64) {
         self.dma_free = self.dma_free.max(self.cyc) + self.xfer(bytes);
+        self.store_pending = false;
+    }
+
+    /// Schedule an outbound SRAM→DRAM store. Identical channel timing to
+    /// `dma` — only the phase attribution of a later `Sync` stall differs.
+    pub fn store(&mut self, bytes: u64) {
+        self.dma_free = self.dma_free.max(self.cyc) + self.xfer(bytes);
+        self.store_pending = true;
     }
 
     /// Schedule a weight-block fetch and stage its completion time.
@@ -95,6 +116,7 @@ impl SegClock {
     /// until its fetch completes.
     pub fn pop_weights(&mut self) {
         if let Some(ready) = self.wfifo.pop_front() {
+            self.load_stall_cycles += ready.saturating_sub(self.cyc);
             self.cyc = self.cyc.max(ready);
         }
     }
@@ -102,10 +124,20 @@ impl SegClock {
     /// Datapath compute: advance the clock unconditionally.
     pub fn compute(&mut self, cycles: u64) {
         self.cyc += cycles;
+        self.compute_cycles += cycles;
     }
 
-    /// `Sync`: wait for the DMA channel to drain.
+    /// `Sync`: wait for the DMA channel to drain. The stall is charged
+    /// to store drain when the channel tail is an outbound store, to
+    /// inbound load latency otherwise — so by construction
+    /// `cyc == compute_cycles + load_stall_cycles + store_stall_cycles`.
     pub fn sync(&mut self) {
+        let stall = self.dma_free.saturating_sub(self.cyc);
+        if self.store_pending {
+            self.store_stall_cycles += stall;
+        } else {
+            self.load_stall_cycles += stall;
+        }
         self.cyc = self.cyc.max(self.dma_free);
     }
 }
@@ -226,5 +258,25 @@ mod tests {
         c.compute(10);
         c.pop_weights(); // stalls the datapath to the fetch
         assert_eq!(c.cyc, 296);
+    }
+
+    #[test]
+    fn seg_clock_phases_partition_the_clock() {
+        let mut c = SegClock::new();
+        c.load_weights(144);
+        c.sync(); // inbound stall: 122 cycles
+        assert_eq!(c.load_stall_cycles, 122);
+        c.pop_weights(); // already staged — no further stall
+        c.compute(40);
+        c.store(64); // outbound: 32 + 20 = 52, queued at cyc 162
+        c.sync(); // store drain stall
+        assert_eq!(c.store_stall_cycles, 52);
+        assert_eq!(c.compute_cycles, 40);
+        // exhaustive invariant: the three phases partition the clock
+        assert_eq!(c.cyc, c.compute_cycles + c.load_stall_cycles + c.store_stall_cycles);
+        // and a store followed by a load re-classifies the next sync
+        c.dma(64);
+        c.sync();
+        assert_eq!(c.cyc, c.compute_cycles + c.load_stall_cycles + c.store_stall_cycles);
     }
 }

@@ -8,3 +8,4 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;

@@ -45,12 +45,15 @@ impl Running {
 
 /// Log-bucketed histogram with exact quantile estimation good enough for
 /// latency reporting (p50/p95/p99). Buckets are powers of `2^(1/8)` —
-/// <9 % relative error per bucket.
+/// <9 % relative error per bucket. Min/max/sum are tracked exactly so
+/// mean and extrema carry no bucketing error.
 #[derive(Clone, Debug)]
 pub struct Histogram {
     counts: Vec<u64>,
     total: u64,
     sum: f64,
+    min: f64,
+    max: f64,
 }
 
 const BUCKETS: usize = 512;
@@ -63,7 +66,13 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn new() -> Self {
-        Self { counts: vec![0; BUCKETS], total: 0, sum: 0.0 }
+        Self {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
     }
 
     fn bucket(x: f64) -> usize {
@@ -82,14 +91,30 @@ impl Histogram {
         self.counts[Self::bucket(x)] += 1;
         self.total += 1;
         self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
     }
 
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
     pub fn mean(&self) -> f64 {
         if self.total == 0 { 0.0 } else { self.sum / self.total as f64 }
+    }
+
+    /// Exact minimum of recorded samples (0.0 when empty, like `Running`).
+    pub fn min(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.min }
+    }
+
+    /// Exact maximum of recorded samples (0.0 when empty, like `Running`).
+    pub fn max(&self) -> f64 {
+        if self.total == 0 { 0.0 } else { self.max }
     }
 
     /// Quantile in [0,1] -> approximate value.
@@ -160,6 +185,21 @@ mod tests {
         let h = Histogram::new();
         assert_eq!(h.quantile(0.5), 0.0);
         assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0.0);
+        assert_eq!(h.max(), 0.0);
+    }
+
+    #[test]
+    fn histogram_exact_extrema_and_sum() {
+        let mut h = Histogram::new();
+        for x in [12.5, 700.0, 3.0, 41.0] {
+            h.record(x);
+        }
+        // extrema and sum are exact even though quantiles are bucketed
+        assert_eq!(h.min(), 3.0);
+        assert_eq!(h.max(), 700.0);
+        assert!((h.sum() - 756.5).abs() < 1e-12);
+        assert!((h.mean() - 189.125).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,44 @@
+//! Poison-tolerant locking shared by the coordinator, the compiler's
+//! trace plumbing and the observability sinks.
+//!
+//! A mutex is poisoned when a holder panics. For the state guarded here
+//! (metric registries, trace event vectors, report tables) the data is
+//! plain values that stay internally consistent at every await point, so
+//! the right response is to keep going with whatever was recorded — a
+//! panicked worker must not cascade into every other thread that merely
+//! wants to *observe* what happened. PR 6 established this policy inside
+//! `coordinator/server.rs`; this module lifts it to a shared utility.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Consume `m`, recovering its value if a previous holder panicked.
+pub fn into_inner_recover<T>(m: Mutex<T>) -> T {
+    m.into_inner().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn recovers_from_poison() {
+        let m = Mutex::new(vec![1u32]);
+        // poison it
+        let _ = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = m.lock().unwrap();
+                panic!("poison");
+            })
+            .join()
+        });
+        assert!(m.is_poisoned());
+        lock_recover(&m).push(2);
+        assert_eq!(into_inner_recover(m), vec![1, 2]);
+    }
+}

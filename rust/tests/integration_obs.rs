@@ -1,0 +1,257 @@
+//! Trace-invariant property battery for the observability layer.
+//!
+//! The contracts under test:
+//! - spans on one chip×worker track never overlap, and `enter < exit`
+//!   holds for every span;
+//! - every served frame's spans are complete (one per segment) and
+//!   their cycle totals reconcile **exactly** with the frame's measured
+//!   `SimStats.cycles` — with the DMA-load/compute/store phase split
+//!   partitioning each span's clock;
+//! - tracing disabled is bit-identical to tracing enabled (outputs and
+//!   stats);
+//! - the fleet event log is gaplessly sequenced and orders the chip
+//!   health state machine correctly (degraded → quarantined →
+//!   re-admitted → healed);
+//! - the Chrome Trace JSON parses, carries the spans, and mirrors every
+//!   fault as an instant event; the Prometheus exposition counts them.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use kn_stream::compiler::NetRunner;
+use kn_stream::coordinator::{Coordinator, CoordinatorConfig, FaultKind, FaultPlan, FrameOutput};
+use kn_stream::model::{zoo, Graph, Tensor};
+use kn_stream::obs::{prom, EventKind, Obs, SegSpan};
+use kn_stream::util::json::Json;
+
+fn quicknet() -> Graph {
+    zoo::graph_by_name("quicknet").unwrap()
+}
+
+/// Serve `n` seeded frames through a coordinator and return each
+/// delivered output keyed by frame id.
+fn serve_frames(coord: &Coordinator, g: &Graph, n: usize) -> HashMap<u64, FrameOutput> {
+    let frames: Vec<Tensor> =
+        (0..n).map(|s| Tensor::random_image(s as u32, g.in_h, g.in_w, g.in_c)).collect();
+    let pendings: Vec<_> = frames.iter().map(|f| coord.submit(f.clone()).unwrap()).collect();
+    let mut outs = HashMap::new();
+    for p in pendings {
+        let r = p.recv().expect("frame delivered");
+        outs.insert(r.id, r.ok().expect("clean run serves every frame"));
+    }
+    outs
+}
+
+/// Group spans per (chip, tile worker) track, sorted by start time.
+fn tracks(spans: &[SegSpan]) -> HashMap<(usize, usize), Vec<&SegSpan>> {
+    let mut by: HashMap<(usize, usize), Vec<&SegSpan>> = HashMap::new();
+    for sp in spans {
+        by.entry((sp.chip, sp.worker)).or_default().push(sp);
+    }
+    for t in by.values_mut() {
+        t.sort_by_key(|sp| sp.t0_ns);
+    }
+    by
+}
+
+/// The core span invariants on a clean (fault-free) traced serve:
+/// non-overlap per track, enter < exit, per-frame completeness, and
+/// exact cycle reconciliation against the measured frame stats.
+#[test]
+fn traced_serving_spans_are_wellformed_and_reconcile_exactly() {
+    let g = quicknet();
+    let obs = Obs::with(true, false);
+    let cfg = CoordinatorConfig {
+        chips: 2,
+        workers: 1,
+        tile_workers: 2,
+        pipeline_depth: 2,
+        obs: obs.clone(),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_graph(&g, cfg).unwrap();
+    let nframes = 12;
+    let outs = serve_frames(&coord, &g, nframes);
+    coord.stop();
+
+    let nseg = NetRunner::from_graph(&g).unwrap().compiled.segments.len();
+    let sink = obs.trace.as_ref().unwrap();
+    let spans = sink.spans();
+    assert_eq!(spans.len(), nframes * nseg, "one span per served frame × segment");
+    for sp in &spans {
+        assert!(sp.t0_ns < sp.t1_ns, "enter < exit on every span");
+        assert_eq!(
+            sp.phases.cycles,
+            sp.phases.load_stall + sp.phases.compute + sp.phases.store_stall,
+            "phases partition the segment clock"
+        );
+        assert_eq!(sp.phases.cycles, sp.cycles, "replayed phases == measured segment cycles");
+        assert!(!sp.node_name.is_empty() && !sp.class.is_empty(), "spans are labelled");
+    }
+    // A tile worker runs its segments serially: spans on one
+    // chip×worker track must never overlap.
+    for ((chip, worker), track) in tracks(&spans) {
+        for pair in track.windows(2) {
+            assert!(
+                pair[0].t1_ns <= pair[1].t0_ns,
+                "overlapping spans on chip {chip} worker {worker} track: \
+                 [{}, {}) then [{}, {})",
+                pair[0].t0_ns,
+                pair[0].t1_ns,
+                pair[1].t0_ns,
+                pair[1].t1_ns
+            );
+        }
+    }
+    // Every submitted frame's spans complete, and their cycle totals
+    // reconcile exactly with the measured per-frame SimStats.
+    for (id, out) in &outs {
+        let mine: Vec<&SegSpan> = spans.iter().filter(|sp| sp.frame == *id).collect();
+        assert_eq!(mine.len(), nseg, "frame {id} has a span per segment");
+        let total: u64 = mine.iter().map(|sp| sp.cycles).sum();
+        assert_eq!(total, out.stats.cycles, "frame {id} span cycles == SimStats.cycles");
+    }
+    // Window spans cover the same work on the queue-worker tracks.
+    let windows = sink.windows();
+    assert!(!windows.is_empty(), "serving emitted window spans");
+    let window_cycles: u64 = windows.iter().map(|w| w.cycles).sum();
+    let frame_cycles: u64 = outs.values().map(|o| o.stats.cycles).sum();
+    assert_eq!(window_cycles, frame_cycles, "windows partition the served frames");
+    for w in &windows {
+        assert!(w.t0_ns < w.t1_ns && !w.frames.is_empty());
+    }
+}
+
+/// Tracing off must be bit-identical to tracing on: same outputs, same
+/// stats, frame by frame.
+#[test]
+fn tracing_disabled_is_bit_identical_to_enabled() {
+    let g = quicknet();
+    let mk = |obs| CoordinatorConfig {
+        chips: 1,
+        tile_workers: 2,
+        pipeline_depth: 2,
+        obs,
+        ..Default::default()
+    };
+    let n = 8;
+    let off = Coordinator::start_graph(&g, mk(Obs::none())).unwrap();
+    let base = serve_frames(&off, &g, n);
+    off.stop();
+    let obs = Obs::with(true, true);
+    let on = Coordinator::start_graph(&g, mk(obs.clone())).unwrap();
+    let traced = serve_frames(&on, &g, n);
+    on.stop();
+    assert_eq!(base.len(), traced.len());
+    for (id, b) in &base {
+        let t = &traced[id];
+        assert_eq!(b.output, t.output, "frame {id} output identical with tracing on");
+        assert_eq!(b.stats, t.stats, "frame {id} stats identical with tracing on");
+    }
+    assert!(!obs.trace.as_ref().unwrap().spans().is_empty(), "the traced run did trace");
+}
+
+/// The fleet event log is gaplessly sequenced, and the chip health
+/// state machine's events come out in causal order: degraded →
+/// quarantined → re-admitted (after cooldown) → healed.
+#[test]
+fn event_log_orders_quarantine_lifecycle() {
+    let g = quicknet();
+    let obs = Obs::with(false, true);
+    let plan = FaultPlan::none()
+        .with(0, 0, FaultKind::TransientFail)
+        .with(0, 1, FaultKind::TransientFail)
+        .with(0, 2, FaultKind::TransientFail);
+    let cfg = CoordinatorConfig {
+        chips: 1,
+        quarantine_after: 3,
+        quarantine_cooldown: Duration::from_millis(30),
+        retry_backoff: Duration::from_micros(50),
+        fault_plan: plan,
+        obs: obs.clone(),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_graph(&g, cfg).unwrap();
+    let outs = serve_frames(&coord, &g, 6);
+    coord.stop();
+    assert_eq!(outs.len(), 6, "every frame served despite the quarantine");
+
+    let log = obs.log.as_ref().unwrap();
+    let events = log.events();
+    for (i, e) in events.iter().enumerate() {
+        assert_eq!(e.seq, i as u64, "sequence numbers are monotonic and gapless");
+    }
+    assert_eq!(log.count(EventKind::FaultInjected), 3);
+    assert!(log.count(EventKind::Retry) >= 3, "each transient fault re-dispatched");
+    let seq_of = |kind: EventKind| {
+        let e = events.iter().find(|e| e.kind == kind);
+        e.unwrap_or_else(|| panic!("no {} event in the log", kind.name())).seq
+    };
+    let degraded = seq_of(EventKind::ChipDegraded);
+    let quarantined = seq_of(EventKind::ChipQuarantined);
+    let readmitted = seq_of(EventKind::ChipReadmitted);
+    let healed = seq_of(EventKind::ChipHealed);
+    assert!(
+        degraded < quarantined && quarantined < readmitted && readmitted < healed,
+        "health lifecycle out of order: degraded {degraded}, quarantined {quarantined}, \
+         readmitted {readmitted}, healed {healed}"
+    );
+    for e in events.iter().filter(|e| e.kind.is_health_transition()) {
+        assert_eq!(e.chip, Some(0), "health transitions carry the chip id");
+    }
+}
+
+/// A traced chaos run: the Chrome Trace JSON parses, has spans, and
+/// mirrors every injected fault (and the chip death) as instant
+/// events; the Prometheus exposition counts the same events.
+#[test]
+fn chaos_trace_json_and_exposition_carry_fault_events() {
+    let g = quicknet();
+    let obs = Obs::with(true, true);
+    let plan = FaultPlan::none()
+        .with(0, 1, FaultKind::TransientFail)
+        .with(1, 2, FaultKind::ChipDeath);
+    let cfg = CoordinatorConfig {
+        chips: 2,
+        tile_workers: 2,
+        pipeline_depth: 2,
+        retry_backoff: Duration::from_micros(50),
+        fault_plan: plan,
+        obs: obs.clone(),
+        ..Default::default()
+    };
+    let coord = Coordinator::start_graph(&g, cfg).unwrap();
+    let frames: Vec<(String, Tensor)> = (0..12)
+        .map(|s| ("quicknet".into(), Tensor::random_image(s, g.in_h, g.in_w, g.in_c)))
+        .collect();
+    let rep = coord.run_mix(frames).unwrap();
+    let chip_loads = coord.chip_loads();
+    coord.stop();
+
+    let log = obs.log.as_ref().unwrap();
+    assert_eq!(log.count(EventKind::FaultInjected), 2, "both injected faults logged");
+    assert_eq!(log.count(EventKind::ChipDead), 1, "the chip death logged once");
+    let sink = obs.trace.as_ref().unwrap();
+    assert_eq!(sink.instants().len(), log.len(), "every logged event mirrored as an instant");
+
+    let doc = sink.to_chrome_json().to_string();
+    let v = Json::parse(&doc).expect("trace JSON parses");
+    let evs = v.get("traceEvents").unwrap().as_arr().unwrap();
+    let xs = evs.iter().filter(|e| e.str_or("ph", "") == "X").count();
+    assert!(xs > 0, "trace has spans");
+    let fault_instants = evs
+        .iter()
+        .filter(|e| e.str_or("ph", "") == "i" && e.str_or("name", "") == "fault-injected")
+        .count();
+    assert_eq!(fault_instants, 2, "faults appear as instant events");
+    assert!(
+        evs.iter().any(|e| e.str_or("ph", "") == "i" && e.str_or("name", "") == "chip-dead"),
+        "the chip death appears as an instant event"
+    );
+
+    let text = prom::render(&rep, Some(log), &chip_loads);
+    assert!(text.contains("kn_fleet_events_total{kind=\"fault-injected\"} 2"));
+    assert!(text.contains("kn_fleet_events_total{kind=\"chip-dead\"} 1"));
+    assert!(text.contains("kn_chip_health{chip=\"1\"} 3"), "dead chip gauged as 3");
+    assert!(text.contains("kn_queue_wait_us{net=\"_all\",quantile=\"0.99\"}"));
+}
